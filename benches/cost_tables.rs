@@ -1,0 +1,75 @@
+//! Paper Tables 1–2: analytic GFLOPs and model size for every evaluated
+//! model at the paper's (K, V) settings. Pure arithmetic (no timing) —
+//! the numbers should match the paper's Table 2 almost exactly since the
+//! layer shapes are exact.
+//!
+//! Run: `cargo bench --bench cost_tables`
+
+use lutnn::cost::{model_cost, LutConfig};
+use lutnn::nn::models;
+use lutnn::util::benchmark::{record_jsonl, Table};
+use lutnn::util::json::Json;
+
+fn main() {
+    println!("== Paper Table 2: GFLOPs ==\n");
+    let mut t = Table::new(&["Model", "original", "(8,def)", "(16,def)"]);
+    // "def" = paper defaults: V=9 for 3x3, V=4 for 1x1/small FC; BERT uses
+    // its own column with V=32 / V=16 below.
+    let cnn_models = [
+        models::resnet18_cifar(),
+        models::senet18_cifar(),
+        models::vgg11_cifar(),
+        models::resnet18_imagenet(),
+        models::senet18_imagenet(),
+        models::vgg11_imagenet(),
+    ];
+    for m in &cnn_models {
+        let c8 = model_cost(m, LutConfig { k: 8, v_override: None });
+        let c16 = model_cost(m, LutConfig { k: 16, v_override: None });
+        t.row(&[
+            m.name.clone(),
+            format!("{:.3}", c8.dense_gflops),
+            format!("{:.3}", c8.lut_gflops),
+            format!("{:.3}", c16.lut_gflops),
+        ]);
+        record_jsonl(
+            "table2_gflops.jsonl",
+            &Json::obj(vec![
+                ("model", Json::str(m.name.clone())),
+                ("dense_gflops", Json::num(c8.dense_gflops)),
+                ("lut8_gflops", Json::num(c8.lut_gflops)),
+                ("lut16_gflops", Json::num(c16.lut_gflops)),
+            ]),
+        );
+    }
+    t.print();
+
+    let bert = models::bert_base();
+    let b32 = model_cost(&bert, LutConfig { k: 16, v_override: Some(32) });
+    let b16 = model_cost(&bert, LutConfig { k: 16, v_override: Some(16) });
+    println!("\nBERT (seq=32): original {:.3}, (16,32) {:.3}, (16,16) {:.3} GFLOPs",
+             b32.dense_gflops, b32.lut_gflops, b16.lut_gflops);
+    println!("paper:          original 2.759, (16,32) 0.169, (16,16) 0.254\n");
+
+    println!("== Paper Table 2: Disk size (MB) ==\n");
+    let mut t = Table::new(&["Model", "original", "(8,def)", "(16,def)"]);
+    for m in &cnn_models {
+        let c8 = model_cost(m, LutConfig { k: 8, v_override: None });
+        let c16 = model_cost(m, LutConfig { k: 16, v_override: None });
+        t.row(&[
+            m.name.clone(),
+            format!("{:.2}", c8.dense_mb),
+            format!("{:.2}", c8.lut_mb),
+            format!("{:.2}", c16.lut_mb),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nBERT size: original {:.2} MB, (16,32) {:.2} MB, (16,16) {:.2} MB",
+        b32.dense_mb, b32.lut_mb, b16.lut_mb
+    );
+    println!("paper:     original 417.64, (16,32) 133.55, (16,16) 131.21");
+    println!("\n(note: paper disk sizes include embeddings/classifier + \
+              serialization overhead we do not model for BERT; CNN rows \
+              are directly comparable.)");
+}

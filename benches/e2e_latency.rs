@@ -1,0 +1,139 @@
+//! Paper Fig. 8: end-to-end model latency, LUT-NN vs dense.
+//!
+//! Three measurements:
+//!   1. VGG11 (CIFAR10) at the paper's exact layer shapes, rust-native
+//!      engine: dense (im2col+GEMM) vs LUT (converted in-process).
+//!   2. The trained resnet_tiny bundles (requires `make artifacts`),
+//!      native engine dense vs LUT.
+//!   3. The same trained models through the PJRT runtime (AOT XLA graphs).
+//!
+//! The paper reports 1.3–4.2x CNN speedups and ~5-7x for BERT; the shape
+//! to reproduce is LUT < dense on every model, growing with width.
+//!
+//! Run: `cargo bench --bench e2e_latency`
+
+use lutnn::lut::LutOpts;
+use lutnn::model_fmt;
+use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+use lutnn::runtime::{artifact_path, artifacts_available, PjRtEngine};
+use lutnn::tensor::Tensor;
+use lutnn::util::benchmark::{bench, black_box, record_jsonl, BenchConfig, Table};
+use lutnn::util::json::Json;
+use lutnn::util::prng::Prng;
+
+fn main() {
+    let cfg = BenchConfig { min_iters: 4, max_iters: 30, ..Default::default() };
+    let mut rng = Prng::new(0);
+    let mut t = Table::new(&["model", "engine", "dense ms", "lut ms", "speedup"]);
+
+    // ---- 1. VGG11 (CIFAR) exact shapes, native --------------------------
+    let vgg_specs: Vec<ConvSpec> = [
+        (64usize, 1usize),
+        (128, 1),
+        (256, 2), // stride-2 stands in for the removed pools at equal FLOPs
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 2),
+        (512, 1),
+    ]
+    .iter()
+    .map(|&(cout, stride)| ConvSpec { cout, k: 3, stride })
+    .collect();
+    let dense_g = build_cnn_graph("vgg11_cifar", [32, 32, 3], &vgg_specs, 10, 0);
+    let sample = Tensor::new(vec![2, 32, 32, 3], rng.normal_vec(2 * 32 * 32 * 3, 1.0));
+    eprintln!("converting VGG11 to LUT (k-means on activations)...");
+    let lut_g = lutify_graph(&dense_g, &sample, 16, 8, 0);
+    let x = Tensor::new(vec![1, 32, 32, 3], rng.normal_vec(32 * 32 * 3, 1.0));
+    let d = bench("vgg dense", &cfg, || {
+        black_box(dense_g.run(x.clone(), LutOpts::deployed()));
+    });
+    let l = bench("vgg lut", &cfg, || {
+        black_box(lut_g.run(x.clone(), LutOpts::deployed()));
+    });
+    t.row(&[
+        "VGG11 (CIFAR10)".into(),
+        "native".into(),
+        format!("{:.2}", d.mean_ms()),
+        format!("{:.2}", l.mean_ms()),
+        format!("{:.2}x", d.summary.mean / l.summary.mean),
+    ]);
+    record_jsonl(
+        "fig8_e2e.jsonl",
+        &Json::obj(vec![
+            ("model", Json::str("VGG11 (CIFAR10)")),
+            ("engine", Json::str("native")),
+            ("dense_ms", Json::num(d.mean_ms())),
+            ("lut_ms", Json::num(l.mean_ms())),
+        ]),
+    );
+
+    // ---- 2+3. trained bundles -------------------------------------------
+    if artifacts_available() {
+        let dense_b = model_fmt::load_bundle(&artifact_path("resnet_tiny_dense.lutnn")).unwrap();
+        let lut_b = model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn")).unwrap();
+        let xb = Tensor::new(vec![8, 16, 16, 3], rng.normal_vec(8 * 16 * 16 * 3, 1.0));
+        let d = bench("tiny dense", &cfg, || {
+            black_box(dense_b.run(xb.clone(), LutOpts::deployed()));
+        });
+        let l = bench("tiny lut", &cfg, || {
+            black_box(lut_b.run(xb.clone(), LutOpts::deployed()));
+        });
+        t.row(&[
+            "resnet_tiny (b8)".into(),
+            "native".into(),
+            format!("{:.2}", d.mean_ms()),
+            format!("{:.2}", l.mean_ms()),
+            format!("{:.2}x", d.summary.mean / l.summary.mean),
+        ]);
+
+        let bert_dense = model_fmt::load_bundle(&artifact_path("mini_bert_dense.lutnn")).unwrap();
+        let bert_lut = model_fmt::load_bundle(&artifact_path("mini_bert_lut.lutnn")).unwrap();
+        let tokens = Tensor::new(vec![8, 16], (0..128).map(|i| (i % 60) as f32).collect());
+        let d = bench("bert dense", &cfg, || {
+            black_box(bert_dense.run(tokens.clone(), LutOpts::deployed()));
+        });
+        let l = bench("bert lut", &cfg, || {
+            black_box(bert_lut.run(tokens.clone(), LutOpts::deployed()));
+        });
+        t.row(&[
+            "mini_bert (b8)".into(),
+            "native".into(),
+            format!("{:.2}", d.mean_ms()),
+            format!("{:.2}", l.mean_ms()),
+            format!("{:.2}x", d.summary.mean / l.summary.mean),
+        ]);
+
+        // PJRT (XLA-compiled AOT graphs; XLA fuses the dense model far
+        // more aggressively — this measures the compiled-graph pair).
+        let engine = PjRtEngine::cpu().unwrap();
+        let pd = engine
+            .load_hlo_text(&artifact_path("resnet_tiny_dense_b8.hlo.txt"), None)
+            .unwrap();
+        let pl = engine
+            .load_hlo_text(&artifact_path("resnet_tiny_lut_b8.hlo.txt"), None)
+            .unwrap();
+        let d = bench("pjrt dense", &cfg, || {
+            black_box(pd.run_f32(&xb).unwrap());
+        });
+        let l = bench("pjrt lut", &cfg, || {
+            black_box(pl.run_f32(&xb).unwrap());
+        });
+        t.row(&[
+            "resnet_tiny (b8)".into(),
+            "pjrt-xla".into(),
+            format!("{:.2}", d.mean_ms()),
+            format!("{:.2}", l.mean_ms()),
+            format!("{:.2}x", d.summary.mean / l.summary.mean),
+        ]);
+    } else {
+        eprintln!("(artifacts missing: run `make artifacts` for bundle rows)");
+    }
+
+    println!("\n== Fig. 8: end-to-end latency ==\n");
+    t.print();
+    println!("\npaper: LUT-NN 1.3-4.2x faster on CNNs, 5.6-6.8x on BERT \
+              (vs ORT/TVM on mobile/x86 CPUs).");
+    println!("(pjrt-lut runs the interpret-mode pallas lowering — a \
+              correctness artifact, not a perf target; see DESIGN.md.)");
+}

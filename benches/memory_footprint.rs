@@ -1,0 +1,71 @@
+//! Paper Fig. 10: model memory consumption, LUT-NN vs dense.
+//!
+//! Two accountings:
+//!   1. Analytic, on the paper's exact model shapes (params + peak
+//!      activation for batch 1) — directly comparable to Fig. 10.
+//!   2. Measured `param_bytes()` of the runnable graphs / trained bundles.
+//!
+//! Paper: 1.4-2.8x memory saving for CNNs, 4.8-6.5x for BERT.
+//!
+//! Run: `cargo bench --bench memory_footprint`
+
+use lutnn::cost::{model_cost, LutConfig};
+use lutnn::model_fmt;
+use lutnn::nn::models;
+use lutnn::runtime::{artifact_path, artifacts_available};
+use lutnn::util::benchmark::{record_jsonl, Table};
+use lutnn::util::json::Json;
+
+fn main() {
+    println!("== Fig. 10: model memory (analytic, exact paper shapes) ==\n");
+    let mut t = Table::new(&["model", "dense MB", "lut MB (K=16)", "saving"]);
+    for m in models::all_paper_models() {
+        // activations: sum of the two largest layer input/output rows
+        // (double-buffered arena), identical for both engines -> params
+        // dominate the *difference*, as in the paper.
+        let act_mb = m
+            .ops
+            .iter()
+            .map(|o| (o.n * o.m + o.n * o.d) as f64 * 4.0 / (1 << 20) as f64)
+            .fold(0.0f64, f64::max);
+        let v_override = if m.name == "BERT" { Some(32) } else { None };
+        let c = model_cost(&m, LutConfig { k: 16, v_override });
+        let dense_total = c.dense_mb + act_mb;
+        let lut_total = c.lut_mb + act_mb;
+        t.row(&[
+            m.name.clone(),
+            format!("{:.1}", dense_total),
+            format!("{:.1}", lut_total),
+            format!("{:.2}x", dense_total / lut_total),
+        ]);
+        record_jsonl(
+            "fig10_memory.jsonl",
+            &Json::obj(vec![
+                ("model", Json::str(m.name.clone())),
+                ("dense_mb", Json::num(dense_total)),
+                ("lut_mb", Json::num(lut_total)),
+            ]),
+        );
+    }
+    t.print();
+
+    if artifacts_available() {
+        println!("\n== measured: trained bundle deployed bytes ==\n");
+        let mut t = Table::new(&["bundle", "param bytes", "lut/dense layers"]);
+        for name in [
+            "resnet_tiny_dense",
+            "resnet_tiny_lut",
+            "mini_bert_dense",
+            "mini_bert_lut",
+        ] {
+            let g = model_fmt::load_bundle(&artifact_path(&format!("{name}.lutnn"))).unwrap();
+            t.row(&[
+                name.into(),
+                g.param_bytes().to_string(),
+                format!("{:?}", g.lut_fraction()),
+            ]);
+        }
+        t.print();
+    }
+    println!("\npaper: 1.4-2.8x CNN, 4.8-6.5x BERT memory savings.");
+}

@@ -1,0 +1,133 @@
+//! Domain example: an on-device image-classification pipeline that
+//! LUT-converts a dense model *in rust* (k-means over its own calibration
+//! activations — no python anywhere), verifies prediction agreement,
+//! saves the converted bundle, reloads it, and compares speed — the
+//! mobile-deployment story of the paper's §1.
+//!
+//!   cargo run --release --example image_pipeline
+
+use lutnn::lut::LutOpts;
+use lutnn::model_fmt;
+use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+use lutnn::tensor::Tensor;
+use lutnn::util::prng::Prng;
+use std::time::Instant;
+
+/// Tiny procedural "shape + stripes" image generator (rust twin of
+/// python/compile/datasets.synth_image): class = shape x orientation.
+fn synth_image(rng: &mut Prng, n: usize, size: usize) -> (Tensor, Vec<usize>) {
+    let mut data = vec![0.0f32; n * size * size * 3];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = rng.below(10);
+        labels.push(class);
+        let shape = class / 2;
+        let vertical = class % 2 == 1;
+        let cy = rng.range(-0.15, 0.15);
+        let cx = rng.range(-0.15, 0.15);
+        let freq = rng.range(3.5, 4.5);
+        let phase = rng.range(0.0, std::f32::consts::TAU);
+        let tint = [rng.range(0.5, 1.0), rng.range(0.5, 1.0), rng.range(0.5, 1.0)];
+        for y in 0..size {
+            for x in 0..size {
+                let fy = (y as f32 - size as f32 / 2.0 + 0.5) / size as f32;
+                let fx = (x as f32 - size as f32 / 2.0 + 0.5) / size as f32;
+                let r = ((fy - cy).powi(2) + (fx - cx).powi(2)).sqrt();
+                let mask = match shape {
+                    0 => r < 0.3,
+                    1 => r > 0.18 && r < 0.33,
+                    2 => (fy - cy).abs() < 0.25 && (fx - cx).abs() < 0.25,
+                    3 => (fy - cy).abs() < 0.08 || (fx - cx).abs() < 0.08,
+                    _ => ((fy - cy) - (fx - cx)).abs() < 0.12,
+                };
+                let coord = if vertical { fx } else { fy };
+                let tex = 0.5 + 0.5 * (std::f32::consts::TAU * freq * coord + phase).sin();
+                let base = if mask { tex } else { 0.0 };
+                for c in 0..3 {
+                    data[((i * size + y) * size + x) * 3 + c] =
+                        base * tint[c] + 0.25 * rng.normal();
+                }
+            }
+        }
+    }
+    (Tensor::new(vec![n, size, size, 3], data), labels)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Prng::new(42);
+    let size = 16;
+
+    // 1. the "pretrained" dense model (random weights: this example
+    //    demonstrates the conversion machinery and perf, not accuracy —
+    //    the accuracy story is python-side, see EXPERIMENTS.md Table 4)
+    println!("[1/5] building dense CNN");
+    let dense = build_cnn_graph(
+        "mobile_cnn",
+        [size, size, 3],
+        &[
+            ConvSpec { cout: 32, k: 3, stride: 1 },
+            ConvSpec { cout: 64, k: 3, stride: 2 },
+            ConvSpec { cout: 64, k: 3, stride: 1 },
+        ],
+        10,
+        1,
+    );
+
+    // 2. calibration pass + in-rust LUT conversion (paper Eq. 1 k-means)
+    println!("[2/5] LUT conversion with K=16 centroids (k-means on calibration images)");
+    let (calib, _) = synth_image(&mut rng, 8, size);
+    let t0 = Instant::now();
+    let lut = lutify_graph(&dense, &calib, 16, 8, 0);
+    println!("        converted in {:.2}s; params {} -> {} bytes",
+             t0.elapsed().as_secs_f64(), dense.param_bytes(), lut.param_bytes());
+
+    // 3. fidelity: prediction agreement between dense and LUT models
+    println!("[3/5] fidelity check on 64 fresh images");
+    let (test, _labels) = synth_image(&mut rng, 64, size);
+    let d_out = dense.run(test.clone(), LutOpts::deployed());
+    let l_out = lut.run(test.clone(), LutOpts::deployed());
+    let agree = d_out
+        .argmax_rows()
+        .iter()
+        .zip(l_out.argmax_rows())
+        .filter(|(a, b)| **a == *b)
+        .count();
+    println!("        prediction agreement {agree}/64, output MSE {:.4}",
+             d_out.mse(&l_out));
+
+    // 4. round-trip through the bundle format
+    println!("[4/5] save + reload .lutnn bundle");
+    let path = std::env::temp_dir().join("mobile_cnn_lut.lutnn");
+    model_fmt::save_bundle(&lut, path.to_str().unwrap())?;
+    let reloaded = model_fmt::load_bundle(path.to_str().unwrap())?;
+    let r_out = reloaded.run(test.clone(), LutOpts::deployed());
+    assert!(r_out.max_abs_diff(&l_out) < 1e-5, "bundle round-trip mismatch");
+    println!("        round-trip exact ({} bytes on disk)",
+             std::fs::metadata(&path)?.len());
+
+    // 5. latency comparison
+    println!("[5/5] latency (batch 16)");
+    let (batch, _) = synth_image(&mut rng, 16, size);
+    for _ in 0..2 {
+        dense.run(batch.clone(), LutOpts::deployed());
+        lut.run(batch.clone(), LutOpts::deployed());
+    }
+    let reps = 10;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(dense.run(batch.clone(), LutOpts::deployed()));
+    }
+    let dt_dense = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(lut.run(batch.clone(), LutOpts::deployed()));
+    }
+    let dt_lut = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "        dense {:.2} ms | lut {:.2} ms | speedup {:.2}x",
+        dt_dense * 1e3,
+        dt_lut * 1e3,
+        dt_dense / dt_lut
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: load a trained `.lutnn` bundle and classify a batch — the
+//! smallest end-to-end use of the public API.
+//!
+//!   make artifacts                 # once: trains + exports the bundles
+//!   cargo run --release --example quickstart
+//!
+//! Falls back to an in-process synthetic model when artifacts are absent
+//! so the example always runs.
+
+use lutnn::lut::LutOpts;
+use lutnn::model_fmt;
+use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+use lutnn::runtime::{artifact_path, artifacts_available};
+use lutnn::tensor::Tensor;
+use lutnn::util::prng::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Prng::new(0);
+
+    let graph = if artifacts_available() {
+        println!("loading trained bundle: resnet_tiny_lut.lutnn");
+        model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn"))?
+    } else {
+        println!("artifacts missing — building a synthetic LUT model instead");
+        let dense = build_cnn_graph(
+            "synthetic",
+            [16, 16, 3],
+            &[
+                ConvSpec { cout: 16, k: 3, stride: 1 },
+                ConvSpec { cout: 32, k: 3, stride: 2 },
+            ],
+            10,
+            0,
+        );
+        let sample = Tensor::new(vec![4, 16, 16, 3], rng.normal_vec(4 * 16 * 16 * 3, 1.0));
+        lutify_graph(&dense, &sample, 16, 8, 0)
+    };
+
+    println!(
+        "model '{}': {} linear ops as LUT, {} dense; {} param bytes",
+        graph.name,
+        graph.lut_fraction().0,
+        graph.lut_fraction().1,
+        graph.param_bytes()
+    );
+
+    // Classify a batch of 4 random inputs.
+    let item: usize = graph.input_shape[1..].iter().product();
+    let mut shape = vec![4usize];
+    shape.extend_from_slice(&graph.input_shape[1..]);
+    let x = Tensor::new(shape, rng.normal_vec(4 * item, 1.0));
+
+    let t0 = std::time::Instant::now();
+    let logits = graph.run(x, LutOpts::deployed());
+    let dt = t0.elapsed();
+
+    println!("logits shape {:?} in {:.2} ms", logits.shape, dt.as_secs_f64() * 1e3);
+    for (i, row) in logits.data.chunks(logits.cols()).enumerate() {
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("  input {i}: class {pred} (logit {:.3})", row[pred]);
+    }
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve the trained LUT-NN and
+//! dense models through the full coordinator stack — TCP server, router,
+//! dynamic batcher, native table-lookup engine — under a Poisson open-loop
+//! workload, and report latency percentiles + throughput for both.
+//!
+//!   make artifacts
+//!   cargo run --release --example serve_requests [-- --requests 200 --rate 50]
+//!
+//! This is the serving-paper analogue of "load a small real model and
+//! serve batched requests": the model is the actually-trained resnet_tiny
+//! (synthetic-image task, accuracies recorded in artifacts/manifest.json),
+//! every request crosses the wire, and the LUT vs dense comparison runs
+//! on identical traffic.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use lutnn::coordinator::server::{Client, Server, ServerConfig};
+use lutnn::coordinator::trace::poisson_trace;
+use lutnn::coordinator::{Backend, ModelEntry, Registry};
+use lutnn::lut::LutOpts;
+use lutnn::model_fmt;
+use lutnn::runtime::{artifact_path, artifacts_available};
+use lutnn::util::benchmark::Table;
+use lutnn::util::cli::Args;
+use lutnn::util::stats::Summary;
+
+fn drive(
+    addr: std::net::SocketAddr,
+    model: &str,
+    requests: usize,
+    rate: f64,
+    item_len: usize,
+    clients: usize,
+) -> (Summary, f64) {
+    let trace = poisson_trace(rate, requests, item_len, 7);
+    let latencies = Arc::new(Mutex::new(Vec::with_capacity(requests)));
+    let t0 = Instant::now();
+    // `clients` connections share the trace round-robin; each replays its
+    // slice with open-loop timing (sleep until the arrival timestamp).
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let trace = &trace;
+            let latencies = Arc::clone(&latencies);
+            let model = model.to_string();
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                for ev in trace.iter().skip(c).step_by(clients) {
+                    let now = t0.elapsed().as_secs_f64();
+                    if ev.at_s > now {
+                        std::thread::sleep(Duration::from_secs_f64(ev.at_s - now));
+                    }
+                    let sent = Instant::now();
+                    let out = client.infer(&model, &ev.input).expect("infer");
+                    assert_eq!(out.len(), 10);
+                    latencies
+                        .lock()
+                        .unwrap()
+                        .push(sent.elapsed().as_secs_f64());
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let lat = latencies.lock().unwrap();
+    (Summary::of(&lat), requests as f64 / wall)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.get_usize("requests", 200);
+    let rate = args.get_f64("rate", 50.0);
+    let clients = args.get_usize("clients", 4);
+
+    anyhow::ensure!(
+        artifacts_available(),
+        "run `make artifacts` first — this driver serves the trained models"
+    );
+    let mut registry = Registry::new();
+    for name in ["resnet_tiny_lut", "resnet_tiny_dense"] {
+        let graph = model_fmt::load_bundle(&artifact_path(&format!("{name}.lutnn")))?;
+        registry.register(ModelEntry {
+            name: name.into(),
+            backend: Backend::Native { graph, opts: LutOpts::deployed() },
+            item_shape: vec![16, 16, 3],
+        });
+    }
+    let server = Server::start(
+        registry,
+        ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )?;
+    println!(
+        "serving on {} — {requests} requests @ {rate}/s, {clients} clients\n",
+        server.addr
+    );
+
+    let mut table = Table::new(&[
+        "model", "throughput req/s", "p50 ms", "p95 ms", "p99 ms", "max ms",
+    ]);
+    for model in ["resnet_tiny_lut", "resnet_tiny_dense"] {
+        let (lat, thr) = drive(server.addr, model, requests, rate, 768, clients);
+        table.row(&[
+            model.into(),
+            format!("{:.1}", thr),
+            format!("{:.2}", lat.p50 * 1e3),
+            format!("{:.2}", lat.p95 * 1e3),
+            format!("{:.2}", lat.p99 * 1e3),
+            format!("{:.2}", lat.max * 1e3),
+        ]);
+    }
+    table.print();
+
+    // control-plane metrics
+    let mut c = Client::connect(&server.addr)?;
+    let m = c.call(&lutnn::util::json::Json::obj(vec![(
+        "cmd",
+        lutnn::util::json::Json::str("metrics"),
+    )]))?;
+    println!("\nserver metrics: {}", lutnn::util::json::to_string(&m));
+    Ok(())
+}

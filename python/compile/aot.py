@@ -1,0 +1,217 @@
+"""AOT compile path: train the tiny models, export `.lutnn` bundles and
+HLO **text** for the rust runtime (`make artifacts` entrypoint).
+
+HLO text — NOT ``lowered.compiler_ir("hlo").serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  resnet_tiny_dense.lutnn / resnet_tiny_lut.lutnn    trained bundles
+  mini_bert_dense.lutnn   / mini_bert_lut.lutnn
+  resnet_tiny_{dense,lut}_b{1,8}.hlo.txt             model graphs (PJRT)
+  mini_bert_{dense,lut}_b{1,8}.hlo.txt
+  lut_amm_op.hlo.txt                                 single fused L1 op
+  model.hlo.txt                                      alias of lut b1 graph
+  manifest.json                                      inventory + metrics
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import export, layers, train
+from .kernels import lut_amm as lut_kernels
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as `constant({...})`, which the rust-side text parser reads back as
+    # ZEROS — silently corrupting any graph with baked weights.
+    return comp.as_hlo_text(True)
+
+
+def lower_model(model, params, state, example, *, table_bits=8,
+                use_pallas=True) -> str:
+    """Bake params as constants; lower fwd(x) -> logits to HLO text."""
+    layers.set_pallas(use_pallas)
+    try:
+        def fwd(x):
+            out, _ = model.apply(params, state, x, train=False,
+                                 table_bits=table_bits)
+            return (out,)
+
+        spec = jax.ShapeDtypeStruct(example.shape, example.dtype)
+        return to_hlo_text(jax.jit(fwd).lower(spec))
+    finally:
+        layers.set_pallas(False)
+
+
+def lower_lut_amm_op(n=256, c=64, k=16, v=9, m=128) -> str:
+    """Standalone fused L1 kernel graph: (a, centroids, table_q, scale)."""
+    specs = [
+        jax.ShapeDtypeStruct((n, c * v), jnp.float32),
+        jax.ShapeDtypeStruct((c, k, v), jnp.float32),
+        jax.ShapeDtypeStruct((c, k, m), jnp.int8),
+        jax.ShapeDtypeStruct((c,), jnp.float32),
+    ]
+    bn = lut_kernels.pick_block_n(c, k, v, m)
+
+    def op(a, p, tq, s):
+        return (lut_kernels.lut_amm_quantized(a, p, tq, s, block_n=bn),)
+
+    return to_hlo_text(jax.jit(op).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal training (CI smoke)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    manifest: dict = {"created": "make artifacts", "models": {}}
+
+    dense_steps = 60 if args.quick else 500
+    ft_steps = 40 if args.quick else 300
+    n_train = 512 if args.quick else 3072
+
+    # ---------------- ResNet-tiny on synth-image --------------------------
+    x_tr, y_tr, x_te, y_te, model, _ = train.quick_task(
+        "image", n_train=n_train, n_test=512)
+    res = train.lutnn_pipeline(
+        model, x_tr, y_tr, x_te, y_te,
+        dense_cfg=train.TrainConfig(steps=dense_steps, lr=2e-3),
+        finetune_cfg=train.TrainConfig(steps=ft_steps, lr=1e-3),
+        n_capture=min(1024, n_train), kmeans_iters=15)
+    print(f"[aot] resnet_tiny dense={res.dense_metric:.4f} "
+          f"lut={res.lut_metric:.4f} ({time.time()-t0:.0f}s)")
+
+    export.export_cnn(model, res.dense_params, res.state,
+                      f"{out_dir}/resnet_tiny_dense.lutnn",
+                      name="resnet_tiny", input_shape=[1, 16, 16, 3],
+                      meta={"accuracy": res.dense_metric})
+    export.export_cnn(model, res.lut_params, res.state,
+                      f"{out_dir}/resnet_tiny_lut.lutnn",
+                      name="resnet_tiny_lut", input_shape=[1, 16, 16, 3],
+                      meta={"accuracy": res.lut_metric})
+    manifest["models"]["resnet_tiny"] = {
+        "dense_acc": res.dense_metric, "lut_acc": res.lut_metric,
+        "input_shape": [1, 16, 16, 3]}
+
+    for batch in (1, 8):
+        ex = jnp.zeros((batch, 16, 16, 3), jnp.float32)
+        for variant, p, pallas in (("dense", res.dense_params, False),
+                                   ("lut", res.lut_params, True)):
+            txt = lower_model(model, p, res.state, ex,
+                              table_bits=8 if variant == "lut" else None,
+                              use_pallas=pallas)
+            path = f"{out_dir}/resnet_tiny_{variant}_b{batch}.hlo.txt"
+            with open(path, "w") as f:
+                f.write(txt)
+            print(f"[aot] wrote {path} ({len(txt)} chars)")
+
+    # Golden I/O vectors so rust integration tests can pin exact numerics.
+    gx = x_te[:8].astype(np.float32)
+    gout, _ = model.apply(res.lut_params, res.state, jnp.asarray(gx),
+                          train=False, table_bits=8)
+    gdense, _ = model.apply(res.dense_params, res.state, jnp.asarray(gx),
+                            train=False, table_bits=None)
+    np.savez(f"{out_dir}/golden_resnet_tiny.npz", x=gx,
+             lut_out=np.asarray(gout), dense_out=np.asarray(gdense))
+    # flat binary copies for the no-npz rust side
+    gx.tofile(f"{out_dir}/golden_input_b8.f32")
+    np.asarray(gout, np.float32).tofile(f"{out_dir}/golden_lut_out_b8.f32")
+    np.asarray(gdense, np.float32).tofile(
+        f"{out_dir}/golden_dense_out_b8.f32")
+
+    # ---------------- mini-BERT on synth-nlp ------------------------------
+    xb_tr, yb_tr, xb_te, yb_te, bert, _ = train.quick_task(
+        "nlp", n_train=n_train, n_test=512)
+    replace = bert.lut_layers_last(bert.n_layers // 2)  # paper: last half
+    bres = train.lutnn_pipeline(
+        bert, xb_tr, yb_tr, xb_te, yb_te, replace=replace,
+        dense_cfg=train.TrainConfig(steps=dense_steps, lr=2e-3),
+        finetune_cfg=train.TrainConfig(steps=ft_steps, lr=1e-3),
+        n_capture=min(1024, n_train), kmeans_iters=15)
+    print(f"[aot] mini_bert dense={bres.dense_metric:.4f} "
+          f"lut={bres.lut_metric:.4f} ({time.time()-t0:.0f}s)")
+    export.export_bert(bert, bres.dense_params,
+                       f"{out_dir}/mini_bert_dense.lutnn",
+                       name="mini_bert", meta={"accuracy": bres.dense_metric})
+    export.export_bert(bert, bres.lut_params,
+                       f"{out_dir}/mini_bert_lut.lutnn",
+                       name="mini_bert_lut", meta={"accuracy": bres.lut_metric})
+    manifest["models"]["mini_bert"] = {
+        "dense_acc": bres.dense_metric, "lut_acc": bres.lut_metric,
+        "input_shape": [1, bert.seq_len]}
+    for batch in (1, 8):
+        ex = jnp.zeros((batch, bert.seq_len), jnp.int32)
+        for variant, p, pallas in (("dense", bres.dense_params, False),
+                                   ("lut", bres.lut_params, True)):
+            txt = lower_model(bert, p, bres.state, ex,
+                              table_bits=8 if variant == "lut" else None,
+                              use_pallas=pallas)
+            path = f"{out_dir}/mini_bert_{variant}_b{batch}.hlo.txt"
+            with open(path, "w") as f:
+                f.write(txt)
+            print(f"[aot] wrote {path} ({len(txt)} chars)")
+    gbx = xb_te[:8].astype(np.int32)
+    gbout, _ = bert.apply(bres.lut_params, bres.state, jnp.asarray(gbx),
+                          train=False, table_bits=8)
+    np.savez(f"{out_dir}/golden_mini_bert.npz", x=gbx,
+             lut_out=np.asarray(gbout))
+
+    # ---------------- standalone fused kernel -----------------------------
+    txt = lower_lut_amm_op()
+    with open(f"{out_dir}/lut_amm_op.hlo.txt", "w") as f:
+        f.write(txt)
+    # Golden vectors for the op graph.
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(256, 64 * 9)).astype(np.float32)
+    p = rng.normal(size=(64, 16, 9)).astype(np.float32)
+    b = rng.normal(size=(64 * 9, 128)).astype(np.float32)
+    tbl = np.asarray(ref.build_table_ref(jnp.asarray(p), jnp.asarray(b)))
+    q, scale = ref.quantize_table_ref(jnp.asarray(tbl), 8)
+    out = np.asarray(ref.lut_amm_quantized_ref(
+        jnp.asarray(a), jnp.asarray(p), q, scale))
+    np.savez(f"{out_dir}/golden_lut_amm_op.npz", a=a, p=p,
+             tq=np.asarray(q, np.int8), scale=np.asarray(scale), out=out)
+    a.tofile(f"{out_dir}/lut_amm_op_a.f32")
+    np.asarray(p, np.float32).tofile(f"{out_dir}/lut_amm_op_p.f32")
+    np.asarray(q, np.int8).tofile(f"{out_dir}/lut_amm_op_tq.i8")
+    np.asarray(scale, np.float32).tofile(f"{out_dir}/lut_amm_op_scale.f32")
+    out.astype(np.float32).tofile(f"{out_dir}/lut_amm_op_out.f32")
+
+    # legacy single-file alias expected by the Makefile contract
+    alias = args.out or f"{out_dir}/model.hlo.txt"
+    with open(f"{out_dir}/resnet_tiny_lut_b1.hlo.txt") as f:
+        model_txt = f.read()
+    with open(alias, "w") as f:
+        f.write(model_txt)
+
+    manifest["elapsed_s"] = round(time.time() - t0, 1)
+    with open(f"{out_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] done in {manifest['elapsed_s']}s -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Synthetic dataset generators (substitution for CIFAR/GTSRB/SVHN/
+SpeechCommand/UTKFace/GLUE — see DESIGN.md §Substitutions).
+
+Each generator is procedural, seeded, and produces a non-trivially
+learnable task that exercises the same code path as the paper's real
+datasets: conv stacks over 2-D images, conv stacks over spectrogram-like
+1×F×T inputs, token-sequence classification for the BERT path, and a
+scalar regression head for the UTKFace analogue.
+
+All return (x, y) numpy arrays; x is NHWC float32 (images/speech) or int32
+token ids (nlp); y is int64 labels or float32 targets.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMAGE_SIZE = 16
+IMAGE_CLASSES = 10
+SPEECH_FRAMES = 32
+SPEECH_BINS = 16
+SPEECH_CLASSES = 8
+NLP_SEQ_LEN = 16
+NLP_VOCAB = 64
+NLP_CLASSES = 4
+
+
+def _grid(size):
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+    return (yy - size / 2 + 0.5) / size, (xx - size / 2 + 0.5) / size
+
+
+def synth_image(n: int, seed: int = 0, size: int = IMAGE_SIZE, noise: float = 0.25):
+    """10-class 2-D shape+texture discrimination task ("synth-cifar").
+
+    Class  = (shape in {disc, ring, square, cross, diag}) x (stripes in
+    {horizontal, vertical}); each sample gets random position jitter,
+    per-channel tint, stripe phase, and additive Gaussian noise.
+    """
+    rng = np.random.default_rng(seed)
+    y = rng.integers(IMAGE_CLASSES, size=n).astype(np.int64)
+    shapes = y // 2          # 5 shapes
+    stripes = y % 2          # 2 stripe orientations
+    x = np.zeros((n, size, size, 3), dtype=np.float32)
+    yy, xx = _grid(size)
+    for i in range(n):
+        cy = rng.uniform(-0.15, 0.15)
+        cx = rng.uniform(-0.15, 0.15)
+        r = np.sqrt((yy - cy) ** 2 + (xx - cx) ** 2)
+        s = shapes[i]
+        if s == 0:
+            mask = (r < 0.3).astype(np.float32)
+        elif s == 1:
+            mask = ((r > 0.18) & (r < 0.33)).astype(np.float32)
+        elif s == 2:
+            mask = ((np.abs(yy - cy) < 0.25) & (np.abs(xx - cx) < 0.25)).astype(
+                np.float32
+            )
+        elif s == 3:
+            mask = (
+                (np.abs(yy - cy) < 0.08) | (np.abs(xx - cx) < 0.08)
+            ).astype(np.float32)
+        else:
+            mask = (np.abs((yy - cy) - (xx - cx)) < 0.12).astype(np.float32)
+        phase = rng.uniform(0, 2 * np.pi)
+        freq = rng.uniform(3.5, 4.5)
+        if stripes[i] == 0:
+            tex = 0.5 + 0.5 * np.sin(2 * np.pi * freq * yy + phase)
+        else:
+            tex = 0.5 + 0.5 * np.sin(2 * np.pi * freq * xx + phase)
+        tint = rng.uniform(0.5, 1.0, size=3).astype(np.float32)
+        img = (mask * tex)[:, :, None] * tint[None, None, :]
+        img += noise * rng.standard_normal((size, size, 3))
+        x[i] = img.astype(np.float32)
+    return x, y
+
+
+def synth_speech(n: int, seed: int = 0, noise: float = 0.3):
+    """8-"word" keyword-spotting analogue: harmonic-stack spectrograms.
+
+    Each class is a base bin + harmonic spacing + temporal envelope shape;
+    output is [T, F, 1] NHWC so the same conv stack consumes it.
+    """
+    rng = np.random.default_rng(seed)
+    y = rng.integers(SPEECH_CLASSES, size=n).astype(np.int64)
+    x = np.zeros((n, SPEECH_FRAMES, SPEECH_BINS, 1), dtype=np.float32)
+    t = np.linspace(0, 1, SPEECH_FRAMES, dtype=np.float32)[:, None]
+    f = np.arange(SPEECH_BINS, dtype=np.float32)[None, :]
+    for i in range(n):
+        c = y[i]
+        base = 1.5 + (c % 4) * 2.5 + rng.uniform(-0.4, 0.4)
+        spacing = 3.0 + (c // 4) * 2.0
+        env = np.exp(-((t - rng.uniform(0.3, 0.7)) ** 2) / 0.08)
+        spec = np.zeros((SPEECH_FRAMES, SPEECH_BINS), dtype=np.float32)
+        for h in range(3):
+            fb = base + h * spacing
+            spec += env * np.exp(-((f - fb) ** 2) / 1.2) / (1 + h)
+        spec += noise * rng.standard_normal(spec.shape)
+        x[i, :, :, 0] = spec
+    return x, y
+
+
+def synth_age(n: int, seed: int = 0, size: int = IMAGE_SIZE, noise: float = 0.2):
+    """UTKFace-analogue regression: target = ring count + radius (continuous).
+
+    Images contain concentric rings whose count/spacing encode a scalar in
+    [0, 10]; the model must regress it (MAE reported, lower is better).
+    """
+    rng = np.random.default_rng(seed)
+    age = rng.uniform(0.0, 10.0, size=n).astype(np.float32)
+    x = np.zeros((n, size, size, 3), dtype=np.float32)
+    yy, xx = _grid(size)
+    r = np.sqrt(yy ** 2 + xx ** 2)
+    for i in range(n):
+        freq = 2.0 + age[i]
+        img = 0.5 + 0.5 * np.cos(2 * np.pi * freq * r)
+        img = img * np.exp(-r * 1.5)
+        tint = rng.uniform(0.6, 1.0, size=3).astype(np.float32)
+        out = img[:, :, None] * tint[None, None, :]
+        out += noise * rng.standard_normal(out.shape)
+        x[i] = out.astype(np.float32)
+    return x, age
+
+
+def synth_nlp(n: int, seed: int = 0, seq_len: int = NLP_SEQ_LEN):
+    """4-class token-sequence classification with planted bigram motifs.
+
+    Class c plants the bigram (2c+2, 2c+3) at a random position (twice)
+    in an otherwise uniform-random token stream; a transformer must attend
+    to adjacent-token structure to solve it (BoW is insufficient because
+    all tokens appear in all classes as background).
+    """
+    rng = np.random.default_rng(seed)
+    y = rng.integers(NLP_CLASSES, size=n).astype(np.int64)
+    x = rng.integers(10, NLP_VOCAB, size=(n, seq_len)).astype(np.int32)
+    for i in range(n):
+        c = int(y[i])
+        # adversarial background first: singletons of other classes' tokens
+        # (planted before the motif so they can never clobber it)
+        for other in range(NLP_CLASSES):
+            if other != c:
+                x[i, rng.integers(0, seq_len)] = 2 * other + 2
+        for _ in range(2):
+            pos = rng.integers(0, seq_len - 1)
+            x[i, pos] = 2 * c + 2
+            x[i, pos + 1] = 2 * c + 3
+    return x, y
+
+
+def synth_sts(n: int, seed: int = 0, seq_len: int = NLP_SEQ_LEN):
+    """STS-B-analogue regression for Fig. 13: similarity of two half-seqs.
+
+    The sequence is [first half | second half]; the target is the fraction
+    of aligned positions whose tokens match between halves (in [0, 1]).
+    """
+    rng = np.random.default_rng(seed)
+    half = seq_len // 2
+    x = rng.integers(2, 10, size=(n, seq_len)).astype(np.int32)
+    sim = rng.uniform(0, 1, size=n).astype(np.float32)
+    for i in range(n):
+        n_match = int(round(sim[i] * half))
+        pos = rng.permutation(half)[:n_match]
+        x[i, half + pos] = x[i, pos]
+        # exact target after rounding
+        sim[i] = float(np.mean(x[i, half:] == x[i, :half]))
+    return x, sim
+
+
+def batches(x, y, batch_size: int, seed: int = 0, shuffle: bool = True):
+    """Deterministic mini-batch iterator."""
+    n = len(x)
+    idx = np.arange(n)
+    if shuffle:
+        np.random.default_rng(seed).shuffle(idx)
+    for i in range(0, n - batch_size + 1, batch_size):
+        sel = idx[i : i + batch_size]
+        yield x[sel], y[sel]

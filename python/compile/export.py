@@ -1,0 +1,260 @@
+"""`.lutnn` model-bundle writer (format v1 — see DESIGN.md).
+
+Layout (little-endian):
+  magic  b"LUTN"
+  u32    version (1)
+  u32    header JSON length
+  bytes  header JSON (utf-8)
+  ...    blobs, each aligned to 64 bytes, in header order
+
+The header carries the execution graph (an instruction list the rust
+graph executor interprets: conv/bn/relu/maxpool/gap/linear/save/restore/
+add) plus per-layer blob descriptors {offset, shape, dtype}. LUT layers
+store centroids f32[C,K,V], quantized table i8[C,K,M] (or i32 for
+table_bits > 8 paths), per-codebook scale f32[C], temperature, bias.
+
+The rust reader is rust/src/model_fmt/; round-trip is tested on both
+sides (python/tests/test_export.py, rust model_fmt tests).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+from . import softpq
+from .kernels import ref
+
+MAGIC = b"LUTN"
+VERSION = 1
+ALIGN = 64
+
+_DTYPES = {"f32": np.float32, "i8": np.int8, "i32": np.int32}
+
+
+class BundleWriter:
+    def __init__(self, model_name: str, input_shape, graph: list[dict],
+                 meta: dict | None = None):
+        self.header = {
+            "model": model_name,
+            "input_shape": list(input_shape),
+            "graph": graph,
+            "layers": {},
+            "meta": meta or {},
+        }
+        self.blobs: list[np.ndarray] = []
+
+    def _add_blob(self, arr: np.ndarray, dtype: str) -> dict:
+        arr = np.ascontiguousarray(arr.astype(_DTYPES[dtype]))
+        self.blobs.append(arr)
+        return {"index": len(self.blobs) - 1, "shape": list(arr.shape),
+                "dtype": dtype}
+
+    def add_dense(self, name: str, w: np.ndarray, b: np.ndarray | None):
+        entry = {"kind": "dense", "w": self._add_blob(w, "f32")}
+        if b is not None:
+            entry["b"] = self._add_blob(b, "f32")
+        self.header["layers"][name] = entry
+
+    def add_lut(self, name: str, params: softpq.LutParams,
+                table_bits: int = 8):
+        p = np.asarray(params.centroids, np.float32)
+        table = np.asarray(ref.build_table_ref(params.centroids,
+                                               params.weight))
+        q, scale = ref.quantize_table_ref(table, table_bits)
+        q = np.asarray(q)
+        entry = {
+            "kind": "lut",
+            "table_bits": table_bits,
+            "temperature": float(np.exp(params.log_t)),
+            "centroids": self._add_blob(p, "f32"),
+            "table_q": self._add_blob(q, "i8" if table_bits <= 8 else "i32"),
+            "scale": self._add_blob(np.asarray(scale), "f32"),
+        }
+        if params.bias is not None:
+            entry["b"] = self._add_blob(np.asarray(params.bias), "f32")
+        self.header["layers"][name] = entry
+
+    def add_bn(self, name: str, gamma, beta, mean, var):
+        self.header["layers"][name] = {
+            "kind": "bn",
+            "gamma": self._add_blob(np.asarray(gamma), "f32"),
+            "beta": self._add_blob(np.asarray(beta), "f32"),
+            "mean": self._add_blob(np.asarray(mean), "f32"),
+            "var": self._add_blob(np.asarray(var), "f32"),
+        }
+
+    def add_raw(self, name: str, kind: str, **arrays):
+        entry = {"kind": kind}
+        for k, arr in arrays.items():
+            entry[k] = self._add_blob(np.asarray(arr), "f32")
+        self.header["layers"][name] = entry
+
+    def write(self, path: str):
+        # First pass: compute blob offsets (relative to file start).
+        header_json = b"{}"
+        # Iterate: header length changes offsets; fix-point in two passes
+        # by computing with a placeholder then patching exact offsets.
+        offsets = []
+
+        def layout(header_len: int):
+            pos = 4 + 4 + 4 + header_len
+            offs = []
+            for arr in self.blobs:
+                pos = (pos + ALIGN - 1) // ALIGN * ALIGN
+                offs.append(pos)
+                pos += arr.nbytes
+            return offs, pos
+
+        # Install offsets into header entries via blob index.
+        def patch(offs):
+            def visit(entry):
+                for v in entry.values():
+                    if isinstance(v, dict) and "index" in v:
+                        v["offset"] = offs[v["index"]]
+            for entry in self.header["layers"].values():
+                visit(entry)
+
+        # Two-pass fixpoint: JSON length may change once offsets are added;
+        # iterate until stable (bounded: offsets only grow monotonically).
+        header_len = 0
+        for _ in range(8):
+            offs, _total = layout(header_len)
+            patch(offs)
+            header_json = json.dumps(self.header,
+                                     separators=(",", ":")).encode()
+            if len(header_json) == header_len:
+                break
+            header_len = len(header_json)
+        offs, total = layout(len(header_json))
+        patch(offs)
+        header_json = json.dumps(self.header, separators=(",", ":")).encode()
+        assert len(header_json) == header_len, "header fixpoint failed"
+
+        buf = bytearray(total)
+        buf[0:4] = MAGIC
+        struct.pack_into("<II", buf, 4, VERSION, len(header_json))
+        buf[12:12 + len(header_json)] = header_json
+        for arr, off in zip(self.blobs, offs):
+            raw = arr.tobytes()
+            buf[off:off + len(raw)] = raw
+        with open(path, "wb") as f:
+            f.write(bytes(buf))
+        return total
+
+
+def read_bundle(path: str):
+    """Python-side reader (used by tests to round-trip)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, "bad magic"
+    version, hlen = struct.unpack_from("<II", data, 4)
+    assert version == VERSION
+    header = json.loads(data[12:12 + hlen].decode())
+    arrays: dict[str, dict[str, np.ndarray]] = {}
+    for name, entry in header["layers"].items():
+        arrays[name] = {}
+        for k, v in entry.items():
+            if isinstance(v, dict) and "offset" in v:
+                dt = _DTYPES[v["dtype"]]
+                n = int(np.prod(v["shape"])) if v["shape"] else 1
+                arr = np.frombuffer(data, dtype=dt, count=n,
+                                    offset=v["offset"]).reshape(v["shape"])
+                arrays[name][k] = arr
+    return header, arrays
+
+
+# ------------------------------------------------- model-specific exports
+
+def resnet_tiny_graph(model) -> list[dict]:
+    g: list[dict] = [
+        {"op": "conv", "layer": "stem", "k": 3, "stride": 1},
+        {"op": "bn", "layer": "stem_bn"},
+        {"op": "relu"},
+    ]
+    for i in range(len(model.widths)):
+        blk = f"b{i}"
+        stride = 1 if i == 0 else 2
+        g += [
+            {"op": "save", "slot": 0},
+            {"op": "conv", "layer": f"{blk}c1", "k": 3, "stride": stride},
+            {"op": "bn", "layer": f"{blk}bn1"},
+            {"op": "relu"},
+            {"op": "conv", "layer": f"{blk}c2", "k": 3, "stride": 1},
+            {"op": "bn", "layer": f"{blk}bn2"},
+            {"op": "save", "slot": 1},
+            {"op": "restore", "slot": 0},
+        ]
+        g += [
+            {"op": "conv", "layer": f"{blk}sc", "k": 1, "stride": stride},
+            {"op": "bn", "layer": f"{blk}scbn"},
+        ]
+        g += [
+            {"op": "add", "slot": 1},
+            {"op": "relu"},
+        ]
+    g += [{"op": "gap"}, {"op": "linear", "layer": "fc"}]
+    return g
+
+
+def vgg_tiny_graph(model) -> list[dict]:
+    g: list[dict] = []
+    for i in range(len(model.widths)):
+        g += [
+            {"op": "conv", "layer": f"c{i}", "k": 3, "stride": 1},
+            {"op": "bn", "layer": f"bn{i}"},
+            {"op": "relu"},
+        ]
+        if i % 2 == 1:
+            g.append({"op": "maxpool", "k": 2, "stride": 2})
+    g += [{"op": "gap"}, {"op": "linear", "layer": "fc"}]
+    return g
+
+
+def export_cnn(model, params, state, path: str, *, name: str,
+               input_shape, table_bits: int = 8, meta=None):
+    """Write a trained (possibly LUT-converted) CNN as a .lutnn bundle."""
+    from . import models as _models
+
+    if isinstance(model, _models.ResNetTiny):
+        graph = resnet_tiny_graph(model)
+    else:
+        graph = vgg_tiny_graph(model)
+    # Drop graph entries whose layer is absent (e.g. first block w/o sc).
+    graph = [op for op in graph
+             if "layer" not in op or op["layer"] in params]
+    w = BundleWriter(name, input_shape, graph, meta=meta)
+    for lname, p in params.items():
+        if isinstance(p, softpq.LutParams):
+            w.add_lut(lname, p, table_bits=table_bits)
+        elif lname in state:  # bn
+            w.add_bn(lname, p["gamma"], p["beta"],
+                     state[lname]["mean"], state[lname]["var"])
+        else:
+            w.add_dense(lname, np.asarray(p["w"]), np.asarray(p["b"]))
+    return w.write(path)
+
+
+def export_bert(model, params, path: str, *, name: str = "mini_bert",
+                table_bits: int = 8, meta=None):
+    """Write a (possibly LUT-converted) MiniBert as a .lutnn bundle."""
+    graph = [{"op": "bert"}]
+    m = dict(meta or {})
+    m.update({"vocab": model.vocab, "seq_len": model.seq_len, "d": model.d,
+              "n_heads": model.n_heads, "d_ff": model.d_ff,
+              "n_layers": model.n_layers, "n_out": model.n_out})
+    w = BundleWriter(name, [1, model.seq_len], graph, meta=m)
+    w.add_raw("emb", "embedding", tok=np.asarray(params["tok_emb"]),
+              pos=np.asarray(params["pos_emb"]))
+    for lname, p in params.items():
+        if lname in ("tok_emb", "pos_emb"):
+            continue
+        if isinstance(p, softpq.LutParams):
+            w.add_lut(lname, p, table_bits=table_bits)
+        elif "gamma" in p:
+            w.add_raw(lname, "ln", gamma=p["gamma"], beta=p["beta"])
+        else:
+            w.add_dense(lname, np.asarray(p["w"]), np.asarray(p["b"]))
+    return w.write(path)

@@ -1,0 +1,217 @@
+"""L1 — Pallas kernels for the LUT-NN table-lookup AMM hot spot.
+
+TPU adaptation of the paper's §5 (DESIGN.md §Hardware-Adaptation): instead
+of NEON/SSE shuffle instructions, both stages are cast as MXU-shaped
+matmuls with the codebook pinned in VMEM across the whole row grid
+(the VMEM analogue of the paper's centroid-stationary scheme):
+
+  stage 1  distance     [bN, V] @ [V, K]  per codebook  (+ |p|^2 bias row)
+  stage 2  table read   onehot[bN, K] @ T[K, M]         per codebook
+
+The kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so on this testbed Pallas is a *structural*
+target (block schedule, VMEM budget) validated numerically against
+``ref.py``; real-TPU perf is estimated in DESIGN.md §Perf.
+
+Grid: 1-D over row blocks of size ``block_n``. Per grid step the VMEM
+footprint is
+    bN*(C*V + C*K + M)*4 B  (input block, distance scratch, output block)
+  + C*K*(V + M)*4 B         (codebook + table, resident)
+which for the default (bN=128, C=64, V=9, K=16, M=512) is ~2.9 MiB —
+inside a 16 MiB TPU VMEM with double-buffering headroom.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _dist_argmin_kernel(a_ref, p_ref, idx_ref):
+    """Closest-centroid search (paper §5.1) for one row block.
+
+    a_ref:   [bN, C, V]  input sub-vectors
+    p_ref:   [C, K, V]   codebooks (grid-invariant -> stays in VMEM)
+    idx_ref: [bN, C]     output centroid indices (int32)
+    """
+    a = a_ref[...]
+    p = p_ref[...]
+    # |a - p|^2 = |a|^2 - 2 a.p + |p|^2 ; |a|^2 is constant over k and
+    # does not change the argmin, so it is dropped (fewer VPU ops).
+    cross = jax.lax.dot_general(
+        a.transpose(1, 0, 2),            # [C, bN, V]
+        p.transpose(0, 2, 1),            # [C, V, K]
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                     # [C, bN, K]
+    p2 = jnp.sum(p * p, axis=-1)          # [C, K]
+    d = p2[:, None, :] - 2.0 * cross      # [C, bN, K]
+    idx_ref[...] = jnp.argmin(d, axis=-1).astype(jnp.int32).T
+
+
+def _lut_amm_kernel(a_ref, p_ref, t_ref, o_ref):
+    """Fused distance -> argmin -> table read -> accumulate for one block.
+
+    a_ref: [bN, C, V], p_ref: [C, K, V], t_ref: [C, K, M], o_ref: [bN, M].
+    The table read is a one-hot [C, bN, K] @ [C, K, M] batched matmul —
+    MXU-shaped, replacing the CPU shuffle instruction of the paper.
+    """
+    a = a_ref[...]
+    p = p_ref[...]
+    t = t_ref[...]
+    k = p.shape[1]
+    cross = jax.lax.dot_general(
+        a.transpose(1, 0, 2),
+        p.transpose(0, 2, 1),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                     # [C, bN, K]
+    p2 = jnp.sum(p * p, axis=-1)
+    d = p2[:, None, :] - 2.0 * cross
+    onehot = jax.nn.one_hot(jnp.argmin(d, axis=-1), k, dtype=jnp.float32)
+    # [C, bN, K] @ [C, K, M] -> [C, bN, M]; sum over codebooks -> [bN, M]
+    per_c = jax.lax.dot_general(
+        onehot,
+        t,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jnp.sum(per_c, axis=0)
+
+
+def _lut_amm_q_kernel(a_ref, p_ref, tq_ref, s_ref, o_ref):
+    """INT8-table variant: gather in int space, scale per codebook (§5.2).
+
+    tq_ref: [C, K, M] int8, s_ref: [C] f32. Mixed-precision accumulation:
+    the one-hot matmul runs over the int8 table upcast to f32 lane-wise
+    (interpret mode); on real TPU this maps to int8 MXU passes with i32
+    accumulators, mirroring the paper's INT16->INT32 two-stage scheme.
+    """
+    a = a_ref[...]
+    p = p_ref[...]
+    tq = tq_ref[...].astype(jnp.float32)
+    s = s_ref[...]
+    k = p.shape[1]
+    cross = jax.lax.dot_general(
+        a.transpose(1, 0, 2),
+        p.transpose(0, 2, 1),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    p2 = jnp.sum(p * p, axis=-1)
+    d = p2[:, None, :] - 2.0 * cross
+    onehot = jax.nn.one_hot(jnp.argmin(d, axis=-1), k, dtype=jnp.float32)
+    per_c = jax.lax.dot_general(
+        onehot, tq,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                     # [C, bN, M]
+    o_ref[...] = jnp.sum(per_c * s[:, None, None], axis=0)
+
+
+def _pad_rows(a: jnp.ndarray, block_n: int):
+    n = a.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0)
+    return a, n
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def dist_argmin(a, centroids, *, block_n: int = DEFAULT_BLOCK_N):
+    """Pallas closest-centroid search. a: [N, D], centroids: [C, K, V] -> [N, C]."""
+    c, _, v = centroids.shape
+    n = a.shape[0]
+    sub = a.reshape(n, c, v)
+    sub, n_orig = _pad_rows(sub, block_n)
+    grid = (sub.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _dist_argmin_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, c, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec(centroids.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sub.shape[0], c), jnp.int32),
+        interpret=True,
+    )(sub, centroids)
+    return out[:n_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def lut_amm(a, centroids, table, bias=None, *, block_n: int = DEFAULT_BLOCK_N):
+    """Fused LUT-NN AMM. a: [N, D], centroids: [C, K, V], table: [C, K, M]."""
+    c, k, v = centroids.shape
+    m = table.shape[2]
+    n = a.shape[0]
+    sub = a.reshape(n, c, v)
+    sub, n_orig = _pad_rows(sub, block_n)
+    grid = (sub.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _lut_amm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, c, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c, k, v), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c, k, m), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sub.shape[0], m), jnp.float32),
+        interpret=True,
+    )(sub, centroids, table)
+    out = out[:n_orig]
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def lut_amm_quantized(
+    a, centroids, table_q, scale, bias=None, *, block_n: int = DEFAULT_BLOCK_N
+):
+    """INT8-table fused LUT-NN AMM (paper §3.3/§5.2)."""
+    c, k, v = centroids.shape
+    m = table_q.shape[2]
+    n = a.shape[0]
+    sub = a.reshape(n, c, v)
+    sub, n_orig = _pad_rows(sub, block_n)
+    grid = (sub.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _lut_amm_q_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, c, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c, k, v), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c, k, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sub.shape[0], m), jnp.float32),
+        interpret=True,
+    )(sub, centroids, table_q.astype(jnp.int8), scale)
+    out = out[:n_orig]
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def vmem_footprint_bytes(block_n: int, c: int, k: int, v: int, m: int) -> int:
+    """Static VMEM estimate for one grid step of the fused kernel (DESIGN §Perf)."""
+    resident = c * k * (v + m) * 4            # codebook + table
+    per_block = block_n * (c * v + m) * 4     # input block + output block
+    scratch = c * block_n * k * 4             # distance / one-hot scratch
+    return resident + per_block + scratch
+
+
+def pick_block_n(c: int, k: int, v: int, m: int, budget: int = 8 << 20) -> int:
+    """Largest power-of-two row block whose footprint fits the VMEM budget."""
+    bn = 512
+    while bn > 8 and vmem_footprint_bytes(bn, c, k, v, m) > budget:
+        bn //= 2
+    return bn

@@ -1,0 +1,133 @@
+"""Pure-jnp reference oracle for the LUT-NN AMM kernels.
+
+Everything in this file is straight-line jnp with no pallas, no tricks —
+it is the numerics contract that ``lut_amm.py`` (L1 pallas kernels) and the
+rust ``lut::engine`` (L3 native engine) are tested against.
+
+Shapes and symbols follow the paper (§2.2, Table 1):
+  A  : [N, D]      input matrix (rows are feature vectors)
+  B  : [D, M]      weight matrix (constant at inference)
+  C  : number of codebooks, D = C * V
+  V  : sub-vector length
+  K  : centroids per codebook
+  P  : [C, K, V]   centroids ("codebooks")
+  T  : [C, K, M]   lookup table, T[c, k] = P[c, k] @ B[c*V:(c+1)*V]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_subvectors(a: jnp.ndarray, n_codebooks: int) -> jnp.ndarray:
+    """[N, D] -> [N, C, V] contiguous sub-vector view (paper Fig. 2)."""
+    n, d = a.shape
+    assert d % n_codebooks == 0, f"D={d} not divisible by C={n_codebooks}"
+    return a.reshape(n, n_codebooks, d // n_codebooks)
+
+
+def distances_ref(a: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance of every sub-vector to every centroid.
+
+    a: [N, D], centroids: [C, K, V] -> [N, C, K].
+    Uses the expanded form |a|^2 - 2 a.p + |p|^2 (same as the fast path).
+    """
+    c, _, v = centroids.shape
+    sub = split_subvectors(a, c)                      # [N, C, V]
+    a2 = jnp.sum(sub * sub, axis=-1, keepdims=True)   # [N, C, 1]
+    p2 = jnp.sum(centroids * centroids, axis=-1)      # [C, K]
+    cross = jnp.einsum("ncv,ckv->nck", sub, centroids)
+    return a2 - 2.0 * cross + p2[None, :, :]
+
+
+def encode_ref(a: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 2: argmin_k ||a^c - P_k^c||^2  -> [N, C] int32 indices."""
+    return jnp.argmin(distances_ref(a, centroids), axis=-1).astype(jnp.int32)
+
+
+def build_table_ref(centroids: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 3: T[c, k] = P[c, k] . b^c   -> [C, K, M]."""
+    c, _, v = centroids.shape
+    d, m = b.shape
+    assert d == c * v
+    b_sub = b.reshape(c, v, m)
+    return jnp.einsum("ckv,cvm->ckm", centroids, b_sub)
+
+
+def lut_amm_ref(
+    a: jnp.ndarray,
+    centroids: jnp.ndarray,
+    table: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Paper Eq. 4: a.b ~= sum_c onehot(argmin) . T^c    -> [N, M].
+
+    The gather formulation (take_along_axis) is the semantic ground truth;
+    the pallas kernel realises the same thing as a one-hot matmul so it can
+    ride the MXU.
+    """
+    idx = encode_ref(a, centroids)                    # [N, C]
+    gathered = jnp.take_along_axis(
+        table[None, :, :, :],                         # [1, C, K, M]
+        idx[:, :, None, None],                        # [N, C, 1, 1]
+        axis=2,
+    )                                                 # [N, C, 1, M]
+    out = jnp.sum(gathered[:, :, 0, :], axis=1)       # [N, M]
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def lut_amm_quantized_ref(
+    a: jnp.ndarray,
+    centroids: jnp.ndarray,
+    table_q: jnp.ndarray,
+    scale: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """INT8 lookup-table variant (paper §3.3 + §5.2).
+
+    table_q: [C, K, M] int8-range values, scale: [C] per-codebook symmetric
+    scale. Accumulates the gathered rows in int32 per codebook (the
+    mixed-precision accumulation of §5.2), then applies the scale in f32.
+    """
+    idx = encode_ref(a, centroids)
+    gathered = jnp.take_along_axis(
+        table_q[None, :, :, :].astype(jnp.int32),
+        idx[:, :, None, None],
+        axis=2,
+    )[:, :, 0, :]                                     # [N, C, M] int32
+    out = jnp.sum(gathered.astype(jnp.float32) * scale[None, :, None], axis=1)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def quantize_table_ref(table: jnp.ndarray, bits: int = 8):
+    """Range-based symmetric scalar quantization (paper §3.3).
+
+    r = s * q, s = max|value| / (2^(n-1) - 1), per codebook.
+    Returns (q [C,K,M] int32 in the signed n-bit range, scale [C]).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(table), axis=(1, 2))     # [C]
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(table / scale[:, None, None]), -qmax - 1, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def softpq_encode_ref(
+    a: jnp.ndarray, centroids: jnp.ndarray, temperature
+) -> jnp.ndarray:
+    """Paper Eq. 5: softmax(-d^2 / t) over centroids -> [N, C, K]."""
+    d = distances_ref(a, centroids)
+    return jax.nn.softmax(-d / temperature, axis=-1)
+
+
+def dense_ref(a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray | None = None):
+    """The exact MM that LUT-AMM approximates."""
+    out = a @ b
+    if bias is not None:
+        out = out + bias
+    return out

@@ -1,0 +1,196 @@
+"""L2 — minimal functional layer library (params as pytrees).
+
+Every linear op (Conv2d via im2col, Linear) exists in two forms:
+
+  dense : {"w": ..., "b": ...}            — the original model
+  lut   : softpq.LutParams                — after centroid conversion
+
+``apply_*`` dispatch on which form the params dict holds, so the same
+model graph runs the original model, the soft-PQ training forward, and
+the quantized inference forward (paper Fig. 1 "transform linear layers
+to table lookup").
+
+im2col layout contract (shared with the rust engine and the pallas
+kernel): patch features are ordered (Cin, kh, kw) channel-major, so with
+V = kh*kw each codebook covers exactly one input channel's window —
+the paper's (K, V) = (16, 9) for 3x3 convs and (16, 4)... for 1x1 convs
+the paper uses V=4, i.e. one codebook per 4 input channels; we follow
+that by using (kh*kw metric) V=9 for 3x3 and V=4 over channels for 1x1.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import softpq
+
+Params = dict[str, Any]
+
+# When True, LUT inference forwards route through the L1 pallas kernels
+# (interpret=True) instead of the jnp reference — set by aot.py so the AOT
+# lowering carries the kernel's block schedule. Module-level because it is
+# a build-time lowering switch, not a runtime knob.
+_USE_PALLAS = False
+
+
+def set_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+# ---------------------------------------------------------------- init utils
+
+def _he_init(rng, shape, fan_in):
+    return (np.random.default_rng(rng).standard_normal(shape) *
+            np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def conv2d_init(seed: int, cin: int, cout: int, k: int) -> Params:
+    w = _he_init(seed, (cin * k * k, cout), cin * k * k)
+    return {"w": jnp.asarray(w), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def linear_init(seed: int, din: int, dout: int) -> Params:
+    w = _he_init(seed, (din, dout), din)
+    return {"w": jnp.asarray(w), "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def bn_init(ch: int) -> tuple[Params, Params]:
+    params = {"gamma": jnp.ones((ch,), jnp.float32),
+              "beta": jnp.zeros((ch,), jnp.float32)}
+    state = {"mean": jnp.zeros((ch,), jnp.float32),
+             "var": jnp.ones((ch,), jnp.float32)}
+    return params, state
+
+
+def ln_init(ch: int) -> Params:
+    return {"gamma": jnp.ones((ch,), jnp.float32),
+            "beta": jnp.zeros((ch,), jnp.float32)}
+
+
+# ------------------------------------------------------------------- im2col
+
+def im2col(x: jnp.ndarray, k: int, stride: int, padding: str) -> jnp.ndarray:
+    """NHWC -> [N, Ho, Wo, Cin*k*k] patches, (Cin, kh, kw) channel-major."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return patches  # feature dim is Cin*k*k, channel-major per lax docs
+
+
+def conv_weight_as_matrix(w_hwio: jnp.ndarray) -> jnp.ndarray:
+    """[kh, kw, Cin, Cout] -> [Cin*kh*kw, Cout] matching im2col layout."""
+    kh, kw, cin, cout = w_hwio.shape
+    return w_hwio.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+
+
+# ------------------------------------------------------------------- apply
+
+def apply_linear(params, x2d: jnp.ndarray, *, train: bool,
+                 table_bits: int | None, capture: dict | None = None,
+                 name: str = "") -> jnp.ndarray:
+    """x2d: [rows, D] -> [rows, M]; dispatches dense vs LUT."""
+    if capture is not None:
+        capture[name] = x2d
+    if isinstance(params, softpq.LutParams):
+        if train:
+            return softpq.softpq_forward(params, x2d, table_bits=table_bits)
+        return softpq.inference_forward(params, x2d, table_bits=table_bits,
+                                        use_pallas=_USE_PALLAS)
+    if type(params).__name__ == "MaddnessOp":  # baseline, eager-only path
+        from . import maddness as _m
+
+        return jnp.asarray(_m.maddness_amm(np.asarray(x2d), params))
+    return x2d @ params["w"] + params["b"]
+
+
+def apply_conv(params, x: jnp.ndarray, *, k: int, stride: int,
+               padding: str = "SAME", train: bool,
+               table_bits: int | None, capture=None, name="") -> jnp.ndarray:
+    """NHWC conv as im2col + (dense | LUT) matmul."""
+    n = x.shape[0]
+    patches = im2col(x, k, stride, padding)
+    ho, wo = patches.shape[1], patches.shape[2]
+    rows = patches.reshape(n * ho * wo, patches.shape[3])
+    out = apply_linear(params, rows, train=train, table_bits=table_bits,
+                       capture=capture, name=name)
+    return out.reshape(n, ho, wo, out.shape[-1])
+
+
+def apply_bn(params, state, x, *, train: bool, momentum: float = 0.9):
+    """BatchNorm over NHWC (reduce N,H,W). Returns (y, new_state)."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    inv = jax.lax.rsqrt(var + 1e-5)
+    y = (x - mean) * inv * params["gamma"] + params["beta"]
+    return y, new_state
+
+
+def apply_ln(params, x):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-5) * params["gamma"] + params["beta"]
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def max_pool(x, k: int = 2, stride: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, k, k, 1), (1, stride, stride, 1), "VALID")
+
+
+# -------------------------------------------------------- LUT conversion
+
+def codebook_geometry(d: int, kernel: int) -> int:
+    """Sub-vector length V for a linear op with input dim D (paper §6.1).
+
+    3x3 convs -> V = 9 (one codebook per input channel's window);
+    1x1 convs / small FC -> V = 4; wide FC (BERT-like, D >= 256) -> V = 16.
+    Falls back to the largest of {9, 4, 2, 1} dividing D.
+    """
+    if kernel == 3 and d % 9 == 0:
+        return 9
+    if d >= 256 and d % 16 == 0:
+        return 16
+    for v in (4, 2, 1):
+        if d % v == 0:
+            return v
+    return 1
+
+
+def to_lut(params: Params, activations: np.ndarray, *, n_centroids: int,
+           subvec_len: int, init_t: float = 1.0, seed: int = 0,
+           kmeans_iters: int = 25) -> softpq.LutParams:
+    """Convert a dense linear op to LUT form: k-means init (paper §6.1)."""
+    from . import pqkmeans
+
+    w = np.asarray(params["w"])
+    d = w.shape[0]
+    assert d % subvec_len == 0, f"D={d} % V={subvec_len} != 0"
+    c = d // subvec_len
+    centroids = pqkmeans.learn_codebooks(
+        np.asarray(activations, np.float32), c, n_centroids,
+        n_iters=kmeans_iters, seed=seed)
+    return softpq.init_lut_params(
+        jnp.asarray(w), jnp.asarray(params["b"]),
+        jnp.asarray(centroids), init_t=init_t)

@@ -1,0 +1,9 @@
+"""L2 facade — re-exports the model zoo and the two forward paths.
+
+Kept as the module named in the repo scaffold contract; the substance
+lives in models.py (architectures), softpq.py (soft-PQ learning),
+layers.py (ops) and kernels/ (L1 pallas + oracle).
+"""
+
+from .models import MiniBert, ResNetTiny, VggTiny, convert_model  # noqa: F401
+from .softpq import LutParams, inference_forward, softpq_forward  # noqa: F401

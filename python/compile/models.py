@@ -1,0 +1,270 @@
+"""L2 — model zoo: ResNet-tiny, VGG-tiny (CNNs) and mini-BERT.
+
+Scaled-down analogues of the paper's ResNet18 / VGG11 / BERT-base
+(DESIGN.md §Substitutions) that train in minutes on one CPU core while
+keeping the structural features the paper's technique interacts with:
+residual blocks, 3x3 + 1x1 convs, BN, attention + FFN linears.
+
+Every model exposes:
+  init(seed)                          -> (params, state)
+  apply(params, state, x, train=..., table_bits=..., capture=...)
+                                      -> (output, new_state)
+  lut_layers()                        -> ordered list of replaceable linear
+                                         op names (first conv excluded, as
+                                         in the paper §6.1)
+  convert(params, captures, names, K) -> params with named ops LUT-ized
+
+Shape-exact configs of the *paper's* models (for the analytic cost model
+and the rust kernels benches) live in rust/src/nn/models.rs; these python
+models are the trainable stand-ins.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, softpq
+
+Params = dict[str, Any]
+
+
+# ============================================================ CNN builders
+
+class ResNetTiny:
+    """3-stage pre-downscaled ResNet (ResNet20-family shape, thin).
+
+    stem conv3x3(cin->w0) [kept dense — paper keeps first layer dense],
+    per stage: BasicBlock(w, stride) x1 with identity/projection skip,
+    then GAP + fc. Widths default (8, 16, 32).
+    """
+
+    def __init__(self, cin=3, widths=(8, 16, 32), n_classes=10):
+        self.cin = cin
+        self.widths = widths
+        self.n_classes = n_classes
+
+    # ---- construction -----------------------------------------------
+    def init(self, seed: int = 0):
+        p: Params = {}
+        s: Params = {}
+        w0 = self.widths[0]
+        p["stem"] = layers.conv2d_init(seed, self.cin, w0, 3)
+        p["stem_bn"], s["stem_bn"] = layers.bn_init(w0)
+        cin = w0
+        for i, w in enumerate(self.widths):
+            blk = f"b{i}"
+            p[f"{blk}c1"] = layers.conv2d_init(seed + 10 * i + 1, cin, w, 3)
+            p[f"{blk}bn1"], s[f"{blk}bn1"] = layers.bn_init(w)
+            p[f"{blk}c2"] = layers.conv2d_init(seed + 10 * i + 2, w, w, 3)
+            p[f"{blk}bn2"], s[f"{blk}bn2"] = layers.bn_init(w)
+            if cin != w or i > 0:
+                p[f"{blk}sc"] = layers.conv2d_init(seed + 10 * i + 3, cin, w, 1)
+                p[f"{blk}scbn"], s[f"{blk}scbn"] = layers.bn_init(w)
+            cin = w
+        p["fc"] = layers.linear_init(seed + 99, self.widths[-1], self.n_classes)
+        return p, s
+
+    def lut_layers(self):
+        names = []
+        for i in range(len(self.widths)):
+            names += [f"b{i}c1", f"b{i}c2"]
+            names.append(f"b{i}sc")
+        names.append("fc")
+        return names
+
+    def conv_geometry(self, name: str) -> int:
+        """kernel size of a named conv (for V selection)."""
+        if name.endswith("sc"):
+            return 1
+        if name == "fc":
+            return 0
+        return 3
+
+    # ---- forward ------------------------------------------------------
+    def apply(self, p, s, x, *, train=False, table_bits=8, capture=None):
+        ns = dict(s)
+        y = layers.apply_conv(p["stem"], x, k=3, stride=1, train=train,
+                              table_bits=table_bits, capture=capture,
+                              name="stem")
+        y, ns["stem_bn"] = layers.apply_bn(p["stem_bn"], s["stem_bn"], y,
+                                           train=train)
+        y = jax.nn.relu(y)
+        for i, _w in enumerate(self.widths):
+            blk = f"b{i}"
+            stride = 1 if i == 0 else 2
+            ident = y
+            z = layers.apply_conv(p[f"{blk}c1"], y, k=3, stride=stride,
+                                  train=train, table_bits=table_bits,
+                                  capture=capture, name=f"{blk}c1")
+            z, ns[f"{blk}bn1"] = layers.apply_bn(p[f"{blk}bn1"],
+                                                 s[f"{blk}bn1"], z, train=train)
+            z = jax.nn.relu(z)
+            z = layers.apply_conv(p[f"{blk}c2"], z, k=3, stride=1,
+                                  train=train, table_bits=table_bits,
+                                  capture=capture, name=f"{blk}c2")
+            z, ns[f"{blk}bn2"] = layers.apply_bn(p[f"{blk}bn2"],
+                                                 s[f"{blk}bn2"], z, train=train)
+            if f"{blk}sc" in p:
+                ident = layers.apply_conv(p[f"{blk}sc"], ident, k=1,
+                                          stride=stride, train=train,
+                                          table_bits=table_bits,
+                                          capture=capture, name=f"{blk}sc")
+                ident, ns[f"{blk}scbn"] = layers.apply_bn(
+                    p[f"{blk}scbn"], s[f"{blk}scbn"], ident, train=train)
+            y = jax.nn.relu(z + ident)
+        feat = layers.global_avg_pool(y)
+        out = layers.apply_linear(p["fc"], feat, train=train,
+                                  table_bits=table_bits, capture=capture,
+                                  name="fc")
+        return out, ns
+
+
+class VggTiny:
+    """VGG-style plain conv stack: conv-bn-relu x4 with pooling, then fc."""
+
+    def __init__(self, cin=3, widths=(8, 16, 32, 32), n_classes=10):
+        self.cin = cin
+        self.widths = widths
+        self.n_classes = n_classes
+
+    def init(self, seed: int = 0):
+        p: Params = {}
+        s: Params = {}
+        cin = self.cin
+        for i, w in enumerate(self.widths):
+            p[f"c{i}"] = layers.conv2d_init(seed + i, cin, w, 3)
+            p[f"bn{i}"], s[f"bn{i}"] = layers.bn_init(w)
+            cin = w
+        p["fc"] = layers.linear_init(seed + 99, self.widths[-1], self.n_classes)
+        return p, s
+
+    def lut_layers(self):
+        return [f"c{i}" for i in range(1, len(self.widths))] + ["fc"]
+
+    def conv_geometry(self, name: str) -> int:
+        return 0 if name == "fc" else 3
+
+    def apply(self, p, s, x, *, train=False, table_bits=8, capture=None):
+        ns = dict(s)
+        y = x
+        for i in range(len(self.widths)):
+            y = layers.apply_conv(p[f"c{i}"], y, k=3, stride=1, train=train,
+                                  table_bits=table_bits, capture=capture,
+                                  name=f"c{i}")
+            y, ns[f"bn{i}"] = layers.apply_bn(p[f"bn{i}"], s[f"bn{i}"], y,
+                                              train=train)
+            y = jax.nn.relu(y)
+            if i % 2 == 1:
+                y = layers.max_pool(y)
+        feat = layers.global_avg_pool(y)
+        out = layers.apply_linear(p["fc"], feat, train=train,
+                                  table_bits=table_bits, capture=capture,
+                                  name="fc")
+        return out, ns
+
+
+# ============================================================== mini-BERT
+
+class MiniBert:
+    """Tiny BERT-style encoder for the GLUE-analogue tasks.
+
+    n_layers blocks of MHA + FFN with LayerNorm (post-LN), mean pooling,
+    classification/regression head. LUT-replaceable ops: per block the
+    q/k/v/o projections and the two FFN linears (paper replaces the FC
+    operators of the last-k layers; attention itself stays exact — §8).
+    """
+
+    def __init__(self, vocab=64, seq_len=16, d=32, n_heads=2, d_ff=64,
+                 n_layers=4, n_out=4):
+        self.vocab, self.seq_len, self.d = vocab, seq_len, d
+        self.n_heads, self.d_ff, self.n_layers = n_heads, d_ff, n_layers
+        self.n_out = n_out
+
+    def init(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        p: Params = {
+            "tok_emb": jnp.asarray(
+                rng.standard_normal((self.vocab, self.d)) * 0.1, jnp.float32),
+            "pos_emb": jnp.asarray(
+                rng.standard_normal((self.seq_len, self.d)) * 0.1, jnp.float32),
+        }
+        for i in range(self.n_layers):
+            for nm, (di, do) in {
+                "q": (self.d, self.d), "k": (self.d, self.d),
+                "v": (self.d, self.d), "o": (self.d, self.d),
+                "f1": (self.d, self.d_ff), "f2": (self.d_ff, self.d),
+            }.items():
+                p[f"l{i}{nm}"] = layers.linear_init(seed + 7 * i + hash(nm) % 97,
+                                                    di, do)
+            p[f"l{i}ln1"] = layers.ln_init(self.d)
+            p[f"l{i}ln2"] = layers.ln_init(self.d)
+        p["head"] = layers.linear_init(seed + 999, self.d, self.n_out)
+        return p, {}
+
+    def lut_layers(self):
+        names = []
+        for i in range(self.n_layers):
+            names += [f"l{i}{nm}" for nm in ("q", "k", "v", "o", "f1", "f2")]
+        return names
+
+    def lut_layers_last(self, k_layers: int):
+        """Ops of the last k transformer layers (paper default: last 6 of 12;
+        here last k of n_layers)."""
+        names = []
+        for i in range(self.n_layers - k_layers, self.n_layers):
+            names += [f"l{i}{nm}" for nm in ("q", "k", "v", "o", "f1", "f2")]
+        return names
+
+    def conv_geometry(self, name: str) -> int:
+        return 0
+
+    def apply(self, p, s, tokens, *, train=False, table_bits=8, capture=None):
+        n, t = tokens.shape
+        h = p["tok_emb"][tokens] + p["pos_emb"][None, :t, :]
+        nh, dh = self.n_heads, self.d // self.n_heads
+        for i in range(self.n_layers):
+            def lin(nm, x2d):
+                return layers.apply_linear(
+                    p[f"l{i}{nm}"], x2d, train=train, table_bits=table_bits,
+                    capture=capture, name=f"l{i}{nm}")
+            flat = h.reshape(n * t, self.d)
+            q = lin("q", flat).reshape(n, t, nh, dh).transpose(0, 2, 1, 3)
+            k = lin("k", flat).reshape(n, t, nh, dh).transpose(0, 2, 1, 3)
+            v = lin("v", flat).reshape(n, t, nh, dh).transpose(0, 2, 1, 3)
+            att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / np.sqrt(dh),
+                                 axis=-1)
+            ctx = (att @ v).transpose(0, 2, 1, 3).reshape(n * t, self.d)
+            h = layers.apply_ln(p[f"l{i}ln1"],
+                                h + lin("o", ctx).reshape(n, t, self.d))
+            flat = h.reshape(n * t, self.d)
+            ff = lin("f2", jax.nn.gelu(lin("f1", flat)))
+            h = layers.apply_ln(p[f"l{i}ln2"], h + ff.reshape(n, t, self.d))
+        pooled = jnp.mean(h, axis=1)
+        out = layers.apply_linear(p["head"], pooled, train=train,
+                                  table_bits=table_bits, capture=capture,
+                                  name="head")
+        return out, s
+
+
+# ===================================================== conversion helper
+
+def convert_model(model, params, captures: dict[str, np.ndarray],
+                  names: list[str], *, n_centroids: int = 16,
+                  seed: int = 0, kmeans_iters: int = 25,
+                  subvec_len: int | None = None) -> Params:
+    """Replace named linear ops with k-means-initialized LUT params."""
+    new = dict(params)
+    for nm in names:
+        if nm not in params:
+            continue
+        acts = np.asarray(captures[nm])
+        d = np.asarray(params[nm]["w"]).shape[0]
+        v = subvec_len or layers.codebook_geometry(d, model.conv_geometry(nm))
+        new[nm] = layers.to_lut(params[nm], acts, n_centroids=n_centroids,
+                                subvec_len=v, seed=seed,
+                                kmeans_iters=kmeans_iters)
+    return new

@@ -1,0 +1,112 @@
+"""Vanilla-PQ centroid learning: k-means per codebook (paper §2.1, Eq. 1).
+
+Used to *initialize* soft-PQ centroids ("we initialize centroids using
+k-means clustering" — §6.1) and as the no-fine-tuning vanilla-PQ baseline
+of Fig. 3a. Implemented with numpy (build-time only; never on the request
+path). k-means++ seeding + Lloyd iterations, with empty-cluster respawn.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _kmeans_pp_init(x: np.ndarray, k: int, rng: np.random.Generator):
+    """k-means++ seeding over rows of x [n, v]."""
+    n = x.shape[0]
+    centers = np.empty((k, x.shape[1]), dtype=x.dtype)
+    centers[0] = x[rng.integers(n)]
+    d2 = np.sum((x - centers[0]) ** 2, axis=1)
+    for i in range(1, k):
+        total = d2.sum()
+        if total <= 1e-12:
+            centers[i:] = x[rng.integers(n, size=k - i)]
+            break
+        probs = d2 / total
+        centers[i] = x[rng.choice(n, p=probs)]
+        d2 = np.minimum(d2, np.sum((x - centers[i]) ** 2, axis=1))
+    return centers
+
+
+def kmeans(
+    x: np.ndarray,
+    k: int,
+    n_iters: int = 25,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Lloyd's algorithm. x: [n, v] -> (centroids [k, v], assign [n])."""
+    x = np.asarray(x, dtype=np.float32)
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    if n < k:
+        # Degenerate: fewer samples than centroids — pad by jittered copies.
+        reps = int(np.ceil(k / max(n, 1)))
+        x = np.concatenate([x] * reps, axis=0)
+        x = x + rng.normal(scale=1e-4, size=x.shape).astype(np.float32)
+        n = x.shape[0]
+    centers = _kmeans_pp_init(x, k, rng)
+    assign = np.zeros(n, dtype=np.int64)
+    for _ in range(n_iters):
+        # [n, k] distances via |x|^2 - 2 x.c + |c|^2
+        d = (
+            np.sum(x * x, axis=1, keepdims=True)
+            - 2.0 * (x @ centers.T)
+            + np.sum(centers * centers, axis=1)[None, :]
+        )
+        new_assign = np.argmin(d, axis=1)
+        if np.array_equal(new_assign, assign):
+            assign = new_assign
+            break
+        assign = new_assign
+        for j in range(k):
+            mask = assign == j
+            if mask.any():
+                centers[j] = x[mask].mean(axis=0)
+            else:
+                # Respawn empty cluster at the point farthest from its center.
+                far = np.argmax(d[np.arange(n), assign])
+                centers[j] = x[far]
+    return centers, assign
+
+
+def learn_codebooks(
+    activations: np.ndarray,
+    n_codebooks: int,
+    k: int,
+    n_iters: int = 25,
+    seed: int = 0,
+    max_rows: int = 8192,
+) -> np.ndarray:
+    """Paper Eq. 1 over all codebooks. activations: [N, D] -> [C, K, V].
+
+    Subsamples rows to ``max_rows`` (the paper uses 1024 input samples,
+    which after im2col is far more rows than needed for K<=64 clusters).
+    """
+    n, d = activations.shape
+    assert d % n_codebooks == 0
+    v = d // n_codebooks
+    rng = np.random.default_rng(seed)
+    if n > max_rows:
+        sel = rng.choice(n, size=max_rows, replace=False)
+        activations = activations[sel]
+    sub = activations.reshape(activations.shape[0], n_codebooks, v)
+    out = np.empty((n_codebooks, k, v), dtype=np.float32)
+    for c in range(n_codebooks):
+        out[c], _ = kmeans(sub[:, c, :], k, n_iters=n_iters, seed=seed + c)
+    return out
+
+
+def quantization_mse(activations: np.ndarray, codebooks: np.ndarray) -> float:
+    """Mean |a^c - nearest centroid|^2 — the quantity PQ minimizes (Eq. 1)."""
+    c, k, v = codebooks.shape
+    sub = activations.reshape(activations.shape[0], c, v)
+    total = 0.0
+    for ci in range(c):
+        x = sub[:, ci, :]
+        d = (
+            np.sum(x * x, axis=1, keepdims=True)
+            - 2.0 * (x @ codebooks[ci].T)
+            + np.sum(codebooks[ci] ** 2, axis=1)[None, :]
+        )
+        total += float(np.min(d, axis=1).mean())
+    return total / c

@@ -1,0 +1,135 @@
+"""L2 — Differentiable centroid learning (paper §3).
+
+Implements the three approximation-adaptation methods:
+
+1. **soft-PQ** (§3.1): forward pass encodes with hard argmin (what
+   inference uses); backward pass flows gradients through the softmax
+   encoding. Realised with the straight-through estimator of Eq. 6:
+
+       out = soft - sg(soft - hard)
+
+   which evaluates to ``hard`` in the forward pass and to ``soft`` for
+   gradient purposes.
+
+2. **learned temperature** (§3.2): the per-layer softmax temperature ``t``
+   is a trainable parameter (stored as ``log_t`` so t > 0 always), updated
+   by the same backprop (with its own, larger, learning rate — Table 3).
+
+3. **quantization-aware training** (§3.3): the forward pass uses the
+   INT8/INT4-quantized lookup table (as inference will); the backward pass
+   sees the real-valued table, again via a straight-through estimator.
+
+A LUT layer's trainable state is ``(centroids [C,K,V], log_t [])`` plus the
+frozen weight ``B [D,M]`` from which the table is rebuilt every step
+(paper Fig. 4 "rebuild lookup tables with the updated centroids").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+class LutParams(NamedTuple):
+    """Trainable + frozen state of one LUT-replaced linear operator."""
+
+    centroids: jnp.ndarray        # [C, K, V]  trainable
+    log_t: jnp.ndarray            # []         trainable (temperature)
+    weight: jnp.ndarray           # [D, M]     frozen (table rebuilt from it)
+    bias: jnp.ndarray | None      # [M]        frozen
+
+
+def init_lut_params(
+    weight: jnp.ndarray,
+    bias: jnp.ndarray | None,
+    centroids: jnp.ndarray,
+    init_t: float = 1.0,
+) -> LutParams:
+    return LutParams(
+        centroids=centroids.astype(jnp.float32),
+        log_t=jnp.asarray(jnp.log(init_t), jnp.float32),
+        weight=weight.astype(jnp.float32),
+        bias=None if bias is None else bias.astype(jnp.float32),
+    )
+
+
+def quantize_ste(table: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """QAT table: forward = quantize->dequantize, backward = identity."""
+    q, scale = ref.quantize_table_ref(table, bits)
+    deq = q.astype(jnp.float32) * scale[:, None, None]
+    return table + jax.lax.stop_gradient(deq - table)
+
+
+def softpq_forward(
+    params: LutParams,
+    a: jnp.ndarray,
+    *,
+    table_bits: int | None = 8,
+    hard: bool = True,
+) -> jnp.ndarray:
+    """Soft-PQ AMM: a [N, D] -> [N, M].
+
+    hard=True is the training/inference forward of Eq. 6 (argmin value,
+    softmax gradient). hard=False returns the pure softmax relaxation
+    (useful for diagnostics/tests of the gradient path).
+    """
+    p = params.centroids
+    c, k, v = p.shape
+    t = jnp.exp(params.log_t)
+
+    table = ref.build_table_ref(p, params.weight)     # [C, K, M]
+    if table_bits is not None:
+        table = quantize_ste(table, table_bits)       # QAT (§3.3)
+
+    d = ref.distances_ref(a, p)                       # [N, C, K]
+    soft = jax.nn.softmax(-d / t, axis=-1)            # Eq. 5
+    if hard:
+        onehot = jax.nn.one_hot(jnp.argmin(d, axis=-1), k, dtype=jnp.float32)
+        g = soft - jax.lax.stop_gradient(soft - onehot)   # Eq. 6 (STE)
+    else:
+        g = soft
+    # sum_c g[n,c,:] @ table[c,:,:]
+    out = jnp.einsum("nck,ckm->nm", g, table)
+    if params.bias is not None:
+        out = out + params.bias
+    return out
+
+
+def inference_forward(params: LutParams, a: jnp.ndarray, *, table_bits=8,
+                      use_pallas: bool = False):
+    """The deployed path: hard argmin + quantized table, no grad tricks.
+
+    Matches what the rust engine and the AOT HLO graph compute; used by
+    tests to pin training-forward == inference-forward numerics.
+    use_pallas routes through the L1 pallas kernels (interpret=True) so the
+    AOT lowering contains the kernel's block schedule (aot.py sets this).
+    """
+    table = ref.build_table_ref(params.centroids, params.weight)
+    if use_pallas:
+        from .kernels import lut_amm as _k
+
+        bn = _k.pick_block_n(*params.centroids.shape, table.shape[2])
+        if table_bits is None:
+            return _k.lut_amm(a, params.centroids, table, params.bias,
+                              block_n=bn)
+        q, scale = ref.quantize_table_ref(table, table_bits)
+        return _k.lut_amm_quantized(a, params.centroids, q, scale,
+                                    params.bias, block_n=bn)
+    if table_bits is None:
+        return ref.lut_amm_ref(a, params.centroids, table, params.bias)
+    q, scale = ref.quantize_table_ref(table, table_bits)
+    return ref.lut_amm_quantized_ref(a, params.centroids, q, scale, params.bias)
+
+
+def trainable_filter(params: LutParams) -> LutParams:
+    """Mask: 1 where trainable (centroids, log_t), 0 where frozen."""
+    return LutParams(
+        centroids=jnp.ones_like(params.centroids),
+        log_t=jnp.ones_like(params.log_t),
+        weight=jnp.zeros_like(params.weight),
+        bias=None if params.bias is None else jnp.zeros_like(params.bias),
+    )

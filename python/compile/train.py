@@ -1,0 +1,236 @@
+"""L2 — training harness: dense pre-training + soft-PQ fine-tuning.
+
+Implements the paper's full learning pipeline (§3, §6.1):
+
+  1. train the original dense model on the task;
+  2. run it over a sampled sub-dataset and *capture* every replaceable
+     linear op's im2col'd input activations;
+  3. k-means-initialize centroids per codebook (vanilla PQ, Eq. 1);
+  4. replace the chosen ops with LUT params and fine-tune with soft-PQ
+     (argmin forward / softmax backward, learned temperature, QAT), using
+     separate learning rates for centroids and temperature (Table 3);
+  5. evaluate with the *inference* forward (hard argmin + INT8 tables) —
+     the same numerics the rust engine executes.
+
+Build-time only. Experiments (python/experiments/*) drive these functions
+with different knobs; `make artifacts` drives them via aot.py/export.py.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, models, optim, softpq
+
+
+# ------------------------------------------------------------------ losses
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def mse_loss(pred, target):
+    return jnp.mean((pred[:, 0] - target) ** 2)
+
+
+def accuracy(logits, labels) -> float:
+    return float(jnp.mean(jnp.argmax(logits, -1) == labels))
+
+
+def mae(pred, target) -> float:
+    return float(jnp.mean(jnp.abs(pred[:, 0] - target)))
+
+
+# ----------------------------------------------------------------- config
+
+@dataclass
+class TrainConfig:
+    steps: int = 300
+    batch_size: int = 64
+    lr: float = 1e-3
+    temperature_lr: float = 1e-1      # paper Table 3
+    weight_decay: float = 0.0
+    table_bits: int | None = 8
+    regression: bool = False
+    seed: int = 0
+    log_every: int = 50
+    eval_fn: object = None            # optional (params, state) -> metric
+    history: list = field(default_factory=list)
+
+
+# ------------------------------------------------------------- train loop
+
+def _lr_scale_tree(params, cfg: TrainConfig):
+    """Per-leaf LR scaling: temperature gets temperature_lr/lr, LUT frozen
+    weight/bias get 0, everything else 1 (paper Table 3 two-LR setup)."""
+    t_scale = cfg.temperature_lr / cfg.lr
+
+    def scale_entry(p):
+        if isinstance(p, softpq.LutParams):
+            return softpq.LutParams(
+                centroids=1.0, log_t=t_scale, weight=0.0,
+                bias=None if p.bias is None else 0.0)
+        return jax.tree_util.tree_map(lambda _: 1.0, p)
+
+    return {k: scale_entry(v) for k, v in params.items()}
+
+
+def train_model(model, params, state, x, y, cfg: TrainConfig,
+                x_val=None, y_val=None):
+    """Generic Adam training loop over (x, y). Returns (params, state)."""
+    loss_core = mse_loss if cfg.regression else softmax_xent
+
+    def loss_fn(p, s, xb, yb):
+        out, ns = model.apply(p, s, xb, train=True, table_bits=cfg.table_bits)
+        return loss_core(out, yb), ns
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    sched = optim.cosine_schedule(cfg.lr, cfg.steps)
+    lr_scale = _lr_scale_tree(params, cfg)
+    opt = optim.adam_init(params)
+
+    @jax.jit
+    def update(p, s, o, xb, yb):
+        (loss, ns), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, s, xb, yb)
+        new_p, new_o = optim.adam_update(
+            grads, o, p, lr=sched(o.step), lr_scale=lr_scale,
+            weight_decay=cfg.weight_decay, grad_clip=5.0)
+        return new_p, ns, new_o, loss
+
+    step = 0
+    t0 = time.time()
+    while step < cfg.steps:
+        for xb, yb in datasets.batches(x, y, cfg.batch_size,
+                                       seed=cfg.seed + step):
+            xb = jnp.asarray(xb)
+            yb = jnp.asarray(yb)
+            params, state, opt, loss = update(params, state, opt, xb, yb)
+            step += 1
+            if step % cfg.log_every == 0 or step == cfg.steps:
+                entry = {"step": step, "loss": float(loss),
+                         "elapsed_s": round(time.time() - t0, 2)}
+                if cfg.eval_fn is not None:
+                    entry["metric"] = cfg.eval_fn(params, state)
+                cfg.history.append(entry)
+            if step >= cfg.steps:
+                break
+    return params, state
+
+
+def evaluate(model, params, state, x, y, *, table_bits=8, regression=False,
+             batch_size=256) -> float:
+    """Inference-forward metric: accuracy (or MAE if regression)."""
+    outs, labels = [], []
+    for i in range(0, len(x), batch_size):
+        xb = jnp.asarray(x[i:i + batch_size])
+        out, _ = model.apply(params, state, xb, train=False,
+                             table_bits=table_bits)
+        outs.append(out)
+        labels.append(y[i:i + batch_size])
+    out = jnp.concatenate(outs)
+    yy = jnp.asarray(np.concatenate(labels))
+    return mae(out, yy) if regression else accuracy(out, yy)
+
+
+def mse_vs_dense(model, dense_params, lut_params, state, x,
+                 *, table_bits=8) -> float:
+    """Output MSE between the original model and the LUT model (Fig. 3)."""
+    xb = jnp.asarray(x)
+    ref, _ = model.apply(dense_params, state, xb, train=False, table_bits=None)
+    approx, _ = model.apply(lut_params, state, xb, train=False,
+                            table_bits=table_bits)
+    return float(jnp.mean((ref - approx) ** 2))
+
+
+# --------------------------------------------------------------- captures
+
+def capture_activations(model, params, state, x, batch_size=256):
+    """Run the model eagerly, recording each linear op's 2-D input rows."""
+    captures: dict[str, list] = {}
+    for i in range(0, len(x), batch_size):
+        cap: dict = {}
+        model.apply(params, state, jnp.asarray(x[i:i + batch_size]),
+                    train=False, table_bits=None, capture=cap)
+        for k, v in cap.items():
+            captures.setdefault(k, []).append(np.asarray(v))
+    return {k: np.concatenate(v) for k, v in captures.items()}
+
+
+# ------------------------------------------------------------- pipelines
+
+@dataclass
+class PipelineResult:
+    model: object
+    dense_params: dict
+    lut_params: dict
+    state: dict
+    dense_metric: float
+    lut_metric: float
+    history: list
+
+
+def lutnn_pipeline(model, x_train, y_train, x_test, y_test, *,
+                   replace: list[str] | None = None,
+                   n_centroids: int = 16,
+                   subvec_len: int | None = None,
+                   dense_cfg: TrainConfig | None = None,
+                   finetune_cfg: TrainConfig | None = None,
+                   n_capture: int = 1024,
+                   kmeans_iters: int = 25,
+                   seed: int = 0) -> PipelineResult:
+    """The full LUT-NN recipe on one (model, task)."""
+    dense_cfg = dense_cfg or TrainConfig()
+    finetune_cfg = finetune_cfg or TrainConfig(steps=dense_cfg.steps,
+                                               lr=1e-3)
+    regression = dense_cfg.regression
+    finetune_cfg.regression = regression
+
+    params, state = model.init(seed)
+    params, state = train_model(model, params, state, x_train, y_train,
+                                dense_cfg)
+    dense_metric = evaluate(model, params, state, x_test, y_test,
+                            table_bits=None, regression=regression)
+
+    captures = capture_activations(model, params, state, x_train[:n_capture])
+    replace = replace if replace is not None else model.lut_layers()
+    lut_params = models.convert_model(model, params, captures, replace,
+                                      n_centroids=n_centroids, seed=seed,
+                                      kmeans_iters=kmeans_iters,
+                                      subvec_len=subvec_len)
+    lut_params, state = train_model(model, lut_params, state, x_train,
+                                    y_train, finetune_cfg)
+    lut_metric = evaluate(model, lut_params, state, x_test, y_test,
+                          table_bits=finetune_cfg.table_bits,
+                          regression=regression)
+    return PipelineResult(model, params, lut_params, state, dense_metric,
+                          lut_metric, finetune_cfg.history)
+
+
+def quick_task(task: str = "image", n_train: int = 2048, n_test: int = 512,
+               seed: int = 0):
+    """Small (x_train, y_train, x_test, y_test, model, regression) bundle."""
+    if task == "image":
+        x, y = datasets.synth_image(n_train + n_test, seed=seed)
+        model = models.ResNetTiny()
+        reg = False
+    elif task == "speech":
+        x, y = datasets.synth_speech(n_train + n_test, seed=seed)
+        model = models.ResNetTiny(cin=1, n_classes=datasets.SPEECH_CLASSES)
+        reg = False
+    elif task == "age":
+        x, y = datasets.synth_age(n_train + n_test, seed=seed)
+        model = models.ResNetTiny(n_classes=1)
+        reg = True
+    elif task == "nlp":
+        x, y = datasets.synth_nlp(n_train + n_test, seed=seed)
+        model = models.MiniBert()
+        reg = False
+    else:
+        raise ValueError(task)
+    return (x[:n_train], y[:n_train], x[n_train:], y[n_train:], model, reg)

@@ -1,0 +1,50 @@
+"""Shared experiment harness: budgets, result output, tiny CSV writer.
+
+Budgets are sized for a single CPU core (DESIGN.md §Substitutions); set
+LUTNN_EXP_QUICK=1 for a fast smoke pass or LUTNN_EXP_FULL=1 to train
+longer (closer to the paper's accuracy levels).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "results")
+
+
+def budget():
+    """(dense_steps, finetune_steps, n_train) for the current mode."""
+    if os.environ.get("LUTNN_EXP_QUICK"):
+        return 80, 60, 768
+    if os.environ.get("LUTNN_EXP_FULL"):
+        return 1200, 800, 8192
+    return 350, 250, 2048
+
+
+def save_rows(name: str, header: list[str], rows: list[list]):
+    """Write results/<name>.csv and echo a markdown table."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    print(f"\n== {name} ==")
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for row in rows:
+        print("| " + " | ".join(str(x) for x in row) + " |")
+    print(f"(saved {path})")
+
+
+class Timer:
+    def __init__(self, label: str):
+        self.label = label
+
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        print(f"[{self.label}] {time.time() - self.t0:.1f}s")

@@ -1,0 +1,82 @@
+"""Fig. 11 — soft-PQ learning curves under three temperature strategies:
+learned temperature (ours), fixed t=1, and annealing 1 -> 0.1.
+
+Paper result: learned temperature reaches the highest accuracy and
+converges fastest (94.4% vs 91.55% annealed vs 89.85% fixed on
+ResNet18/CIFAR10).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import models, train
+from experiments import common
+
+
+def finetune(model, lut0, state, x_tr, y_tr, x_te, y_te, mode: str,
+             steps: int):
+    cfg = train.TrainConfig(steps=steps, lr=1e-3, log_every=max(steps // 12, 1))
+    if mode == "fixed":
+        cfg.temperature_lr = 0.0          # log_t frozen at init (t = 1)
+    lut = {k: v for k, v in lut0.items()}
+    if mode == "anneal":
+        # piecewise: retrain in 4 chunks, setting t manually 1 -> 0.1
+        curve = []
+        chunk = steps // 4
+        for i, t_val in enumerate(np.geomspace(1.0, 0.1, 4)):
+            for name, p in list(lut.items()):
+                if hasattr(p, "log_t"):
+                    lut[name] = p._replace(
+                        log_t=jnp.asarray(np.log(t_val), jnp.float32))
+            c = train.TrainConfig(steps=chunk, lr=1e-3, temperature_lr=0.0,
+                                  log_every=max(chunk // 3, 1))
+            lut, state = train.train_model(model, lut, state, x_tr, y_tr, c)
+            acc = train.evaluate(model, lut, state, x_te, y_te, table_bits=8)
+            curve.append(((i + 1) * chunk, acc))
+        return curve
+    evals = []
+
+    def eval_fn(p, s):
+        return train.evaluate(model, p, s, x_te, y_te, table_bits=8)
+
+    cfg.eval_fn = eval_fn
+    lut, state = train.train_model(model, lut, state, x_tr, y_tr, cfg)
+    for h in cfg.history:
+        if "metric" in h:
+            evals.append((h["step"], h["metric"]))
+    return evals
+
+
+def main():
+    dense_steps, ft_steps, n_train = common.budget()
+    x_tr, y_tr, x_te, y_te, model, _ = train.quick_task(
+        "image", n_train=n_train, n_test=512)
+    params, state = model.init(0)
+    with common.Timer("dense training"):
+        params, state = train.train_model(
+            model, params, state, x_tr, y_tr,
+            train.TrainConfig(steps=dense_steps, lr=2e-3))
+    caps = train.capture_activations(model, params, state, x_tr[:512])
+    lut0 = models.convert_model(model, params, caps, model.lut_layers(),
+                                n_centroids=16, kmeans_iters=10)
+
+    rows = []
+    finals = {}
+    for mode in ["learned", "fixed", "anneal"]:
+        with common.Timer(f"finetune[{mode}]"):
+            curve = finetune(model, lut0, dict(state), x_tr, y_tr, x_te,
+                             y_te, mode, ft_steps)
+        for step, acc in curve:
+            rows.append([mode, step, f"{acc:.4f}"])
+        finals[mode] = curve[-1][1] if curve else float("nan")
+        print(f"{mode}: final acc {finals[mode]:.4f}")
+
+    common.save_rows("fig11_temperature", ["mode", "step", "accuracy"], rows)
+    print("\nshape check (paper: learned > anneal > fixed):",
+          {k: round(v, 4) for k, v in finals.items()})
+
+
+if __name__ == "__main__":
+    main()

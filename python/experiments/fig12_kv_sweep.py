@@ -1,0 +1,87 @@
+"""Fig. 12 — accuracy and GFLOPs vs centroid count K and sub-vector
+length V.
+
+Paper result: accuracy improves with more centroids K and degrades with
+longer sub-vectors V; GFLOPs grow with K and shrink with V (Table 1
+formulas). (K, V) = (16, 9) balances both.
+"""
+
+from __future__ import annotations
+
+from compile import models, train
+from experiments import common
+
+
+def flops_estimate(model, params, k, v_map):
+    """Analytic LUT FLOPs for the tiny model (same Table 1 formulas the
+    rust cost model implements; duplicated here for the sweep output)."""
+    import numpy as np
+
+    total = 0
+    for name, p in params.items():
+        if not isinstance(p, dict) or "w" not in p:
+            continue
+        w = np.asarray(p["w"])
+        d, m = w.shape
+        # rows per inference at 16x16 input: stem/b0 256, b1 64, b2 16, fc 1
+        n = {"stem": 256, "b0": 256, "b1": 64, "b2": 16, "fc": 1}[
+            name[:2] if name[:2] in ("b0", "b1", "b2") else name[:4]
+            if name[:4] == "stem" else "fc"]
+        if name in v_map:
+            v = v_map[name]
+            total += n * d * k + n * m * (d // v)
+        else:
+            total += n * d * m
+    return total / 1e9
+
+
+def run_setting(model, params, state, caps, x_tr, y_tr, x_te, y_te,
+                k, v, ft_steps):
+    names = [n for n in model.lut_layers() if n in params]
+    # keep only ops whose D is divisible by v
+    import numpy as np
+
+    names = [n for n in names if np.asarray(params[n]["w"]).shape[0] % v == 0]
+    lut = models.convert_model(model, params, caps, names, n_centroids=k,
+                               kmeans_iters=8, subvec_len=v)
+    cfg = train.TrainConfig(steps=ft_steps, lr=1e-3)
+    lut, s2 = train.train_model(model, lut, dict(state), x_tr, y_tr, cfg)
+    acc = train.evaluate(model, lut, s2, x_te, y_te, table_bits=8)
+    gflops = flops_estimate(model, params, k, {n: v for n in names})
+    return acc, gflops, len(names)
+
+
+def main():
+    dense_steps, ft_steps, n_train = common.budget()
+    ft_steps = max(ft_steps // 2, 50)  # sweep has many settings
+    x_tr, y_tr, x_te, y_te, model, _ = train.quick_task(
+        "image", n_train=n_train, n_test=512)
+    params, state = model.init(0)
+    with common.Timer("dense training"):
+        params, state = train.train_model(
+            model, params, state, x_tr, y_tr,
+            train.TrainConfig(steps=dense_steps, lr=2e-3))
+    base = train.evaluate(model, params, state, x_te, y_te, table_bits=None)
+    caps = train.capture_activations(model, params, state, x_tr[:512])
+
+    rows = []
+    # K sweep at V=9 (paper: accuracy grows with K)
+    for k in [4, 8, 16, 32]:
+        with common.Timer(f"K={k}"):
+            acc, gf, n_ops = run_setting(model, params, state, caps, x_tr,
+                                         y_tr, x_te, y_te, k, 9, ft_steps)
+        rows.append([f"K={k},V=9", f"{acc:.4f}", f"{gf:.5f}", n_ops])
+    # V sweep at K=16 (paper: accuracy degrades with V)
+    for v in [3, 9, 18]:
+        with common.Timer(f"V={v}"):
+            acc, gf, n_ops = run_setting(model, params, state, caps, x_tr,
+                                         y_tr, x_te, y_te, 16, v, ft_steps)
+        rows.append([f"K=16,V={v}", f"{acc:.4f}", f"{gf:.5f}", n_ops])
+    rows.append(["dense", f"{base:.4f}", f"{flops_estimate(model, params, 0, {}):.5f}", 0])
+
+    common.save_rows("fig12_kv_sweep",
+                     ["setting", "accuracy", "gflops", "n_lut_ops"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig. 13 — mini-BERT accuracy vs number of transformer layers whose
+linear ops are replaced by table lookup (replacing from the LAST layer
+toward the front, with soft-PQ fine-tuning).
+
+Paper result (BERT/STS-B): accuracy holds for the last ~9 layers and
+drops sharply when the front layers are replaced (the paper keeps the
+first layers dense; replacing the first two costs 80% accuracy).
+"""
+
+from __future__ import annotations
+
+from compile import models, train
+from experiments import common
+
+
+def main():
+    dense_steps, ft_steps, n_train = common.budget()
+    x_tr, y_tr, x_te, y_te, model, _ = train.quick_task(
+        "nlp", n_train=n_train, n_test=512)
+    params, state = model.init(0)
+    with common.Timer("dense training"):
+        params, state = train.train_model(
+            model, params, state, x_tr, y_tr,
+            train.TrainConfig(steps=dense_steps, lr=2e-3))
+    base = train.evaluate(model, params, state, x_te, y_te, table_bits=None)
+    caps = train.capture_activations(model, params, state, x_tr[:512])
+
+    rows = [["0", f"{base:.4f}"]]
+    for k_layers in range(1, model.n_layers + 1):
+        names = model.lut_layers_last(k_layers)
+        lut = models.convert_model(model, params, caps, names,
+                                   n_centroids=16, kmeans_iters=8)
+        cfg = train.TrainConfig(steps=ft_steps, lr=1e-3)
+        with common.Timer(f"replace last {k_layers}"):
+            lut, s2 = train.train_model(model, lut, dict(state), x_tr, y_tr,
+                                        cfg)
+        acc = train.evaluate(model, lut, s2, x_te, y_te, table_bits=8)
+        rows.append([str(k_layers), f"{acc:.4f}"])
+        print(f"last {k_layers} layers replaced: acc {acc:.4f}")
+
+    common.save_rows("fig13_bert_layers", ["layers_replaced", "accuracy"],
+                     rows)
+    print("\nshape check (paper): flat for last layers, drop at the front.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Fig. 3 — accuracy & output MSE vs number of layers replaced by
+PQ-based AMM WITHOUT fine-tuning, for (a) vanilla PQ (k-means argmin) and
+(b) MADDNESS (hash-tree encoding).
+
+Paper result: accuracy collapses toward chance as more layers are
+replaced (MSE accumulates layer by layer); MADDNESS collapses faster
+than vanilla PQ because hashing has higher quantization error.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from compile import maddness, models, train
+from experiments import common
+
+
+def main():
+    dense_steps, _, n_train = common.budget()
+    x_tr, y_tr, x_te, y_te, model, _ = train.quick_task(
+        "image", n_train=n_train, n_test=512)
+    params, state = model.init(0)
+    with common.Timer("dense training"):
+        params, state = train.train_model(
+            model, params, state, x_tr, y_tr,
+            train.TrainConfig(steps=dense_steps, lr=2e-3))
+    base_acc = train.evaluate(model, params, state, x_te, y_te,
+                              table_bits=None)
+    caps = train.capture_activations(model, params, state, x_tr[:512])
+
+    # replace from the LAST layer toward the FRONT (paper's sweep order)
+    layer_order = [n for n in reversed(model.lut_layers()) if n in params]
+    rows = [["0", f"{base_acc:.4f}", "0.0", f"{base_acc:.4f}", "0.0"]]
+    for n_replaced in range(1, len(layer_order) + 1):
+        names = layer_order[:n_replaced]
+        # vanilla PQ (k-means, argmin encode), no fine-tuning
+        pq_params = models.convert_model(model, params, caps, names,
+                                         n_centroids=16, kmeans_iters=10)
+        acc_pq = train.evaluate(model, pq_params, state, x_te, y_te,
+                                table_bits=None)
+        mse_pq = train.mse_vs_dense(model, params, pq_params, state,
+                                    x_te[:128], table_bits=None)
+        # MADDNESS (hash trees), no fine-tuning
+        md_params = dict(params)
+        for nm in names:
+            w = np.asarray(params[nm]["w"])
+            d = w.shape[0]
+            from compile import layers as L
+            v = L.codebook_geometry(d, model.conv_geometry(nm))
+            md_params[nm] = maddness.learn_maddness(
+                np.asarray(caps[nm]), w, np.asarray(params[nm]["b"]),
+                d // v, depth=4)
+        acc_md = train.evaluate(model, md_params, state, x_te, y_te,
+                                table_bits=None)
+        mse_md = train.mse_vs_dense(model, params, md_params, state,
+                                    x_te[:128], table_bits=None)
+        rows.append([str(n_replaced), f"{acc_pq:.4f}", f"{mse_pq:.4f}",
+                     f"{acc_md:.4f}", f"{mse_md:.4f}"])
+        print(f"replaced {n_replaced}: pq acc {acc_pq:.3f} mse {mse_pq:.4f}"
+              f" | maddness acc {acc_md:.3f} mse {mse_md:.4f}")
+
+    common.save_rows(
+        "fig3_layer_replacement",
+        ["n_replaced", "vanilla_pq_acc", "vanilla_pq_mse",
+         "maddness_acc", "maddness_mse"],
+        rows)
+    # paper shape assertions (soft): accuracy decreases, maddness <= pq
+    accs_pq = [float(r[1]) for r in rows]
+    accs_md = [float(r[3]) for r in rows]
+    print("\nshape check: pq end-acc drop:",
+          f"{accs_pq[0]:.3f} -> {accs_pq[-1]:.3f};",
+          "maddness end-acc:", f"{accs_md[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""L1 correctness: pallas kernels vs the pure-jnp oracle (ref.py).
+
+The hypothesis sweep is the paper-mandated contract: for arbitrary valid
+(N, C, V, K, M) geometry and value distributions, the fused pallas kernel
+must agree with the reference bit-for-bit on indices and to float tolerance
+on outputs.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import lut_amm, ref
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def make_case(seed, n, c, v, k, m, scale=1.0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(scale=scale, size=(n, c * v)), jnp.float32)
+    b = jnp.asarray(rng.normal(scale=scale, size=(c * v, m)), jnp.float32)
+    p = jnp.asarray(rng.normal(scale=scale, size=(c, k, v)), jnp.float32)
+    t = ref.build_table_ref(p, b)
+    return a, b, p, t
+
+
+class TestOracleInternals:
+    def test_distances_match_naive(self):
+        a, _, p, _ = make_case(0, 13, 3, 5, 7, 4)
+        d = ref.distances_ref(a, p)
+        sub = np.asarray(ref.split_subvectors(a, 3))
+        pn = np.asarray(p)
+        naive = np.zeros((13, 3, 7), np.float32)
+        for n in range(13):
+            for c in range(3):
+                for k in range(7):
+                    naive[n, c, k] = np.sum((sub[n, c] - pn[c, k]) ** 2)
+        np.testing.assert_allclose(np.asarray(d), naive, rtol=1e-4, atol=1e-4)
+
+    def test_table_matches_naive(self):
+        _, b, p, t = make_case(1, 4, 3, 5, 7, 6)
+        bn = np.asarray(b)
+        pn = np.asarray(p)
+        for c in range(3):
+            for k in range(7):
+                np.testing.assert_allclose(
+                    np.asarray(t)[c, k],
+                    pn[c, k] @ bn[c * 5:(c + 1) * 5],
+                    rtol=1e-4, atol=1e-5)
+
+    def test_exact_when_input_is_centroid(self):
+        """If every sub-vector IS a centroid, AMM must equal exact MM."""
+        rng = np.random.default_rng(2)
+        c, k, v, m = 4, 8, 3, 10
+        p = jnp.asarray(rng.normal(size=(c, k, v)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(c * v, m)), jnp.float32)
+        choice = rng.integers(k, size=(16, c))
+        a = jnp.asarray(
+            np.stack([np.concatenate([p[ci, choice[n, ci]]
+                                      for ci in range(c)])
+                      for n in range(16)]), jnp.float32)
+        t = ref.build_table_ref(p, b)
+        np.testing.assert_allclose(
+            np.asarray(ref.lut_amm_ref(a, p, t)),
+            np.asarray(ref.dense_ref(a, b)), rtol=1e-3, atol=1e-3)
+
+    def test_quantize_table_ranges(self):
+        _, _, _, t = make_case(3, 4, 3, 5, 7, 6)
+        for bits in (8, 4):
+            q, s = ref.quantize_table_ref(t, bits)
+            qmax = 2 ** (bits - 1) - 1
+            assert int(jnp.max(q)) <= qmax
+            assert int(jnp.min(q)) >= -qmax - 1
+            deq = np.asarray(q, np.float32) * np.asarray(s)[:, None, None]
+            err = np.abs(deq - np.asarray(t)).max()
+            step = np.asarray(s).max()
+            assert err <= step * 0.501 + 1e-6
+
+    def test_quantize_zero_table(self):
+        q, s = ref.quantize_table_ref(jnp.zeros((2, 4, 3)), 8)
+        assert np.all(np.asarray(q) == 0)
+        assert np.all(np.asarray(s) == 1.0)
+
+
+class TestPallasVsOracle:
+    def test_fused_matches(self):
+        a, _, p, t = make_case(10, 64, 8, 9, 16, 32)
+        np.testing.assert_allclose(
+            np.asarray(lut_amm.lut_amm(a, p, t, block_n=32)),
+            np.asarray(ref.lut_amm_ref(a, p, t)), rtol=1e-4, atol=1e-4)
+
+    def test_argmin_matches(self):
+        a, _, p, _ = make_case(11, 100, 4, 4, 16, 8)
+        idx_pl = lut_amm.dist_argmin(a, p, block_n=32)
+        idx_ref = ref.encode_ref(a, p)
+        assert bool(jnp.all(idx_pl == idx_ref))
+
+    def test_quantized_matches(self):
+        a, _, p, t = make_case(12, 48, 8, 9, 16, 24)
+        q, s = ref.quantize_table_ref(t, 8)
+        np.testing.assert_allclose(
+            np.asarray(lut_amm.lut_amm_quantized(a, p, q, s, block_n=16)),
+            np.asarray(ref.lut_amm_quantized_ref(a, p, q, s)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_bias(self):
+        a, _, p, t = make_case(13, 24, 4, 9, 8, 12)
+        bias = jnp.arange(12, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(lut_amm.lut_amm(a, p, t, bias, block_n=8)),
+            np.asarray(ref.lut_amm_ref(a, p, t, bias)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_row_padding(self):
+        """N not divisible by block_n exercises the pad/unpad path."""
+        a, _, p, t = make_case(14, 37, 4, 3, 8, 10)
+        np.testing.assert_allclose(
+            np.asarray(lut_amm.lut_amm(a, p, t, block_n=16)),
+            np.asarray(ref.lut_amm_ref(a, p, t)), rtol=1e-4, atol=1e-4)
+
+    @hypothesis.given(
+        n=st.integers(1, 70),
+        c=st.integers(1, 6),
+        v=st.sampled_from([1, 2, 4, 9]),
+        k=st.sampled_from([4, 8, 16]),
+        m=st.integers(1, 40),
+        seed=st.integers(0, 2 ** 16),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_fused_matches_property(self, n, c, v, k, m, seed, scale):
+        a, _, p, t = make_case(seed, n, c, v, k, m, scale=scale)
+        got = np.asarray(lut_amm.lut_amm(a, p, t, block_n=16))
+        want = np.asarray(ref.lut_amm_ref(a, p, t))
+        np.testing.assert_allclose(got, want,
+                                   rtol=1e-3, atol=1e-3 * scale * scale)
+
+    @hypothesis.given(
+        n=st.integers(1, 64),
+        c=st.integers(1, 4),
+        v=st.sampled_from([2, 4, 9]),
+        k=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_argmin_matches_property(self, n, c, v, k, seed):
+        a, _, p, _ = make_case(seed, n, c, v, k, 4)
+        assert bool(jnp.all(lut_amm.dist_argmin(a, p, block_n=16)
+                            == ref.encode_ref(a, p)))
+
+
+class TestVmemModel:
+    def test_footprint_monotone_in_block(self):
+        f1 = lut_amm.vmem_footprint_bytes(64, 64, 16, 9, 512)
+        f2 = lut_amm.vmem_footprint_bytes(128, 64, 16, 9, 512)
+        assert f2 > f1
+
+    def test_pick_block_n_fits_budget(self):
+        for (c, k, v, m) in [(64, 16, 9, 512), (512, 16, 4, 64),
+                             (48, 16, 16, 3072)]:
+            bn = lut_amm.pick_block_n(c, k, v, m)
+            assert lut_amm.vmem_footprint_bytes(bn, c, k, v, m) <= 8 << 20 \
+                or bn == 8
+
+    def test_pick_block_n_default_shape(self):
+        assert lut_amm.pick_block_n(64, 16, 9, 512) >= 128

@@ -1,0 +1,155 @@
+"""Model zoo: shapes, conversion, capture plumbing, dataset generators."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, layers, models, softpq, train
+
+
+class TestDatasets:
+    def test_image_shapes_and_determinism(self):
+        x1, y1 = datasets.synth_image(32, seed=7)
+        x2, y2 = datasets.synth_image(32, seed=7)
+        assert x1.shape == (32, 16, 16, 3)
+        assert (x1 == x2).all() and (y1 == y2).all()
+        assert set(np.unique(y1)) <= set(range(10))
+
+    def test_speech_shapes(self):
+        x, y = datasets.synth_speech(16, seed=1)
+        assert x.shape == (16, 32, 16, 1)
+        assert y.max() < datasets.SPEECH_CLASSES
+
+    def test_age_targets_in_range(self):
+        x, y = datasets.synth_age(16, seed=2)
+        assert (y >= 0).all() and (y <= 10).all()
+
+    def test_nlp_bigram_planted(self):
+        x, y = datasets.synth_nlp(64, seed=3)
+        # every sample must contain its class bigram at least once
+        for i in range(64):
+            c = int(y[i])
+            found = any(x[i, j] == 2 * c + 2 and x[i, j + 1] == 2 * c + 3
+                        for j in range(x.shape[1] - 1))
+            assert found
+
+    def test_sts_target_matches_halves(self):
+        x, y = datasets.synth_sts(32, seed=4)
+        half = x.shape[1] // 2
+        for i in range(32):
+            assert y[i] == pytest.approx(
+                float(np.mean(x[i, half:] == x[i, :half])))
+
+    def test_batches_iterator(self):
+        x, y = datasets.synth_image(70, seed=5)
+        seen = 0
+        for xb, yb in datasets.batches(x, y, 32, seed=0):
+            assert xb.shape[0] == 32
+            seen += 32
+        assert seen == 64
+
+
+class TestCnnModels:
+    @pytest.mark.parametrize("cls", [models.ResNetTiny, models.VggTiny])
+    def test_forward_shape(self, cls):
+        model = cls()
+        p, s = model.init(0)
+        x = jnp.zeros((4, 16, 16, 3), jnp.float32)
+        out, ns = model.apply(p, s, x, train=False, table_bits=None)
+        assert out.shape == (4, 10)
+
+    def test_train_updates_bn_state(self):
+        model = models.ResNetTiny()
+        p, s = model.init(0)
+        x = jnp.asarray(np.random.default_rng(0)
+                        .standard_normal((4, 16, 16, 3)), jnp.float32)
+        _, ns = model.apply(p, s, x, train=True, table_bits=None)
+        assert not np.allclose(np.asarray(ns["stem_bn"]["mean"]),
+                               np.asarray(s["stem_bn"]["mean"]))
+
+    def test_capture_covers_lut_layers(self):
+        model = models.ResNetTiny()
+        p, s = model.init(0)
+        x = jnp.zeros((2, 16, 16, 3), jnp.float32)
+        cap = {}
+        model.apply(p, s, x, train=False, table_bits=None, capture=cap)
+        for name in model.lut_layers():
+            if name in p:
+                assert name in cap, name
+
+    def test_convert_and_forward(self):
+        model = models.ResNetTiny(widths=(4, 8, 8))
+        p, s = model.init(0)
+        x = jnp.asarray(np.random.default_rng(1)
+                        .standard_normal((8, 16, 16, 3)), jnp.float32)
+        caps = train.capture_activations(model, p, s, np.asarray(x))
+        lut = models.convert_model(model, p, caps, model.lut_layers(),
+                                   n_centroids=8, kmeans_iters=3)
+        assert isinstance(lut["b0c1"], softpq.LutParams)
+        assert isinstance(lut["stem"], dict)     # first conv stays dense
+        out, _ = model.apply(lut, s, x, train=False, table_bits=8)
+        assert out.shape == (8, 10)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_im2col_layout_channel_major(self):
+        """im2col features must be (Cin, kh, kw) channel-major — the layout
+        contract shared with the rust engine (DESIGN.md)."""
+        x = jnp.arange(2 * 3 * 3 * 2, dtype=jnp.float32).reshape(2, 3, 3, 2)
+        p = layers.im2col(x, 3, 1, "SAME")
+        # center patch of image 0: feature vector length 2*9
+        center = np.asarray(p)[0, 1, 1]
+        img = np.asarray(x)[0]
+        want = np.concatenate([img[:, :, c].reshape(-1) for c in range(2)])
+        np.testing.assert_allclose(center, want)
+
+    def test_conv_weight_as_matrix_matches_lax_conv(self):
+        import jax
+
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((2, 5, 5, 3)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((3, 3, 3, 4)), jnp.float32)
+        direct = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        wm = layers.conv_weight_as_matrix(w)
+        patches = layers.im2col(x, 3, 1, "SAME")
+        out = (patches.reshape(-1, 27) @ wm).reshape(2, 5, 5, 4)
+        np.testing.assert_allclose(np.asarray(direct), np.asarray(out),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMiniBert:
+    def test_forward_shape(self):
+        model = models.MiniBert()
+        p, s = model.init(0)
+        x = jnp.zeros((4, 16), jnp.int32)
+        out, _ = model.apply(p, s, x, train=False, table_bits=None)
+        assert out.shape == (4, 4)
+
+    def test_lut_layers_last(self):
+        model = models.MiniBert(n_layers=4)
+        names = model.lut_layers_last(2)
+        assert all(n.startswith(("l2", "l3")) for n in names)
+        assert len(names) == 12
+
+    def test_convert_and_forward(self):
+        model = models.MiniBert(n_layers=2)
+        p, s = model.init(0)
+        x, _ = datasets.synth_nlp(32, seed=0)
+        caps = train.capture_activations(model, p, s, x)
+        lut = models.convert_model(model, p, caps, model.lut_layers_last(1),
+                                   n_centroids=8, kmeans_iters=3)
+        assert isinstance(lut["l1f1"], softpq.LutParams)
+        out, _ = model.apply(lut, s, jnp.asarray(x), train=False,
+                             table_bits=8)
+        assert out.shape == (32, 4)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestGeometry:
+    def test_codebook_geometry(self):
+        assert layers.codebook_geometry(27, 3) == 9      # 3x3 conv
+        assert layers.codebook_geometry(64, 1) == 4      # 1x1 conv
+        assert layers.codebook_geometry(512, 0) == 16    # wide FC
+        assert layers.codebook_geometry(10, 0) == 2      # odd small FC
+        assert layers.codebook_geometry(7, 0) == 1       # prime fallback

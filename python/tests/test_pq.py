@@ -1,0 +1,122 @@
+"""k-means / PQ codebook learning + MADDNESS baseline tests."""
+
+import numpy as np
+import pytest
+
+from compile import maddness, pqkmeans
+
+
+class TestKmeans:
+    def test_recovers_separated_clusters(self):
+        rng = np.random.default_rng(0)
+        centers = np.array([[0, 0], [10, 0], [0, 10], [10, 10]], np.float32)
+        x = np.concatenate([c + 0.1 * rng.standard_normal((50, 2))
+                            for c in centers]).astype(np.float32)
+        got, assign = pqkmeans.kmeans(x, 4, seed=1)
+        # every true center has a learned centroid within 0.5
+        for c in centers:
+            assert np.min(np.linalg.norm(got - c, axis=1)) < 0.5
+        assert len(np.unique(assign)) == 4
+
+    def test_mse_not_worse_than_random_codebook(self):
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((512, 8)).astype(np.float32)
+        learned = pqkmeans.learn_codebooks(x, 2, 16, seed=0)
+        random_cb = rng.standard_normal(learned.shape).astype(np.float32)
+        assert (pqkmeans.quantization_mse(x, learned)
+                < pqkmeans.quantization_mse(x, random_cb))
+
+    def test_more_centroids_lower_mse(self):
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal((512, 8)).astype(np.float32)
+        mses = [pqkmeans.quantization_mse(
+            x, pqkmeans.learn_codebooks(x, 2, k, seed=0))
+            for k in (2, 8, 32)]
+        assert mses[0] > mses[1] > mses[2]
+
+    def test_fewer_samples_than_centroids(self):
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((5, 4)).astype(np.float32)
+        c, _ = pqkmeans.kmeans(x, 16, seed=0)
+        assert c.shape == (16, 4)
+        assert np.isfinite(c).all()
+
+    def test_identical_points(self):
+        x = np.ones((64, 4), np.float32)
+        c, _ = pqkmeans.kmeans(x, 4, seed=0)
+        assert np.isfinite(c).all()
+        # all centroids should sit on (or extremely near) the single point
+        assert np.abs(c - 1.0).max() < 1e-2
+
+    def test_codebook_shape(self):
+        rng = np.random.default_rng(4)
+        x = rng.standard_normal((128, 36)).astype(np.float32)
+        cb = pqkmeans.learn_codebooks(x, 4, 16, seed=0)
+        assert cb.shape == (4, 16, 9)
+
+
+class TestMaddness:
+    def make_data(self, seed=0, n=512, d=12, m=8):
+        rng = np.random.default_rng(seed)
+        a = rng.standard_normal((n, d)).astype(np.float32)
+        w = rng.standard_normal((d, m)).astype(np.float32)
+        return a, w
+
+    def test_tree_shapes(self):
+        a, _ = self.make_data()
+        tree = maddness.learn_hash_tree(a[:, :4], depth=4)
+        assert tree.prototypes.shape == (16, 4)
+        assert len(tree.split_dims) == 4
+
+    def test_encode_range_and_determinism(self):
+        a, _ = self.make_data(1)
+        tree = maddness.learn_hash_tree(a[:, :4], depth=4)
+        idx1 = maddness.encode_with_tree(a[:, :4], tree)
+        idx2 = maddness.encode_with_tree(a[:, :4], tree)
+        assert (idx1 == idx2).all()
+        assert idx1.min() >= 0 and idx1.max() < 16
+
+    def test_balanced_leaves(self):
+        """Median splits must produce roughly balanced buckets."""
+        a, _ = self.make_data(2, n=1024)
+        tree = maddness.learn_hash_tree(a[:, :4], depth=4)
+        idx = maddness.encode_with_tree(a[:, :4], tree)
+        counts = np.bincount(idx, minlength=16)
+        assert counts.max() < 1024 // 16 * 4
+
+    def test_amm_better_than_zero_and_worse_than_exact(self):
+        a, w = self.make_data(3)
+        op = maddness.learn_maddness(a, w, None, n_codebooks=3, depth=4)
+        approx = maddness.maddness_amm(a, op)
+        exact = a @ w
+        err = np.mean((approx - exact) ** 2)
+        base = np.mean(exact ** 2)
+        assert err < base          # captures signal
+        assert err > 1e-6          # but is approximate
+
+    def test_hashing_worse_than_kmeans_encoding(self):
+        """Paper §2.1/Fig. 3: hashing has higher quantization error than
+        k-means argmin encoding at equal K."""
+        from compile import pqkmeans
+        import jax.numpy as jnp
+        from compile.kernels import ref
+
+        a, w = self.make_data(4, n=1024)
+        c = 3
+        op = maddness.learn_maddness(a, w, None, n_codebooks=c, depth=4)
+        cb = pqkmeans.learn_codebooks(a, c, 16, seed=0)
+        table = ref.build_table_ref(jnp.asarray(cb), jnp.asarray(w))
+        pq_out = np.asarray(ref.lut_amm_ref(jnp.asarray(a), jnp.asarray(cb),
+                                            table))
+        md_out = maddness.maddness_amm(a, op)
+        exact = a @ w
+        assert np.mean((md_out - exact) ** 2) > np.mean((pq_out - exact) ** 2)
+
+    def test_bias_applied(self):
+        a, w = self.make_data(5)
+        bias = np.arange(8, dtype=np.float32)
+        op = maddness.learn_maddness(a, w, bias, n_codebooks=3)
+        op0 = maddness.MaddnessOp(op.trees, op.table, None)
+        np.testing.assert_allclose(
+            maddness.maddness_amm(a, op),
+            maddness.maddness_amm(a, op0) + bias, rtol=1e-6)

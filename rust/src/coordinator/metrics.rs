@@ -1,0 +1,160 @@
+//! Serving metrics: counters + latency reservoir, all lock-cheap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+const RESERVOIR: usize = 65_536;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub items: AtomicU64,
+    pub errors: AtomicU64,
+    pub queue_depth: AtomicU64,
+    /// per-request end-to-end latency samples (seconds)
+    latencies: Mutex<Vec<f64>>,
+    /// per-batch sizes
+    batch_sizes: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, latency_s: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.latencies.lock().unwrap();
+        if g.len() < RESERVOIR {
+            g.push(latency_s);
+        }
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.items.fetch_add(size as u64, Ordering::Relaxed);
+        let mut g = self.batch_sizes.lock().unwrap();
+        if g.len() < RESERVOIR {
+            g.push(size as f64);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let g = self.latencies.lock().unwrap();
+        if g.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&g))
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let g = self.batch_sizes.lock().unwrap();
+        if g.is_empty() {
+            0.0
+        } else {
+            g.iter().sum::<f64>() / g.len() as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            items: self.items.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            latency: self.latency_summary(),
+            mean_batch: self.mean_batch_size(),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub items: u64,
+    pub errors: u64,
+    pub latency: Option<Summary>,
+    pub mean_batch: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self, wall_s: f64) -> String {
+        let mut s = format!(
+            "requests={} batches={} items={} errors={} mean_batch={:.2} throughput={:.1}/s",
+            self.requests,
+            self.batches,
+            self.items,
+            self.errors,
+            self.mean_batch,
+            self.requests as f64 / wall_s.max(1e-9),
+        );
+        if let Some(l) = &self.latency {
+            s.push_str(&format!(
+                " p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+                l.p50 * 1e3,
+                l.p95 * 1e3,
+                l.p99 * 1e3
+            ));
+        }
+        s
+    }
+}
+
+/// RAII latency timer: records on drop.
+pub struct LatencyGuard<'a> {
+    metrics: &'a Metrics,
+    start: Instant,
+}
+
+impl<'a> LatencyGuard<'a> {
+    pub fn new(metrics: &'a Metrics) -> Self {
+        LatencyGuard { metrics, start: Instant::now() }
+    }
+}
+
+impl Drop for LatencyGuard<'_> {
+    fn drop(&mut self) {
+        self.metrics.record_request(self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summary() {
+        let m = Metrics::new();
+        m.record_request(0.010);
+        m.record_request(0.020);
+        m.record_batch(4);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.items, 4);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.mean_batch, 4.0);
+        let l = s.latency.as_ref().unwrap();
+        assert!((l.mean - 0.015).abs() < 1e-9);
+        assert!(!s.report(1.0).is_empty());
+    }
+
+    #[test]
+    fn guard_records() {
+        let m = Metrics::new();
+        {
+            let _g = LatencyGuard::new(&m);
+        }
+        assert_eq!(m.snapshot().requests, 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! L3 serving coordinator: model registry, router, dynamic batcher,
+//! worker pool, metrics, workload traces and a TCP front-end.
+//!
+//! Request path (no python anywhere):
+//!   client -> server (TCP line-JSON) ----\
+//!   in-proc callers (examples/benches) ---+--> Router -> Batcher queue
+//!                                              -> worker: Backend::run
+//!                                              -> per-request reply
+//!
+//! Backends: `Native` (the rust LUT/dense graph executor — the paper's
+//! §5 engine) and `Pjrt` (AOT-compiled XLA graphs from the jax layer).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::lut::LutOpts;
+use crate::nn::graph::Graph;
+use crate::runtime::{HostInput, HostedModel};
+use crate::tensor::Tensor;
+
+/// An executable model variant.
+pub enum Backend {
+    /// rust-native graph executor (dense and/or LUT layers)
+    Native { graph: Graph, opts: LutOpts },
+    /// AOT-compiled XLA graph on the PJRT host thread (fixed batch size)
+    Pjrt { model: HostedModel, batch: usize, is_tokens: bool },
+}
+
+impl Backend {
+    /// Run a batch. `x.shape[0]` is the batch dim. Token inputs for BERT
+    /// graphs are carried as f32 ids in the tensor (cast internally).
+    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+        match self {
+            Backend::Native { graph, opts } => Ok(graph.run(x.clone(), *opts)),
+            Backend::Pjrt { model, batch, is_tokens } => {
+                anyhow::ensure!(
+                    x.shape[0] == *batch,
+                    "pjrt model compiled for batch {batch}, got {}",
+                    x.shape[0]
+                );
+                let out = if *is_tokens {
+                    let ids: Vec<i32> = x.data.iter().map(|&v| v as i32).collect();
+                    model.run(HostInput::I32(ids, x.shape.clone()))?
+                } else {
+                    model.run(HostInput::F32(x.data.clone(), x.shape.clone()))?
+                };
+                let n = x.shape[0];
+                let m = out.len() / n;
+                Ok(Tensor::new(vec![n, m], out))
+            }
+        }
+    }
+
+    /// Max batch this backend accepts in one call (None = unbounded).
+    pub fn max_batch(&self) -> Option<usize> {
+        match self {
+            Backend::Native { .. } => None,
+            Backend::Pjrt { batch, .. } => Some(*batch),
+        }
+    }
+}
+
+/// One registered model.
+pub struct ModelEntry {
+    pub name: String,
+    pub backend: Backend,
+    /// per-request input shape (without batch dim)
+    pub item_shape: Vec<usize>,
+}
+
+impl ModelEntry {
+    pub fn item_len(&self) -> usize {
+        self.item_shape.iter().product()
+    }
+}
+
+/// Name -> model registry with routing aliases.
+#[derive(Default)]
+pub struct Registry {
+    models: BTreeMap<String, Arc<ModelEntry>>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn register(&mut self, entry: ModelEntry) {
+        self.models.insert(entry.name.clone(), Arc::new(entry));
+    }
+
+    /// Route alias, e.g. "default" -> "resnet_tiny_lut".
+    pub fn alias(&mut self, from: &str, to: &str) {
+        self.aliases.insert(from.to_string(), to.to_string());
+    }
+
+    pub fn resolve(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let target = self.aliases.get(name).map(|s| s.as_str()).unwrap_or(name);
+        self.models
+            .get(target)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models::{build_cnn_graph, ConvSpec};
+
+    fn native_entry(name: &str) -> ModelEntry {
+        let g = build_cnn_graph(
+            name,
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            0,
+        );
+        ModelEntry {
+            name: name.into(),
+            backend: Backend::Native { graph: g, opts: LutOpts::all() },
+            item_shape: vec![8, 8, 3],
+        }
+    }
+
+    #[test]
+    fn registry_resolve_and_alias() {
+        let mut r = Registry::new();
+        r.register(native_entry("m1"));
+        r.alias("default", "m1");
+        assert_eq!(r.resolve("m1").unwrap().name, "m1");
+        assert_eq!(r.resolve("default").unwrap().name, "m1");
+        assert!(r.resolve("missing").is_err());
+        assert_eq!(r.names(), vec!["m1".to_string()]);
+    }
+
+    #[test]
+    fn native_backend_runs_any_batch() {
+        let e = native_entry("m");
+        for n in [1usize, 3, 7] {
+            let x = Tensor::zeros(vec![n, 8, 8, 3]);
+            let y = e.backend.run(&x).unwrap();
+            assert_eq!(y.shape, vec![n, 5]);
+        }
+        assert_eq!(e.backend.max_batch(), None);
+        assert_eq!(e.item_len(), 192);
+    }
+}

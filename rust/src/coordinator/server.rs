@@ -1,0 +1,364 @@
+//! TCP front-end: newline-delimited JSON over a plain socket.
+//!
+//! Request : {"model": "name", "input": [f32...]}
+//! Response: {"ok": true, "output": [f32...], "latency_us": n}
+//!         | {"ok": false, "error": "..."}
+//! Special : {"cmd": "metrics"} | {"cmd": "models"} | {"cmd": "shutdown"}
+//!
+//! One handler thread per connection (from a bounded pool); inference is
+//! funneled through each model's dynamic batcher, so concurrent clients
+//! coalesce into batches exactly as in-proc callers do.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::Registry;
+use crate::util::json::{self, Json};
+use crate::util::threadpool::ThreadPool;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub handler_threads: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7070".into(),
+            handler_threads: 4,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// A running server; drop or call `shutdown()` to stop accepting.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving `registry` on `cfg.addr` (port 0 = ephemeral).
+    pub fn start(registry: Registry, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // One batcher per registered model.
+        let mut batchers: BTreeMap<String, Arc<Batcher>> = BTreeMap::new();
+        for name in registry.names() {
+            let entry = registry.resolve(&name)?;
+            batchers.insert(
+                name,
+                Arc::new(Batcher::spawn(
+                    entry,
+                    BatcherConfig {
+                        max_batch: cfg.batcher.max_batch,
+                        max_wait: cfg.batcher.max_wait,
+                        queue_cap: cfg.batcher.queue_cap,
+                    },
+                )),
+            );
+        }
+        let shared = Arc::new(Shared { registry, batchers, start: Instant::now() });
+
+        let stop2 = Arc::clone(&stop);
+        let pool = ThreadPool::new(cfg.handler_threads);
+        let accept_thread = std::thread::Builder::new()
+            .name("lutnn-accept".into())
+            .spawn(move || {
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let shared = Arc::clone(&shared);
+                            let stop3 = Arc::clone(&stop2);
+                            pool.execute(move || {
+                                let _ = handle_conn(stream, &shared, &stop3);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                // pool drops here -> handlers join
+            })?;
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// True once a shutdown has been requested (via cmd or `shutdown()`).
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct Shared {
+    registry: Registry,
+    batchers: BTreeMap<String, Arc<Batcher>>,
+    start: Instant,
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared, stop: &AtomicBool) -> Result<()> {
+    stream.set_nodelay(true)?;
+    // Periodic read timeout so handler threads observe shutdown even on
+    // idle connections (otherwise Server::drop would deadlock joining a
+    // worker parked in read()).
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // partial bytes (if any) stay accumulated in `line`
+                continue;
+            }
+            Err(_) => break,
+        }
+        if !line.trim().is_empty() {
+            let resp = handle_line(line.trim(), shared, stop);
+            writer.write_all(json::to_string(&resp).as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+        }
+        line.clear();
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn err_json(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.into()))])
+}
+
+fn handle_line(line: &str, shared: &Shared, stop: &AtomicBool) -> Json {
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(format!("bad json: {e}")),
+    };
+    if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "models" => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "models",
+                    Json::Arr(
+                        shared.registry.names().into_iter().map(Json::Str).collect(),
+                    ),
+                ),
+            ]),
+            "metrics" => {
+                let wall = shared.start.elapsed().as_secs_f64();
+                let mut obj = vec![("ok", Json::Bool(true))];
+                let mut per_model = std::collections::BTreeMap::new();
+                for (name, b) in &shared.batchers {
+                    per_model.insert(
+                        name.clone(),
+                        Json::str(b.metrics.snapshot().report(wall)),
+                    );
+                }
+                obj.push(("metrics", Json::Obj(per_model)));
+                Json::obj(obj)
+            }
+            "shutdown" => {
+                stop.store(true, Ordering::Relaxed);
+                Json::obj(vec![("ok", Json::Bool(true))])
+            }
+            other => err_json(format!("unknown cmd '{other}'")),
+        };
+    }
+
+    let model = req.get("model").and_then(|m| m.as_str()).unwrap_or("default");
+    let input: Option<Vec<f32>> = req.get("input").and_then(|i| i.as_arr()).map(|arr| {
+        arr.iter()
+            .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect()
+    });
+    let Some(input) = input else {
+        return err_json("missing 'input' array");
+    };
+    let name = match shared.registry.resolve(model) {
+        Ok(e) => e.name.clone(),
+        Err(e) => return err_json(format!("{e}")),
+    };
+    let batcher = &shared.batchers[&name];
+    let t0 = Instant::now();
+    match batcher.submit(input) {
+        Ok(out) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "output",
+                Json::Arr(out.into_iter().map(|v| Json::num(v as f64)).collect()),
+            ),
+            ("latency_us", Json::num(t0.elapsed().as_micros() as f64)),
+        ]),
+        Err(e) => err_json(format!("{e:#}")),
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(json::to_string(req).as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    pub fn infer(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let req = Json::obj(vec![
+            ("model", Json::str(model)),
+            (
+                "input",
+                Json::Arr(input.iter().map(|&v| Json::num(v as f64)).collect()),
+            ),
+        ]);
+        let resp = self.call(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(|o| o.as_bool()).unwrap_or(false),
+            "server error: {:?}",
+            resp.get("error")
+        );
+        Ok(resp
+            .get("output")
+            .and_then(|o| o.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, ModelEntry};
+    use crate::lut::LutOpts;
+    use crate::nn::models::{build_cnn_graph, ConvSpec};
+
+    fn test_registry() -> Registry {
+        let g = build_cnn_graph(
+            "m",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            0,
+        );
+        let mut r = Registry::new();
+        r.register(ModelEntry {
+            name: "m".into(),
+            backend: Backend::Native { graph: g, opts: LutOpts::all() },
+            item_shape: vec![8, 8, 3],
+        });
+        r.alias("default", "m");
+        r
+    }
+
+    #[test]
+    fn serve_and_infer_over_tcp() {
+        let mut server = Server::start(
+            test_registry(),
+            ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        let out = client.infer("m", &vec![0.25; 192]).unwrap();
+        assert_eq!(out.len(), 5);
+
+        // alias routing
+        let out2 = client.infer("default", &vec![0.25; 192]).unwrap();
+        assert_eq!(out, out2);
+
+        // control plane
+        let models = client
+            .call(&Json::obj(vec![("cmd", Json::str("models"))]))
+            .unwrap();
+        assert!(models.get("ok").unwrap().as_bool().unwrap());
+        let metrics = client
+            .call(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+            .unwrap();
+        assert!(metrics.get("metrics").is_some());
+
+        // errors
+        let bad = client
+            .call(&Json::obj(vec![("model", Json::str("nope"))]))
+            .unwrap();
+        assert!(!bad.get("ok").unwrap().as_bool().unwrap());
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = Server::start(
+            test_registry(),
+            ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for _ in 0..5 {
+                    let out = c.infer("m", &vec![0.1; 192]).unwrap();
+                    assert_eq!(out.len(), 5);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Workload trace generation: open-loop Poisson arrivals and closed-loop
+//! concurrency, with seeded synthetic inputs — the request generators for
+//! the serving benches and the end-to-end example.
+
+use crate::util::prng::Prng;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// arrival time offset from trace start, seconds
+    pub at_s: f64,
+    /// request payload (flat input)
+    pub input: Vec<f32>,
+}
+
+/// Open-loop Poisson arrival trace: `rate` requests/second for `n` events.
+pub fn poisson_trace(rate: f64, n: usize, item_len: usize, seed: u64) -> Vec<TraceEvent> {
+    let mut rng = Prng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            TraceEvent { at_s: t, input: rng.normal_vec(item_len, 1.0) }
+        })
+        .collect()
+}
+
+/// Uniform (constant-rate) trace.
+pub fn uniform_trace(rate: f64, n: usize, item_len: usize, seed: u64) -> Vec<TraceEvent> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|i| TraceEvent {
+            at_s: i as f64 / rate,
+            input: rng.normal_vec(item_len, 1.0),
+        })
+        .collect()
+}
+
+/// Burst trace: quiet baseline with periodic bursts (batching stressor).
+pub fn bursty_trace(
+    base_rate: f64,
+    burst_rate: f64,
+    period_s: f64,
+    burst_frac: f64,
+    n: usize,
+    item_len: usize,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    let mut rng = Prng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let phase = (t % period_s) / period_s;
+            let rate = if phase < burst_frac { burst_rate } else { base_rate };
+            t += rng.exponential(rate);
+            TraceEvent { at_s: t, input: rng.normal_vec(item_len, 1.0) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_right() {
+        let tr = poisson_trace(100.0, 2000, 4, 0);
+        let span = tr.last().unwrap().at_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() < 10.0, "rate={rate}");
+        assert!(tr.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+    }
+
+    #[test]
+    fn uniform_spacing() {
+        let tr = uniform_trace(10.0, 5, 2, 0);
+        assert!((tr[1].at_s - tr[0].at_s - 0.1).abs() < 1e-9);
+        assert_eq!(tr[0].input.len(), 2);
+    }
+
+    #[test]
+    fn bursty_alternates_rates() {
+        let tr = bursty_trace(10.0, 1000.0, 1.0, 0.2, 3000, 1, 0);
+        // mean rate must sit strictly between base and burst
+        let span = tr.last().unwrap().at_s;
+        let rate = 3000.0 / span;
+        assert!(rate > 10.0 && rate < 1000.0, "rate={rate}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = poisson_trace(50.0, 10, 3, 7);
+        let b = poisson_trace(50.0, 10, 3, 7);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[5].input, b[5].input);
+        assert_eq!(a[5].at_s, b[5].at_s);
+    }
+}

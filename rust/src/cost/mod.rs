@@ -1,0 +1,172 @@
+//! Analytic cost model — paper Table 1 formulas and the Table 2 numbers.
+//!
+//! FLOPs convention follows the paper (one multiply-add = one FLOP, i.e.
+//! "MACs"): dense MM over A[N,D] x B[D,M] costs N*D*M; a LUT-NN AMM costs
+//! N*D*K (encoding distances) + N*M*D/V (table read + accumulation,
+//! D/V = C reads per output element).
+//!
+//! Disk-size convention (Table 1): dense FP32 weights = 4*D*M bytes;
+//! LUT-NN = INT8 table C*K*M bytes + FP32 codebooks 4*C*K*V = 4*D*K bytes.
+
+use crate::nn::models::{default_v, LinearShape, ModelShape};
+
+/// Dense MM FLOPs (MACs): N*D*M.
+pub fn dense_flops(n: usize, d: usize, m: usize) -> u64 {
+    n as u64 * d as u64 * m as u64
+}
+
+/// LUT-NN AMM FLOPs (Table 1): N*D*K + N*M*D/V.
+pub fn lut_flops(n: usize, d: usize, m: usize, k: usize, v: usize) -> u64 {
+    assert_eq!(d % v, 0, "D={d} % V={v}");
+    let c = (d / v) as u64;
+    n as u64 * d as u64 * k as u64 + n as u64 * m as u64 * c
+}
+
+/// Dense op parameter bytes (FP32 weights + bias).
+pub fn dense_bytes(d: usize, m: usize) -> u64 {
+    4 * (d as u64 * m as u64 + m as u64)
+}
+
+/// LUT op parameter bytes: INT8 table + FP32 codebooks + scales + bias.
+pub fn lut_bytes(d: usize, m: usize, k: usize, v: usize) -> u64 {
+    let c = (d / v) as u64;
+    c * k as u64 * m as u64          // INT8 table
+        + 4 * c * k as u64 * v as u64 // centroids
+        + 4 * c                       // per-codebook scales
+        + 4 * m as u64                // bias
+}
+
+/// (K, V) configuration for a whole model. `v_override = None` uses the
+/// paper's per-op defaults (V=9 for 3x3, V=4 for 1x1/small FC, ...).
+#[derive(Debug, Clone, Copy)]
+pub struct LutConfig {
+    pub k: usize,
+    pub v_override: Option<usize>,
+}
+
+impl LutConfig {
+    pub fn v_for(&self, op: &LinearShape) -> usize {
+        match self.v_override {
+            Some(v) if op.d % v == 0 => v,
+            _ => default_v(op),
+        }
+    }
+}
+
+/// Whole-model cost summary.
+#[derive(Debug, Clone)]
+pub struct ModelCost {
+    pub name: String,
+    pub dense_gflops: f64,
+    pub lut_gflops: f64,
+    pub dense_mb: f64,
+    pub lut_mb: f64,
+}
+
+/// Evaluate a model shape under a LUT config: ops with `replaced = false`
+/// keep their dense cost on the LUT side (paper keeps the first conv
+/// dense).
+pub fn model_cost(model: &ModelShape, cfg: LutConfig) -> ModelCost {
+    let mut dense_f = 0u64;
+    let mut lut_f = 0u64;
+    let mut dense_b = 0u64;
+    let mut lut_b = 0u64;
+    for op in &model.ops {
+        dense_f += dense_flops(op.n, op.d, op.m);
+        dense_b += dense_bytes(op.d, op.m);
+        if op.replaced {
+            let v = cfg.v_for(op);
+            lut_f += lut_flops(op.n, op.d, op.m, cfg.k, v);
+            lut_b += lut_bytes(op.d, op.m, cfg.k, v);
+        } else {
+            lut_f += dense_flops(op.n, op.d, op.m);
+            lut_b += dense_bytes(op.d, op.m);
+        }
+    }
+    ModelCost {
+        name: model.name.clone(),
+        dense_gflops: dense_f as f64 / 1e9,
+        lut_gflops: lut_f as f64 / 1e9,
+        dense_mb: dense_b as f64 / (1024.0 * 1024.0),
+        lut_mb: lut_b as f64 / (1024.0 * 1024.0),
+    }
+}
+
+/// Per-op FLOPs reduction factor M / (K + M/V) (paper §6.2 derivation).
+pub fn flops_reduction(m: usize, k: usize, v: usize) -> f64 {
+    m as f64 / (k as f64 + m as f64 / v as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+
+    #[test]
+    fn table1_formulas() {
+        // Spot values straight from the Table 1 expressions.
+        assert_eq!(dense_flops(10, 20, 30), 6000);
+        assert_eq!(lut_flops(10, 20, 30, 8, 4), 10 * 20 * 8 + 10 * 30 * 5);
+        assert_eq!(dense_bytes(20, 30), 4 * (600 + 30));
+        assert_eq!(lut_bytes(20, 30, 8, 4), 5 * 8 * 30 + 4 * 5 * 8 * 4 + 20 + 120);
+    }
+
+    #[test]
+    fn table2_resnet18_cifar_dense_gflops() {
+        // Paper Table 2: ResNet18 (CIFAR10) original = 0.555 GFLOPs.
+        let c = model_cost(&models::resnet18_cifar(), LutConfig { k: 8, v_override: None });
+        assert!(
+            (c.dense_gflops - 0.555).abs() < 0.01,
+            "got {}",
+            c.dense_gflops
+        );
+    }
+
+    #[test]
+    fn table2_resnet18_cifar_lut_gflops() {
+        // Paper Table 2: (8,9) -> 0.098, (16,9) -> 0.132.
+        let c8 = model_cost(&models::resnet18_cifar(), LutConfig { k: 8, v_override: None });
+        let c16 = model_cost(&models::resnet18_cifar(), LutConfig { k: 16, v_override: None });
+        assert!((c8.lut_gflops - 0.098).abs() < 0.012, "got {}", c8.lut_gflops);
+        assert!((c16.lut_gflops - 0.132).abs() < 0.015, "got {}", c16.lut_gflops);
+    }
+
+    #[test]
+    fn table2_vgg11_cifar() {
+        // Paper: original 0.606, (8,9) 0.085, (16,9) 0.102.
+        let c8 = model_cost(&models::vgg11_cifar(), LutConfig { k: 8, v_override: None });
+        let c16 = model_cost(&models::vgg11_cifar(), LutConfig { k: 16, v_override: None });
+        assert!((c8.dense_gflops - 0.606).abs() < 0.02, "got {}", c8.dense_gflops);
+        assert!((c8.lut_gflops - 0.085).abs() < 0.012, "got {}", c8.lut_gflops);
+        assert!((c16.lut_gflops - 0.102).abs() < 0.015, "got {}", c16.lut_gflops);
+    }
+
+    #[test]
+    fn table2_bert_direction() {
+        // Paper: BERT 2.759 -> 0.169 at (16,32): a ~16x reduction.
+        let c = model_cost(&models::bert_base(), LutConfig { k: 16, v_override: Some(32) });
+        assert!((c.dense_gflops - 2.759).abs() < 0.3, "got {}", c.dense_gflops);
+        let ratio = c.dense_gflops / c.lut_gflops;
+        assert!(ratio > 10.0 && ratio < 25.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn model_size_reduction_within_paper_band() {
+        // Paper: 3.4x ~ 7x disk reduction across models at (8,9)/(16,9).
+        for m in models::all_paper_models() {
+            let c = model_cost(&m, LutConfig { k: 16, v_override: None });
+            let ratio = c.dense_mb / c.lut_mb;
+            assert!(ratio > 1.5, "{}: ratio {ratio}", m.name);
+        }
+    }
+
+    #[test]
+    fn flops_reduction_formula() {
+        // M=512, K=16, V=9 -> 512 / (16 + 56.9) ~ 7.0x
+        let r = flops_reduction(512, 16, 9);
+        assert!((r - 7.02).abs() < 0.1, "{r}");
+        // BERT M=3072, K=16, V=32: 3072/(16+96) = 27.4x
+        let r = flops_reduction(3072, 16, 32);
+        assert!((r - 27.4).abs() < 0.2, "{r}");
+    }
+}

@@ -1,0 +1,28 @@
+//! # LUT-NN — DNN inference by centroid learning and table lookup
+//!
+//! Rust reproduction of *LUT-NN: Empower Efficient Neural Network
+//! Inference with Centroid Learning and Table Lookup* (MobiCom 2023),
+//! layer 3 of the three-layer rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! * [`lut`] — the table-lookup execution engine (paper §5), the hot path
+//! * [`pq`] — k-means/PQ codebooks, scalar quantization, MADDNESS baseline
+//! * [`nn`] — dense reference ops, graph executor, model shape zoo
+//! * [`tensor`] — f32 tensors + im2col
+//! * [`cost`] — analytic FLOPs/size model (paper Tables 1–2)
+//! * [`model_fmt`] — `.lutnn` bundle reader/writer
+//! * [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt` via the `xla`
+//!   crate and executes the AOT-compiled JAX graphs
+//! * [`coordinator`] — serving: router, dynamic batcher, worker pool,
+//!   metrics, workload traces
+//! * [`util`] — dependency-free substrates (json, prng, stats, threads,
+//!   cli, bench harness, property testing)
+
+pub mod coordinator;
+pub mod cost;
+pub mod lut;
+pub mod model_fmt;
+pub mod nn;
+pub mod pq;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

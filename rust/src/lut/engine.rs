@@ -1,0 +1,579 @@
+//! LUT-AMM forward engine. See module docs in `lut/mod.rs`.
+
+use crate::pq::{build_table, quantize_table, Codebooks};
+use crate::tensor::QTable;
+
+/// §6.3 optimization toggles. `LutOpts::all()` is the deployed config;
+/// `LutOpts::none()` is the naive baseline the breakdown bench starts from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LutOpts {
+    /// ① codebook-resident distance computation (memory optimization)
+    pub centroid_stationary: bool,
+    /// ② interleaved 4-way argmin (instruction-level parallelism)
+    pub interleaved_argmin: bool,
+    /// ③ blocked sequential table reads (vectorizable gather)
+    pub blocked_table_read: bool,
+    /// ④ integer accumulation at a common scale (mixed precision)
+    pub mixed_accum: bool,
+}
+
+impl LutOpts {
+    pub fn all() -> LutOpts {
+        LutOpts {
+            centroid_stationary: true,
+            interleaved_argmin: true,
+            blocked_table_read: true,
+            mixed_accum: true,
+        }
+    }
+    pub fn none() -> LutOpts {
+        LutOpts {
+            centroid_stationary: false,
+            interleaved_argmin: false,
+            blocked_table_read: false,
+            mixed_accum: false,
+        }
+    }
+    /// The config tuned for THIS testbed (EXPERIMENTS.md §Perf): the
+    /// interleaved argmin only pays off with real SIMD compare lanes
+    /// (NEON `vpmin` / AVX `vminps`); in portable scalar rust the
+    /// sequential scan over K=16 measures ~25% faster, so the deployed
+    /// path disables it. `all()` remains the paper-complete config.
+    pub fn deployed() -> LutOpts {
+        LutOpts { interleaved_argmin: false, ..LutOpts::all() }
+    }
+}
+
+impl Default for LutOpts {
+    fn default() -> Self {
+        LutOpts::deployed()
+    }
+}
+
+/// A LUT-replaced linear operator (conv-as-matmul or FC).
+#[derive(Debug, Clone)]
+pub struct LutLinear {
+    pub cb: Codebooks,
+    /// |p|^2 per centroid [C, K] (distance fast path)
+    sqn: Vec<f32>,
+    /// codebooks transposed to [C, V, K] — K-contiguous so the distance
+    /// inner loop vectorizes across centroids (perf pass, EXPERIMENTS.md
+    /// §Perf iteration 1)
+    cb_t: Vec<f32>,
+    /// cb_t pre-scaled by -2 so the distance GEMM needs no epilogue
+    /// (perf iteration 2: scores = sqn + slab @ (-2 P^T))
+    cb_t2: Vec<f32>,
+    /// INT8 table with per-codebook scales (bundle format)
+    pub qtable: QTable,
+    /// table requantized to one common scale (enables cross-codebook
+    /// integer accumulation — paper §5.2 mixed precision)
+    qcommon: Vec<i8>,
+    common_scale: f32,
+    /// dequantized f32 table (naive/FP32 paths and tests)
+    pub table_f32: Vec<f32>,
+    pub bias: Option<Vec<f32>>,
+    pub m: usize,
+}
+
+impl LutLinear {
+    /// Build from codebooks + dense weight (Eq. 3 table construction).
+    pub fn new(
+        cb: Codebooks,
+        weight: &[f32],
+        m: usize,
+        bias: Option<Vec<f32>>,
+        bits: u8,
+    ) -> LutLinear {
+        let table = build_table(&cb, weight, m);
+        let qtable = quantize_table(&table, cb.c, cb.k, m, bits);
+        let mut lut = Self::from_parts(cb, qtable, bias);
+        // from_parts only sees the quantized table; when built from the
+        // dense weight we keep the *exact* FP32 table for the unquantized
+        // ablation path.
+        lut.table_f32 = table;
+        lut
+    }
+
+    /// Build from an already-quantized table (bundle load path).
+    pub fn from_parts(cb: Codebooks, qtable: QTable, bias: Option<Vec<f32>>) -> LutLinear {
+        let m = qtable.m;
+        assert_eq!(qtable.c, cb.c);
+        assert_eq!(qtable.k, cb.k);
+        let sqn = cb.sq_norms();
+        let mut cb_t = vec![0.0f32; cb.c * cb.v * cb.k];
+        for c in 0..cb.c {
+            for k in 0..cb.k {
+                for t in 0..cb.v {
+                    cb_t[(c * cb.v + t) * cb.k + k] = cb.centroid(c, k)[t];
+                }
+            }
+        }
+        let cb_t2: Vec<f32> = cb_t.iter().map(|&x| -2.0 * x).collect();
+        // dequantized copy
+        let mut table_f32 = vec![0.0f32; qtable.data.len()];
+        for c in 0..qtable.c {
+            let s = qtable.scale[c];
+            let base = c * qtable.k * m;
+            for i in 0..qtable.k * m {
+                table_f32[base + i] = qtable.data[base + i] as f32 * s;
+            }
+        }
+        // requantize to common scale for integer accumulation (§5.2):
+        // q' = round(q * scale_c / scale_max) keeps |q'| <= 127.
+        let common_scale = qtable.scale.iter().cloned().fold(0.0f32, f32::max).max(1e-30);
+        let mut qcommon = vec![0i8; qtable.data.len()];
+        for c in 0..qtable.c {
+            let ratio = qtable.scale[c] / common_scale;
+            let base = c * qtable.k * m;
+            for i in 0..qtable.k * m {
+                qcommon[base + i] =
+                    (qtable.data[base + i] as f32 * ratio).round().clamp(-128.0, 127.0) as i8;
+            }
+        }
+        LutLinear { cb, sqn, cb_t, cb_t2, qtable, qcommon, common_scale, table_f32, bias, m }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.cb.input_dim()
+    }
+
+    /// Bytes held by the deployed representation (Fig. 10 accounting):
+    /// codebooks f32 + INT8 table + scales + bias.
+    pub fn deployed_bytes(&self) -> usize {
+        self.cb.data.len() * 4
+            + self.qtable.data.len()
+            + self.qtable.scale.len() * 4
+            + self.bias.as_ref().map(|b| b.len() * 4).unwrap_or(0)
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 1: closest centroid search (§5.1)
+    // ------------------------------------------------------------------
+
+    /// Encode rows of `a` ([n, D]) to centroid indices ([n, C] into `idx`).
+    pub fn encode_into(&self, a: &[f32], n: usize, opts: LutOpts, idx: &mut [u16]) {
+        let d = self.input_dim();
+        assert_eq!(a.len(), n * d);
+        assert_eq!(idx.len(), n * self.cb.c);
+        if opts.centroid_stationary {
+            self.encode_centroid_stationary(a, n, opts, idx);
+        } else {
+            self.encode_naive(a, n, opts, idx);
+        }
+    }
+
+    /// Naive layout: rows outer, codebooks inner, full |a-p|^2 per pair.
+    /// Re-reads the codebook from memory for every row (the access
+    /// pattern §5.1 calls out as memory-bound).
+    fn encode_naive(&self, a: &[f32], n: usize, opts: LutOpts, idx: &mut [u16]) {
+        let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
+        let d = c_total * v;
+        for i in 0..n {
+            for c in 0..c_total {
+                let sub = &a[i * d + c * v..i * d + (c + 1) * v];
+                let cbk = self.cb.codebook(c);
+                let mut scores = [0.0f32; 256];
+                for kk in 0..k {
+                    let cent = &cbk[kk * v..(kk + 1) * v];
+                    let mut s = 0.0f32;
+                    for t in 0..v {
+                        let diff = sub[t] - cent[t];
+                        s += diff * diff;
+                    }
+                    scores[kk] = s;
+                }
+                idx[i * c_total + c] = argmin(&scores[..k], opts.interleaved_argmin) as u16;
+            }
+        }
+    }
+
+    /// Centroid-stationary: codebooks outer, rows inner — each codebook
+    /// slab (K*V f32, KBs) stays cache-resident across the whole input,
+    /// and distances use the |p|^2 - 2 a.p form with precomputed norms.
+    ///
+    /// The codebook is read from the transposed [V, K] layout so the
+    /// inner loop runs K-contiguous FMAs the compiler vectorizes
+    /// (K = 16 -> two 8-lane AVX fma per feature) — this is the portable
+    /// realization of the paper's NEON distance kernel.
+    fn encode_centroid_stationary(&self, a: &[f32], n: usize, opts: LutOpts, idx: &mut [u16]) {
+        let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
+        let d = c_total * v;
+        // Perf iteration 2 (EXPERIMENTS.md §Perf): the whole codebook's
+        // distance computation is one [n, v] x [v, k] GEMM on the blocked
+        // kernel, with |p|^2 pre-seeded into the accumulator and P^T
+        // pre-scaled by -2 — ~5x the MAC rate of the per-row loop.
+        let mut slab = vec![0.0f32; n * v];
+        let mut scores = vec![0.0f32; n * k];
+        for c in 0..c_total {
+            let cbt2 = &self.cb_t2[c * v * k..(c + 1) * v * k];
+            let sqn = &self.sqn[c * k..(c + 1) * k];
+            for i in 0..n {
+                slab[i * v..(i + 1) * v]
+                    .copy_from_slice(&a[i * d + c * v..i * d + (c + 1) * v]);
+                scores[i * k..(i + 1) * k].copy_from_slice(sqn);
+            }
+            crate::nn::gemm::gemm(&slab, cbt2, &mut scores, n, v, k);
+            for i in 0..n {
+                idx[i * c_total + c] =
+                    argmin(&scores[i * k..(i + 1) * k], opts.interleaved_argmin) as u16;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 2: table read and accumulation (§5.2)
+    // ------------------------------------------------------------------
+
+    /// Accumulate table rows for encoded indices into `out` ([n, M]).
+    pub fn lookup_accumulate(&self, idx: &[u16], n: usize, opts: LutOpts, out: &mut [f32]) {
+        let m = self.m;
+        assert_eq!(out.len(), n * m);
+        assert_eq!(idx.len(), n * self.cb.c);
+        match (opts.mixed_accum, opts.blocked_table_read) {
+            (true, true) => self.accumulate_int_blocked(idx, n, out),
+            (true, false) => self.accumulate_int_scalar(idx, n, out),
+            (false, true) => self.accumulate_f32_blocked(idx, n, out),
+            (false, false) => self.accumulate_f32_scalar(idx, n, out),
+        }
+        if let Some(bias) = &self.bias {
+            for row in out.chunks_exact_mut(m) {
+                for (o, &b) in row.iter_mut().zip(bias) {
+                    *o += b;
+                }
+            }
+        }
+    }
+
+    /// Naive: per-element indexed reads + per-element dequantize multiply.
+    fn accumulate_f32_scalar(&self, idx: &[u16], n: usize, out: &mut [f32]) {
+        let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
+        for i in 0..n {
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                let s = self.qtable.scale[c];
+                for j in 0..m {
+                    out[i * m + j] +=
+                        self.qtable.data[(c * k + kk) * m + j] as f32 * s;
+                }
+            }
+        }
+    }
+
+    /// ③ blocked: slice the table row once, accumulate with an unrolled
+    /// loop the compiler can vectorize; still f32 (per-codebook scale).
+    fn accumulate_f32_blocked(&self, idx: &[u16], n: usize, out: &mut [f32]) {
+        let (c_total, m) = (self.cb.c, self.m);
+        for i in 0..n {
+            let dst = &mut out[i * m..(i + 1) * m];
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                let row = self.qtable.row(c, kk);
+                let s = self.qtable.scale[c];
+                for (o, &q) in dst.iter_mut().zip(row) {
+                    *o += q as f32 * s;
+                }
+            }
+        }
+    }
+
+    /// ④ without ③: integer accumulation at the common scale but with
+    /// per-element indexed reads.
+    fn accumulate_int_scalar(&self, idx: &[u16], n: usize, out: &mut [f32]) {
+        let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
+        let mut acc = vec![0i32; m];
+        for i in 0..n {
+            acc.fill(0);
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                for j in 0..m {
+                    acc[j] += self.qcommon[(c * k + kk) * m + j] as i32;
+                }
+            }
+            for j in 0..m {
+                out[i * m + j] += acc[j] as f32 * self.common_scale;
+            }
+        }
+    }
+
+    /// ③+④ deployed path: common-scale INT8 rows accumulated in i16
+    /// within overflow-safe codebook groups, widened to i32 between
+    /// groups (the paper's INT16-lanes-then-INT32 scheme), one f32 scale
+    /// multiply per output element at the end.
+    fn accumulate_int_blocked(&self, idx: &[u16], n: usize, out: &mut [f32]) {
+        let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
+        // |q| <= 127, i16 max 32767 -> up to 256 safe adds per i16 lane.
+        const GROUP: usize = 256;
+        let mut acc16 = vec![0i16; m];
+        let mut acc32 = vec![0i32; m];
+        for i in 0..n {
+            acc32.fill(0);
+            let row_idx = &idx[i * c_total..(i + 1) * c_total];
+            for group in row_idx.chunks(GROUP).enumerate() {
+                let (g, chunk) = group;
+                acc16.fill(0);
+                for (cc, &kk16) in chunk.iter().enumerate() {
+                    let c = g * GROUP + cc;
+                    let kk = kk16 as usize;
+                    let base = (c * k + kk) * m;
+                    let row = &self.qcommon[base..base + m];
+                    for (a, &q) in acc16.iter_mut().zip(row) {
+                        *a += q as i16;
+                    }
+                }
+                for (a32, &a16) in acc32.iter_mut().zip(acc16.iter()) {
+                    *a32 += a16 as i32;
+                }
+            }
+            let dst = &mut out[i * m..(i + 1) * m];
+            for (o, &a) in dst.iter_mut().zip(acc32.iter()) {
+                *o += a as f32 * self.common_scale;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+
+    /// Full LUT-AMM forward: `out[n, M] = approx(a @ B) + bias`.
+    /// `idx_scratch` must be n*C long (callers reuse it across layers).
+    pub fn forward_into(
+        &self,
+        a: &[f32],
+        n: usize,
+        opts: LutOpts,
+        idx_scratch: &mut Vec<u16>,
+        out: &mut [f32],
+    ) {
+        idx_scratch.clear();
+        idx_scratch.resize(n * self.cb.c, 0);
+        out[..n * self.m].fill(0.0);
+        self.encode_into(a, n, opts, idx_scratch);
+        self.lookup_accumulate(idx_scratch, n, opts, &mut out[..n * self.m]);
+    }
+
+    /// Convenience allocating forward.
+    pub fn forward(&self, a: &[f32], n: usize, opts: LutOpts) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * self.m];
+        let mut idx = Vec::new();
+        self.forward_into(a, n, opts, &mut idx, &mut out);
+        out
+    }
+
+    /// FP32-table forward (no scalar quantization — ablation baseline).
+    pub fn forward_f32_table(&self, a: &[f32], n: usize, opts: LutOpts) -> Vec<f32> {
+        let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
+        let mut idx = vec![0u16; n * c_total];
+        self.encode_into(a, n, opts, &mut idx);
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let dst = &mut out[i * m..(i + 1) * m];
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                let row = &self.table_f32[(c * k + kk) * m..(c * k + kk + 1) * m];
+                for (o, &t) in dst.iter_mut().zip(row) {
+                    *o += t;
+                }
+            }
+            if let Some(bias) = &self.bias {
+                for (o, &b) in dst.iter_mut().zip(bias) {
+                    *o += b;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Argmin over scores. `interleaved = false` is the strict sequential
+/// compare chain (each step RAW-depends on the previous — the pattern
+/// §5.1 calls out). `interleaved = true` is the intra-codebook-parallel
+/// realization: a branch-free vectorizable min-reduction followed by an
+/// equality scan for the index — two data-parallel passes instead of one
+/// dependent chain.
+#[inline]
+fn argmin(scores: &[f32], interleaved: bool) -> usize {
+    if !interleaved || scores.len() < 8 {
+        let mut best = 0usize;
+        let mut best_v = scores[0];
+        for (i, &s) in scores.iter().enumerate().skip(1) {
+            if s < best_v {
+                best_v = s;
+                best = i;
+            }
+        }
+        return best;
+    }
+    // pass 1: four independent min lanes (no cross-iteration dependency;
+    // lowers to SIMD min), then a 4-way reduce
+    let mut lanes = [f32::INFINITY; 4];
+    let mut chunks = scores.chunks_exact(4);
+    for ch in &mut chunks {
+        for (l, &s) in lanes.iter_mut().zip(ch) {
+            *l = if s < *l { s } else { *l };
+        }
+    }
+    let mut min = lanes[0].min(lanes[1]).min(lanes[2].min(lanes[3]));
+    for &s in chunks.remainder() {
+        min = min.min(s);
+    }
+    // pass 2: first index equal to the min (tie-break = lowest index,
+    // matching the sequential scan)
+    scores.iter().position(|&s| s == min).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::kmeans::learn_codebooks;
+    use crate::util::{prng::Prng, prop};
+
+    fn exact_mm(a: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            for t in 0..d {
+                let av = a[i * d + t];
+                for j in 0..m {
+                    out[i * m + j] += av * w[t * m + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn setup(seed: u64, n: usize, c: usize, v: usize, k: usize, m: usize) -> (Vec<f32>, Vec<f32>, LutLinear) {
+        let mut rng = Prng::new(seed);
+        let d = c * v;
+        let a = rng.normal_vec(n * d, 1.0);
+        let w = rng.normal_vec(d * m, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 10, seed);
+        let lut = LutLinear::new(cb, &w, m, None, 8);
+        (a, w, lut)
+    }
+
+    #[test]
+    fn all_opt_configs_agree_on_indices() {
+        let (a, _, lut) = setup(0, 40, 4, 9, 16, 8);
+        let mut base = vec![0u16; 40 * 4];
+        lut.encode_into(&a, 40, LutOpts::none(), &mut base);
+        for &cs in &[false, true] {
+            for &il in &[false, true] {
+                let opts = LutOpts {
+                    centroid_stationary: cs,
+                    interleaved_argmin: il,
+                    ..LutOpts::none()
+                };
+                let mut idx = vec![0u16; 40 * 4];
+                lut.encode_into(&a, 40, opts, &mut idx);
+                assert_eq!(idx, base, "cs={cs} il={il}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_paths_agree() {
+        let (a, _, lut) = setup(1, 32, 4, 4, 16, 24);
+        let naive = lut.forward(&a, 32, LutOpts::none());
+        for &bt in &[false, true] {
+            for &ma in &[false, true] {
+                let opts = LutOpts {
+                    blocked_table_read: bt,
+                    mixed_accum: ma,
+                    ..LutOpts::all()
+                };
+                let got = lut.forward(&a, 32, opts);
+                // integer common-scale path re-rounds: tolerance one step
+                let tol = if ma { lut.common_scale * lut.cb.c as f32 } else { 1e-4 };
+                prop::assert_close(&got, &naive, 1e-4, tol).unwrap_or_else(|e| {
+                    panic!("bt={bt} ma={ma}: {e}")
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn approximates_exact_mm() {
+        // With K=64 on clustered data, LUT-AMM must capture most signal.
+        let (a, w, lut) = setup(2, 128, 4, 4, 64, 16);
+        let approx = lut.forward(&a, 128, LutOpts::all());
+        let exact = exact_mm(&a, &w, 128, 16, 16);
+        let err: f32 = approx.iter().zip(&exact).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / exact.len() as f32;
+        let sig: f32 = exact.iter().map(|x| x * x).sum::<f32>() / exact.len() as f32;
+        assert!(err < sig * 0.5, "err={err} sig={sig}");
+    }
+
+    #[test]
+    fn exact_when_inputs_are_centroids() {
+        // Rows drawn exactly from centroids -> quantization error only.
+        let mut rng = Prng::new(3);
+        let (c, k, v, m, n) = (3, 8, 4, 6, 20);
+        let d = c * v;
+        let cb_data = rng.normal_vec(c * k * v, 1.0);
+        let cb = Codebooks::new(c, k, v, cb_data);
+        let w = rng.normal_vec(d * m, 1.0);
+        let mut a = vec![0.0f32; n * d];
+        for i in 0..n {
+            for ci in 0..c {
+                let kk = rng.below(k);
+                a[i * d + ci * v..i * d + (ci + 1) * v].copy_from_slice(cb.centroid(ci, kk));
+            }
+        }
+        let lut = LutLinear::new(cb, &w, m, None, 8);
+        let approx = lut.forward_f32_table(&a, n, LutOpts::all());
+        let exact = exact_mm(&a, &w, n, d, m);
+        prop::assert_close(&approx, &exact, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn bias_applied_once() {
+        let (a, _, mut lutless) = setup(4, 8, 2, 4, 8, 5);
+        let no_bias = lutless.forward(&a, 8, LutOpts::all());
+        lutless.bias = Some(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let with_bias = lutless.forward(&a, 8, LutOpts::all());
+        for i in 0..8 {
+            for j in 0..5 {
+                let diff = with_bias[i * 5 + j] - no_bias[i * 5 + j];
+                assert!((diff - (j + 1) as f32).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_interleaved_matches_sequential_property() {
+        prop::check(200, |g| {
+            let len = g.usize(1..40);
+            let scores = g.f32_vec(len, 1.0);
+            let a = argmin(&scores, false);
+            let b = argmin(&scores, true);
+            if scores[a] != scores[b] {
+                return Err(format!("{a} vs {b} on {scores:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn forward_property_all_paths_close() {
+        prop::check(25, |g| {
+            let n = g.usize(1..20);
+            let c = g.usize(1..5);
+            let v = *g.pick(&[2usize, 4, 9]);
+            let k = *g.pick(&[8usize, 16]);
+            let m = g.usize(1..20);
+            let d = c * v;
+            let a = g.f32_vec(n * d, 1.0);
+            let w = g.f32_vec(d * m, 1.0);
+            let cb = learn_codebooks(&a, n, d, c, k, 5, g.case_seed);
+            let lut = LutLinear::new(cb, &w, m, None, 8);
+            let naive = lut.forward(&a, n, LutOpts::none());
+            let fast = lut.forward(&a, n, LutOpts::all());
+            let tol = lut.common_scale * c as f32 + 1e-4;
+            prop::assert_close(&fast, &naive, 1e-4, tol)
+        });
+    }
+
+    #[test]
+    fn deployed_bytes_accounting() {
+        let (_, _, lut) = setup(5, 16, 4, 9, 16, 32);
+        let expect = 4 * 16 * 9 * 4 + 4 * 16 * 32 + 4 * 4;
+        assert_eq!(lut.deployed_bytes(), expect);
+    }
+}

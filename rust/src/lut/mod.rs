@@ -1,0 +1,20 @@
+//! The LUT-NN table-lookup execution engine (paper §5) — the hot path.
+//!
+//! A linear operator `a @ B + bias` is executed as:
+//!   1. **Closest centroid search** (§5.1): squared-distance computation
+//!      of every input sub-vector against its codebook + argmin.
+//!   2. **Table read and accumulation** (§5.2): gather the precomputed
+//!      `centroid . B` rows from the (INT8-quantized) lookup table and
+//!      accumulate across codebooks.
+//!
+//! The four optimizations of the paper's §6.3 breakdown are individually
+//! toggleable (`LutOpts`), with the CPU-portable realizations documented
+//! in DESIGN.md §Hardware-Adaptation:
+//!   ① centroid-stationary distance loops (codebook resident across rows)
+//!   ② intra-codebook-parallel (4-way interleaved) argmin reduction
+//!   ③ blocked sequential table reads (the role NEON/SSE shuffle served)
+//!   ④ mixed-precision integer accumulation with a common table scale
+
+pub mod engine;
+
+pub use engine::{LutLinear, LutOpts};

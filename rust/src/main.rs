@@ -1,0 +1,262 @@
+//! `lutnn` — LUT-NN serving coordinator CLI (layer 3 leader binary).
+//!
+//! Subcommands:
+//!   serve     start the TCP inference server on .lutnn bundles
+//!   infer     one-shot inference from a bundle (native or pjrt engine)
+//!   cost      print the paper's Table 2 (analytic GFLOPs / model size)
+//!   convert   LUT-convert a dense bundle in rust (k-means on the fly)
+//!   inspect   dump a bundle's graph/layers/sizes
+//!
+//! Examples:
+//!   lutnn serve --models artifacts --port 7070
+//!   lutnn infer artifacts/resnet_tiny_lut.lutnn --batch 4
+//!   lutnn cost --k 16
+//!   lutnn inspect artifacts/resnet_tiny_lut.lutnn
+
+use anyhow::{anyhow, bail, Context, Result};
+use lutnn::coordinator::server::{Server, ServerConfig};
+use lutnn::coordinator::{Backend, ModelEntry, Registry};
+use lutnn::cost::{model_cost, LutConfig};
+use lutnn::lut::LutOpts;
+use lutnn::model_fmt;
+use lutnn::nn::graph::LayerParams;
+use lutnn::nn::models;
+use lutnn::tensor::Tensor;
+use lutnn::util::benchmark::Table;
+use lutnn::util::cli::Args;
+use lutnn::util::prng::Prng;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("convert") => cmd_convert(&args),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "lutnn — DNN inference by centroid learning and table lookup (MobiCom'23)
+
+USAGE: lutnn <serve|infer|cost|convert|inspect> [flags]
+
+  serve    --models <dir|bundle,...> [--port 7070] [--threads 4]
+           [--max-batch 8] [--max-wait-ms 2]
+  infer    <bundle.lutnn> [--batch 1] [--iters 1] [--naive]
+  cost     [--k 16] [--v <override>]
+  convert  <dense.lutnn> <out.lutnn> [--centroids 16] [--bits 8]
+  inspect  <bundle.lutnn>"
+    );
+}
+
+fn load_models(spec: &str) -> Result<Vec<(String, String)>> {
+    // Returns (name, path) pairs from a dir or a comma list.
+    let p = std::path::Path::new(spec);
+    let mut out = Vec::new();
+    if p.is_dir() {
+        for entry in std::fs::read_dir(p)? {
+            let path = entry?.path();
+            if path.extension().map(|e| e == "lutnn").unwrap_or(false) {
+                let name = path.file_stem().unwrap().to_string_lossy().into_owned();
+                out.push((name, path.to_string_lossy().into_owned()));
+            }
+        }
+        out.sort();
+    } else {
+        for part in spec.split(',') {
+            let name = std::path::Path::new(part)
+                .file_stem()
+                .ok_or_else(|| anyhow!("bad model path '{part}'"))?
+                .to_string_lossy()
+                .into_owned();
+            out.push((name, part.to_string()));
+        }
+    }
+    if out.is_empty() {
+        bail!("no .lutnn bundles found in '{spec}'");
+    }
+    Ok(out)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spec = args.get_or("models", "artifacts");
+    let port = args.get_usize("port", 7070);
+    let mut registry = Registry::new();
+    for (name, path) in load_models(&spec)? {
+        let graph = model_fmt::load_bundle(&path)
+            .with_context(|| format!("loading {path}"))?;
+        let item_shape: Vec<usize> = graph.input_shape[1..].to_vec();
+        println!(
+            "registered '{name}' ({} params bytes, lut/dense = {:?})",
+            graph.param_bytes(),
+            graph.lut_fraction()
+        );
+        registry.register(ModelEntry {
+            name,
+            backend: Backend::Native { graph, opts: LutOpts::deployed() },
+            item_shape,
+        });
+    }
+    if let Ok(first) = registry.resolve(&registry.names()[0]) {
+        let first_name = first.name.clone();
+        registry.alias("default", &first_name);
+    }
+    let cfg = ServerConfig {
+        addr: format!("127.0.0.1:{port}"),
+        handler_threads: args.get_usize("threads", 4),
+        batcher: lutnn::coordinator::batcher::BatcherConfig {
+            max_batch: args.get_usize("max-batch", 8),
+            max_wait: std::time::Duration::from_millis(
+                args.get_usize("max-wait-ms", 2) as u64,
+            ),
+            queue_cap: args.get_usize("queue-cap", 256),
+        },
+    };
+    let server = Server::start(registry, cfg)?;
+    println!("lutnn serving on {} — send {{\"cmd\":\"shutdown\"}} to stop", server.addr);
+    // Block until the acceptor exits (shutdown command or signal).
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if server.stopped() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: lutnn infer <bundle.lutnn>"))?;
+    let graph = model_fmt::load_bundle(path)?;
+    let batch = args.get_usize("batch", 1);
+    let iters = args.get_usize("iters", 1);
+    let opts = if args.has("naive") { LutOpts::none() } else { LutOpts::deployed() };
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&graph.input_shape[1..]);
+    let mut rng = Prng::new(0);
+    let n: usize = shape.iter().product();
+    let x = if graph.bert.is_some() {
+        let vocab = graph.bert.as_ref().unwrap().vocab;
+        Tensor::new(shape.clone(), (0..n).map(|_| rng.below(vocab) as f32).collect())
+    } else {
+        Tensor::new(shape.clone(), rng.normal_vec(n, 1.0))
+    };
+    let t0 = std::time::Instant::now();
+    let mut out = None;
+    for _ in 0..iters {
+        out = Some(graph.run(x.clone(), opts));
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let out = out.unwrap();
+    println!(
+        "model={} batch={batch} out_shape={:?} latency={:.3}ms",
+        graph.name,
+        out.shape,
+        dt * 1e3
+    );
+    println!("logits[0] = {:?}", &out.data[..out.cols().min(16)]);
+    println!("argmax = {:?}", out.argmax_rows());
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 16);
+    let v_override = args.get("v").and_then(|v| v.parse().ok());
+    let cfg = LutConfig { k, v_override };
+    let mut t = Table::new(&[
+        "Model",
+        "orig GFLOPs",
+        "LUT GFLOPs",
+        "reduction",
+        "orig MB",
+        "LUT MB",
+        "size red.",
+    ]);
+    for m in models::all_paper_models() {
+        let c = model_cost(&m, cfg);
+        t.row(&[
+            c.name.clone(),
+            format!("{:.3}", c.dense_gflops),
+            format!("{:.3}", c.lut_gflops),
+            format!("{:.1}x", c.dense_gflops / c.lut_gflops),
+            format!("{:.2}", c.dense_mb),
+            format!("{:.2}", c.lut_mb),
+            format!("{:.1}x", c.dense_mb / c.lut_mb),
+        ]);
+    }
+    println!("LUT-NN analytic cost model (paper Tables 1-2), K={k}");
+    t.print();
+    Ok(())
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let src = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: lutnn convert <in> <out>"))?;
+    let dst = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: lutnn convert <in> <out>"))?;
+    let graph = model_fmt::load_bundle(src)?;
+    let centroids = args.get_usize("centroids", 16);
+    let bits = args.get_usize("bits", 8) as u8;
+    // Synthetic calibration batch (rust-side conversion is meant for
+    // benching; accuracy-preserving conversion happens in python training).
+    let mut shape = vec![32];
+    shape.extend_from_slice(&graph.input_shape[1..]);
+    let n: usize = shape.iter().product();
+    let mut rng = Prng::new(0);
+    let sample = Tensor::new(shape, rng.normal_vec(n, 1.0));
+    let lut = models::lutify_graph(&graph, &sample, centroids, bits, 0);
+    model_fmt::save_bundle(&lut, dst)?;
+    println!(
+        "converted {} -> {} ({} -> {} param bytes)",
+        src,
+        dst,
+        graph.param_bytes(),
+        lut.param_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: lutnn inspect <bundle.lutnn>"))?;
+    let graph = model_fmt::load_bundle(path)?;
+    println!("model: {}", graph.name);
+    println!("input_shape: {:?}", graph.input_shape);
+    println!("ops: {}", graph.ops.len());
+    if let Some(b) = &graph.bert {
+        println!("bert: {b:?}");
+    }
+    let mut t = Table::new(&["layer", "kind", "bytes"]);
+    for (name, l) in &graph.layers {
+        let kind = match l {
+            LayerParams::Dense { .. } => "dense",
+            LayerParams::Lut(_) => "lut",
+            LayerParams::Bn { .. } => "bn",
+            LayerParams::Ln { .. } => "ln",
+            LayerParams::Embedding { .. } => "embedding",
+        };
+        t.row(&[name.clone(), kind.into(), format!("{}", l.param_bytes())]);
+    }
+    t.print();
+    println!("total param bytes: {}", graph.param_bytes());
+    Ok(())
+}

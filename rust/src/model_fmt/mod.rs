@@ -1,0 +1,614 @@
+//! `.lutnn` model bundle reader/writer (format v1, see DESIGN.md).
+//!
+//! Layout: magic `LUTN` | u32 version | u32 header-JSON length | header
+//! JSON | 64-byte-aligned blobs. The header carries the execution graph
+//! and per-layer blob descriptors {offset, shape, dtype}. Written by
+//! `python/compile/export.py` after training; the writer here exists for
+//! round-trip tests and for saving rust-side converted models.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::lut::LutLinear;
+use crate::nn::bert::BertConfig;
+use crate::nn::graph::{Graph, LayerParams, Op};
+use crate::pq::Codebooks;
+use crate::tensor::QTable;
+use crate::util::json::{self, Json};
+
+pub const MAGIC: &[u8; 4] = b"LUTN";
+pub const VERSION: u32 = 1;
+pub const ALIGN: usize = 64;
+
+// ----------------------------------------------------------------- read
+
+fn read_u32(data: &[u8], off: usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(
+        data.get(off..off + 4)
+            .ok_or_else(|| anyhow!("truncated bundle"))?
+            .try_into()?,
+    ))
+}
+
+struct BlobRef {
+    offset: usize,
+    shape: Vec<usize>,
+    dtype: String,
+}
+
+fn blob_ref(entry: &Json, key: &str) -> Result<BlobRef> {
+    let b = entry
+        .get(key)
+        .ok_or_else(|| anyhow!("layer missing blob '{key}'"))?;
+    Ok(BlobRef {
+        offset: b
+            .get("offset")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("blob '{key}' missing offset"))?,
+        shape: b
+            .get("shape")
+            .and_then(|v| v.as_usize_vec())
+            .ok_or_else(|| anyhow!("blob '{key}' missing shape"))?,
+        dtype: b
+            .get("dtype")
+            .and_then(|v| v.as_str())
+            .unwrap_or("f32")
+            .to_string(),
+    })
+}
+
+fn read_f32_blob(data: &[u8], b: &BlobRef) -> Result<Vec<f32>> {
+    if b.dtype != "f32" {
+        bail!("expected f32 blob, got {}", b.dtype);
+    }
+    let n: usize = b.shape.iter().product();
+    let bytes = data
+        .get(b.offset..b.offset + 4 * n)
+        .ok_or_else(|| anyhow!("blob out of bounds"))?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_i8_blob(data: &[u8], b: &BlobRef) -> Result<Vec<i8>> {
+    if b.dtype != "i8" {
+        bail!("expected i8 blob, got {}", b.dtype);
+    }
+    let n: usize = b.shape.iter().product();
+    let bytes = data
+        .get(b.offset..b.offset + n)
+        .ok_or_else(|| anyhow!("blob out of bounds"))?;
+    Ok(bytes.iter().map(|&x| x as i8).collect())
+}
+
+fn parse_op(j: &Json) -> Result<Op> {
+    let kind = j
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("graph op missing 'op'"))?;
+    let layer = || -> Result<String> {
+        Ok(j.get("layer")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("op '{kind}' missing layer"))?
+            .to_string())
+    };
+    Ok(match kind {
+        "conv" => Op::Conv {
+            layer: layer()?,
+            k: j.get("k").and_then(|v| v.as_usize()).unwrap_or(3),
+            stride: j.get("stride").and_then(|v| v.as_usize()).unwrap_or(1),
+        },
+        "bn" => Op::Bn { layer: layer()? },
+        "relu" => Op::Relu,
+        "maxpool" => Op::MaxPool {
+            k: j.get("k").and_then(|v| v.as_usize()).unwrap_or(2),
+            stride: j.get("stride").and_then(|v| v.as_usize()).unwrap_or(2),
+        },
+        "gap" => Op::Gap,
+        "linear" => Op::Linear { layer: layer()? },
+        "save" => Op::Save { slot: j.get("slot").and_then(|v| v.as_usize()).unwrap_or(0) },
+        "restore" => Op::Restore { slot: j.get("slot").and_then(|v| v.as_usize()).unwrap_or(0) },
+        "add" => Op::Add { slot: j.get("slot").and_then(|v| v.as_usize()).unwrap_or(0) },
+        "bert" => Op::Bert,
+        other => bail!("unknown graph op '{other}'"),
+    })
+}
+
+fn parse_layer(data: &[u8], entry: &Json) -> Result<LayerParams> {
+    let kind = entry
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("layer missing kind"))?;
+    Ok(match kind {
+        "dense" => {
+            let w_ref = blob_ref(entry, "w")?;
+            if w_ref.shape.len() != 2 {
+                bail!("dense w must be 2-D");
+            }
+            let m = w_ref.shape[1];
+            let w = read_f32_blob(data, &w_ref)?;
+            let b = match entry.get("b") {
+                Some(_) => Some(read_f32_blob(data, &blob_ref(entry, "b")?)?),
+                None => None,
+            };
+            LayerParams::Dense { w, b, m }
+        }
+        "lut" => {
+            let c_ref = blob_ref(entry, "centroids")?;
+            let [c, k, v] = c_ref.shape[..] else {
+                bail!("centroids must be [C,K,V]")
+            };
+            let centroids = read_f32_blob(data, &c_ref)?;
+            let t_ref = blob_ref(entry, "table_q")?;
+            let m = *t_ref
+                .shape
+                .get(2)
+                .ok_or_else(|| anyhow!("table_q must be [C,K,M]"))?;
+            let table = read_i8_blob(data, &t_ref)?;
+            let scale = read_f32_blob(data, &blob_ref(entry, "scale")?)?;
+            if scale.len() != c {
+                bail!("scale len {} != C {}", scale.len(), c);
+            }
+            let bias = match entry.get("b") {
+                Some(_) => Some(read_f32_blob(data, &blob_ref(entry, "b")?)?),
+                None => None,
+            };
+            let cb = Codebooks::new(c, k, v, centroids);
+            let qt = QTable { data: table, c, k, m, scale };
+            LayerParams::Lut(LutLinear::from_parts(cb, qt, bias))
+        }
+        "bn" => LayerParams::Bn {
+            gamma: read_f32_blob(data, &blob_ref(entry, "gamma")?)?,
+            beta: read_f32_blob(data, &blob_ref(entry, "beta")?)?,
+            mean: read_f32_blob(data, &blob_ref(entry, "mean")?)?,
+            var: read_f32_blob(data, &blob_ref(entry, "var")?)?,
+        },
+        "ln" => LayerParams::Ln {
+            gamma: read_f32_blob(data, &blob_ref(entry, "gamma")?)?,
+            beta: read_f32_blob(data, &blob_ref(entry, "beta")?)?,
+        },
+        "embedding" => {
+            let tok_ref = blob_ref(entry, "tok")?;
+            let d = tok_ref.shape[1];
+            LayerParams::Embedding {
+                tok: read_f32_blob(data, &tok_ref)?,
+                pos: read_f32_blob(data, &blob_ref(entry, "pos")?)?,
+                d,
+            }
+        }
+        other => bail!("unknown layer kind '{other}'"),
+    })
+}
+
+/// Parse a bundle from raw bytes.
+pub fn parse_bundle(data: &[u8]) -> Result<Graph> {
+    if data.len() < 12 || &data[..4] != MAGIC {
+        bail!("not a .lutnn bundle (bad magic)");
+    }
+    let version = read_u32(data, 4)?;
+    if version != VERSION {
+        bail!("unsupported bundle version {version}");
+    }
+    let hlen = read_u32(data, 8)? as usize;
+    let header_bytes = data
+        .get(12..12 + hlen)
+        .ok_or_else(|| anyhow!("truncated header"))?;
+    let header = json::parse(std::str::from_utf8(header_bytes)?)
+        .map_err(|e| anyhow!("bad header json: {e}"))?;
+
+    let name = header
+        .get("model")
+        .and_then(|v| v.as_str())
+        .unwrap_or("model")
+        .to_string();
+    let input_shape = header
+        .get("input_shape")
+        .and_then(|v| v.as_usize_vec())
+        .ok_or_else(|| anyhow!("header missing input_shape"))?;
+    let ops = header
+        .get("graph")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("header missing graph"))?
+        .iter()
+        .map(parse_op)
+        .collect::<Result<Vec<_>>>()?;
+    let mut layers = BTreeMap::new();
+    for (lname, entry) in header
+        .get("layers")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow!("header missing layers"))?
+    {
+        layers.insert(
+            lname.clone(),
+            parse_layer(data, entry).with_context(|| format!("layer '{lname}'"))?,
+        );
+    }
+    let bert = if ops.contains(&Op::Bert) {
+        let meta = header.get("meta").ok_or_else(|| anyhow!("bert bundle missing meta"))?;
+        let g = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("bert meta missing {k}"))
+        };
+        Some(BertConfig {
+            vocab: g("vocab")?,
+            seq_len: g("seq_len")?,
+            d: g("d")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+            n_layers: g("n_layers")?,
+            n_out: g("n_out")?,
+        })
+    } else {
+        None
+    };
+    Ok(Graph { name, input_shape, ops, layers, bert })
+}
+
+/// Load a bundle from disk.
+pub fn load_bundle(path: &str) -> Result<Graph> {
+    let data = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    parse_bundle(&data).with_context(|| format!("parsing {path}"))
+}
+
+// ---------------------------------------------------------------- write
+
+struct BlobOut {
+    bytes: Vec<u8>,
+    shape: Vec<usize>,
+    dtype: &'static str,
+}
+
+/// Writer mirror of `python/compile/export.py::BundleWriter`.
+pub struct BundleWriter {
+    name: String,
+    input_shape: Vec<usize>,
+    graph: Vec<Json>,
+    layers: BTreeMap<String, Vec<(String, usize)>>, // name -> [(key, blob idx)]
+    kinds: BTreeMap<String, String>,
+    meta: BTreeMap<String, Json>,
+    extra: BTreeMap<String, BTreeMap<String, Json>>,
+    blobs: Vec<BlobOut>,
+}
+
+impl BundleWriter {
+    pub fn new(name: &str, input_shape: &[usize], graph_ops: Vec<Json>) -> BundleWriter {
+        BundleWriter {
+            name: name.into(),
+            input_shape: input_shape.to_vec(),
+            graph: graph_ops,
+            layers: BTreeMap::new(),
+            kinds: BTreeMap::new(),
+            meta: BTreeMap::new(),
+            extra: BTreeMap::new(),
+            blobs: Vec::new(),
+        }
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    fn push_f32(&mut self, data: &[f32], shape: Vec<usize>) -> usize {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.blobs.push(BlobOut { bytes, shape, dtype: "f32" });
+        self.blobs.len() - 1
+    }
+
+    fn push_i8(&mut self, data: &[i8], shape: Vec<usize>) -> usize {
+        self.blobs.push(BlobOut {
+            bytes: data.iter().map(|&v| v as u8).collect(),
+            shape,
+            dtype: "i8",
+        });
+        self.blobs.len() - 1
+    }
+
+    pub fn add_layer(&mut self, name: &str, params: &LayerParams) {
+        let mut fields = Vec::new();
+        let kind = match params {
+            LayerParams::Dense { w, b, m } => {
+                let d = w.len() / m;
+                fields.push(("w".to_string(), self.push_f32(w, vec![d, *m])));
+                if let Some(b) = b {
+                    fields.push(("b".to_string(), self.push_f32(b, vec![b.len()])));
+                }
+                "dense"
+            }
+            LayerParams::Lut(l) => {
+                let (c, k, v, m) = (l.cb.c, l.cb.k, l.cb.v, l.m);
+                fields.push((
+                    "centroids".to_string(),
+                    self.push_f32(&l.cb.data.clone(), vec![c, k, v]),
+                ));
+                fields.push((
+                    "table_q".to_string(),
+                    self.push_i8(&l.qtable.data.clone(), vec![c, k, m]),
+                ));
+                fields.push((
+                    "scale".to_string(),
+                    self.push_f32(&l.qtable.scale.clone(), vec![c]),
+                ));
+                if let Some(b) = &l.bias {
+                    fields.push(("b".to_string(), self.push_f32(&b.clone(), vec![b.len()])));
+                }
+                self.extra.entry(name.to_string()).or_default().insert(
+                    "table_bits".into(),
+                    Json::num(8.0),
+                );
+                "lut"
+            }
+            LayerParams::Bn { gamma, beta, mean, var } => {
+                fields.push(("gamma".to_string(), self.push_f32(gamma, vec![gamma.len()])));
+                fields.push(("beta".to_string(), self.push_f32(beta, vec![beta.len()])));
+                fields.push(("mean".to_string(), self.push_f32(mean, vec![mean.len()])));
+                fields.push(("var".to_string(), self.push_f32(var, vec![var.len()])));
+                "bn"
+            }
+            LayerParams::Ln { gamma, beta } => {
+                fields.push(("gamma".to_string(), self.push_f32(gamma, vec![gamma.len()])));
+                fields.push(("beta".to_string(), self.push_f32(beta, vec![beta.len()])));
+                "ln"
+            }
+            LayerParams::Embedding { tok, pos, d } => {
+                fields.push(("tok".to_string(), self.push_f32(tok, vec![tok.len() / d, *d])));
+                fields.push(("pos".to_string(), self.push_f32(pos, vec![pos.len() / d, *d])));
+                "embedding"
+            }
+        };
+        self.kinds.insert(name.to_string(), kind.to_string());
+        self.layers.insert(name.to_string(), fields);
+    }
+
+    pub fn write(&self, path: &str) -> Result<()> {
+        // Fix-point layout like the python writer: header length affects
+        // offsets which affect header length.
+        let mut header_len = 0usize;
+        let mut header_json = String::new();
+        for _ in 0..8 {
+            let offsets = self.layout(header_len);
+            header_json = self.render_header(&offsets);
+            if header_json.len() == header_len {
+                break;
+            }
+            header_len = header_json.len();
+        }
+        let offsets = self.layout(header_json.len());
+        header_json = self.render_header(&offsets);
+        anyhow::ensure!(header_json.len() == header_len, "header fixpoint failed");
+
+        let total = offsets
+            .last()
+            .map(|&o| o + self.blobs.last().unwrap().bytes.len())
+            .unwrap_or(12 + header_json.len());
+        let mut out = vec![0u8; total];
+        out[..4].copy_from_slice(MAGIC);
+        out[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        out[8..12].copy_from_slice(&(header_json.len() as u32).to_le_bytes());
+        out[12..12 + header_json.len()].copy_from_slice(header_json.as_bytes());
+        for (blob, &off) in self.blobs.iter().zip(&offsets) {
+            out[off..off + blob.bytes.len()].copy_from_slice(&blob.bytes);
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path}"))
+    }
+
+    fn layout(&self, header_len: usize) -> Vec<usize> {
+        let mut pos = 12 + header_len;
+        let mut offsets = Vec::with_capacity(self.blobs.len());
+        for blob in &self.blobs {
+            pos = pos.div_ceil(ALIGN) * ALIGN;
+            offsets.push(pos);
+            pos += blob.bytes.len();
+        }
+        offsets
+    }
+
+    fn render_header(&self, offsets: &[usize]) -> String {
+        let mut layers = BTreeMap::new();
+        for (lname, fields) in &self.layers {
+            let mut entry = BTreeMap::new();
+            entry.insert("kind".to_string(), Json::str(self.kinds[lname].clone()));
+            if let Some(extra) = self.extra.get(lname) {
+                for (k, v) in extra {
+                    entry.insert(k.clone(), v.clone());
+                }
+            }
+            for (key, idx) in fields {
+                let blob = &self.blobs[*idx];
+                entry.insert(
+                    key.clone(),
+                    Json::obj(vec![
+                        ("offset", Json::num(offsets[*idx] as f64)),
+                        (
+                            "shape",
+                            Json::Arr(blob.shape.iter().map(|&s| Json::num(s as f64)).collect()),
+                        ),
+                        ("dtype", Json::str(blob.dtype)),
+                        ("index", Json::num(*idx as f64)),
+                    ]),
+                );
+            }
+            layers.insert(lname.clone(), Json::Obj(entry));
+        }
+        let header = Json::obj(vec![
+            ("model", Json::str(self.name.clone())),
+            (
+                "input_shape",
+                Json::Arr(self.input_shape.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            ("graph", Json::Arr(self.graph.clone())),
+            ("layers", Json::Obj(layers)),
+            ("meta", Json::Obj(self.meta.clone())),
+        ]);
+        json::to_string(&header)
+    }
+}
+
+/// Serialize a Graph back to a bundle (round-trip tests / rust-converted
+/// model export).
+pub fn save_bundle(g: &Graph, path: &str) -> Result<()> {
+    let graph_ops: Vec<Json> = g
+        .ops
+        .iter()
+        .map(|op| match op {
+            Op::Conv { layer, k, stride } => Json::obj(vec![
+                ("op", Json::str("conv")),
+                ("layer", Json::str(layer.clone())),
+                ("k", Json::num(*k as f64)),
+                ("stride", Json::num(*stride as f64)),
+            ]),
+            Op::Bn { layer } => Json::obj(vec![
+                ("op", Json::str("bn")),
+                ("layer", Json::str(layer.clone())),
+            ]),
+            Op::Relu => Json::obj(vec![("op", Json::str("relu"))]),
+            Op::MaxPool { k, stride } => Json::obj(vec![
+                ("op", Json::str("maxpool")),
+                ("k", Json::num(*k as f64)),
+                ("stride", Json::num(*stride as f64)),
+            ]),
+            Op::Gap => Json::obj(vec![("op", Json::str("gap"))]),
+            Op::Linear { layer } => Json::obj(vec![
+                ("op", Json::str("linear")),
+                ("layer", Json::str(layer.clone())),
+            ]),
+            Op::Save { slot } => Json::obj(vec![
+                ("op", Json::str("save")),
+                ("slot", Json::num(*slot as f64)),
+            ]),
+            Op::Restore { slot } => Json::obj(vec![
+                ("op", Json::str("restore")),
+                ("slot", Json::num(*slot as f64)),
+            ]),
+            Op::Add { slot } => Json::obj(vec![
+                ("op", Json::str("add")),
+                ("slot", Json::num(*slot as f64)),
+            ]),
+            Op::Bert => Json::obj(vec![("op", Json::str("bert"))]),
+        })
+        .collect();
+    let mut w = BundleWriter::new(&g.name, &g.input_shape, graph_ops);
+    if let Some(cfg) = &g.bert {
+        for (k, v) in [
+            ("vocab", cfg.vocab),
+            ("seq_len", cfg.seq_len),
+            ("d", cfg.d),
+            ("n_heads", cfg.n_heads),
+            ("d_ff", cfg.d_ff),
+            ("n_layers", cfg.n_layers),
+            ("n_out", cfg.n_out),
+        ] {
+            w.set_meta(k, Json::num(v as f64));
+        }
+    }
+    for (name, params) in &g.layers {
+        w.add_layer(name, params);
+    }
+    w.write(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::LutOpts;
+    use crate::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("lutnn_fmt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn roundtrip_dense_cnn() {
+        let g = build_cnn_graph(
+            "rt",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            0,
+        );
+        let path = tmp("dense.lutnn");
+        save_bundle(&g, &path).unwrap();
+        let g2 = load_bundle(&path).unwrap();
+        assert_eq!(g2.name, "rt");
+        assert_eq!(g2.ops, g.ops);
+        let mut rng = Prng::new(1);
+        let x = Tensor::new(vec![2, 8, 8, 3], rng.normal_vec(2 * 8 * 8 * 3, 1.0));
+        let y1 = g.run(x.clone(), LutOpts::all());
+        let y2 = g2.run(x, LutOpts::all());
+        assert!(y1.max_abs_diff(&y2) < 1e-6);
+    }
+
+    #[test]
+    fn roundtrip_lut_cnn() {
+        let g = build_cnn_graph(
+            "rt2",
+            [8, 8, 3],
+            &[
+                ConvSpec { cout: 4, k: 3, stride: 1 },
+                ConvSpec { cout: 8, k: 3, stride: 2 },
+            ],
+            5,
+            0,
+        );
+        let mut rng = Prng::new(2);
+        let x = Tensor::new(vec![4, 8, 8, 3], rng.normal_vec(4 * 8 * 8 * 3, 1.0));
+        let gl = lutify_graph(&g, &x, 16, 8, 0);
+        let path = tmp("lut.lutnn");
+        save_bundle(&gl, &path).unwrap();
+        let g2 = load_bundle(&path).unwrap();
+        let y1 = gl.run(x.clone(), LutOpts::all());
+        let y2 = g2.run(x, LutOpts::all());
+        assert!(y1.max_abs_diff(&y2) < 1e-5);
+        // quantized tables must round-trip exactly
+        match (&gl.layers["c1"], &g2.layers["c1"]) {
+            (LayerParams::Lut(a), LayerParams::Lut(b)) => {
+                assert_eq!(a.qtable.data, b.qtable.data);
+                assert_eq!(a.qtable.scale, b.qtable.scale);
+                assert_eq!(a.cb.data, b.cb.data);
+            }
+            _ => panic!("c1 should be lut on both sides"),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_bundle(b"NOPE").is_err());
+        assert!(parse_bundle(b"LUTN\x02\x00\x00\x00\x00\x00\x00\x00").is_err());
+        let mut ok_magic = Vec::from(*MAGIC);
+        ok_magic.extend_from_slice(&1u32.to_le_bytes());
+        ok_magic.extend_from_slice(&9999u32.to_le_bytes()); // header past EOF
+        assert!(parse_bundle(&ok_magic).is_err());
+    }
+
+    #[test]
+    fn blob_alignment() {
+        let g = build_cnn_graph(
+            "al",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            0,
+        );
+        let path = tmp("align.lutnn");
+        save_bundle(&g, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        let header = json::parse(std::str::from_utf8(&data[12..12 + hlen]).unwrap()).unwrap();
+        for (_, entry) in header.get("layers").unwrap().as_obj().unwrap() {
+            for (_, v) in entry.as_obj().unwrap() {
+                if let Some(off) = v.get("offset").and_then(|o| o.as_usize()) {
+                    assert_eq!(off % ALIGN, 0);
+                }
+            }
+        }
+    }
+}

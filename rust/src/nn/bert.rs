@@ -1,0 +1,245 @@
+//! BERT-style encoder forward (matches `python/compile/models.MiniBert`):
+//! token+position embedding, post-LN transformer blocks (MHA + FFN),
+//! mean-pool, head. The q/k/v/o and FFN linears dispatch dense-or-LUT
+//! exactly like the CNN path; attention itself stays exact (paper §8:
+//! scaled dot-product attention has no weights to precompute).
+
+use crate::lut::LutOpts;
+use crate::nn::graph::{Graph, LayerParams};
+use crate::nn::ops;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct BertConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub n_out: usize,
+}
+
+fn apply_linear(g: &Graph, name: &str, x: &Tensor, opts: LutOpts) -> Tensor {
+    match g.layers.get(name).unwrap_or_else(|| panic!("missing layer {name}")) {
+        LayerParams::Dense { w, b, m } => ops::linear(x, w, b.as_deref(), *m),
+        LayerParams::Lut(lut) => {
+            let rows = x.rows();
+            let out = lut.forward(&x.data, rows, opts);
+            Tensor::new(vec![rows, lut.m], out)
+        }
+        _ => panic!("layer {name} is not linear"),
+    }
+}
+
+fn apply_ln(g: &Graph, name: &str, x: &mut Tensor) {
+    match g.layers.get(name).unwrap_or_else(|| panic!("missing layer {name}")) {
+        LayerParams::Ln { gamma, beta } => ops::layer_norm(x, gamma, beta),
+        _ => panic!("layer {name} is not layernorm"),
+    }
+}
+
+/// Forward pass. `tokens` is a [N, T] tensor whose f32 values are token
+/// ids (the wire/bundle format carries them as f32 for uniformity).
+pub fn run_bert(g: &Graph, tokens: Tensor, opts: LutOpts) -> Tensor {
+    let cfg = g.bert.as_ref().expect("not a bert graph");
+    let (n, t) = (tokens.shape[0], tokens.shape[1]);
+    assert!(t <= cfg.seq_len, "sequence longer than model ({t} > {})", cfg.seq_len);
+    let d = cfg.d;
+    let (tok_emb, pos_emb) = match g.layers.get("emb").expect("missing emb") {
+        LayerParams::Embedding { tok, pos, .. } => (tok, pos),
+        _ => panic!("emb is not an embedding"),
+    };
+
+    // h[n, t, d] flattened to [n*t, d]
+    let mut h = vec![0.0f32; n * t * d];
+    for i in 0..n {
+        for j in 0..t {
+            let id = tokens.data[i * t + j] as usize;
+            assert!(id < cfg.vocab, "token id {id} out of vocab");
+            let dst = &mut h[(i * t + j) * d..(i * t + j + 1) * d];
+            for (x, (&e, &p)) in dst
+                .iter_mut()
+                .zip(tok_emb[id * d..(id + 1) * d].iter().zip(&pos_emb[j * d..(j + 1) * d]))
+            {
+                *x = e + p;
+            }
+        }
+    }
+    let mut h = Tensor::new(vec![n * t, d], h);
+    let nh = cfg.n_heads;
+    let dh = d / nh;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    for l in 0..cfg.n_layers {
+        let q = apply_linear(g, &format!("l{l}q"), &h, opts);
+        let k = apply_linear(g, &format!("l{l}k"), &h, opts);
+        let v = apply_linear(g, &format!("l{l}v"), &h, opts);
+        // attention per (batch, head)
+        let mut ctx = vec![0.0f32; n * t * d];
+        let mut att = vec![0.0f32; t * t];
+        for b in 0..n {
+            for head in 0..nh {
+                // scores[t, t]
+                for i in 0..t {
+                    let qrow = &q.data[(b * t + i) * d + head * dh..(b * t + i) * d + (head + 1) * dh];
+                    for j in 0..t {
+                        let krow = &k.data[(b * t + j) * d + head * dh..(b * t + j) * d + (head + 1) * dh];
+                        att[i * t + j] = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                }
+                let mut att_t = Tensor::new(vec![t, t], std::mem::take(&mut att));
+                ops::softmax_rows(&mut att_t);
+                att = att_t.data;
+                for i in 0..t {
+                    let dst = &mut ctx[(b * t + i) * d + head * dh..(b * t + i) * d + (head + 1) * dh];
+                    for j in 0..t {
+                        let w = att[i * t + j];
+                        let vrow = &v.data[(b * t + j) * d + head * dh..(b * t + j) * d + (head + 1) * dh];
+                        for (o, &vv) in dst.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+            }
+        }
+        let ctx = Tensor::new(vec![n * t, d], ctx);
+        let o = apply_linear(g, &format!("l{l}o"), &ctx, opts);
+        ops::add_inplace(&mut h, &o);
+        apply_ln(g, &format!("l{l}ln1"), &mut h);
+
+        let mut f1 = apply_linear(g, &format!("l{l}f1"), &h, opts);
+        ops::gelu(&mut f1);
+        let f2 = apply_linear(g, &format!("l{l}f2"), &f1, opts);
+        ops::add_inplace(&mut h, &f2);
+        apply_ln(g, &format!("l{l}ln2"), &mut h);
+    }
+
+    // mean pool over sequence -> [n, d]
+    let mut pooled = vec![0.0f32; n * d];
+    for b in 0..n {
+        for j in 0..t {
+            for c in 0..d {
+                pooled[b * d + c] += h.data[(b * t + j) * d + c];
+            }
+        }
+        for c in 0..d {
+            pooled[b * d + c] /= t as f32;
+        }
+    }
+    let pooled = Tensor::new(vec![n, d], pooled);
+    apply_linear(g, "head", &pooled, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use std::collections::BTreeMap;
+
+    pub fn synthetic_bert(cfg: &BertConfig, seed: u64) -> Graph {
+        let mut rng = Prng::new(seed);
+        let mut layers = BTreeMap::new();
+        layers.insert(
+            "emb".into(),
+            LayerParams::Embedding {
+                tok: rng.normal_vec(cfg.vocab * cfg.d, 0.1),
+                pos: rng.normal_vec(cfg.seq_len * cfg.d, 0.1),
+                d: cfg.d,
+            },
+        );
+        for l in 0..cfg.n_layers {
+            for (nm, di, dm) in [
+                ("q", cfg.d, cfg.d),
+                ("k", cfg.d, cfg.d),
+                ("v", cfg.d, cfg.d),
+                ("o", cfg.d, cfg.d),
+                ("f1", cfg.d, cfg.d_ff),
+                ("f2", cfg.d_ff, cfg.d),
+            ] {
+                layers.insert(
+                    format!("l{l}{nm}"),
+                    LayerParams::Dense {
+                        w: rng.normal_vec(di * dm, 0.15),
+                        b: Some(vec![0.0; dm]),
+                        m: dm,
+                    },
+                );
+            }
+            for nm in ["ln1", "ln2"] {
+                layers.insert(
+                    format!("l{l}{nm}"),
+                    LayerParams::Ln { gamma: vec![1.0; cfg.d], beta: vec![0.0; cfg.d] },
+                );
+            }
+        }
+        layers.insert(
+            "head".into(),
+            LayerParams::Dense {
+                w: rng.normal_vec(cfg.d * cfg.n_out, 0.15),
+                b: Some(vec![0.0; cfg.n_out]),
+                m: cfg.n_out,
+            },
+        );
+        Graph {
+            name: "bert-test".into(),
+            input_shape: vec![1, cfg.seq_len],
+            ops: vec![crate::nn::graph::Op::Bert],
+            layers,
+            bert: Some(cfg.clone()),
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let cfg = BertConfig {
+            vocab: 32,
+            seq_len: 8,
+            d: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_layers: 2,
+            n_out: 4,
+        };
+        let g = synthetic_bert(&cfg, 0);
+        let mut rng = Prng::new(1);
+        let tokens: Vec<f32> = (0..3 * 8).map(|_| rng.below(32) as f32).collect();
+        let y = g.run(Tensor::new(vec![3, 8], tokens), LutOpts::all());
+        assert_eq!(y.shape, vec![3, 4]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn attention_is_permutation_sensitive() {
+        // Positional embeddings must make token order matter.
+        let cfg = BertConfig {
+            vocab: 16,
+            seq_len: 4,
+            d: 8,
+            n_heads: 2,
+            d_ff: 16,
+            n_layers: 1,
+            n_out: 2,
+        };
+        let g = synthetic_bert(&cfg, 2);
+        let a = g.run(Tensor::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]), LutOpts::all());
+        let b = g.run(Tensor::new(vec![1, 4], vec![4.0, 3.0, 2.0, 1.0]), LutOpts::all());
+        assert!(a.max_abs_diff(&b) > 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn oov_token_panics() {
+        let cfg = BertConfig {
+            vocab: 4,
+            seq_len: 2,
+            d: 8,
+            n_heads: 1,
+            d_ff: 8,
+            n_layers: 1,
+            n_out: 2,
+        };
+        let g = synthetic_bert(&cfg, 3);
+        g.run(Tensor::new(vec![1, 2], vec![99.0, 0.0]), LutOpts::all());
+    }
+}

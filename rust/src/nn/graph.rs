@@ -1,0 +1,286 @@
+//! Graph executor: runs a `.lutnn` bundle's instruction list with dense
+//! and/or LUT layers — the same graph measures both sides of Figs. 7–10.
+//!
+//! The instruction set mirrors `python/compile/export.py`:
+//! conv / bn / relu / maxpool / gap / linear / save / restore / add / bert.
+//! `save`/`restore`/`add` move activations through numbered slots to
+//! express residual blocks without a full dataflow graph.
+
+use std::collections::BTreeMap;
+
+use crate::lut::{LutLinear, LutOpts};
+use crate::nn::ops;
+use crate::tensor::im2col::im2col;
+use crate::tensor::Tensor;
+
+/// Parameters of one named layer.
+pub enum LayerParams {
+    Dense { w: Vec<f32>, b: Option<Vec<f32>>, m: usize },
+    Lut(LutLinear),
+    Bn { gamma: Vec<f32>, beta: Vec<f32>, mean: Vec<f32>, var: Vec<f32> },
+    Ln { gamma: Vec<f32>, beta: Vec<f32> },
+    Embedding { tok: Vec<f32>, pos: Vec<f32>, d: usize },
+}
+
+impl LayerParams {
+    /// Deployed parameter bytes (Fig. 10 model-memory accounting).
+    pub fn param_bytes(&self) -> usize {
+        match self {
+            LayerParams::Dense { w, b, .. } => {
+                4 * (w.len() + b.as_ref().map(|x| x.len()).unwrap_or(0))
+            }
+            LayerParams::Lut(l) => l.deployed_bytes(),
+            LayerParams::Bn { gamma, .. } => 4 * gamma.len() * 4,
+            LayerParams::Ln { gamma, .. } => 4 * gamma.len() * 2,
+            LayerParams::Embedding { tok, pos, .. } => 4 * (tok.len() + pos.len()),
+        }
+    }
+}
+
+/// One graph instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Conv { layer: String, k: usize, stride: usize },
+    Bn { layer: String },
+    Relu,
+    MaxPool { k: usize, stride: usize },
+    Gap,
+    Linear { layer: String },
+    Save { slot: usize },
+    Restore { slot: usize },
+    Add { slot: usize },
+    Bert,
+}
+
+/// Executable model: instruction list + named parameters (+ BERT config).
+pub struct Graph {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub ops: Vec<Op>,
+    pub layers: BTreeMap<String, LayerParams>,
+    pub bert: Option<crate::nn::bert::BertConfig>,
+}
+
+impl Graph {
+    /// Total deployed parameter bytes (Fig. 10).
+    pub fn param_bytes(&self) -> usize {
+        self.layers.values().map(|l| l.param_bytes()).sum()
+    }
+
+    /// Count of LUT vs dense linear ops (diagnostics).
+    pub fn lut_fraction(&self) -> (usize, usize) {
+        let mut lut = 0;
+        let mut dense = 0;
+        for l in self.layers.values() {
+            match l {
+                LayerParams::Lut(_) => lut += 1,
+                LayerParams::Dense { .. } => dense += 1,
+                _ => {}
+            }
+        }
+        (lut, dense)
+    }
+
+    /// Run a forward pass. `batch` replaces the leading input dim.
+    pub fn run(&self, x: Tensor, opts: LutOpts) -> Tensor {
+        if self.bert.is_some() {
+            return crate::nn::bert::run_bert(self, x, opts);
+        }
+        let mut cur = x;
+        let mut slots: BTreeMap<usize, Tensor> = BTreeMap::new();
+        let mut idx_scratch: Vec<u16> = Vec::new();
+        for op in &self.ops {
+            cur = self.step(op, cur, opts, &mut slots, &mut idx_scratch);
+        }
+        cur
+    }
+
+    fn layer(&self, name: &str) -> &LayerParams {
+        self.layers
+            .get(name)
+            .unwrap_or_else(|| panic!("graph references unknown layer '{name}'"))
+    }
+
+    fn step(
+        &self,
+        op: &Op,
+        cur: Tensor,
+        opts: LutOpts,
+        slots: &mut BTreeMap<usize, Tensor>,
+        idx_scratch: &mut Vec<u16>,
+    ) -> Tensor {
+        match op {
+            Op::Conv { layer, k, stride } => {
+                let (n, h, w) = (cur.shape[0], cur.shape[1], cur.shape[2]);
+                match self.layer(layer) {
+                    LayerParams::Dense { w: wm, b, m } => {
+                        ops::conv2d(&cur, wm, b.as_deref(), *m, *k, *stride)
+                    }
+                    LayerParams::Lut(lut) => {
+                        let patches = im2col(&cur, *k, *stride);
+                        let rows = patches.rows();
+                        let mut out = vec![0.0f32; rows * lut.m];
+                        lut.forward_into(&patches.data, rows, opts, idx_scratch, &mut out);
+                        let ho = crate::tensor::im2col::same_out_size(h, *stride);
+                        let wo = crate::tensor::im2col::same_out_size(w, *stride);
+                        Tensor::new(vec![n, ho, wo, lut.m], out)
+                    }
+                    _ => panic!("layer '{layer}' is not a conv"),
+                }
+            }
+            Op::Bn { layer } => {
+                let mut cur = cur;
+                match self.layer(layer) {
+                    LayerParams::Bn { gamma, beta, mean, var } => {
+                        ops::batch_norm(&mut cur, gamma, beta, mean, var)
+                    }
+                    _ => panic!("layer '{layer}' is not bn"),
+                }
+                cur
+            }
+            Op::Relu => {
+                let mut cur = cur;
+                ops::relu(&mut cur);
+                cur
+            }
+            Op::MaxPool { k, stride } => ops::max_pool(&cur, *k, *stride),
+            Op::Gap => ops::global_avg_pool(&cur),
+            Op::Linear { layer } => match self.layer(layer) {
+                LayerParams::Dense { w, b, m } => ops::linear(&cur, w, b.as_deref(), *m),
+                LayerParams::Lut(lut) => {
+                    let rows = cur.rows();
+                    let mut out = vec![0.0f32; rows * lut.m];
+                    lut.forward_into(&cur.data, rows, opts, idx_scratch, &mut out);
+                    Tensor::new(vec![rows, lut.m], out)
+                }
+                _ => panic!("layer '{layer}' is not linear"),
+            },
+            Op::Save { slot } => {
+                slots.insert(*slot, cur.clone());
+                cur
+            }
+            Op::Restore { slot } => slots
+                .get(slot)
+                .unwrap_or_else(|| panic!("restore from empty slot {slot}"))
+                .clone(),
+            Op::Add { slot } => {
+                let mut cur = cur;
+                let other = slots
+                    .get(slot)
+                    .unwrap_or_else(|| panic!("add from empty slot {slot}"));
+                ops::add_inplace(&mut cur, other);
+                cur
+            }
+            Op::Bert => unreachable!("bert graphs are dispatched in run()"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::kmeans::learn_codebooks;
+    use crate::util::prng::Prng;
+
+    fn dense_layer(rng: &mut Prng, d: usize, m: usize) -> LayerParams {
+        LayerParams::Dense { w: rng.normal_vec(d * m, 0.3), b: Some(vec![0.1; m]), m }
+    }
+
+    fn tiny_graph(rng: &mut Prng) -> Graph {
+        let mut layers = BTreeMap::new();
+        layers.insert("c0".into(), dense_layer(rng, 3 * 9, 4));
+        layers.insert(
+            "bn0".into(),
+            LayerParams::Bn {
+                gamma: vec![1.0; 4],
+                beta: vec![0.0; 4],
+                mean: vec![0.0; 4],
+                var: vec![1.0; 4],
+            },
+        );
+        layers.insert("fc".into(), dense_layer(rng, 4, 5));
+        Graph {
+            name: "tiny".into(),
+            input_shape: vec![1, 8, 8, 3],
+            ops: vec![
+                Op::Conv { layer: "c0".into(), k: 3, stride: 1 },
+                Op::Bn { layer: "bn0".into() },
+                Op::Relu,
+                Op::Gap,
+                Op::Linear { layer: "fc".into() },
+            ],
+            layers,
+            bert: None,
+        }
+    }
+
+    #[test]
+    fn runs_dense_graph() {
+        let mut rng = Prng::new(0);
+        let g = tiny_graph(&mut rng);
+        let x = Tensor::new(vec![2, 8, 8, 3], rng.normal_vec(2 * 8 * 8 * 3, 1.0));
+        let y = g.run(x, LutOpts::all());
+        assert_eq!(y.shape, vec![2, 5]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn residual_slots() {
+        let mut rng = Prng::new(1);
+        let mut g = tiny_graph(&mut rng);
+        // save -> relu -> add(saved) == relu(x) + x on the GAP features
+        g.ops = vec![
+            Op::Gap,
+            Op::Save { slot: 0 },
+            Op::Relu,
+            Op::Add { slot: 0 },
+        ];
+        let x = Tensor::new(vec![1, 2, 2, 3], vec![-1.0; 12]);
+        let y = g.run(x, LutOpts::all());
+        // gap = -1 per channel; relu -> 0; add -> -1
+        assert_eq!(y.data, vec![-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn lut_conv_close_to_dense_conv() {
+        let mut rng = Prng::new(2);
+        let g = tiny_graph(&mut rng);
+        let x = Tensor::new(vec![4, 8, 8, 3], rng.normal_vec(4 * 8 * 8 * 3, 1.0));
+        let dense_out = g.run(x.clone(), LutOpts::all());
+
+        // Convert c0 to LUT with many centroids (high fidelity).
+        let patches = im2col(&x, 3, 1);
+        let cb = learn_codebooks(&patches.data, patches.rows(), 27, 3, 64, 15, 0);
+        let (w, b, m) = match g.layers.get("c0").unwrap() {
+            LayerParams::Dense { w, b, m } => (w.clone(), b.clone(), *m),
+            _ => unreachable!(),
+        };
+        let lut = LutLinear::new(cb, &w, m, b, 8);
+        let mut g2 = g;
+        g2.layers.insert("c0".into(), LayerParams::Lut(lut));
+        let lut_out = g2.run(x, LutOpts::all());
+        assert_eq!(lut_out.shape, dense_out.shape);
+        // K=64 over 512 rows: approximation should be loose but correlated
+        let mse = lut_out.mse(&dense_out);
+        let sig: f32 =
+            dense_out.data.iter().map(|v| v * v).sum::<f32>() / dense_out.len() as f32;
+        assert!(mse < sig, "mse={mse} sig={sig}");
+    }
+
+    #[test]
+    fn param_bytes_positive() {
+        let mut rng = Prng::new(3);
+        let g = tiny_graph(&mut rng);
+        assert!(g.param_bytes() > 0);
+        assert_eq!(g.lut_fraction(), (0, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown layer")]
+    fn unknown_layer_panics() {
+        let mut rng = Prng::new(4);
+        let mut g = tiny_graph(&mut rng);
+        g.ops = vec![Op::Linear { layer: "nope".into() }];
+        g.run(Tensor::zeros(vec![1, 4]), LutOpts::all());
+    }
+}

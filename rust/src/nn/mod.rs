@@ -1,0 +1,14 @@
+//! Dense reference engine + graph executor + model shape zoo.
+//!
+//! The baseline LUT-NN is compared against (stands in for ONNX Runtime /
+//! TVM on this testbed — DESIGN.md §Substitutions): im2col convolution
+//! over a blocked GEMM, BatchNorm folding, pooling, and a small
+//! instruction-list graph executor that runs `.lutnn` bundles with either
+//! dense or LUT layers (so the same graph measures both sides of every
+//! figure).
+
+pub mod bert;
+pub mod gemm;
+pub mod graph;
+pub mod models;
+pub mod ops;

@@ -1,0 +1,490 @@
+//! Model zoo.
+//!
+//! Two kinds of models:
+//! 1. **Shape-exact paper configs** (`resnet18_cifar`, `resnet18_imagenet`,
+//!    `senet18_*`, `vgg11_*`, `bert_base`): the per-linear-op (N, D, M)
+//!    shapes of the models the paper evaluates. Used by the analytic cost
+//!    model (Tables 1–2) and the operator benches (Fig. 7) — these need no
+//!    trained weights.
+//! 2. **Runnable synthetic builders** (`build_cnn_graph`, `lutify_graph`):
+//!    materialize an executable `Graph` with random weights / k-means-
+//!    learned codebooks for the end-to-end latency, memory, scaling and
+//!    breakdown benches (Figs. 8–10, §6.3).
+
+use std::collections::BTreeMap;
+
+use crate::lut::LutLinear;
+use crate::nn::graph::{Graph, LayerParams, Op};
+use crate::pq::kmeans::learn_codebooks;
+use crate::tensor::im2col::im2col;
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// Shape of one linear (LUT-replaceable) operator.
+#[derive(Debug, Clone)]
+pub struct LinearShape {
+    pub name: String,
+    /// rows of the im2col'd input per inference (H*W for convs, seq len
+    /// for BERT, 1 for FC heads)
+    pub n: usize,
+    /// input dim (Cin * k * k for convs)
+    pub d: usize,
+    /// output dim (Cout)
+    pub m: usize,
+    /// conv kernel size (0 = fully connected)
+    pub kernel: usize,
+    /// whether LUT-NN replaces this op (first conv stays dense — §6.1)
+    pub replaced: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    pub name: String,
+    pub ops: Vec<LinearShape>,
+}
+
+fn conv(name: &str, hw: usize, cin: usize, cout: usize, k: usize, replaced: bool) -> LinearShape {
+    LinearShape {
+        name: name.into(),
+        n: hw * hw,
+        d: cin * k * k,
+        m: cout,
+        kernel: k,
+        replaced,
+    }
+}
+
+fn fc(name: &str, n: usize, d: usize, m: usize, replaced: bool) -> LinearShape {
+    LinearShape { name: name.into(), n, d, m, kernel: 0, replaced }
+}
+
+/// ResNet18, CIFAR variant (3x3 stem, no maxpool — paper §6.1).
+pub fn resnet18_cifar() -> ModelShape {
+    let mut ops = vec![conv("stem", 32, 3, 64, 3, false)];
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 32, 0), (128, 16, 64), (256, 8, 128), (512, 4, 256)];
+    for (si, &(ch, hw, prev)) in stages.iter().enumerate() {
+        for b in 0..2 {
+            let cin = if b == 0 && si > 0 { prev } else { ch };
+            ops.push(conv(&format!("s{si}b{b}c1"), hw, cin, ch, 3, true));
+            ops.push(conv(&format!("s{si}b{b}c2"), hw, ch, ch, 3, true));
+            if b == 0 && si > 0 {
+                ops.push(conv(&format!("s{si}sc"), hw, prev, ch, 1, true));
+            }
+        }
+    }
+    ops.push(fc("fc", 1, 512, 10, true));
+    ModelShape { name: "ResNet18 (CIFAR10)".into(), ops }
+}
+
+/// ResNet18, ImageNet variant (7x7/2 stem + maxpool — paper §6.1).
+pub fn resnet18_imagenet() -> ModelShape {
+    let mut ops = vec![LinearShape {
+        name: "stem".into(),
+        n: 112 * 112,
+        d: 3 * 49,
+        m: 64,
+        kernel: 7,
+        replaced: false,
+    }];
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 56, 0), (128, 28, 64), (256, 14, 128), (512, 7, 256)];
+    for (si, &(ch, hw, prev)) in stages.iter().enumerate() {
+        for b in 0..2 {
+            let cin = if b == 0 && si > 0 { prev } else { ch };
+            ops.push(conv(&format!("s{si}b{b}c1"), hw, cin, ch, 3, true));
+            ops.push(conv(&format!("s{si}b{b}c2"), hw, ch, ch, 3, true));
+            if b == 0 && si > 0 {
+                ops.push(conv(&format!("s{si}sc"), hw, prev, ch, 1, true));
+            }
+        }
+    }
+    ops.push(fc("fc", 1, 512, 1000, true));
+    ModelShape { name: "ResNet18".into(), ops }
+}
+
+/// SENet18 = ResNet18 + squeeze-excite FC pairs per block (r=16).
+fn add_se(mut base: ModelShape, name: &str) -> ModelShape {
+    let mut extra = Vec::new();
+    for (si, ch) in [(0usize, 64usize), (1, 128), (2, 256), (3, 512)] {
+        for b in 0..2 {
+            let r = (ch / 16).max(1);
+            extra.push(fc(&format!("s{si}b{b}se1"), 1, ch, r, true));
+            extra.push(fc(&format!("s{si}b{b}se2"), 1, r, ch, true));
+        }
+    }
+    base.ops.extend(extra);
+    base.name = name.into();
+    base
+}
+
+pub fn senet18_cifar() -> ModelShape {
+    add_se(resnet18_cifar(), "SENet18 (CIFAR10)")
+}
+
+pub fn senet18_imagenet() -> ModelShape {
+    add_se(resnet18_imagenet(), "SENet18")
+}
+
+/// VGG11, CIFAR variant: first maxpool removed, final dense layers
+/// replaced by GAP + one FC (paper §6.1 deployment practice).
+pub fn vgg11_cifar() -> ModelShape {
+    let cfg: [(usize, usize, usize); 8] = [
+        (3, 64, 32),
+        (64, 128, 32),
+        (128, 256, 16),
+        (256, 256, 16),
+        (256, 512, 8),
+        (512, 512, 8),
+        (512, 512, 4),
+        (512, 512, 4),
+    ];
+    let mut ops = Vec::new();
+    for (i, &(cin, cout, hw)) in cfg.iter().enumerate() {
+        ops.push(conv(&format!("c{i}"), hw, cin, cout, 3, i > 0));
+    }
+    ops.push(fc("fc", 1, 512, 10, true));
+    ModelShape { name: "VGG11 (CIFAR10)".into(), ops }
+}
+
+/// VGG11, ImageNet variant.
+pub fn vgg11_imagenet() -> ModelShape {
+    let cfg: [(usize, usize, usize); 8] = [
+        (3, 64, 224),
+        (64, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    let mut ops = Vec::new();
+    for (i, &(cin, cout, hw)) in cfg.iter().enumerate() {
+        ops.push(conv(&format!("c{i}"), hw, cin, cout, 3, i > 0));
+    }
+    ops.push(fc("fc", 1, 512, 1000, true));
+    ModelShape { name: "VGG11".into(), ops }
+}
+
+/// BERT-base encoder at sequence length 32 (matches the paper's Table 2
+/// GFLOPs — see DESIGN.md). 12 layers of q/k/v/o + 2 FFN linears.
+pub fn bert_base() -> ModelShape {
+    let (d, ff, seq, layers) = (768usize, 3072usize, 32usize, 12usize);
+    let mut ops = Vec::new();
+    for l in 0..layers {
+        for nm in ["q", "k", "v", "o"] {
+            ops.push(fc(&format!("l{l}{nm}"), seq, d, d, true));
+        }
+        ops.push(fc(&format!("l{l}f1"), seq, d, ff, true));
+        ops.push(fc(&format!("l{l}f2"), seq, ff, d, true));
+    }
+    ModelShape { name: "BERT".into(), ops }
+}
+
+pub fn all_paper_models() -> Vec<ModelShape> {
+    vec![
+        resnet18_cifar(),
+        senet18_cifar(),
+        vgg11_cifar(),
+        resnet18_imagenet(),
+        senet18_imagenet(),
+        vgg11_imagenet(),
+        bert_base(),
+    ]
+}
+
+/// Paper default sub-vector length for an op (§6.1): V=9 for 3x3 convs,
+/// V=4 for 1x1 convs / small FC, V=32 for BERT-wide FC.
+pub fn default_v(op: &LinearShape) -> usize {
+    if op.kernel == 3 && op.d % 9 == 0 {
+        9
+    } else if op.kernel == 7 && op.d % 49 == 0 {
+        49
+    } else if op.d >= 768 && op.d % 32 == 0 {
+        32
+    } else if op.d % 4 == 0 {
+        4
+    } else if op.d % 2 == 0 {
+        2
+    } else {
+        1
+    }
+}
+
+// ======================================================================
+// Runnable synthetic builders (benches / examples)
+// ======================================================================
+
+/// Spec for one stage of a runnable plain-conv CNN.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvSpec {
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+}
+
+/// Build a runnable dense CNN graph with random weights:
+/// convs (+BN+ReLU) per spec, then GAP + FC head.
+pub fn build_cnn_graph(
+    name: &str,
+    input: [usize; 3],
+    specs: &[ConvSpec],
+    n_classes: usize,
+    seed: u64,
+) -> Graph {
+    let mut rng = Prng::new(seed);
+    let mut layers = BTreeMap::new();
+    let mut ops = Vec::new();
+    let mut cin = input[2];
+    for (i, spec) in specs.iter().enumerate() {
+        let d = cin * spec.k * spec.k;
+        let scale = (2.0 / d as f32).sqrt();
+        layers.insert(
+            format!("c{i}"),
+            LayerParams::Dense {
+                w: rng.normal_vec(d * spec.cout, scale),
+                b: Some(vec![0.0; spec.cout]),
+                m: spec.cout,
+            },
+        );
+        layers.insert(
+            format!("bn{i}"),
+            LayerParams::Bn {
+                gamma: vec![1.0; spec.cout],
+                beta: vec![0.0; spec.cout],
+                mean: vec![0.0; spec.cout],
+                var: vec![1.0; spec.cout],
+            },
+        );
+        ops.push(Op::Conv { layer: format!("c{i}"), k: spec.k, stride: spec.stride });
+        ops.push(Op::Bn { layer: format!("bn{i}") });
+        ops.push(Op::Relu);
+        cin = spec.cout;
+    }
+    ops.push(Op::Gap);
+    let scale = (2.0 / cin as f32).sqrt();
+    layers.insert(
+        "fc".into(),
+        LayerParams::Dense {
+            w: rng.normal_vec(cin * n_classes, scale),
+            b: Some(vec![0.0; n_classes]),
+            m: n_classes,
+        },
+    );
+    ops.push(Op::Linear { layer: "fc".into() });
+    Graph {
+        name: name.into(),
+        input_shape: vec![1, input[0], input[1], input[2]],
+        ops,
+        layers,
+        bert: None,
+    }
+}
+
+/// Replace every dense conv/linear except the first conv with a LUT layer
+/// whose codebooks are k-means-learned from this graph's own activations
+/// on `sample` inputs (the rust-native conversion path).
+pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, seed: u64) -> Graph {
+    let mut new_layers: BTreeMap<String, LayerParams> = BTreeMap::new();
+    // Re-run the graph, capturing inputs of each linear op.
+    let mut captures: BTreeMap<String, (Vec<f32>, usize, usize)> = BTreeMap::new();
+    capture_linear_inputs(g, sample, &mut captures);
+
+    let mut first_conv_seen = false;
+    for op in &g.ops {
+        let lname = match op {
+            Op::Conv { layer, .. } | Op::Linear { layer } => layer.clone(),
+            _ => continue,
+        };
+        let is_first_conv = matches!(op, Op::Conv { .. }) && !first_conv_seen;
+        if matches!(op, Op::Conv { .. }) {
+            first_conv_seen = true;
+        }
+        if is_first_conv {
+            continue; // stays dense (paper §6.1)
+        }
+        if let LayerParams::Dense { w, b, m } = &g.layers[&lname] {
+            let (acts, rows, d) = &captures[&lname];
+            let v = pick_v(*d);
+            let cb = learn_codebooks(acts, *rows, *d, d / v, k_centroids, 8, seed);
+            let lut = LutLinear::new(cb, w, *m, b.clone(), bits);
+            new_layers.insert(lname, LayerParams::Lut(lut));
+        }
+    }
+    let mut layers = BTreeMap::new();
+    for (name, params) in &g.layers {
+        if let Some(lut) = new_layers.remove(name) {
+            layers.insert(name.clone(), lut);
+        } else {
+            layers.insert(
+                name.clone(),
+                match params {
+                    LayerParams::Dense { w, b, m } => {
+                        LayerParams::Dense { w: w.clone(), b: b.clone(), m: *m }
+                    }
+                    LayerParams::Bn { gamma, beta, mean, var } => LayerParams::Bn {
+                        gamma: gamma.clone(),
+                        beta: beta.clone(),
+                        mean: mean.clone(),
+                        var: var.clone(),
+                    },
+                    LayerParams::Ln { gamma, beta } => {
+                        LayerParams::Ln { gamma: gamma.clone(), beta: beta.clone() }
+                    }
+                    LayerParams::Embedding { tok, pos, d } => LayerParams::Embedding {
+                        tok: tok.clone(),
+                        pos: pos.clone(),
+                        d: *d,
+                    },
+                    LayerParams::Lut(_) => unreachable!("input graph is dense"),
+                },
+            );
+        }
+    }
+    Graph {
+        name: format!("{}_lut", g.name),
+        input_shape: g.input_shape.clone(),
+        ops: g.ops.clone(),
+        layers,
+        bert: g.bert.clone(),
+    }
+}
+
+fn pick_v(d: usize) -> usize {
+    for v in [9usize, 4, 2] {
+        if d % v == 0 {
+            return v;
+        }
+    }
+    1
+}
+
+/// Run the dense graph once, recording each conv/linear input matrix.
+fn capture_linear_inputs(
+    g: &Graph,
+    x: &Tensor,
+    out: &mut BTreeMap<String, (Vec<f32>, usize, usize)>,
+) {
+    use crate::nn::ops as dops;
+    let mut cur = x.clone();
+    let mut slots: BTreeMap<usize, Tensor> = BTreeMap::new();
+    for op in &g.ops {
+        match op {
+            Op::Conv { layer, k, stride } => {
+                let patches = im2col(&cur, *k, *stride);
+                out.insert(layer.clone(), (patches.data.clone(), patches.rows(), patches.cols()));
+                if let LayerParams::Dense { w, b, m } = &g.layers[layer] {
+                    cur = dops::conv2d(&cur, w, b.as_deref(), *m, *k, *stride);
+                } else {
+                    panic!("capture expects dense graph");
+                }
+            }
+            Op::Linear { layer } => {
+                out.insert(layer.clone(), (cur.data.clone(), cur.rows(), cur.cols()));
+                if let LayerParams::Dense { w, b, m } = &g.layers[layer] {
+                    cur = dops::linear(&cur, w, b.as_deref(), *m);
+                } else {
+                    panic!("capture expects dense graph");
+                }
+            }
+            Op::Bn { layer } => {
+                if let LayerParams::Bn { gamma, beta, mean, var } = &g.layers[layer] {
+                    dops::batch_norm(&mut cur, gamma, beta, mean, var);
+                }
+            }
+            Op::Relu => dops::relu(&mut cur),
+            Op::MaxPool { k, stride } => cur = dops::max_pool(&cur, *k, *stride),
+            Op::Gap => cur = dops::global_avg_pool(&cur),
+            Op::Save { slot } => {
+                slots.insert(*slot, cur.clone());
+            }
+            Op::Restore { slot } => cur = slots[slot].clone(),
+            Op::Add { slot } => dops::add_inplace(&mut cur, &slots[slot]),
+            Op::Bert => panic!("capture_linear_inputs: CNN graphs only"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::LutOpts;
+
+    #[test]
+    fn paper_model_op_counts() {
+        // ResNet18 has 17 convs (stem + 16 block convs) + 3 shortcut 1x1
+        // + fc = 21 linear ops.
+        assert_eq!(resnet18_cifar().ops.len(), 21);
+        assert_eq!(vgg11_cifar().ops.len(), 9);
+        assert_eq!(bert_base().ops.len(), 72);
+        // SENet adds 16 SE linears
+        assert_eq!(senet18_cifar().ops.len(), 21 + 16);
+    }
+
+    #[test]
+    fn first_layer_not_replaced() {
+        for m in all_paper_models() {
+            if m.name.contains("BERT") {
+                continue;
+            }
+            assert!(!m.ops[0].replaced, "{}", m.name);
+            assert!(m.ops[1..].iter().all(|o| o.replaced), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn default_v_rules() {
+        let c3 = conv("x", 8, 64, 64, 3, true);
+        assert_eq!(default_v(&c3), 9);
+        let c1 = conv("x", 8, 64, 128, 1, true);
+        assert_eq!(default_v(&c1), 4);
+        let wide = fc("x", 32, 768, 768, true);
+        assert_eq!(default_v(&wide), 32);
+    }
+
+    #[test]
+    fn build_and_run_synthetic_cnn() {
+        let g = build_cnn_graph(
+            "t",
+            [8, 8, 3],
+            &[
+                ConvSpec { cout: 8, k: 3, stride: 1 },
+                ConvSpec { cout: 16, k: 3, stride: 2 },
+            ],
+            10,
+            0,
+        );
+        let mut rng = Prng::new(1);
+        let x = Tensor::new(vec![2, 8, 8, 3], rng.normal_vec(2 * 8 * 8 * 3, 1.0));
+        let y = g.run(x, LutOpts::all());
+        assert_eq!(y.shape, vec![2, 10]);
+    }
+
+    #[test]
+    fn lutify_replaces_all_but_first() {
+        // Widths chosen so the LUT form is smaller (tables win once
+        // M >> K; at toy widths the FP32 centroids dominate).
+        let g = build_cnn_graph(
+            "t",
+            [8, 8, 3],
+            &[
+                ConvSpec { cout: 16, k: 3, stride: 1 },
+                ConvSpec { cout: 64, k: 3, stride: 1 },
+            ],
+            4,
+            0,
+        );
+        let mut rng = Prng::new(2);
+        let x = Tensor::new(vec![4, 8, 8, 3], rng.normal_vec(4 * 8 * 8 * 3, 1.0));
+        let gl = lutify_graph(&g, &x, 16, 8, 0);
+        assert!(matches!(gl.layers["c0"], LayerParams::Dense { .. }));
+        assert!(matches!(gl.layers["c1"], LayerParams::Lut(_)));
+        assert!(matches!(gl.layers["fc"], LayerParams::Lut(_)));
+        // runs and stays finite
+        let y = gl.run(x, LutOpts::all());
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // LUT model must be smaller than dense
+        assert!(gl.param_bytes() < g.param_bytes());
+    }
+}

@@ -1,0 +1,247 @@
+//! Dense layer ops over NHWC tensors: conv (im2col+GEMM), linear,
+//! BatchNorm (inference), ReLU, max pool, global average pool, softmax.
+
+use crate::nn::gemm::gemm;
+use crate::tensor::im2col::{im2col, same_out_size};
+use crate::tensor::Tensor;
+
+/// Dense conv: weight as matrix [Cin*k*k, Cout] (channel-major patch
+/// layout — the shared im2col contract), bias [Cout].
+pub fn conv2d(x: &Tensor, weight: &[f32], bias: Option<&[f32]>, cout: usize, k: usize, stride: usize) -> Tensor {
+    let (n, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let patches = im2col(x, k, stride);
+    let rows = patches.rows();
+    let d = patches.cols();
+    assert_eq!(weight.len(), d * cout, "conv weight shape mismatch");
+    let mut out = vec![0.0f32; rows * cout];
+    gemm(&patches.data, weight, &mut out, rows, d, cout);
+    if let Some(b) = bias {
+        for row in out.chunks_exact_mut(cout) {
+            for (o, &bb) in row.iter_mut().zip(b) {
+                *o += bb;
+            }
+        }
+    }
+    let (ho, wo) = (same_out_size(h, stride), same_out_size(w, stride));
+    Tensor::new(vec![n, ho, wo, cout], out)
+}
+
+/// Linear: x [rows, D] @ w [D, M] + b.
+pub fn linear(x: &Tensor, weight: &[f32], bias: Option<&[f32]>, m: usize) -> Tensor {
+    let rows = x.rows();
+    let d = x.cols();
+    assert_eq!(weight.len(), d * m);
+    let mut out = vec![0.0f32; rows * m];
+    gemm(&x.data, weight, &mut out, rows, d, m);
+    if let Some(b) = bias {
+        for row in out.chunks_exact_mut(m) {
+            for (o, &bb) in row.iter_mut().zip(b) {
+                *o += bb;
+            }
+        }
+    }
+    Tensor::new(vec![rows, m], out)
+}
+
+/// Inference BatchNorm over the channel (last) axis of NHWC/2-D input.
+pub fn batch_norm(x: &mut Tensor, gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32]) {
+    let ch = *x.shape.last().unwrap();
+    assert_eq!(gamma.len(), ch);
+    // Fold into scale/shift once.
+    let scale: Vec<f32> = (0..ch).map(|c| gamma[c] / (var[c] + 1e-5).sqrt()).collect();
+    let shift: Vec<f32> = (0..ch).map(|c| beta[c] - mean[c] * scale[c]).collect();
+    for row in x.data.chunks_exact_mut(ch) {
+        for (v, c) in row.iter_mut().zip(0..ch) {
+            *v = *v * scale[c] + shift[c];
+        }
+    }
+}
+
+/// LayerNorm over the last axis (BERT path).
+pub fn layer_norm(x: &mut Tensor, gamma: &[f32], beta: &[f32]) {
+    let ch = *x.shape.last().unwrap();
+    for row in x.data.chunks_exact_mut(ch) {
+        let mean: f32 = row.iter().sum::<f32>() / ch as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / ch as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (v, c) in row.iter_mut().zip(0..ch) {
+            *v = (*v - mean) * inv * gamma[c] + beta[c];
+        }
+    }
+}
+
+pub fn relu(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// GELU (tanh approximation, matches jax.nn.gelu default).
+pub fn gelu(x: &mut Tensor) {
+    for v in &mut x.data {
+        let x3 = *v * *v * *v;
+        *v = 0.5 * *v * (1.0 + ((0.7978845608 * (*v + 0.044715 * x3)) as f32).tanh());
+    }
+}
+
+/// 2x2/stride-2-style max pool (VALID padding).
+pub fn max_pool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    let mut out = vec![f32::NEG_INFINITY; n * ho * wo * c];
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        let src = x.nhwc_offset(ni, iy, ix, 0);
+                        let dst = ((ni * ho + oy) * wo + ox) * c;
+                        for ci in 0..c {
+                            let v = x.data[src + ci];
+                            if v > out[dst + ci] {
+                                out[dst + ci] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, ho, wo, c], out)
+}
+
+/// Global average pool NHWC -> [N, C].
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = vec![0.0f32; n * c];
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut s = 0.0f32;
+            for hy in 0..h {
+                for wx in 0..w {
+                    s += x.data[x.nhwc_offset(ni, hy, wx, ci)];
+                }
+            }
+            out[ni * c + ci] = s * inv;
+        }
+    }
+    Tensor::new(vec![n, c], out)
+}
+
+/// Row-wise softmax of a 2-D tensor (attention / output probabilities).
+pub fn softmax_rows(x: &mut Tensor) {
+    let cols = *x.shape.last().unwrap();
+    for row in x.data.chunks_exact_mut(cols) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Elementwise add (residual connections). Shapes must match.
+pub fn add_inplace(x: &mut Tensor, other: &Tensor) {
+    assert_eq!(x.shape, other.shape);
+    for (a, &b) in x.data.iter_mut().zip(&other.data) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weight = passthrough
+        let x = Tensor::new(vec![1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // [2,2] identity
+        let y = conv2d(&x, &w, None, 2, 1, 1);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_shapes_with_stride() {
+        let x = Tensor::zeros(vec![2, 8, 8, 3]);
+        let w = vec![0.0; 27 * 16];
+        let y = conv2d(&x, &w, None, 16, 3, 2);
+        assert_eq!(y.shape, vec![2, 4, 4, 16]);
+    }
+
+    #[test]
+    fn conv_counts_neighbors() {
+        // All-ones input, all-ones 3x3 kernel, 1 channel: interior = 9.
+        let x = Tensor::new(vec![1, 4, 4, 1], vec![1.0; 16]);
+        let w = vec![1.0; 9];
+        let y = conv2d(&x, &w, None, 1, 3, 1);
+        assert_eq!(y.at4(0, 1, 1, 0), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0); // corner
+    }
+
+    #[test]
+    fn bn_normalizes() {
+        let mut x = Tensor::new(vec![1, 1, 1, 2], vec![4.0, 10.0]);
+        batch_norm(&mut x, &[1.0, 2.0], &[0.5, 0.0], &[4.0, 10.0], &[1.0, 4.0]);
+        assert!((x.data[0] - 0.5).abs() < 1e-5);
+        assert!(x.data[1].abs() < 1e-5);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut rng = Prng::new(0);
+        let mut x = Tensor::new(vec![4, 16], rng.normal_vec(64, 3.0));
+        layer_norm(&mut x, &vec![1.0; 16], &vec![0.0; 16]);
+        for row in x.data.chunks(16) {
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn pool_and_gap() {
+        let x = Tensor::new(
+            vec![1, 2, 2, 1],
+            vec![1.0, 5.0, 3.0, 2.0],
+        );
+        let mp = max_pool(&x, 2, 2);
+        assert_eq!(mp.data, vec![5.0]);
+        let gap = global_avg_pool(&x);
+        assert_eq!(gap.data, vec![11.0 / 4.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut x = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        softmax_rows(&mut x);
+        for row in x.data.chunks(3) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+        assert!((x.data[3] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relu_and_gelu() {
+        let mut x = Tensor::new(vec![1, 3], vec![-1.0, 0.0, 2.0]);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 0.0, 2.0]);
+        let mut g = Tensor::new(vec![1, 2], vec![-10.0, 10.0]);
+        gelu(&mut g);
+        assert!(g.data[0].abs() < 1e-3);
+        assert!((g.data[1] - 10.0).abs() < 1e-3);
+    }
+}

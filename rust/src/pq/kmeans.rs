@@ -1,0 +1,215 @@
+//! k-means (Lloyd + k-means++ seeding) for PQ codebook learning (Eq. 1).
+//!
+//! The trained python models ship their centroids inside `.lutnn` bundles,
+//! but the rust side also learns codebooks itself: the serving coordinator
+//! can LUT-convert a dense bundle on the fly (examples/image_pipeline) and
+//! the benches build synthetic LUT layers from sampled activations.
+
+use crate::util::prng::Prng;
+
+use super::Codebooks;
+
+/// Lloyd's algorithm over rows of `x` ([n, v] row-major).
+/// Returns (centroids [k, v], assignments [n]).
+pub fn kmeans(
+    x: &[f32],
+    n: usize,
+    v: usize,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<usize>) {
+    assert_eq!(x.len(), n * v);
+    assert!(n > 0 && k > 0);
+    let mut rng = Prng::new(seed);
+
+    // --- k-means++ seeding -------------------------------------------
+    let mut centers = vec![0.0f32; k * v];
+    let first = rng.below(n);
+    centers[..v].copy_from_slice(&x[first * v..(first + 1) * v]);
+    let mut d2: Vec<f32> = (0..n).map(|i| dist2(&x[i * v..(i + 1) * v], &centers[..v])).collect();
+    for ci in 1..k {
+        let total: f64 = d2.iter().map(|&d| d as f64).sum();
+        let pick = if total <= 1e-12 {
+            rng.below(n)
+        } else {
+            // sample proportional to d2
+            let mut target = rng.uniform() * total;
+            let mut idx = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centers[ci * v..(ci + 1) * v].copy_from_slice(&x[pick * v..(pick + 1) * v]);
+        for i in 0..n {
+            let d = dist2(&x[i * v..(i + 1) * v], &centers[ci * v..(ci + 1) * v]);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ---------------------------------------------
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        let mut changed = false;
+        for i in 0..n {
+            let row = &x[i * v..(i + 1) * v];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let d = dist2(row, &centers[c * v..(c + 1) * v]);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+        // recompute means
+        let mut sums = vec![0.0f64; k * v];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i];
+            counts[c] += 1;
+            for (s, &val) in sums[c * v..(c + 1) * v].iter_mut().zip(&x[i * v..(i + 1) * v]) {
+                *s += val as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // respawn empty cluster at a random point
+                let pick = rng.below(n);
+                centers[c * v..(c + 1) * v]
+                    .copy_from_slice(&x[pick * v..(pick + 1) * v]);
+            } else {
+                for (dst, &s) in centers[c * v..(c + 1) * v].iter_mut().zip(&sums[c * v..(c + 1) * v]) {
+                    *dst = (s / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    (centers, assign)
+}
+
+#[inline]
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Learn all C codebooks from activations [n, D] (paper Eq. 1): split
+/// each row into C sub-vectors of length V = D / C and cluster each slab.
+pub fn learn_codebooks(
+    activations: &[f32],
+    n: usize,
+    d: usize,
+    c: usize,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> Codebooks {
+    assert_eq!(activations.len(), n * d);
+    assert_eq!(d % c, 0, "D={d} not divisible by C={c}");
+    let v = d / c;
+    let mut data = vec![0.0f32; c * k * v];
+    let mut slab = vec![0.0f32; n * v];
+    for ci in 0..c {
+        for i in 0..n {
+            slab[i * v..(i + 1) * v]
+                .copy_from_slice(&activations[i * d + ci * v..i * d + (ci + 1) * v]);
+        }
+        let (centers, _) = kmeans(&slab, n, v, k, iters, seed + ci as u64);
+        data[ci * k * v..(ci + 1) * k * v].copy_from_slice(&centers);
+    }
+    Codebooks::new(c, k, v, data)
+}
+
+/// Mean quantization error (Eq. 1 objective) of codebooks on activations.
+pub fn quantization_mse(activations: &[f32], n: usize, cb: &Codebooks) -> f32 {
+    let d = cb.input_dim();
+    assert_eq!(activations.len(), n * d);
+    let mut total = 0.0f64;
+    for i in 0..n {
+        for c in 0..cb.c {
+            let sub = &activations[i * d + c * cb.v..i * d + (c + 1) * cb.v];
+            let mut best = f32::INFINITY;
+            for k in 0..cb.k {
+                let dd = dist2(sub, cb.centroid(c, k));
+                if dd < best {
+                    best = dd;
+                }
+            }
+            total += best as f64;
+        }
+    }
+    (total / (n * cb.c) as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut rng = Prng::new(0);
+        let true_centers = [[0.0f32, 0.0], [10.0, 0.0], [0.0, 10.0], [10.0, 10.0]];
+        let mut x = Vec::new();
+        for c in &true_centers {
+            for _ in 0..50 {
+                x.push(c[0] + 0.1 * rng.normal());
+                x.push(c[1] + 0.1 * rng.normal());
+            }
+        }
+        let (centers, assign) = kmeans(&x, 200, 2, 4, 30, 1);
+        for tc in &true_centers {
+            let best = (0..4)
+                .map(|c| dist2(tc, &centers[c * 2..c * 2 + 2]))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.25, "missed center {tc:?}");
+        }
+        assert_eq!(assign.len(), 200);
+    }
+
+    #[test]
+    fn more_centroids_lower_mse() {
+        let mut rng = Prng::new(1);
+        let n = 256;
+        let d = 8;
+        let x = rng.normal_vec(n * d, 1.0);
+        let mse: Vec<f32> = [2usize, 8, 32]
+            .iter()
+            .map(|&k| {
+                let cb = learn_codebooks(&x, n, d, 2, k, 20, 0);
+                quantization_mse(&x, n, &cb)
+            })
+            .collect();
+        assert!(mse[0] > mse[1] && mse[1] > mse[2], "{mse:?}");
+    }
+
+    #[test]
+    fn identical_points_stay_finite() {
+        let x = vec![1.0f32; 64 * 4];
+        let (centers, _) = kmeans(&x, 64, 4, 4, 10, 0);
+        assert!(centers.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn codebook_shapes() {
+        let mut rng = Prng::new(2);
+        let x = rng.normal_vec(128 * 36, 1.0);
+        let cb = learn_codebooks(&x, 128, 36, 4, 16, 5, 0);
+        assert_eq!((cb.c, cb.k, cb.v), (4, 16, 9));
+    }
+}

@@ -1,0 +1,289 @@
+//! MADDNESS baseline: hashing-based sub-vector encoding (paper §2.1).
+//!
+//! A 4-level balanced binary regression tree per codebook: level l splits
+//! on one fixed dimension against per-node thresholds; leaves are the
+//! K = 2^depth buckets. Higher quantization error than k-means argmin at
+//! equal K — the effect Fig. 3b demonstrates. Mirrors the python
+//! implementation in `python/compile/maddness.py`.
+
+use crate::util::prng::Prng;
+
+#[derive(Debug, Clone)]
+pub struct HashTree {
+    pub depth: usize,
+    /// split dimension per level, len `depth`
+    pub split_dims: Vec<usize>,
+    /// thresholds[level][node] for node in 0..2^level
+    pub thresholds: Vec<Vec<f32>>,
+    /// bucket prototypes [K=2^depth, V]
+    pub prototypes: Vec<f32>,
+    pub v: usize,
+}
+
+impl HashTree {
+    pub fn n_buckets(&self) -> usize {
+        1 << self.depth
+    }
+
+    /// Encode one sub-vector by traversing the tree.
+    #[inline]
+    pub fn encode(&self, sub: &[f32]) -> usize {
+        let mut node = 0usize;
+        for level in 0..self.depth {
+            let dim = self.split_dims[level];
+            let thr = self.thresholds[level][node];
+            node = 2 * node + usize::from(sub[dim] > thr);
+        }
+        node
+    }
+}
+
+/// Greedy balanced-tree learning over sub-vectors `x` [n, v]:
+/// split dim = largest within-bucket variance mass, threshold = median.
+pub fn learn_hash_tree(x: &[f32], n: usize, v: usize, depth: usize, seed: u64) -> HashTree {
+    assert!(n > 0 && v > 0);
+    assert_eq!(x.len(), n * v);
+    let mut rng = Prng::new(seed);
+    let mut buckets = vec![0usize; n];
+    let mut split_dims = Vec::with_capacity(depth);
+    let mut thresholds = Vec::with_capacity(depth);
+
+    for level in 0..depth {
+        let n_buckets = 1usize << level;
+        // score dims by within-bucket variance mass
+        let mut scores = vec![0.0f64; v];
+        for b in 0..n_buckets {
+            let rows: Vec<usize> = (0..n).filter(|&i| buckets[i] == b).collect();
+            if rows.len() < 2 {
+                continue;
+            }
+            for dim in 0..v {
+                let vals: Vec<f32> = rows.iter().map(|&i| x[i * v + dim]).collect();
+                let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+                let var: f32 = vals.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>()
+                    / vals.len() as f32;
+                scores[dim] += (var * vals.len() as f32) as f64;
+            }
+        }
+        let dim = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        split_dims.push(dim);
+
+        let mut level_thresholds = vec![0.0f32; n_buckets];
+        let mut new_buckets = buckets.clone();
+        for b in 0..n_buckets {
+            let mut vals: Vec<f32> = (0..n)
+                .filter(|&i| buckets[i] == b)
+                .map(|i| x[i * v + dim])
+                .collect();
+            let thr = if vals.is_empty() {
+                0.0
+            } else {
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                vals[vals.len() / 2] // median -> balanced split
+            };
+            level_thresholds[b] = thr;
+            for i in 0..n {
+                if buckets[i] == b {
+                    new_buckets[i] = 2 * b + usize::from(x[i * v + dim] > thr);
+                }
+            }
+        }
+        thresholds.push(level_thresholds);
+        buckets = new_buckets;
+    }
+
+    // bucket-mean prototypes
+    let k = 1usize << depth;
+    let mut prototypes = vec![0.0f32; k * v];
+    for b in 0..k {
+        let rows: Vec<usize> = (0..n).filter(|&i| buckets[i] == b).collect();
+        if rows.is_empty() {
+            let pick = rng.below(n);
+            prototypes[b * v..(b + 1) * v].copy_from_slice(&x[pick * v..(pick + 1) * v]);
+        } else {
+            for dim in 0..v {
+                let sum: f32 = rows.iter().map(|&i| x[i * v + dim]).sum();
+                prototypes[b * v + dim] = sum / rows.len() as f32;
+            }
+        }
+    }
+    HashTree { depth, split_dims, thresholds, prototypes, v }
+}
+
+/// A MADDNESS-encoded linear operator: one tree per codebook + tables.
+#[derive(Debug, Clone)]
+pub struct MaddnessOp {
+    pub trees: Vec<HashTree>,
+    /// [C, K, M]
+    pub table: Vec<f32>,
+    pub m: usize,
+    pub bias: Option<Vec<f32>>,
+}
+
+/// Learn from sample activations [n, D] and a weight matrix [D, M].
+pub fn learn_maddness(
+    activations: &[f32],
+    n: usize,
+    d: usize,
+    weight: &[f32],
+    m: usize,
+    bias: Option<Vec<f32>>,
+    c: usize,
+    depth: usize,
+    seed: u64,
+) -> MaddnessOp {
+    assert_eq!(d % c, 0);
+    let v = d / c;
+    let k = 1usize << depth;
+    let mut trees = Vec::with_capacity(c);
+    let mut table = vec![0.0f32; c * k * m];
+    let mut slab = vec![0.0f32; n * v];
+    for ci in 0..c {
+        for i in 0..n {
+            slab[i * v..(i + 1) * v]
+                .copy_from_slice(&activations[i * d + ci * v..i * d + (ci + 1) * v]);
+        }
+        let tree = learn_hash_tree(&slab, n, v, depth, seed + ci as u64);
+        for b in 0..k {
+            let proto = &tree.prototypes[b * v..(b + 1) * v];
+            let out = &mut table[(ci * k + b) * m..(ci * k + b + 1) * m];
+            for (vi, &pv) in proto.iter().enumerate() {
+                let wrow = &weight[(ci * v + vi) * m..(ci * v + vi + 1) * m];
+                for (o, &w) in out.iter_mut().zip(wrow) {
+                    *o += pv * w;
+                }
+            }
+        }
+        trees.push(tree);
+    }
+    MaddnessOp { trees, table, m, bias }
+}
+
+/// Approximate `a @ B` (a: [n, D]) via hash encoding + table accumulation.
+pub fn maddness_amm(op: &MaddnessOp, a: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let c = op.trees.len();
+    let v = d / c;
+    let k = op.trees[0].n_buckets();
+    let m = op.m;
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let dst = &mut out[i * m..(i + 1) * m];
+        for (ci, tree) in op.trees.iter().enumerate() {
+            let sub = &a[i * d + ci * v..i * d + (ci + 1) * v];
+            let b = tree.encode(sub);
+            let row = &op.table[(ci * k + b) * m..(ci * k + b + 1) * m];
+            for (o, &t) in dst.iter_mut().zip(row) {
+                *o += t;
+            }
+        }
+        if let Some(bias) = &op.bias {
+            for (o, &bb) in dst.iter_mut().zip(bias) {
+                *o += bb;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::kmeans;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn tree_encode_in_range_and_deterministic() {
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(256 * 4, 1.0);
+        let tree = learn_hash_tree(&x, 256, 4, 4, 0);
+        for i in 0..256 {
+            let b = tree.encode(&x[i * 4..(i + 1) * 4]);
+            assert!(b < 16);
+            assert_eq!(b, tree.encode(&x[i * 4..(i + 1) * 4]));
+        }
+    }
+
+    #[test]
+    fn median_splits_are_balanced() {
+        let mut rng = Prng::new(1);
+        let x = rng.normal_vec(1024 * 4, 1.0);
+        let tree = learn_hash_tree(&x, 1024, 4, 4, 0);
+        let mut counts = vec![0usize; 16];
+        for i in 0..1024 {
+            counts[tree.encode(&x[i * 4..(i + 1) * 4])] += 1;
+        }
+        assert!(*counts.iter().max().unwrap() < 1024 / 16 * 4, "{counts:?}");
+    }
+
+    #[test]
+    fn amm_captures_signal() {
+        let mut rng = Prng::new(2);
+        let (n, d, m, c) = (512, 12, 8, 3);
+        let a = rng.normal_vec(n * d, 1.0);
+        let w = rng.normal_vec(d * m, 1.0);
+        let op = learn_maddness(&a, n, d, &w, m, None, c, 4, 0);
+        let approx = maddness_amm(&op, &a, n, d);
+        // exact
+        let mut exact = vec![0.0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                exact[i * m + j] =
+                    (0..d).map(|t| a[i * d + t] * w[t * m + j]).sum();
+            }
+        }
+        let err: f32 = approx.iter().zip(&exact).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / (n * m) as f32;
+        let base: f32 = exact.iter().map(|x| x * x).sum::<f32>() / (n * m) as f32;
+        assert!(err < base, "err={err} base={base}");
+        assert!(err > 1e-6);
+    }
+
+    #[test]
+    fn hashing_worse_than_kmeans_at_equal_k() {
+        // Paper §2.1 / Fig. 3: hashing encoding has higher quantization
+        // error than k-means argmin encoding.
+        let mut rng = Prng::new(3);
+        let (n, v) = (1024, 4);
+        let x = rng.normal_vec(n * v, 1.0);
+        let tree = learn_hash_tree(&x, n, v, 4, 0);
+        let (centers, _) = kmeans::kmeans(&x, n, v, 16, 25, 0);
+        let d2 = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum()
+        };
+        let mut err_hash = 0.0f64;
+        let mut err_kmeans = 0.0f64;
+        for i in 0..n {
+            let sub = &x[i * v..(i + 1) * v];
+            let b = tree.encode(sub);
+            err_hash += d2(sub, &tree.prototypes[b * v..(b + 1) * v]) as f64;
+            let best = (0..16)
+                .map(|c| d2(sub, &centers[c * v..(c + 1) * v]))
+                .fold(f32::INFINITY, f32::min);
+            err_kmeans += best as f64;
+        }
+        assert!(err_hash > err_kmeans, "hash={err_hash} kmeans={err_kmeans}");
+    }
+
+    #[test]
+    fn bias_applied() {
+        let mut rng = Prng::new(4);
+        let (n, d, m) = (16, 4, 3);
+        let a = rng.normal_vec(n * d, 1.0);
+        let w = rng.normal_vec(d * m, 1.0);
+        let bias = vec![1.0, 2.0, 3.0];
+        let op = learn_maddness(&a, n, d, &w, m, Some(bias.clone()), 2, 3, 0);
+        let mut op0 = op.clone();
+        op0.bias = None;
+        let with = maddness_amm(&op, &a, n, d);
+        let without = maddness_amm(&op0, &a, n, d);
+        for i in 0..n {
+            for j in 0..m {
+                assert!((with[i * m + j] - without[i * m + j] - bias[j]).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Product-quantization substrate: codebooks, k-means learning, scalar
+//! quantization and the MADDNESS hashing baseline (paper §2).
+
+pub mod kmeans;
+pub mod maddness;
+pub mod quantize;
+
+use crate::tensor::QTable;
+
+/// Codebooks for one linear operator: centroids [C, K, V] row-major.
+#[derive(Debug, Clone)]
+pub struct Codebooks {
+    pub data: Vec<f32>,
+    pub c: usize,
+    pub k: usize,
+    pub v: usize,
+}
+
+impl Codebooks {
+    pub fn new(c: usize, k: usize, v: usize, data: Vec<f32>) -> Codebooks {
+        assert_eq!(data.len(), c * k * v);
+        Codebooks { data, c, k, v }
+    }
+
+    #[inline]
+    pub fn centroid(&self, c: usize, k: usize) -> &[f32] {
+        let base = (c * self.k + k) * self.v;
+        &self.data[base..base + self.v]
+    }
+
+    /// Per-codebook slab [K, V].
+    #[inline]
+    pub fn codebook(&self, c: usize) -> &[f32] {
+        let base = c * self.k * self.v;
+        &self.data[base..base + self.k * self.v]
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.c * self.v
+    }
+
+    /// |p|^2 per centroid, [C, K] — precomputed for the distance fast path.
+    pub fn sq_norms(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.c * self.k];
+        for c in 0..self.c {
+            for k in 0..self.k {
+                out[c * self.k + k] =
+                    self.centroid(c, k).iter().map(|x| x * x).sum();
+            }
+        }
+        out
+    }
+}
+
+/// Build the lookup table T[c,k] = centroid(c,k) . B[c*V..(c+1)*V, :]
+/// (paper Eq. 3). `weight` is [D, M] row-major.
+pub fn build_table(cb: &Codebooks, weight: &[f32], m: usize) -> Vec<f32> {
+    let d = cb.input_dim();
+    assert_eq!(weight.len(), d * m, "weight must be [D={d}, M={m}]");
+    let mut table = vec![0.0f32; cb.c * cb.k * m];
+    for c in 0..cb.c {
+        for k in 0..cb.k {
+            let cent = cb.centroid(c, k);
+            let out = &mut table[(c * cb.k + k) * m..(c * cb.k + k + 1) * m];
+            for (vi, &pv) in cent.iter().enumerate() {
+                let wrow = &weight[(c * cb.v + vi) * m..(c * cb.v + vi + 1) * m];
+                for (o, &w) in out.iter_mut().zip(wrow) {
+                    *o += pv * w;
+                }
+            }
+        }
+    }
+    table
+}
+
+/// Quantize a real-valued table [C, K, M] into a QTable (paper §3.3).
+pub fn quantize_table(table: &[f32], c: usize, k: usize, m: usize, bits: u8) -> QTable {
+    let (data, scale) = quantize::quantize_symmetric_per_group(table, c, k * m, bits);
+    QTable { data, c, k, m, scale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codebook_indexing() {
+        let cb = Codebooks::new(2, 2, 3, (0..12).map(|i| i as f32).collect());
+        assert_eq!(cb.centroid(1, 0), &[6.0, 7.0, 8.0]);
+        assert_eq!(cb.codebook(0).len(), 6);
+        assert_eq!(cb.input_dim(), 6);
+    }
+
+    #[test]
+    fn sq_norms() {
+        let cb = Codebooks::new(1, 2, 2, vec![3.0, 4.0, 0.0, 1.0]);
+        assert_eq!(cb.sq_norms(), vec![25.0, 1.0]);
+    }
+
+    #[test]
+    fn build_table_matches_naive() {
+        // C=1, K=2, V=2, M=2; B = identity-ish
+        let cb = Codebooks::new(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let weight = vec![1.0, 0.0, 0.0, 1.0]; // [2,2] identity
+        let t = build_table(&cb, &weight, 2);
+        assert_eq!(t, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Range-based symmetric scalar quantization (paper §3.3).
+//!
+//! r = s * q with zero-point 0; s = max|value| / (2^(n-1) - 1) per group
+//! (one group = one codebook's K*M table slab). INT8 is the deployed
+//! format; INT4 is supported for the §6.3 quantization-level ablation
+//! (stored widened to i8 — commodity SIMD has no native int4 lanes, as
+//! the paper notes).
+
+/// Quantize `values` ([groups, group_len] row-major) symmetrically per
+/// group. Returns (quantized i8, per-group scale).
+pub fn quantize_symmetric_per_group(
+    values: &[f32],
+    groups: usize,
+    group_len: usize,
+    bits: u8,
+) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(values.len(), groups * group_len);
+    assert!((2..=8).contains(&bits), "bits must be in 2..=8");
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmin = -qmax - 1.0;
+    let mut q = vec![0i8; values.len()];
+    let mut scales = vec![1.0f32; groups];
+    for g in 0..groups {
+        let slab = &values[g * group_len..(g + 1) * group_len];
+        let absmax = slab.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+        scales[g] = scale;
+        for (dst, &v) in q[g * group_len..(g + 1) * group_len].iter_mut().zip(slab) {
+            *dst = (v / scale).round().clamp(qmin, qmax) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Dequantize back to f32 (test/diagnostic path; the engine accumulates
+/// in integer space and applies the scale once per codebook).
+pub fn dequantize_per_group(
+    q: &[i8],
+    scales: &[f32],
+    group_len: usize,
+) -> Vec<f32> {
+    q.iter()
+        .enumerate()
+        .map(|(i, &v)| v as f32 * scales[i / group_len])
+        .collect()
+}
+
+/// Max representable quantization error for a group scale.
+pub fn max_error(scale: f32) -> f32 {
+    scale * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Prng, prop};
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Prng::new(0);
+        let vals = rng.normal_vec(4 * 32, 3.0);
+        let (q, s) = quantize_symmetric_per_group(&vals, 4, 32, 8);
+        let deq = dequantize_per_group(&q, &s, 32);
+        for (g, chunk) in vals.chunks(32).enumerate() {
+            for (i, &v) in chunk.iter().enumerate() {
+                let err = (v - deq[g * 32 + i]).abs();
+                assert!(err <= max_error(s[g]) + 1e-6, "err={err} scale={}", s[g]);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_range() {
+        let mut rng = Prng::new(1);
+        let vals = rng.normal_vec(2 * 16, 1.0);
+        let (q, _) = quantize_symmetric_per_group(&vals, 2, 16, 4);
+        assert!(q.iter().all(|&v| (-8..=7).contains(&v)));
+    }
+
+    #[test]
+    fn zero_group_scale_one() {
+        let vals = vec![0.0f32; 8];
+        let (q, s) = quantize_symmetric_per_group(&vals, 1, 8, 8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(s[0], 1.0);
+    }
+
+    #[test]
+    fn property_int8_roundtrip() {
+        prop::check(50, |g| {
+            let groups = g.usize(1..5);
+            let len = g.usize(1..64);
+            let vals = g.f32_vec(groups * len, 5.0);
+            let (q, s) = quantize_symmetric_per_group(&vals, groups, len, 8);
+            let deq = dequantize_per_group(&q, &s, len);
+            for i in 0..vals.len() {
+                let tol = max_error(s[i / len]) + 1e-6;
+                if (vals[i] - deq[i]).abs() > tol {
+                    return Err(format!("i={i}: {} vs {}", vals[i], deq[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn coarser_bits_higher_error() {
+        let mut rng = Prng::new(2);
+        let vals = rng.normal_vec(256, 2.0);
+        let err = |bits| {
+            let (q, s) = quantize_symmetric_per_group(&vals, 1, 256, bits);
+            let deq = dequantize_per_group(&q, &s, 256);
+            vals.iter()
+                .zip(&deq)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+        };
+        assert!(err(4) > err(8));
+    }
+}

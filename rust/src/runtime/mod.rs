@@ -1,0 +1,258 @@
+//! PJRT runtime: load AOT-compiled HLO text (from `python/compile/aot.py`)
+//! and execute it on the CPU PJRT client via the `xla` crate.
+//!
+//! HLO **text** is the interchange format — jax >= 0.5 serialized protos
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! One `PjRtEngine` holds the client; each loaded graph is compiled once
+//! into a `CompiledModel` and executed from the request path with no
+//! python anywhere.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub struct PjRtEngine {
+    client: xla::PjRtClient,
+}
+
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    /// expected input element count (sanity check at call time), if known
+    pub input_len: Option<usize>,
+}
+
+impl PjRtEngine {
+    pub fn cpu() -> Result<PjRtEngine> {
+        Ok(PjRtEngine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file produced by the AOT path.
+    pub fn load_hlo_text(&self, path: &str, input_len: Option<usize>) -> Result<CompiledModel> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        let name = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.to_string());
+        Ok(CompiledModel { exe, name, input_len })
+    }
+}
+
+impl CompiledModel {
+    /// Execute with one f32 input tensor; returns the first tuple element
+    /// as a flat f32 vec (AOT graphs are lowered with return_tuple=True).
+    pub fn run_f32(&self, input: &Tensor) -> Result<Vec<f32>> {
+        if let Some(expect) = self.input_len {
+            anyhow::ensure!(
+                input.len() == expect,
+                "input len {} != compiled len {}",
+                input.len(),
+                expect
+            );
+        }
+        let dims: Vec<i64> = input.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&input.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+        self.run_literals(&[lit])
+    }
+
+    /// Execute with an i32 input tensor (token ids for the BERT graphs).
+    pub fn run_i32(&self, values: &[i32], shape: &[usize]) -> Result<Vec<f32>> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(values)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+        self.run_literals(&[lit])
+    }
+
+    /// Execute with arbitrary pre-built literals (multi-input op graphs).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("expected 1-tuple output: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT host thread
+// ---------------------------------------------------------------------
+//
+// The `xla` crate's client/executable types hold `Rc`s and raw pointers
+// and are neither Send nor Sync, but the coordinator is multi-threaded.
+// A single dedicated host thread owns the PJRT client and every compiled
+// model; other threads talk to it over a channel (one in-flight request
+// at a time per host — the CPU PJRT client is single-stream anyway).
+
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Mutex;
+
+/// Input payload for a hosted model call.
+pub enum HostInput {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+struct HostJob {
+    model: usize,
+    input: HostInput,
+    reply: SyncSender<Result<Vec<f32>>>,
+}
+
+/// Handle to the PJRT host thread; cheap to clone, Send + Sync.
+pub struct PjrtHost {
+    tx: Mutex<SyncSender<HostJob>>,
+    _thread: std::thread::JoinHandle<()>,
+}
+
+/// One hosted compiled model.
+#[derive(Clone)]
+pub struct HostedModel {
+    host: std::sync::Arc<PjrtHost>,
+    id: usize,
+    pub name: String,
+}
+
+impl PjrtHost {
+    /// Spawn the host thread, loading+compiling each HLO text file.
+    /// Returns handles in the same order as `paths`.
+    pub fn spawn(paths: Vec<String>) -> Result<(std::sync::Arc<PjrtHost>, Vec<HostedModel>)> {
+        let (tx, rx) = mpsc::sync_channel::<HostJob>(64);
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<Vec<String>>>(1);
+        let paths2 = paths.clone();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-host".into())
+            .spawn(move || {
+                let engine = match PjRtEngine::cpu() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut models = Vec::new();
+                let mut names = Vec::new();
+                for p in &paths2 {
+                    match engine.load_hlo_text(p, None) {
+                        Ok(m) => {
+                            names.push(m.name.clone());
+                            models.push(m);
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+                let _ = ready_tx.send(Ok(names));
+                while let Ok(job) = rx.recv() {
+                    let result = match &job.input {
+                        HostInput::F32(data, shape) => models[job.model]
+                            .run_f32(&Tensor::new(shape.clone(), data.clone())),
+                        HostInput::I32(data, shape) => {
+                            models[job.model].run_i32(data, shape)
+                        }
+                    };
+                    let _ = job.reply.send(result);
+                }
+            })?;
+        let names = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt host died during startup"))??;
+        let host = std::sync::Arc::new(PjrtHost { tx: Mutex::new(tx), _thread: thread });
+        let handles = names
+            .into_iter()
+            .enumerate()
+            .map(|(id, name)| HostedModel { host: std::sync::Arc::clone(&host), id, name })
+            .collect();
+        Ok((host, handles))
+    }
+}
+
+impl HostedModel {
+    pub fn run(&self, input: HostInput) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.host
+            .tx
+            .lock()
+            .unwrap()
+            .send(HostJob { model: self.id, input, reply: reply_tx })
+            .map_err(|_| anyhow!("pjrt host shut down"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt host dropped request"))?
+    }
+}
+
+/// Artifact path relative to the repo root, honoring the LUTNN_ARTIFACTS
+/// env var so tests/benches run from any cwd.
+pub fn artifact_path(name: &str) -> String {
+    let dir = std::env::var("LUTNN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    format!("{dir}/{name}")
+}
+
+/// True if `make artifacts` outputs are present.
+pub fn artifacts_available() -> bool {
+    std::path::Path::new(&artifact_path("manifest.json")).exists()
+}
+
+/// Read a flat little-endian f32 binary file (golden vectors).
+pub fn read_f32_file(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{path}: not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT integration tests that need artifacts live in
+    // rust/tests/; here only the cheap pieces (no env mutation races).
+
+    #[test]
+    fn artifact_path_default() {
+        if std::env::var("LUTNN_ARTIFACTS").is_err() {
+            assert_eq!(artifact_path("x.hlo.txt"), "artifacts/x.hlo.txt");
+        }
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let eng = PjRtEngine::cpu().expect("PJRT CPU client");
+        assert!(!eng.platform().is_empty());
+    }
+
+    #[test]
+    fn read_f32_file_roundtrip() {
+        let p = std::env::temp_dir().join("lutnn_f32_test.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let got = read_f32_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(got, vals);
+    }
+}

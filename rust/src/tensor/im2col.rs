@@ -1,0 +1,116 @@
+//! im2col: NHWC activations -> [N*Ho*Wo, Cin*k*k] patch matrix.
+//!
+//! Layout contract (shared with python `layers.im2col` and the pallas
+//! kernel): the patch feature dimension is (Cin, kh, kw) **channel-major**
+//! so that with V = k*k each codebook covers exactly one input channel's
+//! window — the paper's (K, V) = (16, 9) for 3x3 convolutions.
+
+use super::Tensor;
+
+/// "SAME" padding for stride-s convolution (TF semantics, matches jax).
+pub fn same_padding(in_size: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = in_size.div_ceil(stride);
+    let pad_total = ((out - 1) * stride + k).saturating_sub(in_size);
+    (pad_total / 2, pad_total - pad_total / 2)
+}
+
+/// Output spatial size for SAME padding.
+pub fn same_out_size(in_size: usize, stride: usize) -> usize {
+    in_size.div_ceil(stride)
+}
+
+/// NHWC -> patches [N*Ho*Wo, Cin*k*k], channel-major feature order.
+pub fn im2col(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    assert_eq!(x.rank(), 4, "im2col expects NHWC");
+    let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (pad_top, _) = same_padding(h, k, stride);
+    let (pad_left, _) = same_padding(w, k, stride);
+    let ho = same_out_size(h, stride);
+    let wo = same_out_size(w, stride);
+    let d = cin * k * k;
+    let mut out = vec![0.0f32; n * ho * wo * d];
+
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((ni * ho + oy) * wo + ox) * d;
+                let iy0 = (oy * stride) as isize - pad_top as isize;
+                let ix0 = (ox * stride) as isize - pad_left as isize;
+                for ci in 0..cin {
+                    let base = row + ci * k * k;
+                    for ky in 0..k {
+                        let iy = iy0 + ky as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue; // zero padding
+                        }
+                        for kx in 0..k {
+                            let ix = ix0 + kx as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            out[base + ky * k + kx] =
+                                x.data[x.nhwc_offset(ni, iy as usize, ix as usize, ci)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n * ho * wo, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_matches_tf() {
+        assert_eq!(same_padding(5, 3, 1), (1, 1));
+        assert_eq!(same_padding(5, 3, 2), (1, 1));
+        assert_eq!(same_padding(4, 2, 2), (0, 0));
+        assert_eq!(same_out_size(5, 2), 3);
+    }
+
+    #[test]
+    fn center_patch_channel_major() {
+        // 1x3x3x2 input with distinct values; center patch must be
+        // [ch0 3x3 window..., ch1 3x3 window...]
+        let x = Tensor::new(
+            vec![1, 3, 3, 2],
+            (0..18).map(|i| i as f32).collect(),
+        );
+        let p = im2col(&x, 3, 1);
+        assert_eq!(p.shape, vec![9, 18]);
+        let center = &p.data[4 * 18..5 * 18];
+        let ch0: Vec<f32> = (0..9).map(|i| (i * 2) as f32).collect();
+        let ch1: Vec<f32> = (0..9).map(|i| (i * 2 + 1) as f32).collect();
+        assert_eq!(&center[..9], ch0.as_slice());
+        assert_eq!(&center[9..], ch1.as_slice());
+    }
+
+    #[test]
+    fn padding_zeros_at_corner() {
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let p = im2col(&x, 3, 1);
+        // top-left output patch: the first row+col of the 3x3 window is pad
+        let patch = &p.data[0..9];
+        assert_eq!(patch[0], 0.0); // (-1,-1)
+        assert_eq!(patch[4], 1.0); // center = x[0,0]
+        assert_eq!(patch[8], 4.0); // (1,1) = x[1,1]
+    }
+
+    #[test]
+    fn stride_two_shape() {
+        let x = Tensor::zeros(vec![2, 8, 8, 4]);
+        let p = im2col(&x, 3, 2);
+        assert_eq!(p.shape, vec![2 * 4 * 4, 4 * 9]);
+    }
+
+    #[test]
+    fn one_by_one_kernel_is_identity_rows() {
+        let x = Tensor::new(vec![1, 2, 2, 3], (0..12).map(|i| i as f32).collect());
+        let p = im2col(&x, 1, 1);
+        assert_eq!(p.shape, vec![4, 3]);
+        assert_eq!(p.data, x.data); // same ordering for 1x1
+    }
+}

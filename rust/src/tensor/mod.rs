@@ -1,0 +1,176 @@
+//! Tensor substrate: dense row-major f32 tensors + im2col.
+//!
+//! Deliberately minimal — the engine works on 2-D matrices ([rows, D]
+//! im2col patches) and NHWC 4-D activations; no autograd (training lives
+//! in L2 python), no broadcasting zoo.
+
+pub mod im2col;
+
+/// Dense row-major f32 tensor with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of leading-dim rows when viewed as [rows, cols].
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Row-major element offset for an NHWC index.
+    #[inline]
+    pub fn nhwc_offset(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        debug_assert_eq!(self.rank(), 4);
+        ((n * self.shape[1] + h) * self.shape[2] + w) * self.shape[3] + c
+    }
+
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        self.data[self.nhwc_offset(n, h, w, c)]
+    }
+
+    /// Max-abs difference to another tensor (shape-checked).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mean squared difference (Fig. 3 MSE metric).
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1) as f32;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n
+    }
+
+    /// Argmax along the last axis of a 2-D tensor (classification).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let cols = self.cols();
+        self.data
+            .chunks_exact(cols)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Quantized INT8 matrix blob with per-codebook scales — the lookup-table
+/// storage type (paper §3.3).
+#[derive(Debug, Clone)]
+pub struct QTable {
+    /// [C, K, M] row-major
+    pub data: Vec<i8>,
+    pub c: usize,
+    pub k: usize,
+    pub m: usize,
+    /// per-codebook symmetric scale, len C
+    pub scale: Vec<f32>,
+}
+
+impl QTable {
+    #[inline]
+    pub fn row(&self, c: usize, k: usize) -> &[i8] {
+        let base = (c * self.k + k) * self.m;
+        &self.data[base..base + self.m]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(vec![1, 2, 2, 3], (0..12).map(|i| i as f32).collect());
+        assert_eq!(t.at4(0, 1, 0, 2), 8.0);
+        assert_eq!(t.nhwc_offset(0, 1, 1, 0), 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, 5.0, 1.0, 9.0, 2.0, 3.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn mse_and_diff() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![1, 2], vec![1.0, 4.0]);
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+        assert_eq!(a.mse(&b), 2.0);
+    }
+
+    #[test]
+    fn qtable_row() {
+        let q = QTable {
+            data: (0..24).map(|i| i as i8).collect(),
+            c: 2,
+            k: 3,
+            m: 4,
+            scale: vec![1.0, 0.5],
+        };
+        assert_eq!(q.row(1, 2), &[20, 21, 22, 23]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Criterion-less micro-benchmark harness.
+//!
+//! Warmup + timed iterations with per-iteration wall-clock sampling,
+//! producing a `stats::Summary`. Benches (one per paper table/figure)
+//! print aligned tables and append machine-readable JSON lines to
+//! `results/bench.jsonl` so EXPERIMENTS.md can be regenerated.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::Summary;
+
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 2000,
+            target_time: Duration::from_millis(700),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean * 1e6
+    }
+}
+
+/// Run `f` repeatedly; each call is one sample. Returns per-iter stats.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.min_iters);
+    let start = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || start.elapsed() < cfg.target_time)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Append a JSON line describing a bench row to `results/bench.jsonl`.
+pub fn record_jsonl(bench_file: &str, row: &Json) {
+    use std::io::Write;
+    let _ = std::fs::create_dir_all("results");
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(format!("results/{bench_file}"))
+    {
+        let _ = writeln!(f, "{}", super::json::to_string(row));
+    }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            target_time: Duration::from_millis(1),
+        };
+        let r = bench("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.min <= r.summary.p50);
+        assert!(r.summary.p50 <= r.summary.max);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["op", "ms"]);
+        t.row(&["conv1".into(), "1.25".into()]);
+        t.print(); // visual; just ensure no panic
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser: subcommand + `--flag value` / `--switch`.
+//!
+//! Grammar note: a `--name` followed by a non-`--` token greedily binds
+//! it as the flag's value, so bare switches must come after positionals
+//! or use no trailing token (`lutnn infer bundle.lutnn --naive`). Use
+//! `--flag=value` to be unambiguous.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --key=value or --key value or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve model.lutnn --port 7070 --threads=2 --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("port", 0), 7070);
+        assert_eq!(a.get_usize("threads", 0), 2);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["model.lutnn"]);
+    }
+
+    #[test]
+    fn greedy_value_binding_documented() {
+        // `--verbose model.lutnn` binds the token as a value — the
+        // documented ambiguity of the grammar.
+        let a = parse("serve --verbose model.lutnn");
+        assert_eq!(a.get("verbose"), Some("model.lutnn"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("mode", "native"), "native");
+        assert_eq!(a.get_f64("rate", 1.5), 1.5);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.command, None);
+        assert!(a.has("help"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("infer --offset -3");
+        // "-3" does not start with "--" so it is consumed as the value
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Dependency-free substrates: JSON codec, PRNG, statistics, thread pool,
+//! CLI parsing, micro-benchmark harness and a property-testing helper.
+//!
+//! The build environment vendors only the `xla` crate's closure, so the
+//! conveniences normally imported from crates.io (serde, rayon, clap,
+//! criterion, proptest) are implemented here at the scale this project
+//! needs (DESIGN.md S13/S18/S19).
+
+pub mod benchmark;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,131 @@
+//! Property-testing substrate: seeded random case generation with
+//! first-failure shrink-lite reporting (proptest is not vendored).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(100, |g| {
+//!     let n = g.usize(1..64);
+//!     let xs = g.f32_vec(n, 10.0);
+//!     // ... assert invariant, return Err(msg) to fail
+//!     Ok(())
+//! });
+//! ```
+
+use super::prng::Prng;
+
+pub struct Gen {
+    rng: Prng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    pub fn f32(&mut self, scale: f32) -> f32 {
+        self.rng.normal() * scale
+    }
+
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, scale)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of property `f`. Panics with the seed of the
+/// first failing case so it can be replayed with `check_one`.
+pub fn check<F>(cases: usize, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(0xC0FFEE, cases, f)
+}
+
+pub fn check_seeded<F>(seed: u64, cases: usize, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B9);
+        let mut g = Gen { rng: Prng::new(case_seed), case_seed };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property failed on case {case} (replay: check_one({case_seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_one<F>(case_seed: u64, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Prng::new(case_seed), case_seed };
+    if let Err(msg) = f(&mut g) {
+        panic!("property failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "elem {i}: {x} vs {y} (|diff|={} > tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(50, |g| {
+            let n = g.usize(1..100);
+            let xs = g.f32_vec(n, 1.0);
+            if xs.len() == n {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, |g| {
+            let n = g.usize(1..100);
+            if n < 90 {
+                Ok(())
+            } else {
+                Err(format!("n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3, 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[2.0], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+}

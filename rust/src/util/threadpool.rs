@@ -1,0 +1,173 @@
+//! Fixed-size worker thread pool with scoped parallel-for.
+//!
+//! The coordinator's worker pool and the multi-thread benches (Fig. 9)
+//! build on this. Plain std threads + channels; no external deps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived pool: submit boxed jobs, drop to join.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("lutnn-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { workers, sender: Some(sender), size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker hung up");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Split `0..n` into contiguous chunks and run `f(range)` on `threads`
+/// scoped threads (no 'static bound). Returns when all chunks finish.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+/// Work-stealing-lite dynamic scheduling over `n` items: threads pull the
+/// next index from a shared atomic counter. Better than static chunks when
+/// per-item cost varies (e.g. mixed request sizes).
+pub fn parallel_items<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let counter = &counter;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_chunks_covers_range() {
+        let hits: Vec<AtomicUsize> =
+            (0..103).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(103, 4, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_items_covers_range() {
+        let hits: Vec<AtomicUsize> =
+            (0..57).map(|_| AtomicUsize::new(0)).collect();
+        parallel_items(57, 3, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut hit = vec![false; 10];
+        let cell = std::sync::Mutex::new(&mut hit);
+        parallel_chunks(10, 1, |r| {
+            let mut g = cell.lock().unwrap();
+            for i in r {
+                g[i] = true;
+            }
+        });
+        assert!(hit.iter().all(|&b| b));
+    }
+}
