@@ -1,25 +1,45 @@
 //! Paper Fig. 8: end-to-end model latency, LUT-NN vs dense.
 //!
-//! Three measurements:
+//! Three measurements, all through the unified `api` entry points
+//! (`SessionBuilder` -> `Session` for native, `Engine` for PJRT):
 //!   1. VGG11 (CIFAR10) at the paper's exact layer shapes, rust-native
 //!      engine: dense (im2col+GEMM) vs LUT (converted in-process).
 //!   2. The trained resnet_tiny bundles (requires `make artifacts`),
 //!      native engine dense vs LUT.
-//!   3. The same trained models through the PJRT runtime (AOT XLA graphs).
+//!   3. The same trained models through the PJRT runtime (AOT XLA
+//!      graphs), behind the same `Engine` trait the coordinator uses.
 //!
 //! The paper reports 1.3–4.2x CNN speedups and ~5-7x for BERT; the shape
 //! to reproduce is LUT < dense on every model, growing with width.
 //!
 //! Run: `cargo bench --bench e2e_latency`
 
+use lutnn::api::{Engine, PjrtEngine, SessionBuilder};
 use lutnn::lut::LutOpts;
 use lutnn::model_fmt;
+use lutnn::nn::graph::Graph;
 use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
-use lutnn::runtime::{artifact_path, artifacts_available, PjRtEngine};
+use lutnn::runtime::{artifact_path, artifacts_available, pjrt_available, PjrtHost};
 use lutnn::tensor::Tensor;
 use lutnn::util::benchmark::{bench, black_box, record_jsonl, BenchConfig, Table};
 use lutnn::util::json::Json;
 use lutnn::util::prng::Prng;
+
+/// Bench one compiled session on `x` (reused output tensor: the timed
+/// loop allocates nothing).
+fn bench_session(name: &str, cfg: &BenchConfig, graph: &Graph, x: &Tensor) -> f64 {
+    let mut sess = SessionBuilder::new(graph)
+        .opts(LutOpts::deployed())
+        .max_batch(x.shape[0])
+        .build()
+        .expect("compile session");
+    let mut out = Tensor::zeros(vec![0]);
+    let r = bench(name, cfg, || {
+        sess.run(black_box(x), &mut out).expect("forward");
+        black_box(&out);
+    });
+    r.summary.mean
+}
 
 fn main() {
     let cfg = BenchConfig { min_iters: 4, max_iters: 30, ..Default::default() };
@@ -45,26 +65,22 @@ fn main() {
     eprintln!("converting VGG11 to LUT (k-means on activations)...");
     let lut_g = lutify_graph(&dense_g, &sample, 16, 8, 0);
     let x = Tensor::new(vec![1, 32, 32, 3], rng.normal_vec(32 * 32 * 3, 1.0));
-    let d = bench("vgg dense", &cfg, || {
-        black_box(dense_g.run(x.clone(), LutOpts::deployed()));
-    });
-    let l = bench("vgg lut", &cfg, || {
-        black_box(lut_g.run(x.clone(), LutOpts::deployed()));
-    });
+    let d = bench_session("vgg dense", &cfg, &dense_g, &x);
+    let l = bench_session("vgg lut", &cfg, &lut_g, &x);
     t.row(&[
         "VGG11 (CIFAR10)".into(),
         "native".into(),
-        format!("{:.2}", d.mean_ms()),
-        format!("{:.2}", l.mean_ms()),
-        format!("{:.2}x", d.summary.mean / l.summary.mean),
+        format!("{:.2}", d * 1e3),
+        format!("{:.2}", l * 1e3),
+        format!("{:.2}x", d / l),
     ]);
     record_jsonl(
         "fig8_e2e.jsonl",
         &Json::obj(vec![
             ("model", Json::str("VGG11 (CIFAR10)")),
             ("engine", Json::str("native")),
-            ("dense_ms", Json::num(d.mean_ms())),
-            ("lut_ms", Json::num(l.mean_ms())),
+            ("dense_ms", Json::num(d * 1e3)),
+            ("lut_ms", Json::num(l * 1e3)),
         ]),
     );
 
@@ -73,59 +89,59 @@ fn main() {
         let dense_b = model_fmt::load_bundle(&artifact_path("resnet_tiny_dense.lutnn")).unwrap();
         let lut_b = model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn")).unwrap();
         let xb = Tensor::new(vec![8, 16, 16, 3], rng.normal_vec(8 * 16 * 16 * 3, 1.0));
-        let d = bench("tiny dense", &cfg, || {
-            black_box(dense_b.run(xb.clone(), LutOpts::deployed()));
-        });
-        let l = bench("tiny lut", &cfg, || {
-            black_box(lut_b.run(xb.clone(), LutOpts::deployed()));
-        });
+        let d = bench_session("tiny dense", &cfg, &dense_b, &xb);
+        let l = bench_session("tiny lut", &cfg, &lut_b, &xb);
         t.row(&[
             "resnet_tiny (b8)".into(),
             "native".into(),
-            format!("{:.2}", d.mean_ms()),
-            format!("{:.2}", l.mean_ms()),
-            format!("{:.2}x", d.summary.mean / l.summary.mean),
+            format!("{:.2}", d * 1e3),
+            format!("{:.2}", l * 1e3),
+            format!("{:.2}x", d / l),
         ]);
 
         let bert_dense = model_fmt::load_bundle(&artifact_path("mini_bert_dense.lutnn")).unwrap();
         let bert_lut = model_fmt::load_bundle(&artifact_path("mini_bert_lut.lutnn")).unwrap();
         let tokens = Tensor::new(vec![8, 16], (0..128).map(|i| (i % 60) as f32).collect());
-        let d = bench("bert dense", &cfg, || {
-            black_box(bert_dense.run(tokens.clone(), LutOpts::deployed()));
-        });
-        let l = bench("bert lut", &cfg, || {
-            black_box(bert_lut.run(tokens.clone(), LutOpts::deployed()));
-        });
+        let d = bench_session("bert dense", &cfg, &bert_dense, &tokens);
+        let l = bench_session("bert lut", &cfg, &bert_lut, &tokens);
         t.row(&[
             "mini_bert (b8)".into(),
             "native".into(),
-            format!("{:.2}", d.mean_ms()),
-            format!("{:.2}", l.mean_ms()),
-            format!("{:.2}x", d.summary.mean / l.summary.mean),
+            format!("{:.2}", d * 1e3),
+            format!("{:.2}", l * 1e3),
+            format!("{:.2}x", d / l),
         ]);
 
-        // PJRT (XLA-compiled AOT graphs; XLA fuses the dense model far
-        // more aggressively — this measures the compiled-graph pair).
-        let engine = PjRtEngine::cpu().unwrap();
-        let pd = engine
-            .load_hlo_text(&artifact_path("resnet_tiny_dense_b8.hlo.txt"), None)
+        // PJRT (XLA-compiled AOT graphs) through the same Engine trait
+        // the coordinator dispatches on. XLA fuses the dense model far
+        // more aggressively — this measures the compiled-graph pair.
+        if pjrt_available() {
+            let (_host, mut models) = PjrtHost::spawn(vec![
+                artifact_path("resnet_tiny_dense_b8.hlo.txt"),
+                artifact_path("resnet_tiny_lut_b8.hlo.txt"),
+            ])
             .unwrap();
-        let pl = engine
-            .load_hlo_text(&artifact_path("resnet_tiny_lut_b8.hlo.txt"), None)
-            .unwrap();
-        let d = bench("pjrt dense", &cfg, || {
-            black_box(pd.run_f32(&xb).unwrap());
-        });
-        let l = bench("pjrt lut", &cfg, || {
-            black_box(pl.run_f32(&xb).unwrap());
-        });
-        t.row(&[
-            "resnet_tiny (b8)".into(),
-            "pjrt-xla".into(),
-            format!("{:.2}", d.mean_ms()),
-            format!("{:.2}", l.mean_ms()),
-            format!("{:.2}x", d.summary.mean / l.summary.mean),
-        ]);
+            let lut_eng = PjrtEngine::new(models.remove(1), 8, false);
+            let dense_eng = PjrtEngine::new(models.remove(0), 8, false);
+            let mut out = Tensor::zeros(vec![0]);
+            let d = bench("pjrt dense", &cfg, || {
+                dense_eng.run_batch(black_box(&xb), &mut out).unwrap();
+                black_box(&out);
+            });
+            let l = bench("pjrt lut", &cfg, || {
+                lut_eng.run_batch(black_box(&xb), &mut out).unwrap();
+                black_box(&out);
+            });
+            t.row(&[
+                "resnet_tiny (b8)".into(),
+                "pjrt-xla".into(),
+                format!("{:.2}", d.mean_ms()),
+                format!("{:.2}", l.mean_ms()),
+                format!("{:.2}x", d.summary.mean / l.summary.mean),
+            ]);
+        } else {
+            eprintln!("(PJRT unavailable in this build: skipping pjrt rows)");
+        }
     } else {
         eprintln!("(artifacts missing: run `make artifacts` for bundle rows)");
     }

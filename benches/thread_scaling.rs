@@ -7,21 +7,53 @@
 //! scaling projection from the single-thread time; on multi-core hosts
 //! the measured column reproduces the paper's 2.2-2.5x at 4 threads.
 //!
+//! Execution goes through compiled `Session`s — one per worker thread
+//! (chunked scheduling), so each thread owns its scratch arenas and
+//! the single-thread baseline stays on one warm session.
+//!
 //! Run: `cargo bench --bench thread_scaling`
 
+use lutnn::api::{Session, SessionBuilder};
 use lutnn::lut::LutOpts;
+use lutnn::nn::graph::Graph;
 use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
 use lutnn::tensor::Tensor;
 use lutnn::util::benchmark::{record_jsonl, Table};
 use lutnn::util::json::Json;
 use lutnn::util::prng::Prng;
-use lutnn::util::threadpool::parallel_items;
+use lutnn::util::threadpool::parallel_chunks;
+use std::sync::Mutex;
 use std::time::Instant;
 
-fn run_batch(graph: &lutnn::nn::graph::Graph, items: &[Tensor], threads: usize) -> f64 {
+/// One compiled session + reusable output per worker slot.
+type Slot = Mutex<(Session, Tensor)>;
+
+fn session_pool(graph: &Graph, slots: usize) -> Vec<Slot> {
+    (0..slots)
+        .map(|_| {
+            let sess = SessionBuilder::new(graph)
+                .opts(LutOpts::deployed())
+                .max_batch(1)
+                .build()
+                .expect("compile session");
+            Mutex::new((sess, Tensor::zeros(vec![0])))
+        })
+        .collect()
+}
+
+fn run_batch(pool: &[Slot], items: &[Tensor], threads: usize) -> f64 {
+    // Mirror parallel_chunks' thread/chunk split so each worker maps to
+    // its own session slot (uncontended, arenas stay warm per thread).
+    let threads = threads.max(1).min(items.len().max(1));
+    let chunk = items.len().div_ceil(threads);
     let t0 = Instant::now();
-    parallel_items(items.len(), threads, |i| {
-        std::hint::black_box(graph.run(items[i].clone(), LutOpts::deployed()));
+    parallel_chunks(items.len(), threads, |range| {
+        let mut slot = pool[range.start / chunk].lock().unwrap();
+        let (sess, out) = &mut *slot;
+        for i in range {
+            sess.run(&items[i], out).expect("forward");
+            std::hint::black_box(&*out);
+        }
     });
     t0.elapsed().as_secs_f64()
 }
@@ -41,9 +73,13 @@ fn main() {
         .map(|_| Tensor::new(vec![1, 32, 32, 3], rng.normal_vec(32 * 32 * 3, 1.0)))
         .collect();
 
-    // warmup
-    run_batch(&lut_g, &items, 1);
-    run_batch(&dense_g, &items, 1);
+    let max_threads = 4usize;
+    let dense_pool = session_pool(&dense_g, max_threads);
+    let lut_pool = session_pool(&lut_g, max_threads);
+
+    // warmup (settles every slot's arenas)
+    run_batch(&lut_pool, &items, 1);
+    run_batch(&dense_pool, &items, 1);
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("== Fig. 9: thread scaling (testbed has {cores} core(s)) ==\n");
@@ -55,11 +91,11 @@ fn main() {
         "lut scaling (measured)",
         "lut scaling (ideal)",
     ]);
-    let base_lut = run_batch(&lut_g, &items, 1);
-    let base_dense = run_batch(&dense_g, &items, 1);
+    let base_lut = run_batch(&lut_pool, &items, 1);
+    let base_dense = run_batch(&dense_pool, &items, 1);
     for threads in [1usize, 2, 4] {
-        let d = run_batch(&dense_g, &items, threads);
-        let l = run_batch(&lut_g, &items, threads);
+        let d = run_batch(&dense_pool, &items, threads);
+        let l = run_batch(&lut_pool, &items, threads);
         let ideal = threads.min(cores) as f64;
         t.row(&[
             threads.to_string(),

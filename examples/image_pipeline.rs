@@ -6,6 +6,7 @@
 //!
 //!   cargo run --release --example image_pipeline
 
+use lutnn::api::SessionBuilder;
 use lutnn::lut::LutOpts;
 use lutnn::model_fmt;
 use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
@@ -81,11 +82,20 @@ fn main() -> anyhow::Result<()> {
     println!("        converted in {:.2}s; params {} -> {} bytes",
              t0.elapsed().as_secs_f64(), dense.param_bytes(), lut.param_bytes());
 
-    // 3. fidelity: prediction agreement between dense and LUT models
+    // 3. fidelity: prediction agreement between dense and LUT models,
+    //    both compiled once to zero-alloc sessions
     println!("[3/5] fidelity check on 64 fresh images");
+    let mut dense_sess = SessionBuilder::new(&dense)
+        .opts(LutOpts::deployed())
+        .max_batch(64)
+        .build()?;
+    let mut lut_sess = SessionBuilder::new(&lut)
+        .opts(LutOpts::deployed())
+        .max_batch(64)
+        .build()?;
     let (test, _labels) = synth_image(&mut rng, 64, size);
-    let d_out = dense.run(test.clone(), LutOpts::deployed());
-    let l_out = lut.run(test.clone(), LutOpts::deployed());
+    let d_out = dense_sess.run_alloc(&test)?;
+    let l_out = lut_sess.run_alloc(&test)?;
     let agree = d_out
         .argmax_rows()
         .iter()
@@ -100,27 +110,35 @@ fn main() -> anyhow::Result<()> {
     let path = std::env::temp_dir().join("mobile_cnn_lut.lutnn");
     model_fmt::save_bundle(&lut, path.to_str().unwrap())?;
     let reloaded = model_fmt::load_bundle(path.to_str().unwrap())?;
-    let r_out = reloaded.run(test.clone(), LutOpts::deployed());
+    let mut reloaded_sess = SessionBuilder::new(&reloaded)
+        .opts(LutOpts::deployed())
+        .max_batch(64)
+        .build()?;
+    let r_out = reloaded_sess.run_alloc(&test)?;
     assert!(r_out.max_abs_diff(&l_out) < 1e-5, "bundle round-trip mismatch");
     println!("        round-trip exact ({} bytes on disk)",
              std::fs::metadata(&path)?.len());
 
-    // 5. latency comparison
+    // 5. latency comparison (sessions reuse their arenas and the output
+    //    tensor — the loop allocates nothing)
     println!("[5/5] latency (batch 16)");
     let (batch, _) = synth_image(&mut rng, 16, size);
+    let mut out = Tensor::zeros(vec![0]);
     for _ in 0..2 {
-        dense.run(batch.clone(), LutOpts::deployed());
-        lut.run(batch.clone(), LutOpts::deployed());
+        dense_sess.run(&batch, &mut out)?;
+        lut_sess.run(&batch, &mut out)?;
     }
     let reps = 10;
     let t0 = Instant::now();
     for _ in 0..reps {
-        std::hint::black_box(dense.run(batch.clone(), LutOpts::deployed()));
+        dense_sess.run(&batch, &mut out)?;
+        std::hint::black_box(&out);
     }
     let dt_dense = t0.elapsed().as_secs_f64() / reps as f64;
     let t0 = Instant::now();
     for _ in 0..reps {
-        std::hint::black_box(lut.run(batch.clone(), LutOpts::deployed()));
+        lut_sess.run(&batch, &mut out)?;
+        std::hint::black_box(&out);
     }
     let dt_lut = t0.elapsed().as_secs_f64() / reps as f64;
     println!(

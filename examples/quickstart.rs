@@ -1,5 +1,6 @@
-//! Quickstart: load a trained `.lutnn` bundle and classify a batch — the
-//! smallest end-to-end use of the public API.
+//! Quickstart: load a trained `.lutnn` bundle, compile it to a
+//! `Session`, and classify a batch — the smallest end-to-end use of the
+//! public API.
 //!
 //!   make artifacts                 # once: trains + exports the bundles
 //!   cargo run --release --example quickstart
@@ -7,6 +8,7 @@
 //! Falls back to an in-process synthetic model when artifacts are absent
 //! so the example always runs.
 
+use lutnn::api::SessionBuilder;
 use lutnn::lut::LutOpts;
 use lutnn::model_fmt;
 use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
@@ -36,22 +38,24 @@ fn main() -> anyhow::Result<()> {
         lutify_graph(&dense, &sample, 16, 8, 0)
     };
 
-    println!(
-        "model '{}': {} linear ops as LUT, {} dense; {} param bytes",
-        graph.name,
-        graph.lut_fraction().0,
-        graph.lut_fraction().1,
-        graph.param_bytes()
-    );
+    // Compile once: kernels picked from the registry by each layer's
+    // tag, scratch arenas sized for batch 4.
+    let mut session = SessionBuilder::new(&graph)
+        .opts(LutOpts::deployed())
+        .max_batch(4)
+        .build()?;
+    println!("{}", session.describe());
+    println!("deployed kernel param bytes: {}", session.param_bytes());
 
-    // Classify a batch of 4 random inputs.
-    let item: usize = graph.input_shape[1..].iter().product();
+    // Classify a batch of 4 random inputs — zero-clone, zero-alloc run.
+    let item: usize = session.item_shape().iter().product();
     let mut shape = vec![4usize];
-    shape.extend_from_slice(&graph.input_shape[1..]);
+    shape.extend_from_slice(session.item_shape());
     let x = Tensor::new(shape, rng.normal_vec(4 * item, 1.0));
+    let mut logits = Tensor::zeros(vec![0]);
 
     let t0 = std::time::Instant::now();
-    let logits = graph.run(x, LutOpts::deployed());
+    session.run(&x, &mut logits)?;
     let dt = t0.elapsed();
 
     println!("logits shape {:?} in {:.2} ms", logits.shape, dt.as_secs_f64() * 1e3);

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use lutnn::coordinator::server::{Client, Server, ServerConfig};
 use lutnn::coordinator::trace::poisson_trace;
-use lutnn::coordinator::{Backend, ModelEntry, Registry};
+use lutnn::coordinator::{ModelEntry, Registry};
 use lutnn::lut::LutOpts;
 use lutnn::model_fmt;
 use lutnn::runtime::{artifact_path, artifacts_available};
@@ -79,11 +79,9 @@ fn main() -> anyhow::Result<()> {
     let mut registry = Registry::new();
     for name in ["resnet_tiny_lut", "resnet_tiny_dense"] {
         let graph = model_fmt::load_bundle(&artifact_path(&format!("{name}.lutnn")))?;
-        registry.register(ModelEntry {
-            name: name.into(),
-            backend: Backend::Native { graph, opts: LutOpts::deployed() },
-            item_shape: vec![16, 16, 3],
-        });
+        // Compile to a Session-backed engine; the batcher borrows each
+        // stacked batch, so requests are never cloned on the hot path.
+        registry.register(ModelEntry::native(name, &graph, LutOpts::deployed(), 8)?);
     }
     let server = Server::start(
         registry,

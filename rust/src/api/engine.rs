@@ -1,0 +1,168 @@
+//! The `Engine` trait: backend-agnostic batch execution.
+//!
+//! The serving stack (router -> batcher -> worker) talks only to this
+//! trait; concrete engines are the rust-native [`Session`]
+//! ([`NativeEngine`]) and the AOT-compiled XLA graphs on the PJRT host
+//! thread ([`PjrtEngine`]). New backends implement three methods and
+//! plug into `coordinator::ModelEntry` without touching the batcher or
+//! the server.
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use super::session::{Session, SessionBuilder};
+use crate::lut::LutOpts;
+use crate::nn::graph::Graph;
+use crate::runtime::{HostInput, HostedModel};
+use crate::tensor::Tensor;
+
+/// An executable model backend. `run_batch` writes the `[B, M]` output
+/// into a caller-owned tensor so engines can keep the hot path free of
+/// per-request allocation and input cloning.
+pub trait Engine: Send + Sync {
+    /// Run one batch; `x.shape[0]` is the batch dim. Overwrites `out`.
+    fn run_batch(&self, x: &Tensor, out: &mut Tensor) -> Result<()>;
+
+    /// Max batch accepted in one call (`None` = unbounded; the batcher
+    /// pads fixed-batch engines up to this size).
+    fn max_batch(&self) -> Option<usize>;
+
+    /// One-line human description for listings and logs.
+    fn describe(&self) -> String;
+}
+
+/// The rust-native table-lookup/dense engine: a [`Session`] behind a
+/// mutex (the session owns mutable scratch arenas; the batcher worker
+/// is the only steady-state caller, so the lock is uncontended).
+pub struct NativeEngine {
+    session: Mutex<Session>,
+}
+
+impl NativeEngine {
+    pub fn new(session: Session) -> NativeEngine {
+        NativeEngine { session: Mutex::new(session) }
+    }
+
+    /// Convenience: compile `graph` with `opts`, arenas sized for
+    /// `max_batch`.
+    pub fn from_graph(graph: &Graph, opts: LutOpts, max_batch: usize) -> Result<NativeEngine> {
+        Ok(NativeEngine::new(
+            SessionBuilder::new(graph).opts(opts).max_batch(max_batch).build()?,
+        ))
+    }
+
+    /// Per-request input shape (without the batch dim).
+    pub fn item_shape(&self) -> Vec<usize> {
+        self.session.lock().unwrap().item_shape().to_vec()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn run_batch(&self, x: &Tensor, out: &mut Tensor) -> Result<()> {
+        self.session.lock().unwrap().run(x, out)
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        None // sessions grow their arenas on demand
+    }
+
+    fn describe(&self) -> String {
+        self.session.lock().unwrap().describe()
+    }
+}
+
+/// AOT-compiled XLA graph on the PJRT host thread (fixed batch size).
+/// Token inputs for BERT graphs are carried as f32 ids in the tensor
+/// and cast on the way in.
+pub struct PjrtEngine {
+    model: HostedModel,
+    batch: usize,
+    is_tokens: bool,
+}
+
+impl PjrtEngine {
+    pub fn new(model: HostedModel, batch: usize, is_tokens: bool) -> PjrtEngine {
+        PjrtEngine { model, batch, is_tokens }
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn run_batch(&self, x: &Tensor, out: &mut Tensor) -> Result<()> {
+        ensure!(
+            x.shape[0] == self.batch,
+            "pjrt model compiled for batch {}, got {}",
+            self.batch,
+            x.shape[0]
+        );
+        let y = if self.is_tokens {
+            let ids: Vec<i32> = x.data.iter().map(|&v| v as i32).collect();
+            self.model.run(HostInput::I32(ids, x.shape.clone()))?
+        } else {
+            self.model.run(HostInput::F32(x.data.clone(), x.shape.clone()))?
+        };
+        let n = x.shape[0];
+        let m = y.len() / n;
+        out.shape.clear();
+        out.shape.extend_from_slice(&[n, m]);
+        out.data.clear();
+        out.data.extend_from_slice(&y);
+        Ok(())
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "pjrt '{}' (batch {}, {})",
+            self.model.name,
+            self.batch,
+            if self.is_tokens { "token input" } else { "f32 input" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models::{build_cnn_graph, ConvSpec};
+
+    #[test]
+    fn native_engine_runs_any_batch() {
+        let g = build_cnn_graph(
+            "e",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            0,
+        );
+        let eng = NativeEngine::from_graph(&g, LutOpts::deployed(), 4).unwrap();
+        assert_eq!(eng.max_batch(), None);
+        assert_eq!(eng.item_shape(), vec![8, 8, 3]);
+        let mut out = Tensor::zeros(vec![0]);
+        for n in [1usize, 3, 7] {
+            let x = Tensor::zeros(vec![n, 8, 8, 3]);
+            eng.run_batch(&x, &mut out).unwrap();
+            assert_eq!(out.shape, vec![n, 5]);
+        }
+        assert!(eng.describe().contains("c0:dense"), "{}", eng.describe());
+    }
+
+    #[test]
+    fn engine_is_object_safe_and_dyn_usable() {
+        let g = build_cnn_graph(
+            "dy",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            3,
+            1,
+        );
+        let eng: Box<dyn Engine> =
+            Box::new(NativeEngine::from_graph(&g, LutOpts::deployed(), 2).unwrap());
+        let mut out = Tensor::zeros(vec![0]);
+        eng.run_batch(&Tensor::zeros(vec![2, 8, 8, 3]), &mut out).unwrap();
+        assert_eq!(out.shape, vec![2, 3]);
+    }
+}

@@ -1,0 +1,207 @@
+//! The `LinearKernel` trait: one object-safe interface over every
+//! implementation of `out = approx(input @ W) + bias`.
+//!
+//! This is the tract-style `Lut`/`LutKer` split: the executor
+//! ([`crate::api::Session`]) talks only to this trait, while concrete
+//! kernels (dense GEMM, LUT table-lookup, and future SIMD/int8/decomposed
+//! variants) live behind it and are selected through the
+//! [`crate::api::KernelRegistry`]. A kernel is pure compute: it never
+//! allocates on the forward path — all working memory comes from the
+//! caller-owned [`Scratch`] and `out` buffers.
+
+use crate::lut::{LutLinear, LutOpts, LutScratch};
+use crate::nn::gemm::gemm;
+
+/// Caller-owned scratch shared across every kernel invocation in a
+/// forward pass. The index buffer is sized by `SessionBuilder` at build
+/// time; the remaining LUT working buffers settle at their per-layer
+/// maxima during the first run. Either way, steady-state calls only
+/// `resize` within capacity (pointer-stable, allocation-free).
+#[derive(Default)]
+pub struct Scratch {
+    /// working memory for LUT-family kernels (indices, distance
+    /// buffers, integer accumulators)
+    pub lut: LutScratch,
+}
+
+impl Scratch {
+    pub fn with_index_capacity(cap: usize) -> Scratch {
+        Scratch {
+            lut: LutScratch { idx: Vec::with_capacity(cap), ..LutScratch::default() },
+        }
+    }
+}
+
+/// An executable linear operator `[rows, in_dim] -> [rows, out_dim]`.
+///
+/// Object-safe: the session holds `Box<dyn LinearKernel>` and new
+/// implementations plug in via the registry without touching the
+/// executor. Implementations must be deterministic — the same input
+/// bytes produce the same output bytes (the session parity tests rely
+/// on it).
+pub trait LinearKernel: Send + Sync {
+    /// Registry tag of the implementation (e.g. `"dense"`, `"lut"`).
+    fn name(&self) -> &'static str;
+
+    /// Input feature dimension D.
+    fn in_dim(&self) -> usize;
+
+    /// Output feature dimension M.
+    fn out_dim(&self) -> usize;
+
+    /// Bytes held by the deployed parameter representation
+    /// (Fig. 10 model-memory accounting).
+    fn param_bytes(&self) -> usize;
+
+    /// `u16` index-scratch elements needed to process `rows` rows
+    /// (0 for kernels that do no encoding).
+    fn scratch_indices(&self, rows: usize) -> usize {
+        let _ = rows;
+        0
+    }
+
+    /// Compute `out[..rows*out_dim] = forward(input[..rows*in_dim])`,
+    /// overwriting `out`. Must not allocate beyond `scratch` growth
+    /// within its reserved capacity.
+    fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]);
+}
+
+/// Dense reference kernel: blocked GEMM + bias (the ORT/TVM stand-in).
+pub struct DenseKernel {
+    w: Vec<f32>,
+    b: Option<Vec<f32>>,
+    d: usize,
+    m: usize,
+}
+
+impl DenseKernel {
+    pub fn new(w: Vec<f32>, b: Option<Vec<f32>>, m: usize) -> DenseKernel {
+        assert!(m > 0 && w.len() % m == 0, "dense weight must be [D, M]");
+        let d = w.len() / m;
+        DenseKernel { w, b, d, m }
+    }
+}
+
+impl LinearKernel for DenseKernel {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.d
+    }
+
+    fn out_dim(&self) -> usize {
+        self.m
+    }
+
+    fn param_bytes(&self) -> usize {
+        4 * (self.w.len() + self.b.as_ref().map(|x| x.len()).unwrap_or(0))
+    }
+
+    fn forward_into(&self, input: &[f32], rows: usize, _scratch: &mut Scratch, out: &mut [f32]) {
+        let (d, m) = (self.d, self.m);
+        assert_eq!(input.len(), rows * d, "dense kernel input size");
+        let out = &mut out[..rows * m];
+        out.fill(0.0);
+        gemm(input, &self.w, out, rows, d, m);
+        if let Some(b) = &self.b {
+            for row in out.chunks_exact_mut(m) {
+                for (o, &bb) in row.iter_mut().zip(b) {
+                    *o += bb;
+                }
+            }
+        }
+    }
+}
+
+/// LUT-NN table-lookup kernel (paper §5): closest-centroid encode +
+/// quantized table read/accumulate, with the §6.3 optimization toggles
+/// frozen into the kernel at build time.
+pub struct LutKernel {
+    lut: LutLinear,
+    opts: LutOpts,
+}
+
+impl LutKernel {
+    pub fn new(lut: LutLinear, opts: LutOpts) -> LutKernel {
+        LutKernel { lut, opts }
+    }
+
+    pub fn opts(&self) -> LutOpts {
+        self.opts
+    }
+}
+
+impl LinearKernel for LutKernel {
+    fn name(&self) -> &'static str {
+        "lut"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.lut.input_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.lut.m
+    }
+
+    fn param_bytes(&self) -> usize {
+        self.lut.deployed_bytes()
+    }
+
+    fn scratch_indices(&self, rows: usize) -> usize {
+        rows * self.lut.cb.c
+    }
+
+    fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
+        self.lut
+            .forward_scratch(input, rows, self.opts, &mut scratch.lut, &mut out[..rows * self.lut.m]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops;
+    use crate::pq::kmeans::learn_codebooks;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn dense_kernel_matches_ops_linear() {
+        let mut rng = Prng::new(0);
+        let (n, d, m) = (7, 12, 5);
+        let w = rng.normal_vec(d * m, 0.5);
+        let b = vec![0.25; m];
+        let x = Tensor::new(vec![n, d], rng.normal_vec(n * d, 1.0));
+        let want = ops::linear(&x, &w, Some(&b), m);
+        let kern = DenseKernel::new(w, Some(b), m);
+        let mut scratch = Scratch::default();
+        let mut out = vec![7.0f32; n * m]; // pre-poisoned: kernel must overwrite
+        kern.forward_into(&x.data, n, &mut scratch, &mut out);
+        assert_eq!(out, want.data, "dense kernel must be bitwise ops::linear");
+        assert_eq!(kern.param_bytes(), 4 * (d * m + m));
+        assert_eq!(kern.scratch_indices(99), 0);
+    }
+
+    #[test]
+    fn lut_kernel_matches_lutlinear_forward() {
+        let mut rng = Prng::new(1);
+        let (n, c, v, k, m) = (9, 3, 4, 8, 6);
+        let d = c * v;
+        let a = rng.normal_vec(n * d, 1.0);
+        let w = rng.normal_vec(d * m, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 5, 0);
+        let lut = LutLinear::new(cb, &w, m, Some(vec![0.5; m]), 8);
+        let want = lut.forward(&a, n, LutOpts::deployed());
+        let kern = LutKernel::new(lut, LutOpts::deployed());
+        let mut scratch = Scratch::default();
+        let mut out = vec![-3.0f32; n * m];
+        kern.forward_into(&a, n, &mut scratch, &mut out);
+        assert_eq!(out, want, "lut kernel must be bitwise LutLinear::forward");
+        assert_eq!(kern.in_dim(), d);
+        assert_eq!(kern.out_dim(), m);
+        assert_eq!(kern.scratch_indices(n), n * c);
+    }
+}

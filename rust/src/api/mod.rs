@@ -1,0 +1,66 @@
+//! # Unified inference API
+//!
+//! The single public entry point for executing LUT-NN models: a
+//! trait-based kernel layer, a compiled zero-allocation executor, and a
+//! backend-agnostic engine interface for the serving stack.
+//!
+//! ## Request path
+//!
+//! ```text
+//!   client ──TCP──> coordinator::Server ─┐
+//!   in-proc caller (example / bench) ────┤
+//!                                        v
+//!                            Router -> Batcher queue
+//!                                        │ stack [B, item]
+//!                                        v
+//!                         dyn Engine::run_batch(&x, &mut out)
+//!                          │                          │
+//!                  NativeEngine                  PjrtEngine
+//!                          │                          │
+//!                  Session::run              PJRT host thread
+//!                          │                  (AOT XLA graph)
+//!                          v
+//!            plan of Steps over scratch arenas
+//!            (ping-pong activations, im2col patches,
+//!             centroid indices, residual slots)
+//!                          │
+//!                          v
+//!              dyn LinearKernel::forward_into
+//!               │                        │
+//!          DenseKernel              LutKernel          <- KernelRegistry
+//!        (blocked GEMM)      (encode + table lookup)      ("dense","lut",
+//!                                                          your kernel here)
+//! ```
+//!
+//! ## The three layers
+//!
+//! * [`LinearKernel`] ([`kernel`]) — object-safe operator kernel:
+//!   `forward_into(input, rows, scratch, out)` plus `param_bytes`/`name`
+//!   metadata. Implementations are pure compute and never allocate on
+//!   the forward path.
+//! * [`Session`] / [`SessionBuilder`] ([`session`]) — compiles a
+//!   [`crate::nn::graph::Graph`] into a step plan with every scratch
+//!   arena sized once at build time; `session.run(&input, &mut output)`
+//!   is zero-clone and, at steady state, zero-allocation.
+//! * [`Engine`] ([`engine`]) — `run_batch`/`max_batch`/`describe` over
+//!   whole batches; [`NativeEngine`] wraps a session, [`PjrtEngine`]
+//!   wraps an AOT-compiled XLA executable. The coordinator stack is
+//!   generic over `dyn Engine`.
+//!
+//! New kernels register by name in the [`KernelRegistry`] and new
+//! backends implement [`Engine`]; neither requires touching the
+//! executor, the batcher, or the server.
+//!
+//! The legacy `Graph::run` entry point remains as a deprecated shim for
+//! one release; it clones activations per call and should not be used
+//! on serving paths.
+
+pub mod engine;
+pub mod kernel;
+pub mod registry;
+pub mod session;
+
+pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use kernel::{DenseKernel, LinearKernel, LutKernel, Scratch};
+pub use registry::{KernelBuildCtx, KernelFactory, KernelRegistry};
+pub use session::{Session, SessionBuilder};

@@ -1,0 +1,112 @@
+//! Open kernel registry: maps a kernel tag (`"dense"`, `"lut"`, ...)
+//! to a factory that builds a [`LinearKernel`] from a layer's
+//! parameters. New implementations (SIMD argmin, int8 GEMM, decomposed
+//! ReducedLUT tables, ...) register by name — the executor never
+//! changes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::kernel::{DenseKernel, LinearKernel, LutKernel};
+use crate::lut::LutOpts;
+use crate::nn::graph::LayerParams;
+
+/// Build-time context handed to every kernel factory.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelBuildCtx {
+    /// §6.3 optimization toggles for LUT-family kernels.
+    pub opts: LutOpts,
+}
+
+/// A factory producing a kernel from layer parameters, or an error when
+/// the parameters do not fit the implementation.
+pub type KernelFactory =
+    Box<dyn Fn(&LayerParams, &KernelBuildCtx) -> Result<Box<dyn LinearKernel>> + Send + Sync>;
+
+/// Name -> factory registry. `with_defaults()` registers the two
+/// built-in kernels; callers may add or override entries before handing
+/// the registry to a `SessionBuilder`.
+pub struct KernelRegistry {
+    factories: BTreeMap<String, KernelFactory>,
+}
+
+impl KernelRegistry {
+    /// An empty registry (no kernels — for fully custom stacks).
+    pub fn empty() -> KernelRegistry {
+        KernelRegistry { factories: BTreeMap::new() }
+    }
+
+    /// Registry with the built-in `"dense"` and `"lut"` kernels.
+    pub fn with_defaults() -> KernelRegistry {
+        let mut r = KernelRegistry::empty();
+        r.register("dense", |params, _ctx| match params {
+            LayerParams::Dense { w, b, m } => {
+                Ok(Box::new(DenseKernel::new(w.clone(), b.clone(), *m)) as Box<dyn LinearKernel>)
+            }
+            _ => Err(anyhow!("'dense' kernel needs Dense layer params")),
+        });
+        r.register("lut", |params, ctx| match params {
+            LayerParams::Lut(lut) => {
+                Ok(Box::new(LutKernel::new(lut.clone(), ctx.opts)) as Box<dyn LinearKernel>)
+            }
+            _ => Err(anyhow!("'lut' kernel needs Lut layer params")),
+        });
+        r
+    }
+
+    /// Register (or override) a factory under `name`.
+    pub fn register<F>(&mut self, name: &str, factory: F)
+    where
+        F: Fn(&LayerParams, &KernelBuildCtx) -> Result<Box<dyn LinearKernel>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.factories.insert(name.to_string(), Box::new(factory));
+    }
+
+    /// Registered kernel tags, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Instantiate the kernel registered under `tag` for `params`.
+    pub fn build(
+        &self,
+        tag: &str,
+        params: &LayerParams,
+        ctx: &KernelBuildCtx,
+    ) -> Result<Box<dyn LinearKernel>> {
+        let f = self
+            .factories
+            .get(tag)
+            .ok_or_else(|| anyhow!("no kernel registered under '{tag}' (have: {:?})", self.names()))?;
+        f(params, ctx)
+    }
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        KernelRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build_matching_kinds() {
+        let r = KernelRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["dense".to_string(), "lut".to_string()]);
+        let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+        let dense = LayerParams::Dense { w: vec![0.0; 8], b: None, m: 2 };
+        let k = r.build("dense", &dense, &ctx).unwrap();
+        assert_eq!((k.name(), k.in_dim(), k.out_dim()), ("dense", 4, 2));
+        // mismatched tag/params is an error, unknown tag names the options
+        assert!(r.build("lut", &dense, &ctx).is_err());
+        let err = format!("{}", r.build("simd", &dense, &ctx).unwrap_err());
+        assert!(err.contains("simd") && err.contains("dense"), "{err}");
+    }
+}

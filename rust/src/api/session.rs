@@ -1,0 +1,894 @@
+//! `SessionBuilder` -> `Session`: the compiled, zero-allocation form of
+//! a [`Graph`].
+//!
+//! At build time the graph's instruction list is lowered to a `Step`
+//! plan: every conv/linear op becomes a boxed [`LinearKernel`] chosen
+//! through the [`KernelRegistry`], BatchNorm folds to a per-channel
+//! scale/shift, and a shape walk sizes every scratch arena (ping-pong
+//! activation buffers, im2col patch matrix, centroid-index buffer,
+//! residual slots) for the configured `max_batch`. `Session::run` then
+//! executes the plan against caller-owned input/output tensors with no
+//! heap allocation on the steady-state hot path — the repeated-call
+//! pointer-stability test below is the contract.
+//!
+//! Numerical contract: `Session::run` is bitwise-identical to the
+//! legacy `Graph::run` for every `LutOpts` configuration (the parity
+//! property test), because both paths execute the exact same kernel
+//! code (`gemm`, `im2col_into`, `LutLinear::forward_into`, the pooling
+//! loops) in the same order.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::kernel::{LinearKernel, Scratch};
+use super::registry::{KernelBuildCtx, KernelRegistry};
+use crate::lut::LutOpts;
+use crate::nn::graph::{Graph, LayerParams, Op};
+use crate::nn::ops;
+use crate::tensor::im2col::{im2col_into, same_out_size};
+use crate::tensor::Tensor;
+
+/// One lowered instruction of the compiled plan.
+enum Step {
+    Conv { name: String, kernel: Box<dyn LinearKernel>, k: usize, stride: usize },
+    Linear { name: String, kernel: Box<dyn LinearKernel> },
+    Bn { scale: Vec<f32>, shift: Vec<f32> },
+    Relu,
+    MaxPool { k: usize, stride: usize },
+    Gap,
+    Save { slot: usize },
+    Restore { slot: usize },
+    Add { slot: usize },
+}
+
+/// Per-batch-item scratch sizes (every arena scales linearly with the
+/// batch dimension, so capacity for batch `n` is `n * per_item`).
+#[derive(Debug, Default, Clone)]
+struct PerItem {
+    act: usize,
+    patches: usize,
+    idx: usize,
+    slots: BTreeMap<usize, usize>,
+}
+
+/// Builder for [`Session`]: configure opts / registry / batch capacity,
+/// then `build()` to validate the graph and preallocate arenas.
+pub struct SessionBuilder<'g> {
+    graph: &'g Graph,
+    opts: LutOpts,
+    registry: KernelRegistry,
+    max_batch: usize,
+    overrides: BTreeMap<String, String>,
+}
+
+impl<'g> SessionBuilder<'g> {
+    pub fn new(graph: &'g Graph) -> SessionBuilder<'g> {
+        SessionBuilder {
+            graph,
+            opts: LutOpts::deployed(),
+            registry: KernelRegistry::with_defaults(),
+            max_batch: graph.input_shape.first().copied().unwrap_or(1).max(1),
+            overrides: BTreeMap::new(),
+        }
+    }
+
+    /// §6.3 optimization toggles for LUT kernels (default: `deployed()`).
+    pub fn opts(mut self, opts: LutOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Swap in a custom kernel registry.
+    pub fn registry(mut self, registry: KernelRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// Batch size the scratch arenas are pre-sized for. Larger batches
+    /// still run — buffers grow once — but steady-state zero-allocation
+    /// is guaranteed only up to this capacity.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n.max(1);
+        self
+    }
+
+    /// Force a specific registered kernel for one layer (per-layer
+    /// kernel selection; default is the layer's own `kernel_tag()`).
+    pub fn kernel_override(mut self, layer: &str, kernel: &str) -> Self {
+        self.overrides.insert(layer.to_string(), kernel.to_string());
+        self
+    }
+
+    pub fn build(self) -> Result<Session> {
+        let g = self.graph;
+        if g.bert.is_some() {
+            // BERT bundles execute through the reference attention path;
+            // the plan/arena machinery covers the instruction-list CNNs.
+            // NOTE: the session owns a one-time copy of the graph's
+            // parameters here — per-replica cost, not per-request.
+            return Ok(Session {
+                name: g.name.clone(),
+                item_shape: g.input_shape[1..].to_vec(),
+                steps: Vec::new(),
+                scratch: Scratch::default(),
+                bufs: [empty_buf(0), empty_buf(0)],
+                patches: Vec::new(),
+                slots: BTreeMap::new(),
+                per_item: PerItem::default(),
+                cap_batch: self.max_batch,
+                param_bytes: g.param_bytes(),
+                opts: self.opts,
+                bert: Some(g.clone()),
+            });
+        }
+
+        let ctx = KernelBuildCtx { opts: self.opts };
+        let item_shape: Vec<usize> = g.input_shape[1..].to_vec();
+        let mut sh = match item_shape.len() {
+            3 => SimShape::S4 { h: item_shape[0], w: item_shape[1], c: item_shape[2] },
+            1 => SimShape::S2 { cols: item_shape[0] },
+            r => bail!("unsupported input rank {} (shape {:?})", r + 1, g.input_shape),
+        };
+        let mut per = PerItem { act: sh.elems(), ..PerItem::default() };
+        let mut slot_shapes: BTreeMap<usize, SimShape> = BTreeMap::new();
+        let mut steps = Vec::with_capacity(g.ops.len());
+        let mut param_bytes = 0usize;
+        let mut linear_layers: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+
+        fn layer<'a>(g: &'a Graph, name: &str) -> Result<&'a LayerParams> {
+            g.layers.get(name).ok_or_else(|| anyhow!("graph references unknown layer '{name}'"))
+        }
+        let kernel_for = |name: &str, params: &LayerParams| -> Result<Box<dyn LinearKernel>> {
+            let tag = match self.overrides.get(name) {
+                Some(t) => t.as_str(),
+                None => params
+                    .kernel_tag()
+                    .ok_or_else(|| anyhow!("layer '{name}' is not a linear layer"))?,
+            };
+            self.registry
+                .build(tag, params, &ctx)
+                .with_context(|| format!("building kernel for layer '{name}'"))
+        };
+
+        for op in &g.ops {
+            match op {
+                Op::Conv { layer: lname, k, stride } => {
+                    let SimShape::S4 { h, w, c } = sh else {
+                        bail!("conv '{lname}' needs a 4-D activation");
+                    };
+                    linear_layers.insert(lname);
+                    let kernel = kernel_for(lname, layer(g, lname)?)?;
+                    ensure!(
+                        kernel.in_dim() == c * k * k,
+                        "conv '{lname}': kernel in_dim {} != Cin*k*k = {}",
+                        kernel.in_dim(),
+                        c * k * k
+                    );
+                    let (ho, wo) = (same_out_size(h, *stride), same_out_size(w, *stride));
+                    let rows = ho * wo;
+                    let m = kernel.out_dim();
+                    per.patches = per.patches.max(rows * kernel.in_dim());
+                    per.idx = per.idx.max(kernel.scratch_indices(rows));
+                    param_bytes += kernel.param_bytes();
+                    sh = SimShape::S4 { h: ho, w: wo, c: m };
+                    per.act = per.act.max(sh.elems());
+                    steps.push(Step::Conv {
+                        name: lname.clone(),
+                        kernel,
+                        k: *k,
+                        stride: *stride,
+                    });
+                }
+                Op::Linear { layer: lname } => {
+                    let SimShape::S2 { cols } = sh else {
+                        bail!("linear '{lname}' needs a 2-D activation (did you forget Gap?)");
+                    };
+                    linear_layers.insert(lname);
+                    let kernel = kernel_for(lname, layer(g, lname)?)?;
+                    ensure!(
+                        kernel.in_dim() == cols,
+                        "linear '{lname}': kernel in_dim {} != activation cols {}",
+                        kernel.in_dim(),
+                        cols
+                    );
+                    per.idx = per.idx.max(kernel.scratch_indices(1));
+                    param_bytes += kernel.param_bytes();
+                    sh = SimShape::S2 { cols: kernel.out_dim() };
+                    per.act = per.act.max(sh.elems());
+                    steps.push(Step::Linear { name: lname.clone(), kernel });
+                }
+                Op::Bn { layer: lname } => {
+                    let LayerParams::Bn { gamma, beta, mean, var } = layer(g, lname)? else {
+                        bail!("layer '{lname}' is not bn");
+                    };
+                    ensure!(
+                        gamma.len() == sh.channels(),
+                        "bn '{lname}': {} channels vs activation {}",
+                        gamma.len(),
+                        sh.channels()
+                    );
+                    // Identical folding to ops::batch_norm (bitwise parity).
+                    let scale: Vec<f32> =
+                        (0..gamma.len()).map(|c| gamma[c] / (var[c] + 1e-5).sqrt()).collect();
+                    let shift: Vec<f32> =
+                        (0..gamma.len()).map(|c| beta[c] - mean[c] * scale[c]).collect();
+                    param_bytes += 4 * gamma.len() * 4;
+                    steps.push(Step::Bn { scale, shift });
+                }
+                Op::Relu => steps.push(Step::Relu),
+                Op::MaxPool { k, stride } => {
+                    let SimShape::S4 { h, w, c } = sh else {
+                        bail!("maxpool needs a 4-D activation");
+                    };
+                    ensure!(h >= *k && w >= *k, "maxpool window {k} larger than {h}x{w}");
+                    sh = SimShape::S4 {
+                        h: (h - k) / stride + 1,
+                        w: (w - k) / stride + 1,
+                        c,
+                    };
+                    per.act = per.act.max(sh.elems());
+                    steps.push(Step::MaxPool { k: *k, stride: *stride });
+                }
+                Op::Gap => {
+                    let SimShape::S4 { c, .. } = sh else {
+                        bail!("gap needs a 4-D activation");
+                    };
+                    sh = SimShape::S2 { cols: c };
+                    steps.push(Step::Gap);
+                }
+                Op::Save { slot } => {
+                    let e = per.slots.entry(*slot).or_insert(0);
+                    *e = (*e).max(sh.elems());
+                    slot_shapes.insert(*slot, sh);
+                    steps.push(Step::Save { slot: *slot });
+                }
+                Op::Restore { slot } => {
+                    sh = *slot_shapes
+                        .get(slot)
+                        .ok_or_else(|| anyhow!("restore from never-saved slot {slot}"))?;
+                    steps.push(Step::Restore { slot: *slot });
+                }
+                Op::Add { slot } => {
+                    let saved = slot_shapes
+                        .get(slot)
+                        .ok_or_else(|| anyhow!("add from never-saved slot {slot}"))?;
+                    ensure!(
+                        *saved == sh,
+                        "add: slot {slot} shape {saved:?} != activation {sh:?}"
+                    );
+                    steps.push(Step::Add { slot: *slot });
+                }
+                Op::Bert => bail!("bert op in a graph without a bert config"),
+            }
+        }
+
+        // A typo'd override would otherwise silently run the default
+        // kernel; reject any override that matched no linear op.
+        for name in self.overrides.keys() {
+            ensure!(
+                linear_layers.contains(name.as_str()),
+                "kernel_override for '{name}' matched no conv/linear layer in the plan"
+            );
+        }
+
+        let n = self.max_batch;
+        let slots = per
+            .slots
+            .iter()
+            .map(|(&slot, &sz)| (slot, empty_buf(n * sz)))
+            .collect();
+        Ok(Session {
+            name: g.name.clone(),
+            item_shape,
+            steps,
+            scratch: Scratch::with_index_capacity(n * per.idx),
+            bufs: [empty_buf(n * per.act), empty_buf(n * per.act)],
+            patches: Vec::with_capacity(n * per.patches),
+            slots,
+            per_item: per,
+            cap_batch: n,
+            param_bytes,
+            opts: self.opts,
+            bert: None,
+        })
+    }
+}
+
+fn empty_buf(cap: usize) -> Tensor {
+    Tensor { shape: vec![0], data: Vec::with_capacity(cap) }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SimShape {
+    S4 { h: usize, w: usize, c: usize },
+    S2 { cols: usize },
+}
+
+impl SimShape {
+    fn elems(self) -> usize {
+        match self {
+            SimShape::S4 { h, w, c } => h * w * c,
+            SimShape::S2 { cols } => cols,
+        }
+    }
+
+    fn channels(self) -> usize {
+        match self {
+            SimShape::S4 { c, .. } => c,
+            SimShape::S2 { cols } => cols,
+        }
+    }
+}
+
+/// Where the current activation lives during a run.
+#[derive(Clone, Copy)]
+enum Cur {
+    /// still the caller's input tensor (borrowed, never mutated)
+    In,
+    /// ping-pong arena `bufs[i]`
+    Buf(usize),
+}
+
+/// A compiled, arena-backed executor for one model. Create via
+/// [`SessionBuilder`]; call [`Session::run`] with caller-owned input
+/// and output tensors.
+pub struct Session {
+    name: String,
+    item_shape: Vec<usize>,
+    steps: Vec<Step>,
+    scratch: Scratch,
+    bufs: [Tensor; 2],
+    patches: Vec<f32>,
+    slots: BTreeMap<usize, Tensor>,
+    per_item: PerItem,
+    cap_batch: usize,
+    param_bytes: usize,
+    opts: LutOpts,
+    bert: Option<Graph>,
+}
+
+impl Session {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Per-request input shape (without the batch dim).
+    pub fn item_shape(&self) -> &[usize] {
+        &self.item_shape
+    }
+
+    /// Deployed parameter bytes of the compiled plan (linear kernels +
+    /// folded normalization layers; for BERT bundles, the whole graph).
+    pub fn param_bytes(&self) -> usize {
+        self.param_bytes
+    }
+
+    /// `(layer, kernel tag, param bytes)` for every linear step.
+    pub fn kernel_report(&self) -> Vec<(String, &'static str, usize)> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Conv { name, kernel, .. } | Step::Linear { name, kernel } => {
+                    Some((name.clone(), kernel.name(), kernel.param_bytes()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// One-line human description (engine listings, logs).
+    pub fn describe(&self) -> String {
+        if self.bert.is_some() {
+            return format!("session '{}' (bert reference path)", self.name);
+        }
+        let kernels: Vec<String> = self
+            .kernel_report()
+            .into_iter()
+            .map(|(layer, tag, _)| format!("{layer}:{tag}"))
+            .collect();
+        format!(
+            "session '{}': {} steps, cap_batch {}, kernels [{}]",
+            self.name,
+            self.steps.len(),
+            self.cap_batch,
+            kernels.join(", ")
+        )
+    }
+
+    /// Scratch-arena base pointers, for the zero-allocation contract
+    /// test: two identical-batch runs must return identical values.
+    pub fn scratch_ptrs(&self) -> Vec<usize> {
+        let s = &self.scratch.lut;
+        let mut p = vec![
+            self.bufs[0].data.as_ptr() as usize,
+            self.bufs[1].data.as_ptr() as usize,
+            self.patches.as_ptr() as usize,
+            s.idx.as_ptr() as usize,
+            s.slab.as_ptr() as usize,
+            s.scores.as_ptr() as usize,
+            s.acc16.as_ptr() as usize,
+            s.acc32.as_ptr() as usize,
+        ];
+        p.extend(self.slots.values().map(|t| t.data.as_ptr() as usize));
+        p
+    }
+
+    /// Grow arenas for a batch larger than the built capacity.
+    fn ensure_capacity(&mut self, n: usize) {
+        if n <= self.cap_batch {
+            return;
+        }
+        let per = self.per_item.clone();
+        for b in &mut self.bufs {
+            reserve_to(&mut b.data, n * per.act);
+        }
+        reserve_to(&mut self.patches, n * per.patches);
+        reserve_to(&mut self.scratch.lut.idx, n * per.idx);
+        for (slot, sz) in &per.slots {
+            if let Some(t) = self.slots.get_mut(slot) {
+                reserve_to(&mut t.data, n * sz);
+            }
+        }
+        self.cap_batch = n;
+    }
+
+    /// Forward pass: `x.shape[0]` is the batch dim, the rest must match
+    /// the graph's per-item input shape. `out` is overwritten (shape and
+    /// data); reusing the same `out` across calls keeps the hot path
+    /// allocation-free.
+    pub fn run(&mut self, x: &Tensor, out: &mut Tensor) -> Result<()> {
+        if let Some(g) = &self.bert {
+            let y = crate::nn::bert::run_bert(g, x, self.opts);
+            write_out(out, &y.shape, &y.data);
+            return Ok(());
+        }
+        ensure!(
+            x.shape.len() == 1 + self.item_shape.len() && x.shape[1..] == self.item_shape[..],
+            "input shape {:?} does not match item shape {:?}",
+            x.shape,
+            self.item_shape
+        );
+        let n = x.shape[0];
+        ensure!(n > 0, "empty batch");
+        self.ensure_capacity(n);
+
+        let mut cur = Cur::In;
+        for si in 0..self.steps.len() {
+            match &self.steps[si] {
+                Step::Conv { kernel, k, stride, .. } => {
+                    let (src, dst, di) = src_dst(x, &mut self.bufs, cur);
+                    let (nb, h, w) = (src.shape[0], src.shape[1], src.shape[2]);
+                    let (ho, wo) = (same_out_size(h, *stride), same_out_size(w, *stride));
+                    let rows = nb * ho * wo;
+                    let (d, m) = (kernel.in_dim(), kernel.out_dim());
+                    self.patches.resize(rows * d, 0.0);
+                    im2col_into(src, *k, *stride, &mut self.patches[..rows * d]);
+                    dst.data.resize(rows * m, 0.0);
+                    kernel.forward_into(
+                        &self.patches[..rows * d],
+                        rows,
+                        &mut self.scratch,
+                        &mut dst.data,
+                    );
+                    set_shape(dst, &[nb, ho, wo, m]);
+                    cur = Cur::Buf(di);
+                }
+                Step::Linear { kernel, .. } => {
+                    let (src, dst, di) = src_dst(x, &mut self.bufs, cur);
+                    let rows = src.shape[0];
+                    let m = kernel.out_dim();
+                    dst.data.resize(rows * m, 0.0);
+                    kernel.forward_into(&src.data, rows, &mut self.scratch, &mut dst.data);
+                    set_shape(dst, &[rows, m]);
+                    cur = Cur::Buf(di);
+                }
+                Step::Bn { scale, shift } => {
+                    let t = make_mut(x, &mut self.bufs, &mut cur);
+                    let ch = *t.shape.last().unwrap();
+                    for row in t.data.chunks_exact_mut(ch) {
+                        for (v, c) in row.iter_mut().zip(0..ch) {
+                            *v = *v * scale[c] + shift[c];
+                        }
+                    }
+                }
+                Step::Relu => {
+                    let t = make_mut(x, &mut self.bufs, &mut cur);
+                    for v in &mut t.data {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                Step::MaxPool { k, stride } => {
+                    let (src, dst, di) = src_dst(x, &mut self.bufs, cur);
+                    let (nb, h, w, c) =
+                        (src.shape[0], src.shape[1], src.shape[2], src.shape[3]);
+                    let (ho, wo) = ((h - k) / stride + 1, (w - k) / stride + 1);
+                    dst.data.resize(nb * ho * wo * c, 0.0);
+                    ops::max_pool_into(src, *k, *stride, &mut dst.data);
+                    set_shape(dst, &[nb, ho, wo, c]);
+                    cur = Cur::Buf(di);
+                }
+                Step::Gap => {
+                    let (src, dst, di) = src_dst(x, &mut self.bufs, cur);
+                    let (nb, c) = (src.shape[0], src.shape[3]);
+                    dst.data.resize(nb * c, 0.0);
+                    ops::global_avg_pool_into(src, &mut dst.data);
+                    set_shape(dst, &[nb, c]);
+                    cur = Cur::Buf(di);
+                }
+                Step::Save { slot } => {
+                    let src: &Tensor = match cur {
+                        Cur::In => x,
+                        Cur::Buf(i) => &self.bufs[i],
+                    };
+                    let t = self.slots.get_mut(slot).expect("slot sized at build");
+                    write_out(t, &src.shape, &src.data);
+                }
+                Step::Restore { slot } => {
+                    let di = match cur {
+                        Cur::In => 0,
+                        Cur::Buf(i) => 1 - i,
+                    };
+                    let s = &self.slots[slot];
+                    let dst = &mut self.bufs[di];
+                    write_out(dst, &s.shape, &s.data);
+                    cur = Cur::Buf(di);
+                }
+                Step::Add { slot } => {
+                    let other = &self.slots[slot];
+                    let t = make_mut(x, &mut self.bufs, &mut cur);
+                    debug_assert_eq!(t.shape, other.shape);
+                    for (a, &b) in t.data.iter_mut().zip(&other.data) {
+                        *a += b;
+                    }
+                }
+            }
+        }
+
+        let final_t: &Tensor = match cur {
+            Cur::In => x,
+            Cur::Buf(i) => &self.bufs[i],
+        };
+        write_out(out, &final_t.shape, &final_t.data);
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper around [`Session::run`].
+    pub fn run_alloc(&mut self, x: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::zeros(vec![0]);
+        self.run(x, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// Overwrite `t` with `shape`/`data` without allocating when capacity
+/// suffices.
+fn write_out(t: &mut Tensor, shape: &[usize], data: &[f32]) {
+    t.data.clear();
+    t.data.extend_from_slice(data);
+    set_shape(t, shape);
+}
+
+fn set_shape(t: &mut Tensor, dims: &[usize]) {
+    t.shape.clear();
+    t.shape.extend_from_slice(dims);
+}
+
+fn reserve_to<T>(v: &mut Vec<T>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+/// Split-borrow the read buffer (or the caller's input) and the write
+/// buffer; returns `(src, dst, dst_index)`.
+fn src_dst<'a>(
+    input: &'a Tensor,
+    bufs: &'a mut [Tensor; 2],
+    cur: Cur,
+) -> (&'a Tensor, &'a mut Tensor, usize) {
+    match cur {
+        Cur::In => {
+            let (d, _) = bufs.split_at_mut(1);
+            (input, &mut d[0], 0)
+        }
+        Cur::Buf(i) => {
+            let (a, b) = bufs.split_at_mut(1);
+            if i == 0 {
+                (&a[0], &mut b[0], 1)
+            } else {
+                (&b[0], &mut a[0], 0)
+            }
+        }
+    }
+}
+
+/// For in-place steps: materialize the current activation in an arena
+/// (copying the borrowed input on first use) and return it mutably.
+fn make_mut<'a>(input: &Tensor, bufs: &'a mut [Tensor; 2], cur: &mut Cur) -> &'a mut Tensor {
+    if matches!(cur, Cur::In) {
+        write_out(&mut bufs[0], &input.shape, &input.data);
+        *cur = Cur::Buf(0);
+    }
+    match *cur {
+        Cur::Buf(i) => &mut bufs[i],
+        Cur::In => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+#[allow(deprecated)] // parity tests deliberately compare against Graph::run
+mod tests {
+    use super::*;
+    use crate::model_fmt::{load_bundle, save_bundle};
+    use crate::nn::graph::Op;
+    use crate::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+    use crate::util::prng::Prng;
+    use crate::util::prop;
+
+    fn lut_cnn(seed: u64) -> (Graph, Graph, Tensor) {
+        let dense = build_cnn_graph(
+            "t",
+            [8, 8, 3],
+            &[
+                ConvSpec { cout: 8, k: 3, stride: 1 },
+                ConvSpec { cout: 16, k: 3, stride: 2 },
+            ],
+            5,
+            seed,
+        );
+        let mut rng = Prng::new(seed ^ 0xABCD);
+        let x = Tensor::new(vec![4, 8, 8, 3], rng.normal_vec(4 * 8 * 8 * 3, 1.0));
+        let lut = lutify_graph(&dense, &x, 8, 8, seed);
+        (dense, lut, x)
+    }
+
+    fn opts_matrix() -> [LutOpts; 4] {
+        [
+            LutOpts::none(),
+            LutOpts::all(),
+            LutOpts::deployed(),
+            LutOpts {
+                centroid_stationary: false,
+                interleaved_argmin: true,
+                blocked_table_read: true,
+                mixed_accum: false,
+            },
+        ]
+    }
+
+    #[test]
+    fn session_matches_graph_run_bitwise() {
+        let (dense, lut, x) = lut_cnn(0);
+        for graph in [&dense, &lut] {
+            for opts in opts_matrix() {
+                let want = graph.run(x.clone(), opts);
+                let mut sess =
+                    SessionBuilder::new(graph).opts(opts).max_batch(4).build().unwrap();
+                let got = sess.run_alloc(&x).unwrap();
+                assert_eq!(got.shape, want.shape);
+                assert_eq!(got.data, want.data, "bitwise parity ({opts:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn session_parity_property_random_cnns() {
+        prop::check(6, |g| {
+            let n_conv = g.usize(1..3);
+            let specs: Vec<ConvSpec> = (0..n_conv)
+                .map(|_| ConvSpec {
+                    cout: *g.pick(&[4usize, 8]),
+                    k: 3,
+                    stride: *g.pick(&[1usize, 2]),
+                })
+                .collect();
+            let n_classes = g.usize(2..6);
+            let dense = build_cnn_graph("p", [8, 8, 3], &specs, n_classes, g.case_seed);
+            let batch = g.usize(1..4);
+            let x = Tensor::new(
+                vec![batch, 8, 8, 3],
+                g.f32_vec(batch * 8 * 8 * 3, 1.0),
+            );
+            let lut = lutify_graph(&dense, &x, 8, 8, g.case_seed);
+            for graph in [&dense, &lut] {
+                for opts in opts_matrix() {
+                    let want = graph.run(x.clone(), opts);
+                    let mut sess = SessionBuilder::new(graph)
+                        .opts(opts)
+                        .max_batch(batch)
+                        .build()
+                        .map_err(|e| format!("build: {e:#}"))?;
+                    let got = sess.run_alloc(&x).map_err(|e| format!("run: {e:#}"))?;
+                    if got.shape != want.shape || got.data != want.data {
+                        return Err(format!(
+                            "parity failed on '{}' opts {opts:?}",
+                            graph.name
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_slots_match_graph_run() {
+        let (dense, _, _) = lut_cnn(1);
+        let mut g = dense;
+        // conv -> save -> relu -> add (residual) -> gap -> save -> relu
+        // -> restore exercises Save/Add/Restore against the legacy path.
+        g.ops = vec![
+            Op::Conv { layer: "c0".into(), k: 3, stride: 1 },
+            Op::Save { slot: 0 },
+            Op::Relu,
+            Op::Add { slot: 0 },
+            Op::Gap,
+            Op::Save { slot: 1 },
+            Op::Relu,
+            Op::Restore { slot: 1 },
+        ];
+        let mut rng = Prng::new(9);
+        let x = Tensor::new(vec![2, 8, 8, 3], rng.normal_vec(2 * 8 * 8 * 3, 1.0));
+        let want = g.run(x.clone(), LutOpts::deployed());
+        let mut sess = SessionBuilder::new(&g).max_batch(2).build().unwrap();
+        let got = sess.run_alloc(&x).unwrap();
+        assert_eq!(got.shape, want.shape);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn steady_state_hot_path_is_pointer_stable() {
+        let (_, lut, x) = lut_cnn(2);
+        let mut sess = SessionBuilder::new(&lut).max_batch(4).build().unwrap();
+        let mut out = Tensor::zeros(vec![0]);
+        sess.run(&x, &mut out).unwrap(); // warmup settles all arenas
+        let ptrs = sess.scratch_ptrs();
+        let out_ptr = out.data.as_ptr() as usize;
+        let first = out.data.clone();
+        for _ in 0..5 {
+            sess.run(&x, &mut out).unwrap();
+            assert_eq!(sess.scratch_ptrs(), ptrs, "scratch arenas must not reallocate");
+            assert_eq!(out.data.as_ptr() as usize, out_ptr, "output buffer must be reused");
+            assert_eq!(out.data, first, "deterministic forward");
+        }
+        // a larger batch grows arenas once, then is steady again
+        let mut rng = Prng::new(3);
+        let big = Tensor::new(vec![9, 8, 8, 3], rng.normal_vec(9 * 8 * 8 * 3, 1.0));
+        sess.run(&big, &mut out).unwrap();
+        let ptrs_big = sess.scratch_ptrs();
+        sess.run(&big, &mut out).unwrap();
+        assert_eq!(sess.scratch_ptrs(), ptrs_big);
+    }
+
+    #[test]
+    fn bundle_roundtrip_preserves_params_and_outputs() {
+        let (_, lut, x) = lut_cnn(3);
+        let dir = std::env::temp_dir().join("lutnn_api_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.lutnn").to_string_lossy().into_owned();
+        save_bundle(&lut, &path).unwrap();
+        let reloaded = load_bundle(&path).unwrap();
+
+        let mut s1 = SessionBuilder::new(&lut).max_batch(4).build().unwrap();
+        let mut s2 = SessionBuilder::new(&reloaded).max_batch(4).build().unwrap();
+        assert_eq!(s1.param_bytes(), s2.param_bytes());
+        assert_eq!(s1.kernel_report(), s2.kernel_report());
+        let y1 = s1.run_alloc(&x).unwrap();
+        let y2 = s2.run_alloc(&x).unwrap();
+        assert_eq!(y1.shape, y2.shape);
+        assert_eq!(y1.data, y2.data, "bundle round-trip must be forward-exact");
+    }
+
+    #[test]
+    fn custom_kernel_registers_and_overrides() {
+        use crate::api::kernel::DenseKernel;
+
+        /// A kernel that doubles the dense output — enough to observe
+        /// per-layer dispatch without touching the executor.
+        struct DoubledDense(DenseKernel);
+        impl LinearKernel for DoubledDense {
+            fn name(&self) -> &'static str {
+                "dense2x"
+            }
+            fn in_dim(&self) -> usize {
+                self.0.in_dim()
+            }
+            fn out_dim(&self) -> usize {
+                self.0.out_dim()
+            }
+            fn param_bytes(&self) -> usize {
+                self.0.param_bytes()
+            }
+            fn forward_into(
+                &self,
+                input: &[f32],
+                rows: usize,
+                scratch: &mut Scratch,
+                out: &mut [f32],
+            ) {
+                self.0.forward_into(input, rows, scratch, out);
+                for v in &mut out[..rows * self.out_dim()] {
+                    *v *= 2.0;
+                }
+            }
+        }
+
+        let (dense, _, x) = lut_cnn(4);
+        let mut plain = SessionBuilder::new(&dense).max_batch(4).build().unwrap();
+        let base = plain.run_alloc(&x).unwrap();
+
+        let mut reg = KernelRegistry::with_defaults();
+        reg.register("dense2x", |params, _ctx| match params {
+            LayerParams::Dense { w, b, m } => Ok(Box::new(DoubledDense(DenseKernel::new(
+                w.clone(),
+                b.clone(),
+                *m,
+            ))) as Box<dyn LinearKernel>),
+            _ => Err(anyhow!("dense2x needs dense params")),
+        });
+        let mut sess = SessionBuilder::new(&dense)
+            .registry(reg)
+            .kernel_override("fc", "dense2x")
+            .max_batch(4)
+            .build()
+            .unwrap();
+        assert!(sess.describe().contains("fc:dense2x"), "{}", sess.describe());
+        let got = sess.run_alloc(&x).unwrap();
+        let want: Vec<f32> = base.data.iter().map(|v| v * 2.0).collect();
+        assert_eq!(got.data, want, "fc runs through the overridden kernel");
+    }
+
+    #[test]
+    fn build_rejects_broken_graphs() {
+        let (dense, _, _) = lut_cnn(5);
+        // unknown layer
+        let mut g1 = build_cnn_graph("x", [8, 8, 3], &[], 3, 0);
+        g1.ops = vec![Op::Linear { layer: "nope".into() }];
+        assert!(SessionBuilder::new(&g1).build().is_err());
+        // linear before gap (4-D activation)
+        let mut g2 = dense;
+        g2.ops = vec![Op::Linear { layer: "fc".into() }];
+        assert!(SessionBuilder::new(&g2).build().is_err());
+        // kernel override naming a layer that is not in the plan
+        let (ok_graph, _, _) = lut_cnn(7);
+        let err = SessionBuilder::new(&ok_graph)
+            .kernel_override("fd", "dense")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("'fd'"), "{err:#}");
+    }
+
+    #[test]
+    fn run_rejects_wrong_item_shape() {
+        let (dense, _, _) = lut_cnn(6);
+        let mut sess = SessionBuilder::new(&dense).build().unwrap();
+        let bad = Tensor::zeros(vec![1, 4, 4, 3]);
+        assert!(sess.run_alloc(&bad).is_err());
+    }
+
+    #[test]
+    fn bert_bundles_fall_back_to_reference_path() {
+        let cfg = crate::nn::bert::BertConfig {
+            vocab: 32,
+            seq_len: 8,
+            d: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_layers: 1,
+            n_out: 4,
+        };
+        let g = crate::nn::bert::tests::synthetic_bert(&cfg, 0);
+        let mut rng = Prng::new(1);
+        let tokens: Vec<f32> = (0..2 * 8).map(|_| rng.below(32) as f32).collect();
+        let x = Tensor::new(vec![2, 8], tokens);
+        let want = g.run(x.clone(), LutOpts::deployed());
+        let mut sess = SessionBuilder::new(&g).build().unwrap();
+        let got = sess.run_alloc(&x).unwrap();
+        assert_eq!(got.shape, want.shape);
+        assert_eq!(got.data, want.data);
+        assert_eq!(sess.param_bytes(), g.param_bytes());
+    }
+}

@@ -2,8 +2,9 @@
 //!
 //! Requests enter a bounded queue; a dedicated worker thread drains up to
 //! `max_batch` items (waiting at most `max_wait` after the first), stacks
-//! them into one tensor, runs the model backend once, splits the outputs
-//! and replies on per-request channels. Backpressure: `submit` blocks on
+//! them into one reusable tensor, runs the model's `Engine` once (the
+//! engine borrows the batch — no input clone), splits the outputs and
+//! replies on per-request channels. Backpressure: `submit` blocks on
 //! the bounded queue (closed-loop clients) while `try_submit` fails fast
 //! (open-loop / SLO-shedding clients).
 
@@ -16,7 +17,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::metrics::Metrics;
-use super::ModelEntry;
+use super::{Engine, ModelEntry};
 use crate::tensor::Tensor;
 
 pub struct BatcherConfig {
@@ -111,7 +112,11 @@ fn batch_loop(
     metrics: Arc<Metrics>,
 ) {
     let item_len = entry.item_len();
-    let hard_cap = entry.backend.max_batch().unwrap_or(cfg.max_batch).min(cfg.max_batch);
+    let hard_cap = entry.engine.max_batch().unwrap_or(cfg.max_batch).min(cfg.max_batch);
+    // Reused across batches: the engine borrows `xbatch` and writes
+    // into `out` — no per-request clone on the native path.
+    let mut xbatch = Tensor::zeros(vec![0]);
+    let mut out = Tensor::zeros(vec![0]);
     loop {
         // Block for the first request of the batch.
         let first = match rx.recv() {
@@ -134,23 +139,26 @@ fn batch_loop(
         metrics.record_batch(batch.len());
         metrics.queue_depth.store(batch.len() as u64, Ordering::Relaxed);
 
-        // Stack into [B, item...]; PJRT backends need exactly `batch`
-        // rows, so pad with zeros and drop padded outputs.
+        // Stack into the reusable [B, item...] tensor; fixed-batch
+        // engines (PJRT) need exactly `max_batch` rows, so pad with
+        // zeros and drop padded outputs.
         let real = batch.len();
-        let exec_rows = match entry.backend.max_batch() {
+        let exec_rows = match entry.engine.max_batch() {
             Some(b) => b,
             None => real,
         };
-        let mut data = vec![0.0f32; exec_rows * item_len];
+        xbatch.data.clear();
+        xbatch.data.resize(exec_rows * item_len, 0.0);
         for (i, r) in batch.iter().enumerate() {
-            data[i * item_len..(i + 1) * item_len].copy_from_slice(&r.input);
+            xbatch.data[i * item_len..(i + 1) * item_len].copy_from_slice(&r.input);
         }
-        let mut shape = vec![exec_rows];
-        shape.extend_from_slice(&entry.item_shape);
-        let result = entry.backend.run(&Tensor::new(shape, data));
+        xbatch.shape.clear();
+        xbatch.shape.push(exec_rows);
+        xbatch.shape.extend_from_slice(&entry.item_shape);
+        let result = entry.engine.run_batch(&xbatch, &mut out);
 
         match result {
-            Ok(out) => {
+            Ok(()) => {
                 let m = out.len() / exec_rows;
                 for (i, r) in batch.into_iter().enumerate() {
                     let slice = out.data[i * m..(i + 1) * m].to_vec();
@@ -172,7 +180,6 @@ fn batch_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Backend;
     use crate::lut::LutOpts;
     use crate::nn::models::{build_cnn_graph, ConvSpec};
 
@@ -184,11 +191,7 @@ mod tests {
             5,
             0,
         );
-        Arc::new(ModelEntry {
-            name: "b".into(),
-            backend: Backend::Native { graph: g, opts: LutOpts::all() },
-            item_shape: vec![8, 8, 3],
-        })
+        Arc::new(ModelEntry::native("b", &g, LutOpts::all(), 8).unwrap())
     }
 
     #[test]

@@ -2,13 +2,28 @@
 //! worker pool, metrics, workload traces and a TCP front-end.
 //!
 //! Request path (no python anywhere):
-//!   client -> server (TCP line-JSON) ----\
-//!   in-proc callers (examples/benches) ---+--> Router -> Batcher queue
-//!                                              -> worker: Backend::run
-//!                                              -> per-request reply
 //!
-//! Backends: `Native` (the rust LUT/dense graph executor — the paper's
-//! §5 engine) and `Pjrt` (AOT-compiled XLA graphs from the jax layer).
+//! ```text
+//!   client ──TCP line-JSON──> Server ─┐
+//!   in-proc callers (examples/benches)┼──> Router (Registry::resolve)
+//!                                     │        │
+//!                                     │        v
+//!                                     │   Batcher queue (per model)
+//!                                     │        │ drain + stack [B, item]
+//!                                     │        v
+//!                                     └── dyn api::Engine::run_batch
+//!                                          │              │
+//!                                   NativeEngine     PjrtEngine
+//!                                   (Session, §5     (AOT XLA on the
+//!                                    zero-alloc)      PJRT host thread)
+//! ```
+//!
+//! The stack is backend-agnostic: a [`ModelEntry`] carries any
+//! `Box<dyn Engine>` (see [`crate::api::engine`]), the batcher stacks
+//! requests into one borrowed batch tensor and the engine writes into a
+//! reusable output tensor — no per-request input clone on the native
+//! path. New backends implement the three-method `Engine` trait and
+//! register here; the batcher, server and router never change.
 
 pub mod batcher;
 pub mod metrics;
@@ -20,62 +35,46 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+pub use crate::api::engine::{Engine, NativeEngine, PjrtEngine};
 use crate::lut::LutOpts;
 use crate::nn::graph::Graph;
-use crate::runtime::{HostInput, HostedModel};
-use crate::tensor::Tensor;
 
-/// An executable model variant.
-pub enum Backend {
-    /// rust-native graph executor (dense and/or LUT layers)
-    Native { graph: Graph, opts: LutOpts },
-    /// AOT-compiled XLA graph on the PJRT host thread (fixed batch size)
-    Pjrt { model: HostedModel, batch: usize, is_tokens: bool },
-}
-
-impl Backend {
-    /// Run a batch. `x.shape[0]` is the batch dim. Token inputs for BERT
-    /// graphs are carried as f32 ids in the tensor (cast internally).
-    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
-        match self {
-            Backend::Native { graph, opts } => Ok(graph.run(x.clone(), *opts)),
-            Backend::Pjrt { model, batch, is_tokens } => {
-                anyhow::ensure!(
-                    x.shape[0] == *batch,
-                    "pjrt model compiled for batch {batch}, got {}",
-                    x.shape[0]
-                );
-                let out = if *is_tokens {
-                    let ids: Vec<i32> = x.data.iter().map(|&v| v as i32).collect();
-                    model.run(HostInput::I32(ids, x.shape.clone()))?
-                } else {
-                    model.run(HostInput::F32(x.data.clone(), x.shape.clone()))?
-                };
-                let n = x.shape[0];
-                let m = out.len() / n;
-                Ok(Tensor::new(vec![n, m], out))
-            }
-        }
-    }
-
-    /// Max batch this backend accepts in one call (None = unbounded).
-    pub fn max_batch(&self) -> Option<usize> {
-        match self {
-            Backend::Native { .. } => None,
-            Backend::Pjrt { batch, .. } => Some(*batch),
-        }
-    }
-}
-
-/// One registered model.
+/// One registered model: a name, an executable engine, and the
+/// per-request input shape the router validates against.
 pub struct ModelEntry {
     pub name: String,
-    pub backend: Backend,
+    pub engine: Box<dyn Engine>,
     /// per-request input shape (without batch dim)
     pub item_shape: Vec<usize>,
 }
 
 impl ModelEntry {
+    /// Register a graph on the rust-native engine (compiled to a
+    /// `Session` with arenas sized for `max_batch`).
+    pub fn native(
+        name: &str,
+        graph: &Graph,
+        opts: LutOpts,
+        max_batch: usize,
+    ) -> Result<ModelEntry> {
+        let engine = NativeEngine::from_graph(graph, opts, max_batch)?;
+        let item_shape = engine.item_shape();
+        Ok(ModelEntry {
+            name: name.to_string(),
+            engine: Box::new(engine),
+            item_shape,
+        })
+    }
+
+    /// Register any engine implementation.
+    pub fn from_engine(
+        name: &str,
+        engine: Box<dyn Engine>,
+        item_shape: Vec<usize>,
+    ) -> ModelEntry {
+        ModelEntry { name: name.to_string(), engine, item_shape }
+    }
+
     pub fn item_len(&self) -> usize {
         self.item_shape.iter().product()
     }
@@ -119,6 +118,7 @@ impl Registry {
 mod tests {
     use super::*;
     use crate::nn::models::{build_cnn_graph, ConvSpec};
+    use crate::tensor::Tensor;
 
     fn native_entry(name: &str) -> ModelEntry {
         let g = build_cnn_graph(
@@ -128,11 +128,7 @@ mod tests {
             5,
             0,
         );
-        ModelEntry {
-            name: name.into(),
-            backend: Backend::Native { graph: g, opts: LutOpts::all() },
-            item_shape: vec![8, 8, 3],
-        }
+        ModelEntry::native(name, &g, LutOpts::all(), 8).unwrap()
     }
 
     #[test]
@@ -147,14 +143,15 @@ mod tests {
     }
 
     #[test]
-    fn native_backend_runs_any_batch() {
+    fn native_entry_runs_any_batch() {
         let e = native_entry("m");
+        let mut out = Tensor::zeros(vec![0]);
         for n in [1usize, 3, 7] {
             let x = Tensor::zeros(vec![n, 8, 8, 3]);
-            let y = e.backend.run(&x).unwrap();
-            assert_eq!(y.shape, vec![n, 5]);
+            e.engine.run_batch(&x, &mut out).unwrap();
+            assert_eq!(out.shape, vec![n, 5]);
         }
-        assert_eq!(e.backend.max_batch(), None);
+        assert_eq!(e.engine.max_batch(), None);
         assert_eq!(e.item_len(), 192);
     }
 }

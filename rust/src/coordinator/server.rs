@@ -282,7 +282,7 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{Backend, ModelEntry};
+    use crate::coordinator::ModelEntry;
     use crate::lut::LutOpts;
     use crate::nn::models::{build_cnn_graph, ConvSpec};
 
@@ -295,11 +295,7 @@ mod tests {
             0,
         );
         let mut r = Registry::new();
-        r.register(ModelEntry {
-            name: "m".into(),
-            backend: Backend::Native { graph: g, opts: LutOpts::all() },
-            item_shape: vec![8, 8, 3],
-        });
+        r.register(ModelEntry::native("m", &g, LutOpts::all(), 8).unwrap());
         r.alias("default", "m");
         r
     }

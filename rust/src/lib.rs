@@ -4,6 +4,9 @@
 //! Inference with Centroid Learning and Table Lookup* (MobiCom 2023),
 //! layer 3 of the three-layer rust + JAX + Pallas stack (see DESIGN.md).
 //!
+//! * [`api`] — the unified inference API: `LinearKernel` trait +
+//!   registry, `SessionBuilder`/`Session` zero-allocation executor, and
+//!   the backend-agnostic `Engine` trait (start here)
 //! * [`lut`] — the table-lookup execution engine (paper §5), the hot path
 //! * [`pq`] — k-means/PQ codebooks, scalar quantization, MADDNESS baseline
 //! * [`nn`] — dense reference ops, graph executor, model shape zoo
@@ -17,6 +20,7 @@
 //! * [`util`] — dependency-free substrates (json, prng, stats, threads,
 //!   cli, bench harness, property testing)
 
+pub mod api;
 pub mod coordinator;
 pub mod cost;
 pub mod lut;

@@ -1,4 +1,29 @@
-//! LUT-AMM forward engine. See module docs in `lut/mod.rs`.
+//! LUT-AMM forward engine: the compute core behind the `"lut"` kernel.
+//!
+//! [`LutLinear`] executes one linear operator `a @ B + bias` as the
+//! paper's two-stage pipeline (§5):
+//!
+//! 1. **Closest centroid search** (`encode_into`, §5.1): each input
+//!    sub-vector is matched to its codebook's nearest centroid. The
+//!    centroid-stationary path lowers the whole codebook's distance
+//!    computation to one `[n, V] x [V, K]` GEMM with `|p|^2` pre-seeded
+//!    and `-2 P^T` pre-scaled.
+//! 2. **Table read and accumulation** (`lookup_accumulate`, §5.2):
+//!    gather precomputed `centroid . B` rows from the INT8 table and
+//!    accumulate across codebooks — in i16/i32 integer lanes at a
+//!    common scale on the deployed path.
+//!
+//! The four §6.3 optimization toggles live in [`LutOpts`]; every
+//! combination computes the same operator (the opt-config agreement
+//! tests below pin this down).
+//!
+//! Layering: this module is deliberately below the public API. The
+//! executor (`api::Session`) reaches it through the object-safe
+//! `api::LinearKernel` trait (`api::LutKernel` wraps a `LutLinear` +
+//! frozen `LutOpts`), so alternative table kernels can replace it
+//! per-layer via the `api::KernelRegistry` without touching callers.
+//! `forward_into` is the allocation-free entry point the kernel calls;
+//! `forward` is an allocating convenience for tests and one-shot use.
 
 use crate::pq::{build_table, quantize_table, Codebooks};
 use crate::tensor::QTable;
@@ -48,6 +73,24 @@ impl Default for LutOpts {
     fn default() -> Self {
         LutOpts::deployed()
     }
+}
+
+/// Reusable working memory for [`LutLinear`] forwards. All buffers are
+/// resized within capacity per call, so a scratch reused across calls
+/// (and across layers — sizes settle at the per-layer maxima during the
+/// first pass) keeps the hot path allocation-free.
+#[derive(Debug, Default, Clone)]
+pub struct LutScratch {
+    /// centroid indices [n, C]
+    pub idx: Vec<u16>,
+    /// per-codebook input slab [n, V] (centroid-stationary encode)
+    pub slab: Vec<f32>,
+    /// distance scores [n, K]
+    pub scores: Vec<f32>,
+    /// i16 group accumulator [M] (mixed-precision path)
+    pub acc16: Vec<i16>,
+    /// i32 row accumulator [M] (mixed-precision path)
+    pub acc32: Vec<i32>,
 }
 
 /// A LUT-replaced linear operator (conv-as-matmul or FC).
@@ -156,7 +199,8 @@ impl LutLinear {
         assert_eq!(a.len(), n * d);
         assert_eq!(idx.len(), n * self.cb.c);
         if opts.centroid_stationary {
-            self.encode_centroid_stationary(a, n, opts, idx);
+            let (mut slab, mut scores) = (Vec::new(), Vec::new());
+            self.encode_centroid_stationary(a, n, opts, &mut slab, &mut scores, idx);
         } else {
             self.encode_naive(a, n, opts, idx);
         }
@@ -195,15 +239,24 @@ impl LutLinear {
     /// inner loop runs K-contiguous FMAs the compiler vectorizes
     /// (K = 16 -> two 8-lane AVX fma per feature) — this is the portable
     /// realization of the paper's NEON distance kernel.
-    fn encode_centroid_stationary(&self, a: &[f32], n: usize, opts: LutOpts, idx: &mut [u16]) {
+    fn encode_centroid_stationary(
+        &self,
+        a: &[f32],
+        n: usize,
+        opts: LutOpts,
+        slab: &mut Vec<f32>,
+        scores: &mut Vec<f32>,
+        idx: &mut [u16],
+    ) {
         let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
         let d = c_total * v;
         // Perf iteration 2 (EXPERIMENTS.md §Perf): the whole codebook's
         // distance computation is one [n, v] x [v, k] GEMM on the blocked
         // kernel, with |p|^2 pre-seeded into the accumulator and P^T
         // pre-scaled by -2 — ~5x the MAC rate of the per-row loop.
-        let mut slab = vec![0.0f32; n * v];
-        let mut scores = vec![0.0f32; n * k];
+        // Both buffers are fully overwritten below, so reuse is exact.
+        slab.resize(n * v, 0.0);
+        scores.resize(n * k, 0.0);
         for c in 0..c_total {
             let cbt2 = &self.cb_t2[c * v * k..(c + 1) * v * k];
             let sqn = &self.sqn[c * k..(c + 1) * k];
@@ -212,7 +265,7 @@ impl LutLinear {
                     .copy_from_slice(&a[i * d + c * v..i * d + (c + 1) * v]);
                 scores[i * k..(i + 1) * k].copy_from_slice(sqn);
             }
-            crate::nn::gemm::gemm(&slab, cbt2, &mut scores, n, v, k);
+            crate::nn::gemm::gemm(&slab[..], cbt2, &mut scores[..], n, v, k);
             for i in 0..n {
                 idx[i * c_total + c] =
                     argmin(&scores[i * k..(i + 1) * k], opts.interleaved_argmin) as u16;
@@ -226,12 +279,27 @@ impl LutLinear {
 
     /// Accumulate table rows for encoded indices into `out` ([n, M]).
     pub fn lookup_accumulate(&self, idx: &[u16], n: usize, opts: LutOpts, out: &mut [f32]) {
+        let (mut acc16, mut acc32) = (Vec::new(), Vec::new());
+        self.accumulate_buffered(idx, n, opts, &mut acc16, &mut acc32, out);
+    }
+
+    /// Accumulation core with caller-owned integer accumulators (the
+    /// scratch-reusing forward path).
+    fn accumulate_buffered(
+        &self,
+        idx: &[u16],
+        n: usize,
+        opts: LutOpts,
+        acc16: &mut Vec<i16>,
+        acc32: &mut Vec<i32>,
+        out: &mut [f32],
+    ) {
         let m = self.m;
         assert_eq!(out.len(), n * m);
         assert_eq!(idx.len(), n * self.cb.c);
         match (opts.mixed_accum, opts.blocked_table_read) {
-            (true, true) => self.accumulate_int_blocked(idx, n, out),
-            (true, false) => self.accumulate_int_scalar(idx, n, out),
+            (true, true) => self.accumulate_int_blocked(idx, n, acc16, acc32, out),
+            (true, false) => self.accumulate_int_scalar(idx, n, acc32, out),
             (false, true) => self.accumulate_f32_blocked(idx, n, out),
             (false, false) => self.accumulate_f32_scalar(idx, n, out),
         }
@@ -278,9 +346,9 @@ impl LutLinear {
 
     /// ④ without ③: integer accumulation at the common scale but with
     /// per-element indexed reads.
-    fn accumulate_int_scalar(&self, idx: &[u16], n: usize, out: &mut [f32]) {
+    fn accumulate_int_scalar(&self, idx: &[u16], n: usize, acc: &mut Vec<i32>, out: &mut [f32]) {
         let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
-        let mut acc = vec![0i32; m];
+        acc.resize(m, 0);
         for i in 0..n {
             acc.fill(0);
             for c in 0..c_total {
@@ -299,12 +367,19 @@ impl LutLinear {
     /// within overflow-safe codebook groups, widened to i32 between
     /// groups (the paper's INT16-lanes-then-INT32 scheme), one f32 scale
     /// multiply per output element at the end.
-    fn accumulate_int_blocked(&self, idx: &[u16], n: usize, out: &mut [f32]) {
+    fn accumulate_int_blocked(
+        &self,
+        idx: &[u16],
+        n: usize,
+        acc16: &mut Vec<i16>,
+        acc32: &mut Vec<i32>,
+        out: &mut [f32],
+    ) {
         let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
         // |q| <= 127, i16 max 32767 -> up to 256 safe adds per i16 lane.
         const GROUP: usize = 256;
-        let mut acc16 = vec![0i16; m];
-        let mut acc32 = vec![0i32; m];
+        acc16.resize(m, 0);
+        acc32.resize(m, 0);
         for i in 0..n {
             acc32.fill(0);
             let row_idx = &idx[i * c_total..(i + 1) * c_total];
@@ -333,8 +408,36 @@ impl LutLinear {
 
     // ------------------------------------------------------------------
 
+    /// Full LUT-AMM forward: `out[n, M] = approx(a @ B) + bias`, with
+    /// every working buffer taken from `s` (resized within capacity —
+    /// the allocation-free path `api::LutKernel` drives).
+    pub fn forward_scratch(
+        &self,
+        a: &[f32],
+        n: usize,
+        opts: LutOpts,
+        s: &mut LutScratch,
+        out: &mut [f32],
+    ) {
+        let d = self.input_dim();
+        assert_eq!(a.len(), n * d);
+        let LutScratch { idx, slab, scores, acc16, acc32 } = s;
+        idx.clear();
+        idx.resize(n * self.cb.c, 0);
+        let out = &mut out[..n * self.m];
+        out.fill(0.0);
+        if opts.centroid_stationary {
+            self.encode_centroid_stationary(a, n, opts, slab, scores, idx);
+        } else {
+            self.encode_naive(a, n, opts, idx);
+        }
+        self.accumulate_buffered(idx, n, opts, acc16, acc32, out);
+    }
+
     /// Full LUT-AMM forward: `out[n, M] = approx(a @ B) + bias`.
-    /// `idx_scratch` must be n*C long (callers reuse it across layers).
+    /// `idx_scratch` must be n*C long (callers reuse it across layers);
+    /// the remaining working buffers are allocated per call — use
+    /// [`LutLinear::forward_scratch`] on allocation-sensitive paths.
     pub fn forward_into(
         &self,
         a: &[f32],
@@ -343,11 +446,10 @@ impl LutLinear {
         idx_scratch: &mut Vec<u16>,
         out: &mut [f32],
     ) {
-        idx_scratch.clear();
-        idx_scratch.resize(n * self.cb.c, 0);
-        out[..n * self.m].fill(0.0);
-        self.encode_into(a, n, opts, idx_scratch);
-        self.lookup_accumulate(idx_scratch, n, opts, &mut out[..n * self.m]);
+        let mut s = LutScratch::default();
+        std::mem::swap(&mut s.idx, idx_scratch);
+        self.forward_scratch(a, n, opts, &mut s, out);
+        std::mem::swap(&mut s.idx, idx_scratch);
     }
 
     /// Convenience allocating forward.

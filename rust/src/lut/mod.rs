@@ -17,4 +17,4 @@
 
 pub mod engine;
 
-pub use engine::{LutLinear, LutOpts};
+pub use engine::{LutLinear, LutOpts, LutScratch};

@@ -14,8 +14,9 @@
 //!   lutnn inspect artifacts/resnet_tiny_lut.lutnn
 
 use anyhow::{anyhow, bail, Context, Result};
+use lutnn::api::SessionBuilder;
 use lutnn::coordinator::server::{Server, ServerConfig};
-use lutnn::coordinator::{Backend, ModelEntry, Registry};
+use lutnn::coordinator::{ModelEntry, Registry};
 use lutnn::cost::{model_cost, LutConfig};
 use lutnn::lut::LutOpts;
 use lutnn::model_fmt;
@@ -92,21 +93,20 @@ fn load_models(spec: &str) -> Result<Vec<(String, String)>> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let spec = args.get_or("models", "artifacts");
     let port = args.get_usize("port", 7070);
+    let max_batch = args.get_usize("max-batch", 8);
     let mut registry = Registry::new();
     for (name, path) in load_models(&spec)? {
         let graph = model_fmt::load_bundle(&path)
             .with_context(|| format!("loading {path}"))?;
-        let item_shape: Vec<usize> = graph.input_shape[1..].to_vec();
         println!(
             "registered '{name}' ({} params bytes, lut/dense = {:?})",
             graph.param_bytes(),
             graph.lut_fraction()
         );
-        registry.register(ModelEntry {
-            name,
-            backend: Backend::Native { graph, opts: LutOpts::deployed() },
-            item_shape,
-        });
+        registry.register(
+            ModelEntry::native(&name, &graph, LutOpts::deployed(), max_batch)
+                .with_context(|| format!("compiling session for {name}"))?,
+        );
     }
     if let Ok(first) = registry.resolve(&registry.names()[0]) {
         let first_name = first.name.clone();
@@ -116,7 +116,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr: format!("127.0.0.1:{port}"),
         handler_threads: args.get_usize("threads", 4),
         batcher: lutnn::coordinator::batcher::BatcherConfig {
-            max_batch: args.get_usize("max-batch", 8),
+            max_batch,
             max_wait: std::time::Duration::from_millis(
                 args.get_usize("max-wait-ms", 2) as u64,
             ),
@@ -154,13 +154,17 @@ fn cmd_infer(args: &Args) -> Result<()> {
     } else {
         Tensor::new(shape.clone(), rng.normal_vec(n, 1.0))
     };
+    let mut session = SessionBuilder::new(&graph)
+        .opts(opts)
+        .max_batch(batch)
+        .build()
+        .context("compiling session")?;
+    let mut out = Tensor::zeros(vec![0]);
     let t0 = std::time::Instant::now();
-    let mut out = None;
     for _ in 0..iters {
-        out = Some(graph.run(x.clone(), opts));
+        session.run(&x, &mut out)?;
     }
     let dt = t0.elapsed().as_secs_f64() / iters as f64;
-    let out = out.unwrap();
     println!(
         "model={} batch={batch} out_shape={:?} latency={:.3}ms",
         graph.name,
@@ -258,5 +262,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     }
     t.print();
     println!("total param bytes: {}", graph.param_bytes());
+    match SessionBuilder::new(&graph).build() {
+        Ok(s) => println!("compiled: {}", s.describe()),
+        Err(e) => println!("session compile failed: {e:#}"),
+    }
     Ok(())
 }

@@ -513,6 +513,7 @@ pub fn save_bundle(g: &Graph, path: &str) -> Result<()> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // round-trip parity is checked through Graph::run
 mod tests {
     use super::*;
     use crate::lut::LutOpts;

@@ -14,6 +14,7 @@ use crate::tensor::im2col::im2col;
 use crate::tensor::Tensor;
 
 /// Parameters of one named layer.
+#[derive(Clone)]
 pub enum LayerParams {
     Dense { w: Vec<f32>, b: Option<Vec<f32>>, m: usize },
     Lut(LutLinear),
@@ -35,6 +36,17 @@ impl LayerParams {
             LayerParams::Embedding { tok, pos, .. } => 4 * (tok.len() + pos.len()),
         }
     }
+
+    /// Registry tag of the kernel that executes this layer, if it is a
+    /// linear (conv / FC) layer — the hook `api::SessionBuilder` uses to
+    /// pick an implementation from the `KernelRegistry`.
+    pub fn kernel_tag(&self) -> Option<&'static str> {
+        match self {
+            LayerParams::Dense { .. } => Some("dense"),
+            LayerParams::Lut(_) => Some("lut"),
+            _ => None,
+        }
+    }
 }
 
 /// One graph instruction.
@@ -53,6 +65,7 @@ pub enum Op {
 }
 
 /// Executable model: instruction list + named parameters (+ BERT config).
+#[derive(Clone)]
 pub struct Graph {
     pub name: String,
     pub input_shape: Vec<usize>,
@@ -82,9 +95,15 @@ impl Graph {
     }
 
     /// Run a forward pass. `batch` replaces the leading input dim.
+    ///
+    /// Legacy shim: allocates fresh activations per call and takes the
+    /// input by value. Prefer compiling once via `api::SessionBuilder`
+    /// and calling `Session::run(&input, &mut output)` — bitwise the
+    /// same outputs, no per-call allocation.
+    #[deprecated(since = "0.2.0", note = "use api::SessionBuilder -> Session::run")]
     pub fn run(&self, x: Tensor, opts: LutOpts) -> Tensor {
         if self.bert.is_some() {
-            return crate::nn::bert::run_bert(self, x, opts);
+            return crate::nn::bert::run_bert(self, &x, opts);
         }
         let mut cur = x;
         let mut slots: BTreeMap<usize, Tensor> = BTreeMap::new();
@@ -177,6 +196,7 @@ impl Graph {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy Graph::run shim is under test here
 mod tests {
     use super::*;
     use crate::pq::kmeans::learn_codebooks;

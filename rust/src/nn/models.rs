@@ -285,6 +285,12 @@ pub fn build_cnn_graph(
 /// Replace every dense conv/linear except the first conv with a LUT layer
 /// whose codebooks are k-means-learned from this graph's own activations
 /// on `sample` inputs (the rust-native conversion path).
+///
+/// The returned graph's layers are kernel-tagged: each layer's
+/// `LayerParams::kernel_tag()` names the `api::KernelRegistry` entry
+/// (`"lut"` for converted layers, `"dense"` for the stem/untouched
+/// ones), so `api::SessionBuilder` dispatches without inspecting layer
+/// internals.
 pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, seed: u64) -> Graph {
     let mut new_layers: BTreeMap<String, LayerParams> = BTreeMap::new();
     // Re-run the graph, capturing inputs of each linear op.
@@ -317,29 +323,7 @@ pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, se
         if let Some(lut) = new_layers.remove(name) {
             layers.insert(name.clone(), lut);
         } else {
-            layers.insert(
-                name.clone(),
-                match params {
-                    LayerParams::Dense { w, b, m } => {
-                        LayerParams::Dense { w: w.clone(), b: b.clone(), m: *m }
-                    }
-                    LayerParams::Bn { gamma, beta, mean, var } => LayerParams::Bn {
-                        gamma: gamma.clone(),
-                        beta: beta.clone(),
-                        mean: mean.clone(),
-                        var: var.clone(),
-                    },
-                    LayerParams::Ln { gamma, beta } => {
-                        LayerParams::Ln { gamma: gamma.clone(), beta: beta.clone() }
-                    }
-                    LayerParams::Embedding { tok, pos, d } => LayerParams::Embedding {
-                        tok: tok.clone(),
-                        pos: pos.clone(),
-                        d: *d,
-                    },
-                    LayerParams::Lut(_) => unreachable!("input graph is dense"),
-                },
-            );
+            layers.insert(name.clone(), params.clone());
         }
     }
     Graph {
@@ -407,6 +391,7 @@ fn capture_linear_inputs(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy Graph::run entry point
 mod tests {
     use super::*;
     use crate::lut::LutOpts;

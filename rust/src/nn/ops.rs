@@ -91,7 +91,19 @@ pub fn max_pool(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let ho = (h - k) / stride + 1;
     let wo = (w - k) / stride + 1;
-    let mut out = vec![f32::NEG_INFINITY; n * ho * wo * c];
+    let mut out = vec![0.0f32; n * ho * wo * c];
+    max_pool_into(x, k, stride, &mut out);
+    Tensor::new(vec![n, ho, wo, c], out)
+}
+
+/// Non-allocating max pool into a caller-owned `N*Ho*Wo*C` buffer
+/// (the `Session` hot path). Returns `(ho, wo)`.
+pub fn max_pool_into(x: &Tensor, k: usize, stride: usize, out: &mut [f32]) -> (usize, usize) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - k) / stride + 1;
+    let wo = (w - k) / stride + 1;
+    assert_eq!(out.len(), n * ho * wo * c, "max_pool_into buffer size");
+    out.fill(f32::NEG_INFINITY);
     for ni in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -112,13 +124,21 @@ pub fn max_pool(x: &Tensor, k: usize, stride: usize) -> Tensor {
             }
         }
     }
-    Tensor::new(vec![n, ho, wo, c], out)
+    (ho, wo)
 }
 
 /// Global average pool NHWC -> [N, C].
 pub fn global_avg_pool(x: &Tensor) -> Tensor {
-    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (n, _, _, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let mut out = vec![0.0f32; n * c];
+    global_avg_pool_into(x, &mut out);
+    Tensor::new(vec![n, c], out)
+}
+
+/// Non-allocating global average pool into a caller-owned `N*C` buffer.
+pub fn global_avg_pool_into(x: &Tensor, out: &mut [f32]) {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(out.len(), n * c, "global_avg_pool_into buffer size");
     let inv = 1.0 / (h * w) as f32;
     for ni in 0..n {
         for ci in 0..c {
@@ -131,7 +151,6 @@ pub fn global_avg_pool(x: &Tensor) -> Tensor {
             out[ni * c + ci] = s * inv;
         }
     }
-    Tensor::new(vec![n, c], out)
 }
 
 /// Row-wise softmax of a 2-D tensor (attention / output probabilities).

@@ -21,6 +21,19 @@ pub fn same_out_size(in_size: usize, stride: usize) -> usize {
 
 /// NHWC -> patches [N*Ho*Wo, Cin*k*k], channel-major feature order.
 pub fn im2col(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = same_out_size(h, stride);
+    let wo = same_out_size(w, stride);
+    let d = cin * k * k;
+    let mut out = vec![0.0f32; n * ho * wo * d];
+    im2col_into(x, k, stride, &mut out);
+    Tensor::new(vec![n * ho * wo, d], out)
+}
+
+/// Non-allocating `im2col` into a caller-owned buffer of exactly
+/// `N*Ho*Wo * Cin*k*k` elements (the `Session` hot path). Returns
+/// `(rows, d)`.
+pub fn im2col_into(x: &Tensor, k: usize, stride: usize, out: &mut [f32]) -> (usize, usize) {
     assert_eq!(x.rank(), 4, "im2col expects NHWC");
     let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (pad_top, _) = same_padding(h, k, stride);
@@ -28,7 +41,8 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let ho = same_out_size(h, stride);
     let wo = same_out_size(w, stride);
     let d = cin * k * k;
-    let mut out = vec![0.0f32; n * ho * wo * d];
+    assert_eq!(out.len(), n * ho * wo * d, "im2col_into buffer size");
+    out.fill(0.0);
 
     for ni in 0..n {
         for oy in 0..ho {
@@ -56,7 +70,7 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize) -> Tensor {
             }
         }
     }
-    Tensor::new(vec![n * ho * wo, d], out)
+    (n * ho * wo, d)
 }
 
 #[cfg(test)]

@@ -6,12 +6,15 @@
 //! `cargo test` must stay green on a fresh checkout; `make test` runs
 //! the full matrix.
 
+use lutnn::api::{Engine, PjrtEngine, SessionBuilder};
 use lutnn::coordinator::batcher::{Batcher, BatcherConfig};
 use lutnn::coordinator::server::{Client, Server, ServerConfig};
-use lutnn::coordinator::{Backend, ModelEntry, Registry};
+use lutnn::coordinator::{ModelEntry, Registry};
 use lutnn::lut::LutOpts;
 use lutnn::model_fmt;
-use lutnn::runtime::{artifact_path, artifacts_available, read_f32_file, PjRtEngine};
+use lutnn::runtime::{
+    artifact_path, artifacts_available, pjrt_available, read_f32_file, PjRtEngine,
+};
 use lutnn::tensor::Tensor;
 use lutnn::util::json::Json;
 
@@ -19,6 +22,17 @@ macro_rules! require_artifacts {
     () => {
         if !artifacts_available() {
             eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+/// PJRT tests additionally need a real (non-stub) xla toolchain.
+macro_rules! require_pjrt {
+    () => {
+        require_artifacts!();
+        if !pjrt_available() {
+            eprintln!("skipping: PJRT unavailable in this build");
             return;
         }
     };
@@ -46,7 +60,8 @@ fn native_engine_matches_python_golden_lut() {
     require_artifacts!();
     let graph = model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn")).unwrap();
     let want = read_f32_file(&artifact_path("golden_lut_out_b8.f32")).unwrap();
-    let got = graph.run(golden_input(), LutOpts::all());
+    let mut sess = SessionBuilder::new(&graph).opts(LutOpts::all()).max_batch(8).build().unwrap();
+    let got = sess.run_alloc(&golden_input()).unwrap();
     assert_eq!(got.shape, vec![8, 10]);
     // The LUT forward is exact-reproducible only up to argmin tie-breaks:
     // the jnp oracle computes |a|^2 - 2a.p + |p|^2 while the engine drops
@@ -76,7 +91,8 @@ fn native_engine_matches_python_golden_dense() {
     require_artifacts!();
     let graph = model_fmt::load_bundle(&artifact_path("resnet_tiny_dense.lutnn")).unwrap();
     let want = read_f32_file(&artifact_path("golden_dense_out_b8.f32")).unwrap();
-    let got = graph.run(golden_input(), LutOpts::all());
+    let mut sess = SessionBuilder::new(&graph).opts(LutOpts::all()).max_batch(8).build().unwrap();
+    let got = sess.run_alloc(&golden_input()).unwrap();
     let max_diff = got
         .data
         .iter()
@@ -89,7 +105,7 @@ fn native_engine_matches_python_golden_dense() {
 
 #[test]
 fn pjrt_model_matches_python_golden() {
-    require_artifacts!();
+    require_pjrt!();
     let engine = PjRtEngine::cpu().unwrap();
     let model = engine
         .load_hlo_text(&artifact_path("resnet_tiny_lut_b8.hlo.txt"), None)
@@ -110,7 +126,7 @@ fn pjrt_model_matches_python_golden() {
 
 #[test]
 fn pjrt_lut_amm_op_matches_oracle() {
-    require_artifacts!();
+    require_pjrt!();
     let engine = PjRtEngine::cpu().unwrap();
     let model = engine
         .load_hlo_text(&artifact_path("lut_amm_op.hlo.txt"), None)
@@ -178,11 +194,7 @@ fn serve_trained_bundle_over_tcp() {
     require_artifacts!();
     let graph = model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn")).unwrap();
     let mut registry = Registry::new();
-    registry.register(ModelEntry {
-        name: "resnet_tiny_lut".into(),
-        backend: Backend::Native { graph, opts: LutOpts::all() },
-        item_shape: vec![16, 16, 3],
-    });
+    registry.register(ModelEntry::native("resnet_tiny_lut", &graph, LutOpts::all(), 8).unwrap());
     let mut server = Server::start(
         registry,
         ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
@@ -210,21 +222,22 @@ fn serve_trained_bundle_over_tcp() {
 }
 
 #[test]
-fn batcher_on_pjrt_backend_pads_batches() {
-    require_artifacts!();
+fn batcher_on_pjrt_engine_pads_batches() {
+    require_pjrt!();
     let (_host, mut models) = lutnn::runtime::PjrtHost::spawn(vec![artifact_path(
         "resnet_tiny_lut_b8.hlo.txt",
     )])
     .unwrap();
-    let entry = std::sync::Arc::new(ModelEntry {
-        name: "pjrt8".into(),
-        backend: Backend::Pjrt { model: models.remove(0), batch: 8, is_tokens: false },
-        item_shape: vec![16, 16, 3],
-    });
+    let entry = std::sync::Arc::new(ModelEntry::from_engine(
+        "pjrt8",
+        Box::new(PjrtEngine::new(models.remove(0), 8, false)),
+        vec![16, 16, 3],
+    ));
     // Self-consistency: the batcher (padding 1 -> 8) must reproduce what
     // the hosted model returns for the full golden batch, row 0.
     let golden = golden_input();
-    let full = entry.backend.run(&golden).unwrap();
+    let mut full = Tensor::zeros(vec![0]);
+    entry.engine.run_batch(&golden, &mut full).unwrap();
     let b = Batcher::spawn(std::sync::Arc::clone(&entry), BatcherConfig::default());
     let out = b.submit(golden.data[..768].to_vec()).unwrap();
     assert_eq!(out.len(), 10);
@@ -239,7 +252,8 @@ fn mini_bert_bundle_runs_natively() {
     let graph = model_fmt::load_bundle(&artifact_path("mini_bert_lut.lutnn")).unwrap();
     assert!(graph.bert.is_some());
     let tokens = Tensor::new(vec![2, 16], (0..32).map(|i| (i % 60) as f32).collect());
-    let out = graph.run(tokens, LutOpts::all());
+    let mut sess = SessionBuilder::new(&graph).opts(LutOpts::all()).build().unwrap();
+    let out = sess.run_alloc(&tokens).unwrap();
     assert_eq!(out.shape, vec![2, 4]);
     assert!(out.data.iter().all(|v| v.is_finite()));
 }

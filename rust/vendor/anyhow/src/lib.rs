@@ -1,0 +1,198 @@
+//! Vendored minimal `anyhow` stand-in.
+//!
+//! This build environment vendors no crates.io closure, so the error
+//! conveniences the repo uses (`anyhow!`, `bail!`, `ensure!`, `Result`,
+//! `Context`) are implemented here at the scale the project needs.
+//! Semantics mirror the real crate for the used surface:
+//!
+//! * `Error` carries a message plus a context chain; `{e}` prints the
+//!   outermost context, `{e:#}` prints the full `outer: ...: root` chain.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`.
+//! * `Context::{context, with_context}` wrap `Result` and `Option`.
+//!
+//! Swapping back to the real `anyhow` is a one-line Cargo.toml change —
+//! no call site depends on anything beyond the real crate's API.
+
+use std::fmt;
+
+/// Error with a human-readable message and an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The cause chain, outermost first (including `self`).
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below
+// coherent (no overlap with `impl From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as context entries.
+        let mut stack = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(err) = cur {
+            stack.push(err.to_string());
+            cur = err.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in stack.into_iter().rev() {
+            out = Some(match out {
+                Some(inner) => inner.context(msg),
+                None => Error::msg(msg),
+            });
+        }
+        out.unwrap_or_else(|| Error::msg("unknown error"))
+    }
+}
+
+/// `anyhow::Result<T>` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result` / `Option` (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an error from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/7f3a").map(|_| ())?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = io_fail().context("loading bundle").unwrap_err();
+        assert_eq!(format!("{e}"), "loading bundle");
+        assert!(format!("{e:#}").starts_with("loading bundle: "));
+        assert!(e.chain().count() >= 2);
+    }
+
+    #[test]
+    fn macros_and_ensure() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        let e: Error = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+}

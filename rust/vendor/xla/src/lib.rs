@@ -1,0 +1,130 @@
+//! Stub for the `xla` crate (PJRT bindings).
+//!
+//! This build environment does not carry the XLA/PJRT native toolchain,
+//! so this crate provides the exact API surface `lutnn::runtime` uses —
+//! types, signatures, generics — with every entry point that would touch
+//! PJRT returning [`Error`] at runtime. The `lutnn` code gates all PJRT
+//! paths behind `runtime::pjrt_available()` / artifact checks, so a
+//! stubbed build compiles, tests and serves the native engine normally.
+//!
+//! To enable real PJRT execution, point the `xla` path dependency in the
+//! workspace `Cargo.toml` at the vendored real crate; no `lutnn` source
+//! changes are required.
+
+/// Stub error. Call sites format this with `{:?}`.
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error("xla stub: PJRT toolchain not present in this build (see rust/vendor/xla)".to_string())
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types used by untyped literal construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    S8,
+    S32,
+    F32,
+}
+
+/// Scalar types accepted by [`Literal::vec1`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (tensor value). Stub: carries nothing.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[i64],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module. Stub: construction always fails.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer returned by execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable. Stub: cannot be constructed.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client. Stub: `cpu()` reports the toolchain is absent.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
