@@ -1,7 +1,11 @@
-//! Paper Fig. 8: end-to-end model latency, LUT-NN vs dense.
+//! Paper Fig. 8: end-to-end model latency, LUT-NN vs dense — plus the
+//! per-kernel shootout for the registry's LUT-family implementations.
 //!
-//! Three measurements, all through the unified `api` entry points
-//! (`SessionBuilder` -> `Session` for native, `Engine` for PJRT):
+//! Measurements, all through the unified `api` entry points:
+//!   0. Kernel shootout on one representative encode-heavy layer shape:
+//!      `dense` vs `lut` (scalar) vs `lut-simd` vs `lut-i8` through the
+//!      same `LinearKernel` interface (always runs; the whole bench's
+//!      machine-readable output lands in `BENCH_e2e_latency.json`).
 //!   1. VGG11 (CIFAR10) at the paper's exact layer shapes, rust-native
 //!      engine: dense (im2col+GEMM) vs LUT (converted in-process).
 //!   2. The trained resnet_tiny bundles (requires `make artifacts`),
@@ -10,19 +14,25 @@
 //!      graphs), behind the same `Engine` trait the coordinator uses.
 //!
 //! The paper reports 1.3–4.2x CNN speedups and ~5-7x for BERT; the shape
-//! to reproduce is LUT < dense on every model, growing with width.
+//! to reproduce is LUT < dense on every model, growing with width, and
+//! `lut-simd` <= `lut` on the shootout layer.
 //!
-//! Run: `cargo bench --bench e2e_latency`
+//! Run: `cargo bench --bench e2e_latency [--features simd]`
+//! `E2E_FAST=1` runs only the kernel shootout (the CI artifact path).
 
-use lutnn::api::{Engine, PjrtEngine, SessionBuilder};
-use lutnn::lut::LutOpts;
+use lutnn::api::{
+    DenseKernel, Engine, LinearKernel, LutI8Kernel, LutKernel, PjrtEngine, Scratch,
+    SessionBuilder, SimdLutKernel,
+};
+use lutnn::lut::{simd, LutLinear, LutOpts};
 use lutnn::model_fmt;
 use lutnn::nn::graph::Graph;
 use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+use lutnn::pq::kmeans::learn_codebooks;
 use lutnn::runtime::{artifact_path, artifacts_available, pjrt_available, PjrtHost};
 use lutnn::tensor::Tensor;
 use lutnn::util::benchmark::{bench, black_box, record_jsonl, BenchConfig, Table};
-use lutnn::util::json::Json;
+use lutnn::util::json::{self, Json};
 use lutnn::util::prng::Prng;
 
 /// Bench one compiled session on `x` (reused output tensor: the timed
@@ -41,115 +51,221 @@ fn bench_session(name: &str, cfg: &BenchConfig, graph: &Graph, x: &Tensor) -> f6
     r.summary.mean
 }
 
+/// Kernel shootout: every registry LUT-family kernel (plus the dense
+/// GEMM baseline) on one encode-heavy layer — the `lut_amm_op` shape
+/// (3x3 conv, 64 ch at 16x16: rows=256, D=576, M=128, K=16, V=9).
+fn kernel_shootout(cfg: &BenchConfig) -> Json {
+    let (rows, c, v, k, m) = (256usize, 64usize, 9usize, 16usize, 128usize);
+    let d = c * v;
+    let mut rng = Prng::new(1);
+    let a = rng.normal_vec(rows * d, 1.0);
+    let w = rng.normal_vec(d * m, 1.0);
+    eprintln!("kernel shootout: learning codebooks (C={c} K={k} V={v})...");
+    let cb = learn_codebooks(&a, rows, d, c, k, 6, 0);
+    let lut = LutLinear::new(cb, &w, m, Some(vec![0.1; m]), 8);
+    let opts = LutOpts::deployed();
+    let kernels: Vec<Box<dyn LinearKernel>> = vec![
+        Box::new(DenseKernel::new(w.clone(), Some(vec![0.1; m]), m)),
+        Box::new(LutKernel::new(lut.clone(), opts)),
+        Box::new(SimdLutKernel::new(lut.clone(), opts)),
+        Box::new(LutI8Kernel::new(lut)),
+    ];
+    let mut scratch = Scratch::default();
+    let mut out = vec![0.0f32; rows * m];
+    let mut t = Table::new(&["kernel", "ms / fwd", "vs scalar lut"]);
+    let mut measured: Vec<(&'static str, f64)> = Vec::new();
+    for kern in &kernels {
+        let r = bench(kern.name(), cfg, || {
+            kern.forward_into(black_box(&a), rows, &mut scratch, &mut out);
+            black_box(&out);
+        });
+        measured.push((kern.name(), r.summary.mean));
+    }
+    let scalar_ms = measured
+        .iter()
+        .find(|(n, _)| *n == "lut")
+        .map(|(_, s)| s * 1e3)
+        .unwrap();
+    let mut ms_obj: Vec<(&str, Json)> = Vec::new();
+    for &(name, mean) in &measured {
+        let ms = mean * 1e3;
+        t.row(&[
+            name.into(),
+            format!("{ms:.3}"),
+            format!("{:.2}x", scalar_ms / ms),
+        ]);
+        ms_obj.push((name, Json::num(ms)));
+    }
+    println!("\n== Kernel shootout (rows={rows}, D={d}, M={m}, K={k}, V={v}) ==\n");
+    t.print();
+    println!("simd backend: {}", simd::active_backend());
+    let simd_ms = measured
+        .iter()
+        .find(|(n, _)| *n == "lut-simd")
+        .map(|(_, s)| s * 1e3)
+        .unwrap();
+    Json::obj(vec![
+        (
+            "shape",
+            Json::obj(vec![
+                ("rows", Json::num(rows as f64)),
+                ("d", Json::num(d as f64)),
+                ("m", Json::num(m as f64)),
+                ("k", Json::num(k as f64)),
+                ("v", Json::num(v as f64)),
+            ]),
+        ),
+        ("backend", Json::str(simd::active_backend())),
+        ("kernel_ms", Json::obj(ms_obj)),
+        ("simd_speedup_vs_scalar", Json::num(scalar_ms / simd_ms)),
+    ])
+}
+
 fn main() {
+    let fast = lutnn::util::env_flag("E2E_FAST");
     let cfg = BenchConfig { min_iters: 4, max_iters: 30, ..Default::default() };
     let mut rng = Prng::new(0);
     let mut t = Table::new(&["model", "engine", "dense ms", "lut ms", "speedup"]);
+    let mut model_rows: Vec<Json> = Vec::new();
 
-    // ---- 1. VGG11 (CIFAR) exact shapes, native --------------------------
-    let vgg_specs: Vec<ConvSpec> = [
-        (64usize, 1usize),
-        (128, 1),
-        (256, 2), // stride-2 stands in for the removed pools at equal FLOPs
-        (256, 1),
-        (512, 2),
-        (512, 1),
-        (512, 2),
-        (512, 1),
-    ]
-    .iter()
-    .map(|&(cout, stride)| ConvSpec { cout, k: 3, stride })
-    .collect();
-    let dense_g = build_cnn_graph("vgg11_cifar", [32, 32, 3], &vgg_specs, 10, 0);
-    let sample = Tensor::new(vec![2, 32, 32, 3], rng.normal_vec(2 * 32 * 32 * 3, 1.0));
-    eprintln!("converting VGG11 to LUT (k-means on activations)...");
-    let lut_g = lutify_graph(&dense_g, &sample, 16, 8, 0);
-    let x = Tensor::new(vec![1, 32, 32, 3], rng.normal_vec(32 * 32 * 3, 1.0));
-    let d = bench_session("vgg dense", &cfg, &dense_g, &x);
-    let l = bench_session("vgg lut", &cfg, &lut_g, &x);
-    t.row(&[
-        "VGG11 (CIFAR10)".into(),
-        "native".into(),
-        format!("{:.2}", d * 1e3),
-        format!("{:.2}", l * 1e3),
-        format!("{:.2}x", d / l),
-    ]);
-    record_jsonl(
-        "fig8_e2e.jsonl",
-        &Json::obj(vec![
+    // ---- 0. kernel shootout (always) ------------------------------------
+    let shootout = kernel_shootout(&cfg);
+
+    if !fast {
+        // ---- 1. VGG11 (CIFAR) exact shapes, native ----------------------
+        let vgg_specs: Vec<ConvSpec> = [
+            (64usize, 1usize),
+            (128, 1),
+            (256, 2), // stride-2 stands in for the removed pools at equal FLOPs
+            (256, 1),
+            (512, 2),
+            (512, 1),
+            (512, 2),
+            (512, 1),
+        ]
+        .iter()
+        .map(|&(cout, stride)| ConvSpec { cout, k: 3, stride })
+        .collect();
+        let dense_g = build_cnn_graph("vgg11_cifar", [32, 32, 3], &vgg_specs, 10, 0);
+        let sample = Tensor::new(vec![2, 32, 32, 3], rng.normal_vec(2 * 32 * 32 * 3, 1.0));
+        eprintln!("converting VGG11 to LUT (k-means on activations)...");
+        let lut_g = lutify_graph(&dense_g, &sample, 16, 8, 0);
+        let x = Tensor::new(vec![1, 32, 32, 3], rng.normal_vec(32 * 32 * 3, 1.0));
+        let d = bench_session("vgg dense", &cfg, &dense_g, &x);
+        let l = bench_session("vgg lut", &cfg, &lut_g, &x);
+        t.row(&[
+            "VGG11 (CIFAR10)".into(),
+            "native".into(),
+            format!("{:.2}", d * 1e3),
+            format!("{:.2}", l * 1e3),
+            format!("{:.2}x", d / l),
+        ]);
+        let row = Json::obj(vec![
             ("model", Json::str("VGG11 (CIFAR10)")),
             ("engine", Json::str("native")),
             ("dense_ms", Json::num(d * 1e3)),
             ("lut_ms", Json::num(l * 1e3)),
-        ]),
-    );
-
-    // ---- 2+3. trained bundles -------------------------------------------
-    if artifacts_available() {
-        let dense_b = model_fmt::load_bundle(&artifact_path("resnet_tiny_dense.lutnn")).unwrap();
-        let lut_b = model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn")).unwrap();
-        let xb = Tensor::new(vec![8, 16, 16, 3], rng.normal_vec(8 * 16 * 16 * 3, 1.0));
-        let d = bench_session("tiny dense", &cfg, &dense_b, &xb);
-        let l = bench_session("tiny lut", &cfg, &lut_b, &xb);
-        t.row(&[
-            "resnet_tiny (b8)".into(),
-            "native".into(),
-            format!("{:.2}", d * 1e3),
-            format!("{:.2}", l * 1e3),
-            format!("{:.2}x", d / l),
         ]);
+        record_jsonl("fig8_e2e.jsonl", &row);
+        model_rows.push(row);
 
-        let bert_dense = model_fmt::load_bundle(&artifact_path("mini_bert_dense.lutnn")).unwrap();
-        let bert_lut = model_fmt::load_bundle(&artifact_path("mini_bert_lut.lutnn")).unwrap();
-        let tokens = Tensor::new(vec![8, 16], (0..128).map(|i| (i % 60) as f32).collect());
-        let d = bench_session("bert dense", &cfg, &bert_dense, &tokens);
-        let l = bench_session("bert lut", &cfg, &bert_lut, &tokens);
-        t.row(&[
-            "mini_bert (b8)".into(),
-            "native".into(),
-            format!("{:.2}", d * 1e3),
-            format!("{:.2}", l * 1e3),
-            format!("{:.2}x", d / l),
-        ]);
-
-        // PJRT (XLA-compiled AOT graphs) through the same Engine trait
-        // the coordinator dispatches on. XLA fuses the dense model far
-        // more aggressively — this measures the compiled-graph pair.
-        if pjrt_available() {
-            let (_host, mut models) = PjrtHost::spawn(vec![
-                artifact_path("resnet_tiny_dense_b8.hlo.txt"),
-                artifact_path("resnet_tiny_lut_b8.hlo.txt"),
-            ])
-            .unwrap();
-            let lut_eng = PjrtEngine::new(models.remove(1), 8, false);
-            let dense_eng = PjrtEngine::new(models.remove(0), 8, false);
-            let mut out = Tensor::zeros(vec![0]);
-            let d = bench("pjrt dense", &cfg, || {
-                dense_eng.run_batch(black_box(&xb), &mut out).unwrap();
-                black_box(&out);
-            });
-            let l = bench("pjrt lut", &cfg, || {
-                lut_eng.run_batch(black_box(&xb), &mut out).unwrap();
-                black_box(&out);
-            });
+        // ---- 2+3. trained bundles ---------------------------------------
+        if artifacts_available() {
+            let dense_b =
+                model_fmt::load_bundle(&artifact_path("resnet_tiny_dense.lutnn")).unwrap();
+            let lut_b = model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn")).unwrap();
+            let xb = Tensor::new(vec![8, 16, 16, 3], rng.normal_vec(8 * 16 * 16 * 3, 1.0));
+            let d = bench_session("tiny dense", &cfg, &dense_b, &xb);
+            let l = bench_session("tiny lut", &cfg, &lut_b, &xb);
             t.row(&[
                 "resnet_tiny (b8)".into(),
-                "pjrt-xla".into(),
-                format!("{:.2}", d.mean_ms()),
-                format!("{:.2}", l.mean_ms()),
-                format!("{:.2}x", d.summary.mean / l.summary.mean),
+                "native".into(),
+                format!("{:.2}", d * 1e3),
+                format!("{:.2}", l * 1e3),
+                format!("{:.2}x", d / l),
             ]);
+            model_rows.push(Json::obj(vec![
+                ("model", Json::str("resnet_tiny (b8)")),
+                ("engine", Json::str("native")),
+                ("dense_ms", Json::num(d * 1e3)),
+                ("lut_ms", Json::num(l * 1e3)),
+            ]));
+
+            let bert_dense =
+                model_fmt::load_bundle(&artifact_path("mini_bert_dense.lutnn")).unwrap();
+            let bert_lut = model_fmt::load_bundle(&artifact_path("mini_bert_lut.lutnn")).unwrap();
+            let tokens = Tensor::new(vec![8, 16], (0..128).map(|i| (i % 60) as f32).collect());
+            let d = bench_session("bert dense", &cfg, &bert_dense, &tokens);
+            let l = bench_session("bert lut", &cfg, &bert_lut, &tokens);
+            t.row(&[
+                "mini_bert (b8)".into(),
+                "native".into(),
+                format!("{:.2}", d * 1e3),
+                format!("{:.2}", l * 1e3),
+                format!("{:.2}x", d / l),
+            ]);
+            model_rows.push(Json::obj(vec![
+                ("model", Json::str("mini_bert (b8)")),
+                ("engine", Json::str("native")),
+                ("dense_ms", Json::num(d * 1e3)),
+                ("lut_ms", Json::num(l * 1e3)),
+            ]));
+
+            // PJRT (XLA-compiled AOT graphs) through the same Engine trait
+            // the coordinator dispatches on. XLA fuses the dense model far
+            // more aggressively — this measures the compiled-graph pair.
+            if pjrt_available() {
+                let (_host, mut models) = PjrtHost::spawn(vec![
+                    artifact_path("resnet_tiny_dense_b8.hlo.txt"),
+                    artifact_path("resnet_tiny_lut_b8.hlo.txt"),
+                ])
+                .unwrap();
+                let lut_eng = PjrtEngine::new(models.remove(1), 8, false);
+                let dense_eng = PjrtEngine::new(models.remove(0), 8, false);
+                let mut out = Tensor::zeros(vec![0]);
+                let d = bench("pjrt dense", &cfg, || {
+                    dense_eng.run_batch(black_box(&xb), &mut out).unwrap();
+                    black_box(&out);
+                });
+                let l = bench("pjrt lut", &cfg, || {
+                    lut_eng.run_batch(black_box(&xb), &mut out).unwrap();
+                    black_box(&out);
+                });
+                t.row(&[
+                    "resnet_tiny (b8)".into(),
+                    "pjrt-xla".into(),
+                    format!("{:.2}", d.mean_ms()),
+                    format!("{:.2}", l.mean_ms()),
+                    format!("{:.2}x", d.summary.mean / l.summary.mean),
+                ]);
+            } else {
+                eprintln!("(PJRT unavailable in this build: skipping pjrt rows)");
+            }
         } else {
-            eprintln!("(PJRT unavailable in this build: skipping pjrt rows)");
+            eprintln!("(artifacts missing: run `make artifacts` for bundle rows)");
         }
-    } else {
-        eprintln!("(artifacts missing: run `make artifacts` for bundle rows)");
+
+        println!("\n== Fig. 8: end-to-end latency ==\n");
+        t.print();
+        println!(
+            "\npaper: LUT-NN 1.3-4.2x faster on CNNs, 5.6-6.8x on BERT \
+             (vs ORT/TVM on mobile/x86 CPUs)."
+        );
+        println!(
+            "(pjrt-lut runs the interpret-mode pallas lowering — a \
+             correctness artifact, not a perf target; see DESIGN.md.)"
+        );
     }
 
-    println!("\n== Fig. 8: end-to-end latency ==\n");
-    t.print();
-    println!("\npaper: LUT-NN 1.3-4.2x faster on CNNs, 5.6-6.8x on BERT \
-              (vs ORT/TVM on mobile/x86 CPUs).");
-    println!("(pjrt-lut runs the interpret-mode pallas lowering — a \
-              correctness artifact, not a perf target; see DESIGN.md.)");
+    // Machine-readable record of this whole run (CI uploads it as the
+    // BENCH_*.json trajectory artifact).
+    let doc = Json::obj(vec![
+        ("bench", Json::str("e2e_latency")),
+        ("simd_backend", Json::str(simd::active_backend())),
+        ("kernel_shootout", shootout),
+        ("models", Json::Arr(model_rows)),
+    ]);
+    std::fs::write("BENCH_e2e_latency.json", json::to_string(&doc) + "\n")
+        .expect("write BENCH_e2e_latency.json");
+    eprintln!("wrote BENCH_e2e_latency.json");
 }

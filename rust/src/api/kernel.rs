@@ -9,8 +9,9 @@
 //! allocates on the forward path — all working memory comes from the
 //! caller-owned [`Scratch`] and `out` buffers.
 
-use crate::lut::{LutLinear, LutOpts, LutScratch};
+use crate::lut::{simd, LutLinear, LutOpts, LutScratch};
 use crate::nn::gemm::gemm;
+use crate::nn::ops::add_bias_rows;
 
 /// Caller-owned scratch shared across every kernel invocation in a
 /// forward pass. The index buffer is sized by `SessionBuilder` at build
@@ -106,11 +107,7 @@ impl LinearKernel for DenseKernel {
         out.fill(0.0);
         gemm(input, &self.w, out, rows, d, m);
         if let Some(b) = &self.b {
-            for row in out.chunks_exact_mut(m) {
-                for (o, &bb) in row.iter_mut().zip(b) {
-                    *o += bb;
-                }
-            }
+            add_bias_rows(out, b);
         }
     }
 }
@@ -160,13 +157,177 @@ impl LinearKernel for LutKernel {
     }
 }
 
+/// Explicit-SIMD LUT kernel: the [`crate::lut::simd`] vectorized
+/// closest-centroid encode (AVX2 intrinsics behind `--features simd`,
+/// lane-structured portable fallback otherwise) feeding the same
+/// table-accumulate core as [`LutKernel`].
+///
+/// **Bitwise contract**: for any input, `forward_into` produces bytes
+/// identical to `LutKernel` built with the same `LutOpts` (as long as
+/// `centroid_stationary` is on, which every shipped config sets) — the
+/// SIMD encode performs the same FP ops in the same per-element order.
+/// The `kernel_parity` fuzz harness pins this across random shapes.
+pub struct SimdLutKernel {
+    lut: LutLinear,
+    opts: LutOpts,
+}
+
+impl SimdLutKernel {
+    pub fn new(lut: LutLinear, opts: LutOpts) -> SimdLutKernel {
+        SimdLutKernel { lut, opts }
+    }
+
+    /// Which distance-kernel implementation this build/CPU dispatches to
+    /// (`"avx2"` or `"portable"`).
+    pub fn backend(&self) -> &'static str {
+        simd::active_backend()
+    }
+}
+
+impl LinearKernel for SimdLutKernel {
+    fn name(&self) -> &'static str {
+        "lut-simd"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.lut.input_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.lut.m
+    }
+
+    fn param_bytes(&self) -> usize {
+        self.lut.deployed_bytes()
+    }
+
+    fn scratch_indices(&self, rows: usize) -> usize {
+        rows * self.lut.cb.c
+    }
+
+    fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
+        let lut = &self.lut;
+        assert_eq!(input.len(), rows * lut.input_dim(), "lut-simd input size");
+        let out = &mut out[..rows * lut.m];
+        out.fill(0.0);
+        let LutScratch { idx, scores, acc16, acc32, .. } = &mut scratch.lut;
+        idx.clear();
+        idx.resize(rows * lut.cb.c, 0);
+        simd::encode_simd(lut, input, rows, scores, idx);
+        lut.accumulate_buffered(idx, rows, self.opts, acc16, acc32, out);
+    }
+}
+
+/// Int8 LUT kernel (TableNet-style multiplier-less lookup-add): the
+/// whole table requantized once to a single global scale, accumulated in
+/// pure `i32` adds across all codebooks, one f32 scale multiply + bias
+/// per output element at the end.
+///
+/// Unlike the deployed `"lut"` path (per-codebook INT8 scales rescaled
+/// to a common scale, i16 group lanes), this kernel trades the
+/// double-rounding for the simplest possible inner loop. Output differs
+/// from the scalar reference by bounded requantization error — see
+/// [`LutI8Kernel::abs_tolerance`] for the documented per-element bound
+/// the parity harness enforces.
+pub struct LutI8Kernel {
+    lut: LutLinear,
+    /// whole table at one global scale, [C, K, M] row-major
+    q: Vec<i8>,
+    scale: f32,
+}
+
+impl LutI8Kernel {
+    pub fn new(lut: LutLinear) -> LutI8Kernel {
+        let max_abs = lut.table_f32.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
+        let scale = (max_abs / 127.0).max(1e-30);
+        let q = lut
+            .table_f32
+            .iter()
+            .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        LutI8Kernel { lut, q, scale }
+    }
+
+    /// Global table quantization step.
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Documented per-element absolute error bound vs the scalar `"lut"`
+    /// reference: each of the C accumulated table rows carries at most
+    /// half a quantization step under this kernel's global scale plus
+    /// half a step under the reference's common scale (the reference
+    /// re-rounds per-codebook INT8 onto its common scale, so its own
+    /// error contributes symmetrically).
+    pub fn abs_tolerance(&self) -> f32 {
+        self.lut.cb.c as f32 * (self.scale + self.lut.common_scale()) + 1e-4
+    }
+}
+
+impl LinearKernel for LutI8Kernel {
+    fn name(&self) -> &'static str {
+        "lut-i8"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.lut.input_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.lut.m
+    }
+
+    fn param_bytes(&self) -> usize {
+        // codebooks f32 + global-scale INT8 table + one f32 scale + bias
+        self.lut.cb.data.len() * 4
+            + self.q.len()
+            + 4
+            + self.lut.bias.as_ref().map(|b| b.len() * 4).unwrap_or(0)
+    }
+
+    fn scratch_indices(&self, rows: usize) -> usize {
+        rows * self.lut.cb.c
+    }
+
+    fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
+        let lut = &self.lut;
+        let (c_total, k, m) = (lut.cb.c, lut.cb.k, lut.m);
+        assert_eq!(input.len(), rows * lut.input_dim(), "lut-i8 input size");
+        let out = &mut out[..rows * m];
+        let LutScratch { idx, scores, acc32, .. } = &mut scratch.lut;
+        idx.clear();
+        idx.resize(rows * c_total, 0);
+        simd::encode_simd(lut, input, rows, scores, idx);
+        acc32.resize(m, 0);
+        for i in 0..rows {
+            acc32.fill(0);
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                let base = (c * k + kk) * m;
+                let row = &self.q[base..base + m];
+                // multiplier-less lookup-add: i32 += i8 widening only
+                for (a, &qv) in acc32.iter_mut().zip(row) {
+                    *a += qv as i32;
+                }
+            }
+            let dst = &mut out[i * m..(i + 1) * m];
+            for (o, &a) in dst.iter_mut().zip(acc32.iter()) {
+                *o = a as f32 * self.scale;
+            }
+        }
+        if let Some(b) = &lut.bias {
+            add_bias_rows(out, b);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nn::ops;
     use crate::pq::kmeans::learn_codebooks;
     use crate::tensor::Tensor;
-    use crate::util::prng::Prng;
+    use crate::util::{prng::Prng, prop};
 
     #[test]
     fn dense_kernel_matches_ops_linear() {
@@ -203,5 +364,78 @@ mod tests {
         assert_eq!(kern.in_dim(), d);
         assert_eq!(kern.out_dim(), m);
         assert_eq!(kern.scratch_indices(n), n * c);
+    }
+
+    fn lut_fixture(seed: u64, n: usize, c: usize, v: usize, k: usize, m: usize) -> (Vec<f32>, LutLinear) {
+        let mut rng = Prng::new(seed);
+        let d = c * v;
+        let a = rng.normal_vec(n * d, 1.0);
+        let w = rng.normal_vec(d * m, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 5, seed);
+        (a, LutLinear::new(cb, &w, m, Some(rng.normal_vec(m, 0.5)), 8))
+    }
+
+    #[test]
+    fn simd_kernel_bitwise_matches_lut_kernel() {
+        let (n, m) = (11, 7);
+        let (a, lut) = lut_fixture(5, n, 4, 9, 16, m);
+        for opts in [
+            LutOpts::deployed(),
+            LutOpts::all(),
+            LutOpts { blocked_table_read: false, ..LutOpts::deployed() },
+            LutOpts { mixed_accum: false, ..LutOpts::deployed() },
+        ] {
+            let reference = LutKernel::new(lut.clone(), opts);
+            let candidate = SimdLutKernel::new(lut.clone(), opts);
+            let (mut s1, mut s2) = (Scratch::default(), Scratch::default());
+            let mut o1 = vec![1.0f32; n * m];
+            let mut o2 = vec![-1.0f32; n * m];
+            reference.forward_into(&a, n, &mut s1, &mut o1);
+            candidate.forward_into(&a, n, &mut s2, &mut o2);
+            assert_eq!(o1, o2, "lut-simd must be bitwise lut ({opts:?})");
+        }
+        let kern = SimdLutKernel::new(lut, LutOpts::deployed());
+        assert!(["avx2", "portable"].contains(&kern.backend()));
+        assert_eq!(kern.name(), "lut-simd");
+        assert_eq!(kern.scratch_indices(3), 3 * 4);
+    }
+
+    #[test]
+    fn i8_kernel_within_documented_tolerance() {
+        let (n, m) = (13, 9);
+        let (a, lut) = lut_fixture(6, n, 3, 4, 8, m);
+        let reference = LutKernel::new(lut.clone(), LutOpts::deployed());
+        let candidate = LutI8Kernel::new(lut.clone());
+        let (mut s1, mut s2) = (Scratch::default(), Scratch::default());
+        let mut o1 = vec![9.0f32; n * m];
+        let mut o2 = vec![-9.0f32; n * m];
+        reference.forward_into(&a, n, &mut s1, &mut o1);
+        candidate.forward_into(&a, n, &mut s2, &mut o2);
+        prop::assert_close(&o2, &o1, 0.0, candidate.abs_tolerance()).unwrap();
+        assert!(candidate.scale() > 0.0);
+        // int8 table + f32 codebooks is smaller than the reference's
+        // per-codebook-scale representation (C scales vs 1).
+        assert!(candidate.param_bytes() <= reference.param_bytes() + 4 * lut.cb.c);
+    }
+
+    #[test]
+    fn kernels_share_one_scratch_across_shapes() {
+        // Heterogeneous layers reusing a single Scratch (the session
+        // pattern) must not corrupt each other's working memory.
+        let (a1, lut1) = lut_fixture(7, 6, 2, 4, 8, 5);
+        let (a2, lut2) = lut_fixture(8, 3, 5, 2, 16, 11);
+        let k1 = SimdLutKernel::new(lut1, LutOpts::deployed());
+        let k2 = LutI8Kernel::new(lut2.clone());
+        let k2_ref = LutI8Kernel::new(lut2);
+        let mut shared = Scratch::default();
+        let mut o1 = vec![0.0f32; 6 * 5];
+        k1.forward_into(&a1, 6, &mut shared, &mut o1);
+        let mut o2 = vec![0.0f32; 3 * 11];
+        k2.forward_into(&a2, 3, &mut shared, &mut o2);
+        // replay with a fresh scratch: identical bytes
+        let mut fresh = Scratch::default();
+        let mut o2b = vec![7.0f32; 3 * 11];
+        k2_ref.forward_into(&a2, 3, &mut fresh, &mut o2b);
+        assert_eq!(o2, o2b, "scratch reuse must not change results");
     }
 }

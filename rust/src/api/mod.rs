@@ -26,10 +26,11 @@
 //!                          │
 //!                          v
 //!              dyn LinearKernel::forward_into
-//!               │                        │
-//!          DenseKernel              LutKernel          <- KernelRegistry
-//!        (blocked GEMM)      (encode + table lookup)      ("dense","lut",
-//!                                                          your kernel here)
+//!               │           │            │           │
+//!          DenseKernel  LutKernel  SimdLutKernel  LutI8Kernel   <- KernelRegistry
+//!        (blocked GEMM) (scalar     (AVX2/portable (global-scale   ("dense","lut",
+//!                        reference)  vector encode) int8 add)       "lut-simd","lut-i8",
+//!                                                                   your kernel here)
 //! ```
 //!
 //! ## The three layers
@@ -47,9 +48,47 @@
 //!   wraps an AOT-compiled XLA executable. The coordinator stack is
 //!   generic over `dyn Engine`.
 //!
+//! ## Registering a custom kernel
+//!
 //! New kernels register by name in the [`KernelRegistry`] and new
 //! backends implement [`Engine`]; neither requires touching the
-//! executor, the batcher, or the server.
+//! executor, the batcher, or the server:
+//!
+//! ```ignore
+//! let mut reg = KernelRegistry::with_defaults();
+//! reg.register_unique("my-kernel", |params, ctx| match params {
+//!     LayerParams::Lut(l) => Ok(Box::new(MyKernel::new(l.clone(), ctx.opts)) as _),
+//!     _ => Err(anyhow!("'my-kernel' needs Lut layer params")),
+//! })?;
+//! let sess = SessionBuilder::new(&graph)
+//!     .registry(reg)
+//!     .kernel_override("conv3", "my-kernel") // force one layer
+//!     .build()?;
+//! ```
+//!
+//! `register_unique` refuses to shadow an existing tag; plain `register`
+//! deliberately overrides (last write wins).
+//!
+//! ## Kernel selection
+//!
+//! Per layer, in priority order:
+//! 1. an explicit [`SessionBuilder::kernel_override`] (a typo'd layer
+//!    name is a build error);
+//! 2. with [`SessionBuilder::auto_kernels`], the analytic cost model
+//!    ([`crate::cost::auto_pick_tag`]) compares Table 1 MAC counts —
+//!    dense `rows*D*M` vs LUT `rows*D*K + rows*M*C` — and routes
+//!    table-read-bound layers (`M*C > D*K`) to `"lut-i8"` (policy
+//!    permitting), encode-bound layers with `K >= 8` to `"lut-simd"`,
+//!    the rest to the scalar `"lut"`;
+//! 3. otherwise the layer's own `kernel_tag()` (`"dense"`/`"lut"`).
+//!
+//! Numerical contract per tag: `"lut-simd"` is **bitwise-identical** to
+//! `"lut"` (same FP ops in the same order; enforced by the
+//! `kernel_parity` fuzz harness). `"lut-i8"` requantizes the whole table
+//! to one global INT8 scale and differs from `"lut"` by at most
+//! `C * (global_scale + common_scale)` per output element
+//! ([`LutI8Kernel::abs_tolerance`]) — pick it only where that bound is
+//! acceptable (the `AutoPickPolicy::fast` opt-in).
 //!
 //! The legacy `Graph::run` entry point remains as a deprecated shim for
 //! one release; it clones activations per call and should not be used
@@ -61,6 +100,6 @@ pub mod registry;
 pub mod session;
 
 pub use engine::{Engine, NativeEngine, PjrtEngine};
-pub use kernel::{DenseKernel, LinearKernel, LutKernel, Scratch};
+pub use kernel::{DenseKernel, LinearKernel, LutI8Kernel, LutKernel, Scratch, SimdLutKernel};
 pub use registry::{KernelBuildCtx, KernelFactory, KernelRegistry};
 pub use session::{Session, SessionBuilder};

@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use super::kernel::{DenseKernel, LinearKernel, LutKernel};
+use super::kernel::{DenseKernel, LinearKernel, LutI8Kernel, LutKernel, SimdLutKernel};
 use crate::lut::LutOpts;
 use crate::nn::graph::LayerParams;
 
@@ -37,7 +37,10 @@ impl KernelRegistry {
         KernelRegistry { factories: BTreeMap::new() }
     }
 
-    /// Registry with the built-in `"dense"` and `"lut"` kernels.
+    /// Registry with the built-in kernels: `"dense"`, `"lut"` (scalar
+    /// reference), `"lut-simd"` (explicit-SIMD encode, bitwise-equal to
+    /// `"lut"`), and `"lut-i8"` (global-scale int8 lookup-add, bounded
+    /// requantization error — see `LutI8Kernel::abs_tolerance`).
     pub fn with_defaults() -> KernelRegistry {
         let mut r = KernelRegistry::empty();
         r.register("dense", |params, _ctx| match params {
@@ -51,6 +54,30 @@ impl KernelRegistry {
                 Ok(Box::new(LutKernel::new(lut.clone(), ctx.opts)) as Box<dyn LinearKernel>)
             }
             _ => Err(anyhow!("'lut' kernel needs Lut layer params")),
+        });
+        // Both alternative kernels encode centroid-stationary; building
+        // them under a naive-encode config would silently change the
+        // reference their bitwise/tolerance contracts are stated
+        // against, so the factories refuse.
+        r.register("lut-simd", |params, ctx| match params {
+            LayerParams::Lut(lut) if ctx.opts.centroid_stationary => {
+                Ok(Box::new(SimdLutKernel::new(lut.clone(), ctx.opts)) as Box<dyn LinearKernel>)
+            }
+            LayerParams::Lut(_) => Err(anyhow!(
+                "'lut-simd' requires centroid_stationary opts (its encode is \
+                 centroid-stationary; the bitwise contract is vs that reference)"
+            )),
+            _ => Err(anyhow!("'lut-simd' kernel needs Lut layer params")),
+        });
+        r.register("lut-i8", |params, ctx| match params {
+            LayerParams::Lut(lut) if ctx.opts.centroid_stationary => {
+                Ok(Box::new(LutI8Kernel::new(lut.clone())) as Box<dyn LinearKernel>)
+            }
+            LayerParams::Lut(_) => Err(anyhow!(
+                "'lut-i8' requires centroid_stationary opts (its encode is \
+                 centroid-stationary; abs_tolerance is stated vs that reference)"
+            )),
+            _ => Err(anyhow!("'lut-i8' kernel needs Lut layer params")),
         });
         r
     }
@@ -66,9 +93,33 @@ impl KernelRegistry {
         self.factories.insert(name.to_string(), Box::new(factory));
     }
 
+    /// Like [`KernelRegistry::register`] but refuses to shadow an
+    /// existing entry — for plugins that must not silently replace a
+    /// built-in (or each other).
+    pub fn register_unique<F>(&mut self, name: &str, factory: F) -> Result<()>
+    where
+        F: Fn(&LayerParams, &KernelBuildCtx) -> Result<Box<dyn LinearKernel>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        if self.factories.contains_key(name) {
+            return Err(anyhow!(
+                "kernel '{name}' is already registered (use register() to override)"
+            ));
+        }
+        self.register(name, factory);
+        Ok(())
+    }
+
     /// Registered kernel tags, sorted.
     pub fn names(&self) -> Vec<String> {
         self.factories.keys().cloned().collect()
+    }
+
+    /// True when no factories are registered.
+    pub fn is_empty(&self) -> bool {
+        self.factories.is_empty()
     }
 
     /// Instantiate the kernel registered under `tag` for `params`.
@@ -99,14 +150,94 @@ mod tests {
     #[test]
     fn defaults_build_matching_kinds() {
         let r = KernelRegistry::with_defaults();
-        assert_eq!(r.names(), vec!["dense".to_string(), "lut".to_string()]);
+        assert_eq!(
+            r.names(),
+            vec![
+                "dense".to_string(),
+                "lut".to_string(),
+                "lut-i8".to_string(),
+                "lut-simd".to_string(),
+            ]
+        );
         let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
         let dense = LayerParams::Dense { w: vec![0.0; 8], b: None, m: 2 };
         let k = r.build("dense", &dense, &ctx).unwrap();
         assert_eq!((k.name(), k.in_dim(), k.out_dim()), ("dense", 4, 2));
         // mismatched tag/params is an error, unknown tag names the options
         assert!(r.build("lut", &dense, &ctx).is_err());
+        assert!(r.build("lut-simd", &dense, &ctx).is_err());
+        assert!(r.build("lut-i8", &dense, &ctx).is_err());
         let err = format!("{}", r.build("simd", &dense, &ctx).unwrap_err());
         assert!(err.contains("simd") && err.contains("dense"), "{err}");
+    }
+
+    #[test]
+    fn lut_family_tags_build_lut_kernels() {
+        use crate::pq::kmeans::learn_codebooks;
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(0);
+        let (n, c, v, k, m) = (8, 2, 4, 8, 3);
+        let d = c * v;
+        let a = rng.normal_vec(n * d, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 3, 0);
+        let lut = crate::lut::LutLinear::new(cb, &rng.normal_vec(d * m, 1.0), m, None, 8);
+        let params = LayerParams::Lut(lut);
+        let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+        let r = KernelRegistry::with_defaults();
+        for tag in ["lut", "lut-simd", "lut-i8"] {
+            let kern = r.build(tag, &params, &ctx).unwrap();
+            assert_eq!(kern.name(), tag);
+            assert_eq!((kern.in_dim(), kern.out_dim()), (d, m));
+            assert_eq!(kern.scratch_indices(5), 5 * c);
+        }
+    }
+
+    #[test]
+    fn lut_family_factories_refuse_naive_encode_opts() {
+        use crate::pq::kmeans::learn_codebooks;
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(1);
+        let (n, c, v, k, m) = (6, 2, 4, 8, 3);
+        let d = c * v;
+        let a = rng.normal_vec(n * d, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 3, 0);
+        let lut = crate::lut::LutLinear::new(cb, &rng.normal_vec(d * m, 1.0), m, None, 8);
+        let params = LayerParams::Lut(lut);
+        let r = KernelRegistry::with_defaults();
+        let naive = KernelBuildCtx { opts: LutOpts::none() };
+        for tag in ["lut-simd", "lut-i8"] {
+            let err = format!("{}", r.build(tag, &params, &naive).unwrap_err());
+            assert!(err.contains("centroid_stationary"), "{tag}: {err}");
+        }
+        // the scalar reference accepts every opts config
+        assert!(r.build("lut", &params, &naive).is_ok());
+    }
+
+    #[test]
+    fn register_unique_rejects_duplicates_register_overrides() {
+        let mut r = KernelRegistry::with_defaults();
+        let dup = r.register_unique("lut", |_, _| Err(anyhow!("never built")));
+        let err = format!("{}", dup.unwrap_err());
+        assert!(err.contains("already registered"), "{err}");
+        r.register_unique("mine", |_, _| Err(anyhow!("mine: unbuildable")))
+            .unwrap();
+        assert!(r.names().contains(&"mine".to_string()));
+        // plain register() deliberately shadows
+        r.register("lut", |_, _| Err(anyhow!("shadowed")));
+        let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+        let dense = LayerParams::Dense { w: vec![0.0; 4], b: None, m: 2 };
+        let err = format!("{}", r.build("lut", &dense, &ctx).unwrap_err());
+        assert!(err.contains("shadowed"), "{err}");
+    }
+
+    #[test]
+    fn empty_registry_builds_nothing() {
+        let r = KernelRegistry::empty();
+        assert!(r.is_empty());
+        assert!(r.names().is_empty());
+        let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+        let dense = LayerParams::Dense { w: vec![0.0; 4], b: None, m: 2 };
+        let err = format!("{}", r.build("dense", &dense, &ctx).unwrap_err());
+        assert!(err.contains("no kernel registered"), "{err}");
     }
 }

@@ -60,6 +60,7 @@ pub struct SessionBuilder<'g> {
     registry: KernelRegistry,
     max_batch: usize,
     overrides: BTreeMap<String, String>,
+    auto: Option<crate::cost::AutoPickPolicy>,
 }
 
 impl<'g> SessionBuilder<'g> {
@@ -70,6 +71,7 @@ impl<'g> SessionBuilder<'g> {
             registry: KernelRegistry::with_defaults(),
             max_batch: graph.input_shape.first().copied().unwrap_or(1).max(1),
             overrides: BTreeMap::new(),
+            auto: None,
         }
     }
 
@@ -95,8 +97,21 @@ impl<'g> SessionBuilder<'g> {
 
     /// Force a specific registered kernel for one layer (per-layer
     /// kernel selection; default is the layer's own `kernel_tag()`).
+    /// Explicit overrides always beat [`SessionBuilder::auto_kernels`].
     pub fn kernel_override(mut self, layer: &str, kernel: &str) -> Self {
         self.overrides.insert(layer.to_string(), kernel.to_string());
+        self
+    }
+
+    /// Let the analytic cost model ([`crate::cost::auto_pick_tag`]) pick
+    /// a kernel per LUT layer from its shape (rows, D, M, K, V) — the
+    /// Table 1 MAC counts decide between `lut`, `lut-simd` and (policy
+    /// permitting) `lut-i8`. Layers with an explicit
+    /// [`SessionBuilder::kernel_override`] are untouched; dense layers
+    /// keep the `dense` GEMM (there is no codebook to look up), and a
+    /// `dense` verdict on a LUT layer clamps to the scalar `lut` kernel.
+    pub fn auto_kernels(mut self, policy: crate::cost::AutoPickPolicy) -> Self {
+        self.auto = Some(policy);
         self
     }
 
@@ -139,12 +154,42 @@ impl<'g> SessionBuilder<'g> {
         fn layer<'a>(g: &'a Graph, name: &str) -> Result<&'a LayerParams> {
             g.layers.get(name).ok_or_else(|| anyhow!("graph references unknown layer '{name}'"))
         }
-        let kernel_for = |name: &str, params: &LayerParams| -> Result<Box<dyn LinearKernel>> {
-            let tag = match self.overrides.get(name) {
+        // `rows` is the per-item row count of the op (H_out*W_out for
+        // convs, 1 for FC) — the N of the cost model's MAC counts.
+        let kernel_for =
+            |name: &str, params: &LayerParams, rows: usize| -> Result<Box<dyn LinearKernel>> {
+            let tag: &str = match self.overrides.get(name) {
                 Some(t) => t.as_str(),
-                None => params
-                    .kernel_tag()
-                    .ok_or_else(|| anyhow!("layer '{name}' is not a linear layer"))?,
+                None => {
+                    let default = params
+                        .kernel_tag()
+                        .ok_or_else(|| anyhow!("layer '{name}' is not a linear layer"))?;
+                    match (self.auto, params) {
+                        (Some(mut policy), LayerParams::Lut(l)) => {
+                            // Both alternative kernels encode centroid-
+                            // stationary: under a naive-encode config
+                            // their outputs (and lut-i8's tolerance
+                            // bound) are vs a different reference —
+                            // never auto-pick them there.
+                            policy.simd &= self.opts.centroid_stationary;
+                            policy.allow_i8 &= self.opts.centroid_stationary;
+                            match crate::cost::auto_pick_tag(
+                                rows,
+                                l.input_dim(),
+                                l.m,
+                                l.cb.k,
+                                l.cb.v,
+                                policy,
+                            ) {
+                                // a LUT layer has no dense weights to
+                                // fall back to — clamp to the reference
+                                "dense" => "lut",
+                                t => t,
+                            }
+                        }
+                        _ => default,
+                    }
+                }
             };
             self.registry
                 .build(tag, params, &ctx)
@@ -158,15 +203,15 @@ impl<'g> SessionBuilder<'g> {
                         bail!("conv '{lname}' needs a 4-D activation");
                     };
                     linear_layers.insert(lname);
-                    let kernel = kernel_for(lname, layer(g, lname)?)?;
+                    let (ho, wo) = (same_out_size(h, *stride), same_out_size(w, *stride));
+                    let rows = ho * wo;
+                    let kernel = kernel_for(lname, layer(g, lname)?, rows)?;
                     ensure!(
                         kernel.in_dim() == c * k * k,
                         "conv '{lname}': kernel in_dim {} != Cin*k*k = {}",
                         kernel.in_dim(),
                         c * k * k
                     );
-                    let (ho, wo) = (same_out_size(h, *stride), same_out_size(w, *stride));
-                    let rows = ho * wo;
                     let m = kernel.out_dim();
                     per.patches = per.patches.max(rows * kernel.in_dim());
                     per.idx = per.idx.max(kernel.scratch_indices(rows));
@@ -185,7 +230,7 @@ impl<'g> SessionBuilder<'g> {
                         bail!("linear '{lname}' needs a 2-D activation (did you forget Gap?)");
                     };
                     linear_layers.insert(lname);
-                    let kernel = kernel_for(lname, layer(g, lname)?)?;
+                    let kernel = kernel_for(lname, layer(g, lname)?, 1)?;
                     ensure!(
                         kernel.in_dim() == cols,
                         "linear '{lname}': kernel in_dim {} != activation cols {}",
@@ -839,6 +884,70 @@ mod tests {
         let got = sess.run_alloc(&x).unwrap();
         let want: Vec<f32> = base.data.iter().map(|v| v * 2.0).collect();
         assert_eq!(got.data, want, "fc runs through the overridden kernel");
+    }
+
+    #[test]
+    fn auto_kernels_pick_per_layer_and_respect_overrides() {
+        use crate::cost::AutoPickPolicy;
+        let (_, lut, x) = lut_cnn(8);
+        // Explicit policy literal: the exact()/fast() constructors
+        // consult the runtime backend, which would make this test
+        // host-dependent. lut-simd stays bitwise on every backend.
+        let exact = AutoPickPolicy { simd: true, allow_i8: false };
+        let mut auto = SessionBuilder::new(&lut)
+            .auto_kernels(exact)
+            .max_batch(4)
+            .build()
+            .unwrap();
+        let report = auto.kernel_report();
+        let tag = |n: &str| report.iter().find(|(l, _, _)| l.as_str() == n).unwrap().1;
+        // c0 is the dense stem; c1 (d=72, m=16, K=8, V=9) is encode-bound
+        // with K filling the lanes; the tiny fc head (d=16, m=5) gets a
+        // "dense" verdict clamped back to the scalar lut reference.
+        assert_eq!(tag("c0"), "dense");
+        assert_eq!(tag("c1"), "lut-simd");
+        assert_eq!(tag("fc"), "lut");
+        // exact policy == bitwise-identical outputs to the scalar session
+        let mut scalar = SessionBuilder::new(&lut).max_batch(4).build().unwrap();
+        assert_eq!(
+            auto.run_alloc(&x).unwrap().data,
+            scalar.run_alloc(&x).unwrap().data,
+            "exact auto-pick must not change output bytes"
+        );
+        // explicit override always beats the auto-picker
+        let sess = SessionBuilder::new(&lut)
+            .auto_kernels(AutoPickPolicy::fast())
+            .kernel_override("c1", "lut")
+            .max_batch(4)
+            .build()
+            .unwrap();
+        let report = sess.kernel_report();
+        let tag = |n: &str| report.iter().find(|(l, _, _)| l.as_str() == n).unwrap().1;
+        assert_eq!(tag("c1"), "lut");
+        // naive-encode configs must never auto-pick the (centroid-
+        // stationary) simd kernel, whatever the policy says
+        let sess = SessionBuilder::new(&lut)
+            .opts(LutOpts::none())
+            .auto_kernels(exact)
+            .max_batch(4)
+            .build()
+            .unwrap();
+        let report = sess.kernel_report();
+        let tag = |n: &str| report.iter().find(|(l, _, _)| l.as_str() == n).unwrap().1;
+        assert_eq!(tag("c1"), "lut", "no lut-simd under naive encode");
+    }
+
+    #[test]
+    fn empty_registry_fails_build_with_clear_error() {
+        let (dense, _, _) = lut_cnn(9);
+        let err = SessionBuilder::new(&dense)
+            .registry(KernelRegistry::empty())
+            .build()
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("no kernel registered"),
+            "{err:#}"
+        );
     }
 
     #[test]

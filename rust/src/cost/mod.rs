@@ -97,6 +97,87 @@ pub fn flops_reduction(m: usize, k: usize, v: usize) -> f64 {
     m as f64 / (k as f64 + m as f64 / v as f64)
 }
 
+// ======================================================================
+// Cost-model-driven per-layer kernel auto-picker
+// ======================================================================
+
+/// Policy knobs for [`auto_pick_tag`]. `simd` should reflect whether the
+/// build carries the vector encode (`lut::simd::active_backend()`);
+/// `allow_i8` opts a layer into the global-scale int8 table kernel,
+/// which trades bounded requantization error (see
+/// `api::LutI8Kernel::abs_tolerance`) for the multiplier-less inner loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoPickPolicy {
+    pub simd: bool,
+    pub allow_i8: bool,
+}
+
+impl AutoPickPolicy {
+    /// Exact-output policy: only kernels bitwise-equal to the scalar
+    /// reference (`lut`/`lut-simd`). `simd` is seeded from the build's
+    /// actual vector backend — on a portable build the per-row fallback
+    /// encode loses the scalar path's batched-GEMM amortization, so
+    /// `lut-simd` is only auto-picked when the AVX2 path will run.
+    pub fn exact() -> AutoPickPolicy {
+        AutoPickPolicy { simd: crate::lut::simd::active_backend() == "avx2", allow_i8: false }
+    }
+
+    /// Throughput policy: additionally allows `lut-i8` on
+    /// table-read-bound layers.
+    pub fn fast() -> AutoPickPolicy {
+        AutoPickPolicy { allow_i8: true, ..AutoPickPolicy::exact() }
+    }
+}
+
+impl Default for AutoPickPolicy {
+    fn default() -> Self {
+        AutoPickPolicy::exact()
+    }
+}
+
+/// Pick a registry kernel tag for one linear layer from its shape and
+/// LUT geometry, using the Table 1 MAC counts:
+///
+/// * dense MACs `rows*D*M` vs LUT MACs `rows*D*K + rows*M*C` — when the
+///   table pipeline is not cheaper, answer `"dense"` (callers with
+///   LUT-only parameters clamp this back to `"lut"`).
+/// * table-read-bound layers (`M*C > D*K`, accumulate dominates encode)
+///   go `"lut-i8"` when the policy allows lossy kernels — the int8
+///   lookup-add attacks exactly that term.
+/// * encode-bound layers take `"lut-simd"` when K fills the 8-wide
+///   vector lanes, else the scalar `"lut"`.
+///
+/// `v` not dividing `d` rounds C up (mirrors `LutConfig::v_for`'s
+/// fallback geometry rather than asserting).
+///
+/// `rows` currently cancels out of every decision (all MAC terms scale
+/// linearly with it); it stays in the signature so fixed-cost terms
+/// (per-call dispatch, cache-residency thresholds) can join the model
+/// without touching call sites.
+pub fn auto_pick_tag(
+    rows: usize,
+    d: usize,
+    m: usize,
+    k: usize,
+    v: usize,
+    policy: AutoPickPolicy,
+) -> &'static str {
+    let rows = rows.max(1) as u64;
+    let c = d.div_ceil(v.max(1)) as u64;
+    let dense_macs = rows * d as u64 * m as u64;
+    let lut_macs = rows * d as u64 * k as u64 + rows * m as u64 * c;
+    if dense_macs <= lut_macs {
+        return "dense";
+    }
+    if policy.allow_i8 && m as u64 * c > d as u64 * k as u64 {
+        return "lut-i8";
+    }
+    if policy.simd && k >= 8 {
+        return "lut-simd";
+    }
+    "lut"
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +239,59 @@ mod tests {
             let ratio = c.dense_mb / c.lut_mb;
             assert!(ratio > 1.5, "{}: ratio {ratio}", m.name);
         }
+    }
+
+    #[test]
+    fn default_policies_consult_the_simd_backend() {
+        let want = crate::lut::simd::active_backend() == "avx2";
+        assert_eq!(AutoPickPolicy::exact().simd, want);
+        assert_eq!(AutoPickPolicy::fast().simd, want);
+        assert!(!AutoPickPolicy::exact().allow_i8);
+        assert!(AutoPickPolicy::fast().allow_i8);
+    }
+
+    #[test]
+    fn auto_picker_on_canned_shapes() {
+        // Explicit policy literals so the decisions are host- and
+        // feature-independent (the default constructors consult the
+        // runtime backend).
+        let exact = AutoPickPolicy { simd: true, allow_i8: false };
+        let fast = AutoPickPolicy { simd: true, allow_i8: true };
+        // VGG-wide conv (d=576, m=512, k=16, v=9, c=64): table pipeline
+        // wins big; accumulate (m*c=32768) dominates encode (d*k=9216).
+        assert_eq!(auto_pick_tag(1024, 576, 512, 16, 9, exact), "lut-simd");
+        assert_eq!(auto_pick_tag(1024, 576, 512, 16, 9, fast), "lut-i8");
+        // Narrow FC head (d=16, m=5, k=8, v=4): dense GEMM is cheaper
+        // than encode+lookup — LUT not worth it.
+        assert_eq!(auto_pick_tag(1, 16, 5, 8, 4, exact), "dense");
+        // Encode-bound mid layer with K below the vector width: scalar.
+        assert_eq!(auto_pick_tag(64, 72, 64, 4, 9, exact), "lut");
+        // Same layer at K=16 fills the lanes.
+        assert_eq!(auto_pick_tag(64, 72, 64, 16, 9, exact), "lut-simd");
+        // rows=0 is treated as 1 (build-time shape walk edge).
+        assert_eq!(
+            auto_pick_tag(0, 576, 512, 16, 9, exact),
+            auto_pick_tag(1, 576, 512, 16, 9, exact)
+        );
+    }
+
+    #[test]
+    fn auto_picker_handles_d_not_divisible_by_v() {
+        // d=20, v=9 -> C rounds up to 3 (the LutConfig::v_for fallback
+        // geometry); must not panic like lut_flops' strict assert.
+        let tag = auto_pick_tag(128, 20, 400, 8, 9, AutoPickPolicy { simd: true, allow_i8: false });
+        assert!(["lut", "lut-simd"].contains(&tag), "{tag}");
+        // and the v_for fallback itself picks a dividing V
+        let op = LinearShape {
+            name: "odd".into(),
+            n: 128,
+            d: 20,
+            m: 400,
+            kernel: 0,
+            replaced: true,
+        };
+        let v = LutConfig { k: 8, v_override: Some(9) }.v_for(&op);
+        assert_eq!(op.d % v, 0, "v_for must fall back to a divisor, got {v}");
     }
 
     #[test]

@@ -97,15 +97,16 @@ pub struct LutScratch {
 #[derive(Debug, Clone)]
 pub struct LutLinear {
     pub cb: Codebooks,
-    /// |p|^2 per centroid [C, K] (distance fast path)
-    sqn: Vec<f32>,
+    /// |p|^2 per centroid [C, K] (distance fast path; shared with the
+    /// explicit-SIMD encode in [`crate::lut::simd`])
+    pub(crate) sqn: Vec<f32>,
     /// codebooks transposed to [C, V, K] — K-contiguous so the distance
     /// inner loop vectorizes across centroids (perf pass, EXPERIMENTS.md
     /// §Perf iteration 1)
     cb_t: Vec<f32>,
     /// cb_t pre-scaled by -2 so the distance GEMM needs no epilogue
     /// (perf iteration 2: scores = sqn + slab @ (-2 P^T))
-    cb_t2: Vec<f32>,
+    pub(crate) cb_t2: Vec<f32>,
     /// INT8 table with per-codebook scales (bundle format)
     pub qtable: QTable,
     /// table requantized to one common scale (enables cross-codebook
@@ -178,6 +179,13 @@ impl LutLinear {
 
     pub fn input_dim(&self) -> usize {
         self.cb.input_dim()
+    }
+
+    /// The common table scale of the §5.2 integer-accumulation path —
+    /// one quantization step of the deployed output, the unit kernel
+    /// tolerance bounds are expressed in.
+    pub fn common_scale(&self) -> f32 {
+        self.common_scale
     }
 
     /// Bytes held by the deployed representation (Fig. 10 accounting):
@@ -284,8 +292,9 @@ impl LutLinear {
     }
 
     /// Accumulation core with caller-owned integer accumulators (the
-    /// scratch-reusing forward path).
-    fn accumulate_buffered(
+    /// scratch-reusing forward path; also driven directly by the
+    /// SIMD/int8 kernels in `api::kernel`).
+    pub(crate) fn accumulate_buffered(
         &self,
         idx: &[u16],
         n: usize,
@@ -304,11 +313,7 @@ impl LutLinear {
             (false, false) => self.accumulate_f32_scalar(idx, n, out),
         }
         if let Some(bias) = &self.bias {
-            for row in out.chunks_exact_mut(m) {
-                for (o, &b) in row.iter_mut().zip(bias) {
-                    *o += b;
-                }
-            }
+            crate::nn::ops::add_bias_rows(&mut out[..n * m], bias);
         }
     }
 
@@ -492,7 +497,7 @@ impl LutLinear {
 /// equality scan for the index — two data-parallel passes instead of one
 /// dependent chain.
 #[inline]
-fn argmin(scores: &[f32], interleaved: bool) -> usize {
+pub(crate) fn argmin(scores: &[f32], interleaved: bool) -> usize {
     if !interleaved || scores.len() < 8 {
         let mut best = 0usize;
         let mut best_v = scores[0];

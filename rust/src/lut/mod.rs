@@ -16,5 +16,6 @@
 //!   ④ mixed-precision integer accumulation with a common table scale
 
 pub mod engine;
+pub mod simd;
 
 pub use engine::{LutLinear, LutOpts, LutScratch};

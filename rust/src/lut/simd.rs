@@ -1,0 +1,215 @@
+//! Explicit-SIMD closest-centroid search (paper §5.1) — the encode core
+//! behind the `"lut-simd"` kernel.
+//!
+//! Two implementations of the same distance kernel, selected at runtime:
+//!
+//! * **portable** — safe Rust structured as 8-wide independent lanes the
+//!   compiler lowers to SIMD (the auto-vectorizing realization; always
+//!   compiled, used on non-x86 targets and when AVX2 is absent).
+//! * **avx2** — `core::arch::x86_64` intrinsics (`vmulps`/`vaddps`),
+//!   compiled only with `--features simd` on x86_64 and dispatched via
+//!   `is_x86_feature_detected!` (`std::simd` remains nightly-only, so the
+//!   stable intrinsic path realizes the paper's NEON distance kernel).
+//!
+//! **Bitwise contract**: both paths perform, per score element, the exact
+//! FP operation sequence of the scalar centroid-stationary path
+//! (`scores[k] = sqn[k]`, then `+= a[t] * (-2 p[t][k])` for `t`
+//! ascending — the order `nn::gemm::gemm` uses). rustc never reorders or
+//! contracts float ops (no fast-math, no implicit FMA), so the SIMD
+//! encode is bit-identical to the scalar reference on every input — the
+//! `kernel_parity` fuzz harness asserts this across random shapes.
+//!
+//! The argmin is the §6.3 ② intra-codebook-parallel realization: a
+//! branch-free min reduction over 4 independent lanes followed by a
+//! first-index-equal scan, which matches the sequential scan's
+//! lowest-index tie-break exactly (see `engine::argmin`).
+
+use super::engine::{argmin, LutLinear};
+
+/// Name of the distance-kernel implementation the current build/CPU
+/// actually dispatches to: `"avx2"` or `"portable"`.
+pub fn active_backend() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+    }
+    "portable"
+}
+
+/// Encode rows of `a` ([n, D]) to centroid indices ([n, C] into `idx`),
+/// vectorized over the K dimension. `scores` is caller-owned scratch
+/// (resized to K within capacity). Produces indices bit-identical to
+/// `LutLinear::encode_into` with `centroid_stationary = true`.
+pub fn encode_simd(
+    lut: &LutLinear,
+    a: &[f32],
+    n: usize,
+    scores: &mut Vec<f32>,
+    idx: &mut [u16],
+) {
+    let (c_total, k, v) = (lut.cb.c, lut.cb.k, lut.cb.v);
+    let d = c_total * v;
+    assert_eq!(a.len(), n * d, "encode_simd input size");
+    assert_eq!(idx.len(), n * c_total, "encode_simd index size");
+    scores.resize(k, 0.0);
+    // Hoist backend selection out of the n*C hot loop (the runtime
+    // feature probe is an atomic load — cheap, but invariant here).
+    let accumulate = select_accumulate(k);
+    for c in 0..c_total {
+        // Codebook-stationary: the [V, K] transposed, -2-prescaled
+        // centroid block and the |p|^2 row stay hot across all n rows.
+        let cbt2 = &lut.cb_t2[c * v * k..(c + 1) * v * k];
+        let sqn = &lut.sqn[c * k..(c + 1) * k];
+        for i in 0..n {
+            let sub = &a[i * d + c * v..i * d + (c + 1) * v];
+            scores.copy_from_slice(sqn);
+            accumulate(sub, cbt2, scores);
+            idx[i * c_total + c] = argmin(scores, true) as u16;
+        }
+    }
+}
+
+/// Pick the accumulate implementation once per encode: AVX2 when the
+/// build carries it, the CPU reports it, and K fills at least one
+/// 8-wide register; the portable lanes otherwise.
+fn select_accumulate(k: usize) -> fn(&[f32], &[f32], &mut [f32]) {
+    let _ = k; // only consulted on the intrinsic-capable cfg
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if k >= 8 && std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: avx2 runtime-verified; bounds asserted by callers.
+            return |sub: &[f32], w: &[f32], scores: &mut [f32]| unsafe {
+                distance_accumulate_avx2(sub, w, scores)
+            };
+        }
+    }
+    distance_accumulate_portable
+}
+
+/// `scores[k] = seed[k] + sum_t sub[t] * w[t*K + k]`, t ascending per
+/// element — the §5.1 distance computation for one (row, codebook) pair.
+/// `w` is the K-contiguous `[V, K]` block, `seed` the precomputed |p|^2.
+#[inline]
+pub fn distance_scores(sub: &[f32], w: &[f32], seed: &[f32], scores: &mut [f32]) {
+    let k = scores.len();
+    assert_eq!(seed.len(), k);
+    assert_eq!(w.len(), sub.len() * k);
+    scores.copy_from_slice(seed);
+    select_accumulate(k)(sub, w, scores);
+}
+
+/// Portable lane-structured accumulate: 8 independent K-lane chains per
+/// chunk (no cross-lane dependency — lowers to SIMD mul/add on any
+/// target the compiler knows).
+fn distance_accumulate_portable(sub: &[f32], w: &[f32], scores: &mut [f32]) {
+    let k = scores.len();
+    for (t, &a) in sub.iter().enumerate() {
+        let wrow = &w[t * k..(t + 1) * k];
+        let mut sc = scores.chunks_exact_mut(8);
+        let mut wc = wrow.chunks_exact(8);
+        for (s8, w8) in (&mut sc).zip(&mut wc) {
+            for (s, &wv) in s8.iter_mut().zip(w8) {
+                *s += a * wv;
+            }
+        }
+        for (s, &wv) in sc.into_remainder().iter_mut().zip(wc.remainder()) {
+            *s += a * wv;
+        }
+    }
+}
+
+/// AVX2 accumulate: one broadcast `a[t]`, 8-lane `vmulps` + `vaddps` per
+/// K chunk. Deliberately *not* FMA — a fused multiply-add rounds once
+/// where mul+add rounds twice, which would break the bitwise contract
+/// with the scalar path.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn distance_accumulate_avx2(sub: &[f32], w: &[f32], scores: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let k = scores.len();
+    let k8 = k & !7usize;
+    for (t, &a) in sub.iter().enumerate() {
+        let av = _mm256_set1_ps(a);
+        let wrow = w.as_ptr().add(t * k);
+        let sp = scores.as_mut_ptr();
+        let mut kk = 0usize;
+        while kk < k8 {
+            let acc = _mm256_loadu_ps(sp.add(kk));
+            let prod = _mm256_mul_ps(av, _mm256_loadu_ps(wrow.add(kk)));
+            _mm256_storeu_ps(sp.add(kk), _mm256_add_ps(acc, prod));
+            kk += 8;
+        }
+        while kk < k {
+            *sp.add(kk) += a * *wrow.add(kk);
+            kk += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::LutOpts;
+    use crate::pq::kmeans::learn_codebooks;
+    use crate::util::prop;
+
+    /// Strict scalar oracle: one dependent chain per element, t ascending.
+    fn scores_oracle(sub: &[f32], w: &[f32], seed: &[f32]) -> Vec<f32> {
+        let k = seed.len();
+        let mut s = seed.to_vec();
+        for (t, &a) in sub.iter().enumerate() {
+            for kk in 0..k {
+                s[kk] += a * w[t * k + kk];
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn distance_scores_bitwise_matches_oracle() {
+        prop::check(100, |g| {
+            let v = g.usize(1..12);
+            let k = g.usize(1..40); // crosses the 8-lane boundary + remainders
+            let sub = g.f32_vec(v, 1.0);
+            let w = g.f32_vec(v * k, 1.0);
+            let seed = g.f32_vec(k, 1.0);
+            let mut got = vec![0.0f32; k];
+            distance_scores(&sub, &w, &seed, &mut got);
+            let want = scores_oracle(&sub, &w, &seed);
+            if got != want {
+                return Err(format!("k={k} v={v}: {got:?} vs {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn encode_simd_bitwise_matches_scalar_encode() {
+        prop::check(60, |g| {
+            let n = g.usize(1..12);
+            let c = g.usize(1..5);
+            let v = *g.pick(&[1usize, 2, 4, 9]);
+            let k = *g.pick(&[1usize, 4, 8, 12, 16]);
+            let d = c * v;
+            let a = g.f32_vec(n * d, 1.0);
+            let cb = learn_codebooks(&a, n, d, c, k, 4, g.case_seed);
+            let lut = LutLinear::new(cb, &g.f32_vec(d * 3, 1.0), 3, None, 8);
+            let mut want = vec![0u16; n * c];
+            lut.encode_into(&a, n, LutOpts::deployed(), &mut want);
+            let mut got = vec![u16::MAX; n * c];
+            let mut scores = Vec::new();
+            encode_simd(&lut, &a, n, &mut scores, &mut got);
+            if got != want {
+                return Err(format!("n={n} c={c} v={v} k={k}: {got:?} vs {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backend_reports_a_known_name() {
+        assert!(["avx2", "portable"].contains(&active_backend()));
+    }
+}

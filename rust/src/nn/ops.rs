@@ -5,6 +5,18 @@ use crate::nn::gemm::gemm;
 use crate::tensor::im2col::{im2col, same_out_size};
 use crate::tensor::Tensor;
 
+/// `out[r, :] += bias` for every row — the shared bias epilogue of the
+/// dense ops and every `api::LinearKernel`. Bitwise-equivalent to the
+/// inline per-row loop it replaces (same add order per element).
+pub fn add_bias_rows(out: &mut [f32], bias: &[f32]) {
+    assert!(!bias.is_empty(), "empty bias");
+    for row in out.chunks_exact_mut(bias.len()) {
+        for (o, &b) in row.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
 /// Dense conv: weight as matrix [Cin*k*k, Cout] (channel-major patch
 /// layout — the shared im2col contract), bias [Cout].
 pub fn conv2d(x: &Tensor, weight: &[f32], bias: Option<&[f32]>, cout: usize, k: usize, stride: usize) -> Tensor {
@@ -16,11 +28,7 @@ pub fn conv2d(x: &Tensor, weight: &[f32], bias: Option<&[f32]>, cout: usize, k: 
     let mut out = vec![0.0f32; rows * cout];
     gemm(&patches.data, weight, &mut out, rows, d, cout);
     if let Some(b) = bias {
-        for row in out.chunks_exact_mut(cout) {
-            for (o, &bb) in row.iter_mut().zip(b) {
-                *o += bb;
-            }
-        }
+        add_bias_rows(&mut out, b);
     }
     let (ho, wo) = (same_out_size(h, stride), same_out_size(w, stride));
     Tensor::new(vec![n, ho, wo, cout], out)
@@ -34,11 +42,7 @@ pub fn linear(x: &Tensor, weight: &[f32], bias: Option<&[f32]>, m: usize) -> Ten
     let mut out = vec![0.0f32; rows * m];
     gemm(&x.data, weight, &mut out, rows, d, m);
     if let Some(b) = bias {
-        for row in out.chunks_exact_mut(m) {
-            for (o, &bb) in row.iter_mut().zip(b) {
-                *o += bb;
-            }
-        }
+        add_bias_rows(&mut out, b);
     }
     Tensor::new(vec![rows, m], out)
 }

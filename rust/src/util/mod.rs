@@ -13,3 +13,9 @@ pub mod prng;
 pub mod prop;
 pub mod stats;
 pub mod threadpool;
+
+/// Boolean env-var flag: set and neither empty nor `"0"` means on
+/// (`FLAG=0` must mean off — shared by `E2E_FAST`, `UPDATE_GOLDEN`).
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}

@@ -19,6 +19,12 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Standalone generator for deterministic one-off cases (fixtures
+    /// outside a `check` loop).
+    pub fn from_seed(seed: u64) -> Gen {
+        Gen { rng: Prng::new(seed), case_seed: seed }
+    }
+
     pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
         range.start + self.rng.below(range.end - range.start)
     }

@@ -1,0 +1,141 @@
+//! Golden-file tests: one small model's `Session` outputs pinned
+//! bit-for-bit across refactors, for the scalar (`dense` + `lut`)
+//! kernels.
+//!
+//! Outputs are stored as f32 *bit patterns* (`to_bits()` as JSON
+//! integers) under `rust/tests/golden/`, so any refactor that changes
+//! output bytes — reordered float ops, a different accumulation scheme,
+//! a changed PRNG — fails loudly here rather than shipping silently.
+//!
+//! Bootstrap: when a golden file is missing the test writes it and
+//! passes (so a fresh checkout stays green); commit the generated file
+//! to pin. Regenerate intentionally with `UPDATE_GOLDEN=1 cargo test
+//! --test golden`. Note the fixture PRNG draws through `f64::ln`/`cos`
+//! (libm), so goldens are pinned per libm family (CI: x86_64 glibc) —
+//! see `rust/tests/golden/README.md`.
+
+use std::path::PathBuf;
+
+use lutnn::api::SessionBuilder;
+use lutnn::nn::graph::Graph;
+use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+use lutnn::tensor::Tensor;
+use lutnn::util::json::{self, Json};
+use lutnn::util::prng::Prng;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// Fixed fixture: tiny 2-conv CNN (dense + its LUT conversion) and a
+/// fixed 2-item batch. Everything is seeded — same bytes every build.
+fn fixture() -> (Graph, Graph, Tensor) {
+    let dense = build_cnn_graph(
+        "golden",
+        [8, 8, 3],
+        &[
+            ConvSpec { cout: 8, k: 3, stride: 1 },
+            ConvSpec { cout: 16, k: 3, stride: 2 },
+        ],
+        5,
+        42,
+    );
+    let mut rng = Prng::new(7);
+    let sample = Tensor::new(vec![4, 8, 8, 3], rng.normal_vec(4 * 8 * 8 * 3, 1.0));
+    let lut = lutify_graph(&dense, &sample, 8, 8, 42);
+    let mut rng = Prng::new(99);
+    let x = Tensor::new(vec![2, 8, 8, 3], rng.normal_vec(2 * 8 * 8 * 3, 1.0));
+    (dense, lut, x)
+}
+
+fn run_session(graph: &Graph, x: &Tensor) -> Tensor {
+    let mut sess = SessionBuilder::new(graph).max_batch(2).build().unwrap();
+    sess.run_alloc(x).unwrap()
+}
+
+fn to_json(out: &Tensor) -> Json {
+    Json::obj(vec![
+        (
+            "shape",
+            Json::Arr(out.shape.iter().map(|&s| Json::num(s as f64)).collect()),
+        ),
+        (
+            "bits",
+            Json::Arr(
+                out.data
+                    .iter()
+                    .map(|v| Json::num(v.to_bits() as f64))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn check_golden(name: &str, out: &Tensor) {
+    let path = golden_dir().join(format!("{name}.json"));
+    let update = lutnn::util::env_flag("UPDATE_GOLDEN");
+    if update || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, json::to_string(&to_json(out))).unwrap();
+        eprintln!(
+            "golden: wrote {} — commit this file to pin scalar-kernel output bytes",
+            path.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let want = json::parse(&text).unwrap_or_else(|e| panic!("golden '{name}' unparseable: {e:?}"));
+    assert_eq!(
+        want.get("shape").and_then(Json::as_usize_vec),
+        Some(out.shape.clone()),
+        "golden '{name}' shape"
+    );
+    let bits: Vec<u32> = want
+        .get("bits")
+        .and_then(Json::as_arr)
+        .expect("golden bits array")
+        .iter()
+        .map(|j| j.as_f64().expect("bit pattern") as u32)
+        .collect();
+    assert_eq!(bits.len(), out.data.len(), "golden '{name}' length");
+    for (i, (&v, &b)) in out.data.iter().zip(&bits).enumerate() {
+        assert_eq!(
+            v.to_bits(),
+            b,
+            "golden '{name}' elem {i}: got {v} ({:#010x}), want bits {b:#010x}. \
+             A refactor changed scalar-kernel output bytes; if intentional, \
+             regenerate with UPDATE_GOLDEN=1 and commit.",
+            v.to_bits()
+        );
+    }
+}
+
+#[test]
+fn golden_dense_session_bitwise_stable() {
+    let (dense, _, x) = fixture();
+    check_golden("cnn_dense", &run_session(&dense, &x));
+}
+
+#[test]
+fn golden_lut_session_bitwise_stable() {
+    let (_, lut, x) = fixture();
+    check_golden("cnn_lut", &run_session(&lut, &x));
+}
+
+#[test]
+fn simd_session_matches_scalar_fixture_bitwise() {
+    // Not file-pinned (the file pins the scalar reference); instead pin
+    // the cross-kernel invariant on the same fixture: the lut-simd
+    // session must reproduce the scalar session's bytes exactly.
+    let (_, lut, x) = fixture();
+    let want = run_session(&lut, &x);
+    let mut sess = SessionBuilder::new(&lut)
+        .kernel_override("c1", "lut-simd")
+        .kernel_override("fc", "lut-simd")
+        .max_batch(2)
+        .build()
+        .unwrap();
+    let got = sess.run_alloc(&x).unwrap();
+    assert_eq!(got.shape, want.shape);
+    assert_eq!(got.data, want.data, "lut-simd session must be bitwise scalar");
+}

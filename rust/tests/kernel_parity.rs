@@ -1,0 +1,218 @@
+//! Cross-kernel parity fuzz harness: every kernel in the default
+//! `KernelRegistry` must agree with the scalar reference on randomized
+//! layer shapes, within its documented per-kernel tolerance:
+//!
+//! * `"lut-simd"` — **bitwise-equal** to `"lut"` (the SIMD encode
+//!   performs the same FP ops in the same per-element order; rustc
+//!   never reorders or fuses float math, so any byte difference is a
+//!   kernel bug, not "noise").
+//! * `"lut-i8"`  — within `LutI8Kernel::abs_tolerance()` absolute error
+//!   per element (global-scale table requantization bound).
+//! * `"dense"`   — bitwise-equal to `nn::ops::linear`.
+//!
+//! Shapes are drawn from a seeded PRNG (`util::prop`) including the
+//! edge cases n=1, C=1, K=1, M=1, V=1, and K values that straddle the
+//! 8-wide vector lanes (remainder handling). Every future kernel added
+//! to the registry gets pre-verified by extending `LUT_FAMILY` /
+//! adding a tolerance arm here.
+//!
+//! Seed: `KERNEL_PARITY_SEED` (decimal, env) — CI pins one so failures
+//! reproduce; locally each value explores a different shape stream.
+//! Replay one case with `util::prop::check_one(<case_seed>, ...)`.
+
+use lutnn::api::{KernelBuildCtx, KernelRegistry, LinearKernel, LutI8Kernel, Scratch};
+use lutnn::lut::{LutLinear, LutOpts};
+use lutnn::nn::graph::LayerParams;
+use lutnn::nn::ops;
+use lutnn::pq::kmeans::learn_codebooks;
+use lutnn::tensor::Tensor;
+use lutnn::util::prop::{self, Gen};
+
+/// ≥ 200 randomized shape cases per kernel (acceptance floor).
+const CASES: usize = 220;
+
+fn fuzz_seed() -> u64 {
+    std::env::var("KERNEL_PARITY_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// One random LUT layer: geometry, input batch, and the built LutLinear.
+struct LutCase {
+    n: usize,
+    m: usize,
+    a: Vec<f32>,
+    lut: LutLinear,
+}
+
+fn gen_lut_case(g: &mut Gen) -> LutCase {
+    // Edge-heavy shape distribution: 1s are always in the pool, and K
+    // straddles the 8-lane boundary (1, 4 below; 8 exact; 12, 16 with
+    // and without remainders).
+    let n = *g.pick(&[1usize, 2, 3, 5, 8, 13]);
+    let c = *g.pick(&[1usize, 2, 3, 4, 5]);
+    let v = *g.pick(&[1usize, 2, 3, 4, 9]);
+    let k = *g.pick(&[1usize, 4, 8, 12, 16]);
+    let m = *g.pick(&[1usize, 2, 5, 8, 17]);
+    let d = c * v;
+    let a = g.f32_vec(n * d, 1.0);
+    let w = g.f32_vec(d * m, 1.0);
+    let cb = learn_codebooks(&a, n, d, c, k, 4, g.case_seed);
+    let bias = if g.bool() { Some(g.f32_vec(m, 0.5)) } else { None };
+    let lut = LutLinear::new(cb, &w, m, bias, 8);
+    LutCase { n, m, a, lut }
+}
+
+/// Run `tag` on the case through the default registry; output buffer is
+/// pre-poisoned so a kernel that under-writes fails loudly.
+fn run_kernel(tag: &str, case: &LutCase, opts: LutOpts, poison: f32) -> Vec<f32> {
+    let registry = KernelRegistry::with_defaults();
+    let ctx = KernelBuildCtx { opts };
+    let params = LayerParams::Lut(case.lut.clone());
+    let kernel = registry.build(tag, &params, &ctx).expect(tag);
+    assert_eq!(kernel.name(), tag);
+    let mut scratch = Scratch::default();
+    let mut out = vec![poison; case.n * case.m];
+    kernel.forward_into(&case.a, case.n, &mut scratch, &mut out);
+    out
+}
+
+#[test]
+fn lut_simd_bitwise_equals_scalar_reference() {
+    prop::check_seeded(fuzz_seed(), CASES, |g| {
+        let case = gen_lut_case(g);
+        // centroid_stationary stays on (the bitwise contract's domain —
+        // every shipped config sets it); accumulate toggles vary.
+        let opts = LutOpts {
+            centroid_stationary: true,
+            interleaved_argmin: g.bool(),
+            blocked_table_read: g.bool(),
+            mixed_accum: g.bool(),
+        };
+        let want = run_kernel("lut", &case, opts, 3.0);
+        let got = run_kernel("lut-simd", &case, opts, -3.0);
+        if got != want {
+            let diff = got
+                .iter()
+                .zip(&want)
+                .enumerate()
+                .find(|(_, (x, y))| x != y)
+                .map(|(i, (x, y))| format!("elem {i}: {x} vs {y}"))
+                .unwrap_or_default();
+            return Err(format!(
+                "lut-simd diverged (n={} m={} c={} k={} v={} {opts:?}): {diff}",
+                case.n, case.m, case.lut.cb.c, case.lut.cb.k, case.lut.cb.v
+            ));
+        }
+        if !got.iter().all(|x| x.is_finite()) {
+            return Err("non-finite output".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lut_i8_within_documented_tolerance_of_scalar_reference() {
+    prop::check_seeded(fuzz_seed() ^ 0x5EED_1, CASES, |g| {
+        let case = gen_lut_case(g);
+        let opts = LutOpts::deployed();
+        let want = run_kernel("lut", &case, opts, 7.0);
+        let got = run_kernel("lut-i8", &case, opts, -7.0);
+        let tol = LutI8Kernel::new(case.lut.clone()).abs_tolerance();
+        prop::assert_close(&got, &want, 0.0, tol).map_err(|e| {
+            format!(
+                "lut-i8 out of tolerance {tol} (n={} m={} c={} k={} v={}): {e}",
+                case.n, case.m, case.lut.cb.c, case.lut.cb.k, case.lut.cb.v
+            )
+        })
+    });
+}
+
+#[test]
+fn dense_kernel_bitwise_equals_ops_linear() {
+    prop::check_seeded(fuzz_seed() ^ 0x5EED_2, CASES, |g| {
+        let n = *g.pick(&[1usize, 2, 3, 7, 16]);
+        let d = g.usize(1..40);
+        let m = g.usize(1..24);
+        let x = Tensor::new(vec![n, d], g.f32_vec(n * d, 1.0));
+        let w = g.f32_vec(d * m, 1.0);
+        let bias = if g.bool() { Some(g.f32_vec(m, 0.5)) } else { None };
+        let want = ops::linear(&x, &w, bias.as_deref(), m);
+        let registry = KernelRegistry::with_defaults();
+        let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+        let params = LayerParams::Dense { w, b: bias, m };
+        let kernel = registry.build("dense", &params, &ctx).unwrap();
+        let mut scratch = Scratch::default();
+        let mut out = vec![5.0f32; n * m];
+        kernel.forward_into(&x.data, n, &mut scratch, &mut out);
+        if out != want.data {
+            return Err(format!("dense kernel diverged (n={n} d={d} m={m})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_lut_family_kernels_agree_on_explicit_edge_shapes() {
+    // Deterministic sweep of the corners the fuzzer samples: every
+    // (n, c, v, k, m) with a 1 somewhere, plus lane remainders.
+    let shapes: &[(usize, usize, usize, usize, usize)] = &[
+        (1, 1, 1, 1, 1),   // everything degenerate
+        (1, 3, 4, 16, 9),  // single row
+        (4, 1, 9, 8, 3),   // single codebook
+        (5, 3, 2, 1, 4),   // single centroid (argmin over K=1)
+        (3, 2, 3, 12, 1),  // single output, K with lane remainder
+        (2, 4, 9, 16, 31), // M not a lane multiple
+    ];
+    for &(n, c, v, k, m) in shapes {
+        let mut g = Gen::from_seed(0xED6E ^ ((n * 31 + c * 7 + v * 3 + k + m) as u64));
+        let d = c * v;
+        let a = g.f32_vec(n * d, 1.0);
+        let w = g.f32_vec(d * m, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 4, 0);
+        let lut = LutLinear::new(cb, &w, m, Some(g.f32_vec(m, 0.5)), 8);
+        let case = LutCase { n, m, a, lut };
+        let opts = LutOpts::deployed();
+        let want = run_kernel("lut", &case, opts, 2.0);
+        let got_simd = run_kernel("lut-simd", &case, opts, -2.0);
+        assert_eq!(got_simd, want, "lut-simd @ ({n},{c},{v},{k},{m})");
+        let got_i8 = run_kernel("lut-i8", &case, opts, -2.0);
+        let tol = LutI8Kernel::new(case.lut.clone()).abs_tolerance();
+        prop::assert_close(&got_i8, &want, 0.0, tol)
+            .unwrap_or_else(|e| panic!("lut-i8 @ ({n},{c},{v},{k},{m}): {e}"));
+    }
+}
+
+#[test]
+fn scratch_reuse_across_kernels_is_deterministic() {
+    // The session shares one Scratch across heterogeneous layers; a
+    // kernel reading stale scratch state would show up as run-order
+    // dependence. Interleave all three LUT kernels over two shapes and
+    // compare against fresh-scratch runs.
+    let mut g = Gen::from_seed(0xACE5);
+    let mk = |g: &mut Gen, n: usize, c: usize, v: usize, k: usize, m: usize| {
+        let d = c * v;
+        let a = g.f32_vec(n * d, 1.0);
+        let w = g.f32_vec(d * m, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 4, 1);
+        LutCase { n, m, a, lut: LutLinear::new(cb, &w, m, None, 8) }
+    };
+    let case1 = mk(&mut g, 7, 3, 4, 16, 6);
+    let case2 = mk(&mut g, 2, 5, 9, 8, 13);
+    let registry = KernelRegistry::with_defaults();
+    let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+    let mut shared = Scratch::default();
+    for round in 0..2 {
+        for case in [&case1, &case2] {
+            for tag in ["lut", "lut-simd", "lut-i8"] {
+                let params = LayerParams::Lut(case.lut.clone());
+                let kernel = registry.build(tag, &params, &ctx).unwrap();
+                let mut out = vec![0.0f32; case.n * case.m];
+                kernel.forward_into(&case.a, case.n, &mut shared, &mut out);
+                let fresh = run_kernel(tag, case, LutOpts::deployed(), 0.0);
+                assert_eq!(out, fresh, "{tag} round {round} shape-dependent scratch");
+            }
+        }
+    }
+}
