@@ -261,11 +261,27 @@ fn main() {
     // BENCH_*.json trajectory artifact).
     let doc = Json::obj(vec![
         ("bench", Json::str("e2e_latency")),
+        (
+            "note",
+            Json::str(if fast { "measured (E2E_FAST: shootout only)" } else { "measured" }),
+        ),
         ("simd_backend", Json::str(simd::active_backend())),
         ("kernel_shootout", shootout),
         ("models", Json::Arr(model_rows)),
     ]);
+    // Schema guard: the committed BENCH_e2e_latency.json doubles as the
+    // schema placeholder (null leaves = measured values); refuse to
+    // overwrite it with a document whose field names or types drifted.
+    match std::fs::read_to_string("BENCH_e2e_latency.json") {
+        Ok(old) => {
+            let schema = json::parse(&old).expect("committed BENCH_e2e_latency.json must parse");
+            if let Err(e) = lutnn::util::schema::check_shape(&schema, &doc) {
+                panic!("BENCH_e2e_latency.json schema drift: {e}");
+            }
+        }
+        Err(_) => eprintln!("(no committed BENCH_e2e_latency.json: skipping schema check)"),
+    }
     std::fs::write("BENCH_e2e_latency.json", json::to_string(&doc) + "\n")
         .expect("write BENCH_e2e_latency.json");
-    eprintln!("wrote BENCH_e2e_latency.json");
+    eprintln!("wrote BENCH_e2e_latency.json (schema-checked)");
 }

@@ -1,0 +1,106 @@
+"""Generate the committed cross-language export-parity fixture.
+
+Writes ``rust/tests/fixtures/py_export_tiny.lutnn`` — a tiny MLP bundle
+(dense fc1 -> relu -> LUT fc2) produced by this package's real export
+path (``BundleWriter.add_lut`` -> ``ref.build_table_ref`` +
+``ref.quantize_table_ref``), with everything the rust test
+``rust/tests/py_parity.rs`` needs stashed in the header ``meta``:
+
+* ``fixture_input`` / ``expected_output`` — a deterministic eval batch
+  and the python reference forward (``lut_amm_quantized_ref``), so rust
+  `Session` numerics are pinned against the L2 oracle;
+* ``teacher`` — the frozen dense weight/bias of the LUT layer, so rust
+  can rebuild (and re-train) the same operator independently.
+
+The script asserts a safety margin between each sub-vector's best and
+second-best centroid, so FP-order differences between the two encoders
+cannot flip an argmin in the committed fixture.
+
+Run from ``python/``:  python3 -m compile.make_parity_fixture
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from . import pqkmeans, softpq
+from .export import BundleWriter, read_bundle
+from .kernels import ref
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests",
+                   "fixtures", "py_export_tiny.lutnn")
+
+D0 = 8          # model input features
+H = 8           # fc1 output / fc2 input features
+M = 5           # fc2 output features
+C, V, K = 2, 4, 16
+N_CAL = 256     # calibration rows for k-means
+N_FIX = 8       # committed eval rows
+TOL = 1e-4      # documented rust-vs-python forward tolerance (f32 FP order)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    f32 = np.float32
+
+    w1 = rng.normal(0, 0.5, size=(D0, H)).astype(f32)
+    b1 = rng.normal(0, 0.2, size=(H,)).astype(f32)
+    w2 = rng.normal(0, 0.5, size=(H, M)).astype(f32)
+    b2 = rng.normal(0, 0.2, size=(M,)).astype(f32)
+
+    x_cal = rng.normal(0, 1.0, size=(N_CAL, D0)).astype(f32)
+    h_cal = np.maximum(x_cal @ w1 + b1, 0.0).astype(f32)
+
+    cents = np.stack(
+        [pqkmeans.kmeans(h_cal[:, c * V:(c + 1) * V], K, n_iters=25,
+                         seed=c)[0] for c in range(C)]
+    ).astype(f32)                                     # [C, K, V]
+    params = softpq.init_lut_params(w2, b2, cents, init_t=0.5)
+
+    x_fix = rng.normal(0, 1.0, size=(N_FIX, D0)).astype(f32)
+    h_fix = np.maximum(x_fix @ w1 + b1, 0.0).astype(f32)
+
+    # Argmin safety margin: rust computes distances in a different FP
+    # order; a committed fixture must not sit on a near-tie.
+    d = np.asarray(ref.distances_ref(h_fix, cents))   # [N, C, K]
+    top2 = np.sort(d, axis=-1)[..., :2]
+    margin = float(np.min(top2[..., 1] - top2[..., 0]))
+    assert margin > 1e-3, f"near-tie in fixture encode (margin {margin})"
+
+    table = ref.build_table_ref(cents, w2)
+    q, scale = ref.quantize_table_ref(table, 8)
+    expected = np.asarray(
+        ref.lut_amm_quantized_ref(h_fix, cents, q, scale, b2), dtype=f32)
+
+    graph = [
+        {"op": "linear", "layer": "fc1"},
+        {"op": "relu"},
+        {"op": "linear", "layer": "fc2"},
+    ]
+    meta = {
+        "fixture_input": {"shape": [N_FIX, D0],
+                          "data": x_fix.reshape(-1).tolist()},
+        "expected_output": {"shape": [N_FIX, M],
+                            "data": expected.reshape(-1).tolist()},
+        "tolerance": TOL,
+        "teacher": {"w": w2.reshape(-1).tolist(), "b": b2.tolist(),
+                    "c": C, "k": K},
+        "encode_margin": margin,
+    }
+    w = BundleWriter("py_export_tiny", [1, D0], graph, meta=meta)
+    w.add_dense("fc1", w1, b1)
+    w.add_lut("fc2", params, table_bits=8)
+    total = w.write(OUT)
+
+    header, arrays = read_bundle(OUT)
+    assert header["model"] == "py_export_tiny"
+    assert arrays["fc2"]["table_q"].shape == (C, K, M)
+    np.testing.assert_array_equal(arrays["fc2"]["centroids"], cents)
+    print(f"wrote {os.path.normpath(OUT)} ({total} bytes, "
+          f"encode margin {margin:.4f})")
+
+
+if __name__ == "__main__":
+    main()

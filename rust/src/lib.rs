@@ -13,6 +13,8 @@
 //! * [`tensor`] — f32 tensors + im2col
 //! * [`cost`] — analytic FLOPs/size model (paper Tables 1–2)
 //! * [`model_fmt`] — `.lutnn` bundle reader/writer
+//! * [`train`] — native differentiable centroid learning (paper §3):
+//!   soft-argmin encoder, Adam, teacher distillation, `compile_graph`
 //! * [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt` via the `xla`
 //!   crate and executes the AOT-compiled JAX graphs
 //! * [`coordinator`] — serving: router, dynamic batcher, worker pool,
@@ -29,4 +31,5 @@ pub mod nn;
 pub mod pq;
 pub mod runtime;
 pub mod tensor;
+pub mod train;
 pub mod util;

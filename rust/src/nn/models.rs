@@ -292,11 +292,31 @@ pub fn build_cnn_graph(
 /// ones), so `api::SessionBuilder` dispatches without inspecting layer
 /// internals.
 pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, seed: u64) -> Graph {
-    let mut new_layers: BTreeMap<String, LayerParams> = BTreeMap::new();
+    replace_linear_layers(g, sample, "_lut", |_name, acts, rows, d, w, b, m| {
+        let v = pick_v(d);
+        let cb = learn_codebooks(acts, rows, d, d / v, k_centroids, 8, seed);
+        LayerParams::Lut(LutLinear::new(cb, w, m, b.map(<[f32]>::to_vec), bits))
+    })
+}
+
+/// The graph-rewrite walk shared by [`lutify_graph`] (k-means-only
+/// conversion) and `train::compile_graph` (distilled conversion):
+/// capture every linear op's input activations on `sample`, keep the
+/// first conv dense (paper §6.1), and replace each remaining dense
+/// conv/linear with whatever `build(name, acts, rows, d, w, bias, m)`
+/// returns. Layers shared by several ops are built once; non-dense
+/// layers pass through untouched.
+pub(crate) fn replace_linear_layers(
+    g: &Graph,
+    sample: &Tensor,
+    suffix: &str,
+    mut build: impl FnMut(&str, &[f32], usize, usize, &[f32], Option<&[f32]>, usize) -> LayerParams,
+) -> Graph {
     // Re-run the graph, capturing inputs of each linear op.
     let mut captures: BTreeMap<String, (Vec<f32>, usize, usize)> = BTreeMap::new();
     capture_linear_inputs(g, sample, &mut captures);
 
+    let mut new_layers: BTreeMap<String, LayerParams> = BTreeMap::new();
     let mut first_conv_seen = false;
     for op in &g.ops {
         let lname = match op {
@@ -307,15 +327,13 @@ pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, se
         if matches!(op, Op::Conv { .. }) {
             first_conv_seen = true;
         }
-        if is_first_conv {
-            continue; // stays dense (paper §6.1)
+        if is_first_conv || new_layers.contains_key(&lname) {
+            continue; // dense stem (paper §6.1) / layer already built
         }
         if let LayerParams::Dense { w, b, m } = &g.layers[&lname] {
             let (acts, rows, d) = &captures[&lname];
-            let v = pick_v(*d);
-            let cb = learn_codebooks(acts, *rows, *d, d / v, k_centroids, 8, seed);
-            let lut = LutLinear::new(cb, w, *m, b.clone(), bits);
-            new_layers.insert(lname, LayerParams::Lut(lut));
+            let replaced = build(&lname, acts, *rows, *d, w, b.as_deref(), *m);
+            new_layers.insert(lname, replaced);
         }
     }
     let mut layers = BTreeMap::new();
@@ -327,7 +345,7 @@ pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, se
         }
     }
     Graph {
-        name: format!("{}_lut", g.name),
+        name: format!("{}{suffix}", g.name),
         input_shape: g.input_shape.clone(),
         ops: g.ops.clone(),
         layers,
@@ -335,7 +353,9 @@ pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, se
     }
 }
 
-fn pick_v(d: usize) -> usize {
+/// Largest supported sub-vector length dividing `d` (conversion-time
+/// heuristic shared with `train::compile_graph`).
+pub(crate) fn pick_v(d: usize) -> usize {
     for v in [9usize, 4, 2] {
         if d % v == 0 {
             return v;

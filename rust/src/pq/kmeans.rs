@@ -89,7 +89,11 @@ pub fn kmeans(
         }
         for c in 0..k {
             if counts[c] == 0 {
-                // respawn empty cluster at a random point
+                // Respawn an empty cluster at a random point — drawn
+                // from the same seeded Prng as the k-means++ init, so
+                // codebook learning stays run-to-run deterministic for
+                // a fixed seed (pinned by `deterministic_for_seed`,
+                // which the train::distill determinism test builds on).
                 let pick = rng.below(n);
                 centers[c * v..(c + 1) * v]
                     .copy_from_slice(&x[pick * v..(pick + 1) * v]);
@@ -203,6 +207,33 @@ mod tests {
         let x = vec![1.0f32; 64 * 4];
         let (centers, _) = kmeans(&x, 64, 4, 4, 10, 0);
         assert!(centers.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        // Data with fewer distinct points than centroids forces the
+        // empty-cluster respawn path; determinism must survive it.
+        let mut x = Vec::new();
+        for i in 0..60 {
+            let base = (i % 3) as f32 * 5.0;
+            x.extend_from_slice(&[base, base + 1.0]);
+        }
+        for seed in [0u64, 7, 42] {
+            let (ca, aa) = kmeans(&x, 60, 2, 8, 20, seed);
+            let (cb, ab) = kmeans(&x, 60, 2, 8, 20, seed);
+            assert_eq!(aa, ab, "assignments must be identical (seed {seed})");
+            for (a, b) in ca.iter().zip(&cb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "centers must match (seed {seed})");
+            }
+        }
+        // learn_codebooks plumbs the same seed through every slab
+        let mut rng = Prng::new(9);
+        let acts = rng.normal_vec(64 * 8, 1.0);
+        let cb1 = learn_codebooks(&acts, 64, 8, 2, 16, 12, 5);
+        let cb2 = learn_codebooks(&acts, 64, 8, 2, 16, 12, 5);
+        for (a, b) in cb1.data.iter().zip(&cb2.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "codebooks must be bit-identical");
+        }
     }
 
     #[test]

@@ -1,0 +1,44 @@
+//! # Native differentiable centroid learning (paper §3)
+//!
+//! The rust-side compile path: everything needed to *produce* a LUT-NN
+//! model — not just execute one — without Python in the loop.
+//!
+//! * [`softpq`] — the differentiable soft-argmin layer: a temperature-
+//!   scaled softmax over negative centroid distances (Eq. 5) with
+//!   hand-derived reverse-mode gradients for the centroids, the learned
+//!   log-temperature (§3.2) and, optionally, a decoupled output table.
+//! * [`adam`] — the Adam optimizer with per-group learning-rate scaling
+//!   (Table 3 trains centroids and temperature at different rates) and
+//!   global-norm gradient clipping.
+//! * [`distill`] — the calibration loop: k-means-initialize (Eq. 1),
+//!   minimize soft-forward MSE against the dense teacher on activation
+//!   batches, anneal the temperature toward the hard argmin, freeze
+//!   into `lut::LutLinear`, and [`compile_graph`] a whole dense teacher
+//!   into a bundle-exportable LUT [`crate::nn::graph::Graph`].
+//!
+//! ## End-to-end
+//!
+//! ```ignore
+//! let (compiled, reports) =
+//!     train::compile_graph(&dense_graph, &calibration, 16, 8, &TrainConfig::default())?;
+//! model_fmt::save_bundle(&compiled, "model_compiled.lutnn")?;   // -> api::Session loads it
+//! ```
+//!
+//! The CLI front-end is `lutnn compile`; `examples/train_centroids.rs`
+//! walks the same pipeline in-process. Temperature schedule: start soft
+//! (`init_t`, default 1.0), decay by `anneal` per epoch down to `min_t`
+//! while `temperature_lr` lets backprop adjust along the way; as
+//! `t -> 0` the soft encoder agrees with the deployed hard argmin
+//! (pinned at >= 99% of positions by the parity test in [`softpq`]).
+//!
+//! Scope: layer-wise distillation on calibration activations. Task-level
+//! fine-tuning on real datasets (labels, data augmentation, QAT
+//! ablations, BERT) stays in `python/compile/train.py`.
+
+pub mod adam;
+pub mod distill;
+pub mod softpq;
+
+pub use adam::{clip_global_norm, Adam, AdamConfig};
+pub use distill::{compile_graph, distill_layer, DistillReport, LayerReport, TrainConfig};
+pub use softpq::{soft_argmax, SoftForward, SoftPqGrads, SoftPqLayer};

@@ -1,0 +1,531 @@
+//! Soft-PQ: the differentiable centroid-learning layer (paper §3).
+//!
+//! Mirrors `python/compile/softpq.py` in native rust: the encoder is a
+//! temperature-scaled softmax over *negative* squared distances to each
+//! codebook's centroids (Eq. 5),
+//!
+//! ```text
+//!   g[n, c, k] = softmax_k( -|a_sub[n,c] - P[c,k]|^2 / t )
+//!   out[n, m]  = sum_c  g[n, c, :] . T[c, :, m]  + bias[m]
+//! ```
+//!
+//! and the whole pipeline is differentiable in the centroids `P`, the
+//! log-temperature `log t` (§3.2 learned temperature — stored in log
+//! space so `t > 0` always) and, optionally, the output table `T`
+//! itself. By default the table is *rebuilt from the frozen dense
+//! weight every step* (`T[c,k] = P[c,k] . B^c`, paper Fig. 4), so table
+//! gradients flow back into the centroids; with
+//! [`SoftPqLayer::decouple_table`] the table becomes a free parameter
+//! (the Deep Lookup Network style of end-to-end learned tables), which
+//! enables deploy-time adaptation when the dense weight is unavailable.
+//!
+//! As `t -> 0` the softmax collapses onto the closest centroid, so the
+//! soft encoder's argmax converges to the hard argmin encode the
+//! inference engine (`lut::LutLinear::encode_into`) executes — softmax
+//! is order-preserving, so they agree everywhere except FP near-ties.
+//! The parity test below pins agreement at >= 99% of positions.
+//!
+//! All gradients are hand-derived reverse mode (no autodiff substrate in
+//! this crate); the finite-difference tests below are the contract.
+
+use crate::lut::LutLinear;
+use crate::pq::{build_table, quantize_table, Codebooks};
+
+/// Trainable state of one LUT-replaced linear operator.
+///
+/// `cb` (centroids) and `log_t` train; `weight`/`bias` are frozen; the
+/// optional `table` trains only after [`SoftPqLayer::decouple_table`].
+#[derive(Debug, Clone)]
+pub struct SoftPqLayer {
+    /// centroids [C, K, V] — trainable
+    pub cb: Codebooks,
+    /// log of the softmax temperature — trainable (§3.2)
+    pub log_t: f32,
+    /// frozen dense weight [D, M] the table is rebuilt from
+    pub weight: Vec<f32>,
+    /// frozen bias [M]
+    pub bias: Option<Vec<f32>>,
+    /// output features M
+    pub m: usize,
+    /// decoupled trainable table [C, K, M]; `None` = rebuilt from
+    /// `weight` every forward (paper Fig. 4)
+    pub table: Option<Vec<f32>>,
+}
+
+/// Cached intermediates of one soft forward pass, consumed by
+/// [`SoftPqLayer::backward`].
+#[derive(Debug, Clone)]
+pub struct SoftForward {
+    /// squared distances [n, C, K]
+    pub dist: Vec<f32>,
+    /// soft assignments (softmax over -dist/t) [n, C, K]
+    pub soft: Vec<f32>,
+    /// table rebuilt from the frozen weight for this pass [C, K, M];
+    /// `None` when the layer's own decoupled table was used (backward
+    /// borrows it from the layer instead of cloning per minibatch)
+    pub table: Option<Vec<f32>>,
+    /// layer output [n, M]
+    pub out: Vec<f32>,
+}
+
+/// Gradients of a scalar loss w.r.t. the trainable parameters.
+#[derive(Debug, Clone)]
+pub struct SoftPqGrads {
+    /// d loss / d centroids [C, K, V]
+    pub centroids: Vec<f32>,
+    /// d loss / d log_t
+    pub log_t: f32,
+    /// d loss / d table [C, K, M] — `Some` only for a decoupled table
+    pub table: Option<Vec<f32>>,
+}
+
+impl SoftPqLayer {
+    /// Wrap k-means-initialized codebooks + a frozen dense operator.
+    pub fn new(
+        cb: Codebooks,
+        weight: Vec<f32>,
+        bias: Option<Vec<f32>>,
+        m: usize,
+        init_t: f32,
+    ) -> SoftPqLayer {
+        assert_eq!(weight.len(), cb.input_dim() * m, "weight must be [D, M]");
+        if let Some(b) = &bias {
+            assert_eq!(b.len(), m, "bias must be [M]");
+        }
+        assert!(init_t > 0.0, "temperature must be positive");
+        SoftPqLayer { cb, log_t: init_t.ln(), weight, bias, m, table: None }
+    }
+
+    /// Detach the table from the frozen weight: from now on `T` is a
+    /// free trainable parameter initialized at its current rebuilt
+    /// value, and centroid gradients stop flowing through it.
+    pub fn decouple_table(&mut self) {
+        if self.table.is_none() {
+            self.table = Some(build_table(&self.cb, &self.weight, self.m));
+        }
+    }
+
+    /// Current softmax temperature `t = exp(log_t)`.
+    pub fn temperature(&self) -> f32 {
+        self.log_t.exp()
+    }
+
+    /// Override the temperature (annealing schedules drive this).
+    pub fn set_temperature(&mut self, t: f32) {
+        assert!(t > 0.0, "temperature must be positive");
+        self.log_t = t.ln();
+    }
+
+    /// The table this layer currently computes with: the decoupled
+    /// parameter if present, else `P . B` rebuilt from the frozen weight.
+    pub fn current_table(&self) -> Vec<f32> {
+        match &self.table {
+            Some(t) => t.clone(),
+            None => build_table(&self.cb, &self.weight, self.m),
+        }
+    }
+
+    /// Soft encode rows of `a` ([n, D]): distances and softmax
+    /// assignments, written into caller-owned buffers.
+    pub fn soft_encode(&self, a: &[f32], n: usize, dist: &mut Vec<f32>, soft: &mut Vec<f32>) {
+        let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
+        let d = self.cb.input_dim();
+        assert_eq!(a.len(), n * d);
+        let t = self.temperature();
+        dist.clear();
+        dist.resize(n * c_total * k, 0.0);
+        soft.clear();
+        soft.resize(n * c_total * k, 0.0);
+        for i in 0..n {
+            for c in 0..c_total {
+                let sub = &a[i * d + c * v..i * d + (c + 1) * v];
+                let base = (i * c_total + c) * k;
+                for kk in 0..k {
+                    let cent = self.cb.centroid(c, kk);
+                    let mut s = 0.0f32;
+                    for (x, p) in sub.iter().zip(cent) {
+                        let diff = x - p;
+                        s += diff * diff;
+                    }
+                    dist[base + kk] = s;
+                }
+                softmax_neg_scaled(&dist[base..base + k], t, &mut soft[base..base + k]);
+            }
+        }
+    }
+
+    /// The table a forward pass computed with: the pass's own rebuilt
+    /// copy, or the layer's decoupled parameter.
+    fn pass_table<'a>(&'a self, fwd: &'a SoftForward) -> &'a [f32] {
+        match &fwd.table {
+            Some(t) => t,
+            None => self.table.as_deref().expect("decoupled pass must come from this layer"),
+        }
+    }
+
+    /// Soft forward pass (the `hard=False` relaxation of softpq.py),
+    /// returning every intermediate the backward pass needs.
+    pub fn forward(&self, a: &[f32], n: usize) -> SoftForward {
+        let (c_total, k) = (self.cb.c, self.cb.k);
+        let m = self.m;
+        let mut dist = Vec::new();
+        let mut soft = Vec::new();
+        self.soft_encode(a, n, &mut dist, &mut soft);
+        let rebuilt = match &self.table {
+            Some(_) => None,
+            None => Some(build_table(&self.cb, &self.weight, self.m)),
+        };
+        let table: &[f32] = match (&self.table, &rebuilt) {
+            (Some(t), _) => t,
+            (None, Some(t)) => t,
+            (None, None) => unreachable!(),
+        };
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let dst = &mut out[i * m..(i + 1) * m];
+            for c in 0..c_total {
+                let g = &soft[(i * c_total + c) * k..(i * c_total + c + 1) * k];
+                for (kk, &w) in g.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let row = &table[(c * k + kk) * m..(c * k + kk + 1) * m];
+                    for (o, &tv) in dst.iter_mut().zip(row) {
+                        *o += w * tv;
+                    }
+                }
+            }
+            if let Some(b) = &self.bias {
+                for (o, &bv) in dst.iter_mut().zip(b) {
+                    *o += bv;
+                }
+            }
+        }
+        SoftForward { dist, soft, table: rebuilt, out }
+    }
+
+    /// Reverse-mode gradients for `dout = d loss / d out` ([n, M]).
+    ///
+    /// Chain, per (row, codebook): with logits `z = -dist / t`,
+    ///   `dT[c,k,:]  = sum_n g[n,c,k] * dout[n,:]`
+    ///   `dg[k]      = dout . T[c,k,:]`
+    ///   `dz[k]      = g[k] * (dg[k] - sum_j g[j] dg[j])`   (softmax JVP)
+    ///   `d dist[k]  = -dz[k] / t`
+    ///   `d log_t   += sum_k dz[k] * dist[k] / t`
+    ///   `dP[c,k,v] += d dist[k] * -2 (a_sub[v] - P[c,k,v])`
+    /// and, unless the table is decoupled, `dT` folds into `dP` through
+    /// `T[c,k,m] = sum_v P[c,k,v] * B[c*V+v, m]`.
+    pub fn backward(&self, a: &[f32], n: usize, fwd: &SoftForward, dout: &[f32]) -> SoftPqGrads {
+        let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
+        let d = self.cb.input_dim();
+        let m = self.m;
+        assert_eq!(a.len(), n * d);
+        assert_eq!(dout.len(), n * m);
+        let t = self.temperature();
+        let table = self.pass_table(fwd);
+
+        let mut d_table = vec![0.0f32; c_total * k * m];
+        let mut d_cent = vec![0.0f32; c_total * k * v];
+        let mut d_log_t = 0.0f64;
+        let mut dg = vec![0.0f32; k];
+        let mut dz = vec![0.0f32; k];
+
+        for i in 0..n {
+            let dorow = &dout[i * m..(i + 1) * m];
+            for c in 0..c_total {
+                let base = (i * c_total + c) * k;
+                let g = &fwd.soft[base..base + k];
+                let dist = &fwd.dist[base..base + k];
+                for (kk, dgk) in dg.iter_mut().enumerate() {
+                    let row = &table[(c * k + kk) * m..(c * k + kk + 1) * m];
+                    let mut s = 0.0f32;
+                    for (&o, &tv) in dorow.iter().zip(row) {
+                        s += o * tv;
+                    }
+                    *dgk = s;
+                    let gw = g[kk];
+                    if gw != 0.0 {
+                        let trow = &mut d_table[(c * k + kk) * m..(c * k + kk + 1) * m];
+                        for (td, &o) in trow.iter_mut().zip(dorow) {
+                            *td += gw * o;
+                        }
+                    }
+                }
+                let mut sdot = 0.0f32;
+                for (gw, dgk) in g.iter().zip(&dg) {
+                    sdot += gw * dgk;
+                }
+                for ((zk, &gw), &dgk) in dz.iter_mut().zip(g).zip(&dg) {
+                    *zk = gw * (dgk - sdot);
+                }
+                let sub = &a[i * d + c * v..i * d + (c + 1) * v];
+                for (kk, &zk) in dz.iter().enumerate() {
+                    d_log_t += zk as f64 * dist[kk] as f64 / t as f64;
+                    let dd = -zk / t;
+                    if dd == 0.0 {
+                        continue;
+                    }
+                    let cent = self.cb.centroid(c, kk);
+                    let crow = &mut d_cent[(c * k + kk) * v..(c * k + kk + 1) * v];
+                    for ((cd, &x), &p) in crow.iter_mut().zip(sub).zip(cent) {
+                        *cd += dd * -2.0 * (x - p);
+                    }
+                }
+            }
+        }
+
+        if self.table.is_some() {
+            return SoftPqGrads { centroids: d_cent, log_t: d_log_t as f32, table: Some(d_table) };
+        }
+        // Rebuilt table: fold dT into the centroids through T = P . B.
+        for c in 0..c_total {
+            for kk in 0..k {
+                let trow = &d_table[(c * k + kk) * m..(c * k + kk + 1) * m];
+                let crow = &mut d_cent[(c * k + kk) * v..(c * k + kk + 1) * v];
+                for (vi, cd) in crow.iter_mut().enumerate() {
+                    let wrow = &self.weight[(c * v + vi) * m..(c * v + vi + 1) * m];
+                    let mut s = 0.0f32;
+                    for (&td, &w) in trow.iter().zip(wrow) {
+                        s += td * w;
+                    }
+                    *cd += s;
+                }
+            }
+        }
+        SoftPqGrads { centroids: d_cent, log_t: d_log_t as f32, table: None }
+    }
+
+    /// Freeze into the inference representation: quantized table +
+    /// hard-argmin encode (`lut::LutLinear`), ready for bundle export.
+    pub fn into_lut(&self, bits: u8) -> LutLinear {
+        match &self.table {
+            Some(t) => {
+                let qt = quantize_table(t, self.cb.c, self.cb.k, self.m, bits);
+                let mut lut = LutLinear::from_parts(self.cb.clone(), qt, self.bias.clone());
+                // from_parts only sees the quantized table; keep the
+                // exact trained table so forward_f32_table stays
+                // quantization-free (same contract as LutLinear::new).
+                lut.table_f32 = t.clone();
+                lut
+            }
+            None => LutLinear::new(self.cb.clone(), &self.weight, self.m, self.bias.clone(), bits),
+        }
+    }
+}
+
+/// `out = softmax(-d / t)` with max-subtraction — stable at the tiny
+/// temperatures the annealing schedule ends on.
+fn softmax_neg_scaled(d: &[f32], t: f32, out: &mut [f32]) {
+    let mut zmax = f32::NEG_INFINITY;
+    for &x in d {
+        let z = -x / t;
+        if z > zmax {
+            zmax = z;
+        }
+    }
+    let mut sum = 0.0f32;
+    for (o, &x) in out.iter_mut().zip(d) {
+        let e = (-x / t - zmax).exp();
+        *o = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Per-(row, codebook) argmax of soft assignments ([n, C, K] -> [n*C]).
+/// As `t -> 0` this is the hard encoder's argmin.
+pub fn soft_argmax(soft: &[f32], n: usize, c: usize, k: usize) -> Vec<u16> {
+    assert_eq!(soft.len(), n * c * k);
+    let mut out = vec![0u16; n * c];
+    for (slot, row) in out.iter_mut().zip(soft.chunks_exact(k)) {
+        let mut best = 0usize;
+        let mut best_v = row[0];
+        for (i, &x) in row.iter().enumerate().skip(1) {
+            if x > best_v {
+                best_v = x;
+                best = i;
+            }
+        }
+        *slot = best as u16;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::LutOpts;
+    use crate::pq::kmeans::learn_codebooks;
+    use crate::util::prng::Prng;
+    use crate::util::prop;
+
+    fn fixture(
+        seed: u64,
+        n: usize,
+        c: usize,
+        v: usize,
+        k: usize,
+        m: usize,
+    ) -> (Vec<f32>, SoftPqLayer) {
+        let mut rng = Prng::new(seed);
+        let d = c * v;
+        let a = rng.normal_vec(n * d, 1.0);
+        let w = rng.normal_vec(d * m, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 8, seed);
+        let bias = Some(rng.normal_vec(m, 0.3));
+        (a, SoftPqLayer::new(cb, w, bias, m, 1.0))
+    }
+
+    /// MSE loss in f64 (grad-check noise floor) + its dout.
+    fn mse_and_grad(out: &[f32], target: &[f32]) -> (f64, Vec<f32>) {
+        let n = out.len() as f64;
+        let mut loss = 0.0f64;
+        let mut dout = vec![0.0f32; out.len()];
+        for ((&o, &t), d) in out.iter().zip(target).zip(dout.iter_mut()) {
+            let diff = o as f64 - t as f64;
+            loss += diff * diff;
+            *d = (2.0 * diff / n) as f32;
+        }
+        (loss / n, dout)
+    }
+
+    fn loss_of(layer: &SoftPqLayer, a: &[f32], n: usize, target: &[f32]) -> f64 {
+        let fwd = layer.forward(a, n);
+        mse_and_grad(&fwd.out, target).0
+    }
+
+    /// Central finite difference of the loss along one parameter.
+    fn numeric_grad(
+        layer: &SoftPqLayer,
+        a: &[f32],
+        n: usize,
+        target: &[f32],
+        poke: impl Fn(&mut SoftPqLayer, f32),
+        eps: f32,
+    ) -> f64 {
+        let mut hi = layer.clone();
+        poke(&mut hi, eps);
+        let mut lo = layer.clone();
+        poke(&mut lo, -eps);
+        (loss_of(&hi, a, n, target) - loss_of(&lo, a, n, target)) / (2.0 * eps as f64)
+    }
+
+    fn assert_grad_close(analytic: f64, numeric: f64, what: &str) {
+        let denom = analytic.abs().max(numeric.abs()).max(1e-3);
+        let rel = (analytic - numeric).abs() / denom;
+        assert!(rel < 7e-2, "{what}: analytic {analytic} vs numeric {numeric} (rel {rel})");
+    }
+
+    #[test]
+    fn centroid_and_temperature_grads_match_finite_differences() {
+        let (n, c, v, k, m) = (6, 2, 3, 4, 3);
+        let (a, layer) = fixture(0, n, c, v, k, m);
+        let mut rng = Prng::new(99);
+        let target = rng.normal_vec(n * m, 1.0);
+        let fwd = layer.forward(&a, n);
+        let (_, dout) = mse_and_grad(&fwd.out, &target);
+        let grads = layer.backward(&a, n, &fwd, &dout);
+        assert!(grads.table.is_none());
+        // every 3rd centroid coordinate, to keep the test fast
+        for idx in (0..c * k * v).step_by(3) {
+            let num = numeric_grad(&layer, &a, n, &target, |l, e| l.cb.data[idx] += e, 1e-2);
+            assert_grad_close(grads.centroids[idx] as f64, num, &format!("centroid[{idx}]"));
+        }
+        let num_t = numeric_grad(&layer, &a, n, &target, |l, e| l.log_t += e, 1e-2);
+        assert_grad_close(grads.log_t as f64, num_t, "log_t");
+    }
+
+    #[test]
+    fn decoupled_table_grads_match_finite_differences() {
+        let (n, c, v, k, m) = (5, 2, 2, 3, 3);
+        let (a, mut layer) = fixture(1, n, c, v, k, m);
+        layer.decouple_table();
+        let mut rng = Prng::new(7);
+        let target = rng.normal_vec(n * m, 1.0);
+        let fwd = layer.forward(&a, n);
+        let (_, dout) = mse_and_grad(&fwd.out, &target);
+        let grads = layer.backward(&a, n, &fwd, &dout);
+        let d_table = grads.table.expect("decoupled table must have grads");
+        for idx in (0..c * k * m).step_by(2) {
+            let num = numeric_grad(
+                &layer,
+                &a,
+                n,
+                &target,
+                |l, e| l.table.as_mut().unwrap()[idx] += e,
+                1e-2,
+            );
+            assert_grad_close(d_table[idx] as f64, num, &format!("table[{idx}]"));
+        }
+        // centroid grads still flow through the distance path
+        for idx in (0..c * k * v).step_by(2) {
+            let num = numeric_grad(&layer, &a, n, &target, |l, e| l.cb.data[idx] += e, 1e-2);
+            assert_grad_close(grads.centroids[idx] as f64, num, &format!("centroid[{idx}]"));
+        }
+    }
+
+    #[test]
+    fn soft_argmax_agrees_with_hard_encode_as_t_goes_to_zero() {
+        // Acceptance gate: >= 99% per-position agreement between the
+        // annealed soft encoder and the inference engine's hard argmin.
+        let (n, c, v, k, m) = (500, 4, 4, 16, 8);
+        let (a, mut layer) = fixture(2, n, c, v, k, m);
+        layer.set_temperature(1e-4);
+        let mut dist = Vec::new();
+        let mut soft = Vec::new();
+        layer.soft_encode(&a, n, &mut dist, &mut soft);
+        let soft_idx = soft_argmax(&soft, n, c, k);
+
+        let lut = layer.into_lut(8);
+        let mut hard_idx = vec![0u16; n * c];
+        lut.encode_into(&a, n, LutOpts::deployed(), &mut hard_idx);
+
+        let agree = soft_idx.iter().zip(&hard_idx).filter(|(s, h)| s == h).count();
+        let frac = agree as f64 / (n * c) as f64;
+        assert!(frac >= 0.99, "soft/hard encode agreement {frac} < 0.99");
+    }
+
+    #[test]
+    fn soft_forward_converges_to_hard_forward_at_low_temperature() {
+        let (n, c, v, k, m) = (40, 3, 4, 8, 5);
+        let (a, mut layer) = fixture(3, n, c, v, k, m);
+        layer.set_temperature(1e-4);
+        let fwd = layer.forward(&a, n);
+        // f32-table hard forward (no scalar quantization) is the exact
+        // t -> 0 limit of the soft relaxation.
+        let lut = layer.into_lut(8);
+        let hard = lut.forward_f32_table(&a, n, LutOpts::deployed());
+        prop::assert_close(&fwd.out, &hard, 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn softmax_stable_at_extreme_temperatures() {
+        let d = [1000.0f32, 0.5, 2.0, 3000.0];
+        for &t in &[1e-6f32, 1.0, 1e6] {
+            let mut out = [0.0f32; 4];
+            softmax_neg_scaled(&d, t, &mut out);
+            let sum: f32 = out.iter().sum();
+            assert!(out.iter().all(|x| x.is_finite()), "t={t}: {out:?}");
+            assert!((sum - 1.0).abs() < 1e-5, "t={t}: sum {sum}");
+        }
+        // tiny t concentrates all mass on the argmin
+        let mut out = [0.0f32; 4];
+        softmax_neg_scaled(&d, 1e-6, &mut out);
+        assert!(out[1] > 0.999, "{out:?}");
+    }
+
+    #[test]
+    fn decouple_table_initializes_from_weight() {
+        let (_, mut layer) = fixture(4, 8, 2, 3, 4, 5);
+        let rebuilt = layer.current_table();
+        layer.decouple_table();
+        assert_eq!(layer.table.as_ref().unwrap(), &rebuilt);
+        // and is idempotent
+        let snapshot = layer.table.clone();
+        layer.decouple_table();
+        assert_eq!(layer.table, snapshot);
+    }
+}

@@ -11,6 +11,7 @@ pub mod cli;
 pub mod json;
 pub mod prng;
 pub mod prop;
+pub mod schema;
 pub mod stats;
 pub mod threadpool;
 

@@ -1,0 +1,178 @@
+//! Structural JSON schema check for bench artifacts.
+//!
+//! The committed `BENCH_*.json` placeholders double as schemas: field
+//! names and nesting are authoritative, `null` leaves mark values that
+//! are environment-dependent (numbers/strings measured at bench time).
+//! [`check_shape`] verifies a freshly produced document against such a
+//! placeholder, so the uploaded artifact cannot silently drift from the
+//! committed shape — the bench refuses to overwrite the placeholder
+//! with a document whose field names or types changed.
+//!
+//! Rules:
+//! * schema `null` is a scalar wildcard (matches null/number/string/bool)
+//! * other scalars must match by kind (number vs number, ...)
+//! * arrays: every element of the value must match the schema array's
+//!   first element; an empty schema array accepts any array
+//! * objects: exactly the same key set, each value checked recursively
+
+use crate::util::json::Json;
+
+fn kind(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// Check `value` against the placeholder `schema`; `Err` names the path
+/// and kind of the first mismatch.
+pub fn check_shape(schema: &Json, value: &Json) -> Result<(), String> {
+    check_at(schema, value, "$")
+}
+
+fn check_at(schema: &Json, value: &Json, path: &str) -> Result<(), String> {
+    match (schema, value) {
+        (Json::Null, Json::Null | Json::Num(_) | Json::Str(_) | Json::Bool(_)) => Ok(()),
+        (Json::Null, _) => Err(format!("{path}: expected a scalar, got {}", kind(value))),
+        (Json::Num(_), Json::Num(_)) => Ok(()),
+        (Json::Str(_), Json::Str(_)) => Ok(()),
+        (Json::Bool(_), Json::Bool(_)) => Ok(()),
+        (Json::Arr(s), Json::Arr(vs)) => {
+            if let Some(elem) = s.first() {
+                for (i, item) in vs.iter().enumerate() {
+                    check_at(elem, item, &format!("{path}[{i}]"))?;
+                }
+            }
+            Ok(())
+        }
+        (Json::Obj(s), Json::Obj(v)) => {
+            for key in s.keys() {
+                if !v.contains_key(key) {
+                    return Err(format!("{path}: missing field '{key}'"));
+                }
+            }
+            for key in v.keys() {
+                if !s.contains_key(key) {
+                    return Err(format!("{path}: unexpected field '{key}'"));
+                }
+            }
+            for (key, sv) in s {
+                check_at(sv, &v[key], &format!("{path}.{key}"))?;
+            }
+            Ok(())
+        }
+        _ => Err(format!("{path}: expected {}, got {}", kind(schema), kind(value))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, Json};
+
+    fn p(s: &str) -> Json {
+        json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn null_is_a_scalar_wildcard() {
+        let schema = p(r#"{"a":null,"b":null}"#);
+        assert!(check_shape(&schema, &p(r#"{"a":1.5,"b":"avx2"}"#)).is_ok());
+        assert!(check_shape(&schema, &p(r#"{"a":null,"b":true}"#)).is_ok());
+        let err = check_shape(&schema, &p(r#"{"a":[1],"b":2}"#)).unwrap_err();
+        assert!(err.contains("$.a") && err.contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn scalar_kinds_must_match() {
+        assert!(check_shape(&p("1"), &p("2.5")).is_ok());
+        assert!(check_shape(&p("\"x\""), &p("\"y\"")).is_ok());
+        let err = check_shape(&p("1"), &p("\"oops\"")).unwrap_err();
+        assert!(err.contains("expected number, got string"), "{err}");
+    }
+
+    #[test]
+    fn object_key_drift_is_caught_both_ways() {
+        let schema = p(r#"{"bench":"x","ms":null}"#);
+        let err = check_shape(&schema, &p(r#"{"bench":"x"}"#)).unwrap_err();
+        assert!(err.contains("missing field 'ms'"), "{err}");
+        let err = check_shape(&schema, &p(r#"{"bench":"x","ms":1,"extra":2}"#)).unwrap_err();
+        assert!(err.contains("unexpected field 'extra'"), "{err}");
+    }
+
+    #[test]
+    fn arrays_check_every_element_against_the_template() {
+        let schema = p(r#"[{"model":null,"ms":null}]"#);
+        assert!(check_shape(&schema, &p("[]")).is_ok());
+        assert!(check_shape(&schema, &p(r#"[{"model":"a","ms":1},{"model":"b","ms":2}]"#)).is_ok());
+        let err = check_shape(&schema, &p(r#"[{"model":"a","ms":1},{"model":"b"}]"#)).unwrap_err();
+        assert!(err.contains("$[1]") && err.contains("'ms'"), "{err}");
+        // empty schema array = unconstrained elements
+        assert!(check_shape(&p("[]"), &p("[1,\"two\",{}]")).is_ok());
+    }
+
+    #[test]
+    fn nested_paths_are_reported() {
+        let schema = p(r#"{"shootout":{"shape":{"rows":256},"kernel_ms":{"lut":null}}}"#);
+        let doc = p(r#"{"shootout":{"shape":{"rows":128},"kernel_ms":{"lut":[1]}}}"#);
+        let err = check_shape(&schema, &doc).unwrap_err();
+        assert!(err.contains("$.shootout.kernel_ms.lut"), "{err}");
+    }
+
+    /// The committed bench placeholder must parse, carry the fields the
+    /// bench emits, and accept a document with the bench's exact shape —
+    /// `cargo test` catches schema/bench drift without running the bench.
+    #[test]
+    fn committed_bench_placeholder_matches_the_bench_document_shape() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_e2e_latency.json");
+        let text = std::fs::read_to_string(path).expect("committed BENCH_e2e_latency.json");
+        let schema = json::parse(&text).expect("placeholder must be valid json");
+        // mirror of the document benches/e2e_latency.rs assembles
+        let ms = |v: f64| Json::num(v);
+        let doc = Json::obj(vec![
+            ("bench", Json::str("e2e_latency")),
+            ("note", Json::str("measured run")),
+            ("simd_backend", Json::str("portable")),
+            (
+                "kernel_shootout",
+                Json::obj(vec![
+                    (
+                        "shape",
+                        Json::obj(vec![
+                            ("rows", ms(256.0)),
+                            ("d", ms(576.0)),
+                            ("m", ms(128.0)),
+                            ("k", ms(16.0)),
+                            ("v", ms(9.0)),
+                        ]),
+                    ),
+                    ("backend", Json::str("portable")),
+                    (
+                        "kernel_ms",
+                        Json::obj(vec![
+                            ("dense", ms(1.0)),
+                            ("lut", ms(0.5)),
+                            ("lut-simd", ms(0.4)),
+                            ("lut-i8", ms(0.3)),
+                        ]),
+                    ),
+                    ("simd_speedup_vs_scalar", ms(1.25)),
+                ]),
+            ),
+            (
+                "models",
+                Json::Arr(vec![Json::obj(vec![
+                    ("model", Json::str("VGG11 (CIFAR10)")),
+                    ("engine", Json::str("native")),
+                    ("dense_ms", ms(10.0)),
+                    ("lut_ms", ms(5.0)),
+                ])]),
+            ),
+        ]);
+        check_shape(&schema, &doc).expect("bench document shape drifted from the placeholder");
+    }
+}

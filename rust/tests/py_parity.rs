@@ -1,0 +1,179 @@
+//! Cross-language export parity: a committed fixture bundle produced by
+//! `python/compile/export.py` (regenerate with
+//! `python3 -m compile.make_parity_fixture` from `python/`) is parsed,
+//! executed and rebuilt by the rust side.
+//!
+//! Three contracts:
+//! 1. `model_fmt::parse_bundle` + `api::Session` reproduce the python
+//!    reference forward (`ref.lut_amm_quantized_ref`) within the
+//!    fixture's documented tolerance (1e-4: f32 FP-order differences;
+//!    the fixture generator asserts an argmin safety margin so encode
+//!    cannot tie-flip);
+//! 2. rust's table builder + quantizer (`pq::build_table` +
+//!    `pq::quantize_table`) reproduce the python-exported INT8 table
+//!    from the same centroids/weights within one quantization LSB;
+//! 3. a rust-*trained* equivalent (`train::distill_layer` on the same
+//!    dense teacher) tracks the teacher as well as the python export
+//!    does — both within the documented mse < 0.5 * signal envelope,
+//!    which algebraically bounds their pairwise distance.
+
+use lutnn::api::SessionBuilder;
+use lutnn::lut::{LutLinear, LutOpts};
+use lutnn::model_fmt;
+use lutnn::nn::graph::LayerParams;
+use lutnn::nn::ops;
+use lutnn::tensor::Tensor;
+use lutnn::train::{distill_layer, TrainConfig};
+use lutnn::util::json::{self, Json};
+use lutnn::util::prng::Prng;
+use lutnn::util::prop;
+
+const FIXTURE: &[u8] = include_bytes!("fixtures/py_export_tiny.lutnn");
+
+/// The bundle header's `meta` object (parse_bundle drops it).
+fn meta() -> Json {
+    let hlen = u32::from_le_bytes(FIXTURE[8..12].try_into().unwrap()) as usize;
+    let header = json::parse(std::str::from_utf8(&FIXTURE[12..12 + hlen]).unwrap()).unwrap();
+    header.get("meta").expect("fixture meta").clone()
+}
+
+fn f32_vec(j: &Json) -> Vec<f32> {
+    j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect()
+}
+
+/// (input batch, python expected output, documented tolerance)
+fn fixture_io(m: &Json) -> (Tensor, Vec<f32>, f32) {
+    let fi = m.get("fixture_input").unwrap();
+    let x = Tensor::new(
+        fi.get("shape").unwrap().as_usize_vec().unwrap(),
+        f32_vec(fi.get("data").unwrap()),
+    );
+    let expected = f32_vec(m.get("expected_output").unwrap().get("data").unwrap());
+    let tol = m.get("tolerance").unwrap().as_f64().unwrap() as f32;
+    (x, expected, tol)
+}
+
+fn lut_layer(g: &lutnn::nn::graph::Graph, name: &str) -> LutLinear {
+    match &g.layers[name] {
+        LayerParams::Lut(l) => l.clone(),
+        _ => panic!("layer '{name}' should be lut"),
+    }
+}
+
+/// fc1 (dense) + relu — the fixture model's prefix, used to derive the
+/// LUT layer's input activations.
+fn fc1_forward(g: &lutnn::nn::graph::Graph, x: &Tensor) -> Tensor {
+    let LayerParams::Dense { w, b, m } = &g.layers["fc1"] else {
+        panic!("fc1 should be dense");
+    };
+    let mut h = ops::linear(x, w, b.as_deref(), *m);
+    ops::relu(&mut h);
+    h
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64).powi(2)).sum::<f64>() / a.len() as f64
+}
+
+#[test]
+fn session_forward_matches_python_reference() {
+    let g = model_fmt::parse_bundle(FIXTURE).expect("python fixture must parse");
+    assert_eq!(g.name, "py_export_tiny");
+    let (x, expected, tol) = fixture_io(&meta());
+
+    // f32 table accumulation mirrors the python oracle's math exactly
+    // (per-codebook scale applied in f32) — only FP order differs.
+    let f32_opts = LutOpts { mixed_accum: false, ..LutOpts::deployed() };
+    let mut sess = SessionBuilder::new(&g).opts(f32_opts).max_batch(8).build().unwrap();
+    let got = sess.run_alloc(&x).unwrap();
+    assert_eq!(got.shape, vec![8, 5]);
+    prop::assert_close(&got.data, &expected, 0.0, tol).unwrap();
+
+    // the deployed integer path re-rounds onto a common scale: one
+    // extra quantization step per accumulated codebook row.
+    let lut = lut_layer(&g, "fc2");
+    let deployed_tol = tol + lut.cb.c as f32 * lut.common_scale();
+    let mut sess = SessionBuilder::new(&g).max_batch(8).build().unwrap();
+    let got = sess.run_alloc(&x).unwrap();
+    prop::assert_close(&got.data, &expected, 0.0, deployed_tol).unwrap();
+}
+
+#[test]
+fn rust_table_builder_matches_python_export() {
+    let g = model_fmt::parse_bundle(FIXTURE).unwrap();
+    let m = meta();
+    let teacher = m.get("teacher").unwrap();
+    let w2 = f32_vec(teacher.get("w").unwrap());
+    let b2 = f32_vec(teacher.get("b").unwrap());
+    let parsed = lut_layer(&g, "fc2");
+
+    // Rebuild the operator from the same centroids + dense weight
+    // through rust's Eq. 3 table builder and §3.3 quantizer.
+    let rebuilt = LutLinear::new(parsed.cb.clone(), &w2, parsed.m, Some(b2), 8);
+    for (c, (&sa, &sb)) in rebuilt.qtable.scale.iter().zip(&parsed.qtable.scale).enumerate() {
+        assert!((sa - sb).abs() <= 1e-6 * sb.abs().max(1e-6), "scale[{c}]: {sa} vs {sb}");
+    }
+    for (i, (&qa, &qb)) in rebuilt.qtable.data.iter().zip(&parsed.qtable.data).enumerate() {
+        assert!(
+            (qa as i16 - qb as i16).abs() <= 1,
+            "table entry {i} drifted: rust {qa} vs python {qb}"
+        );
+    }
+
+    // forward parity on the fixture's activations: identical centroids
+    // mean identical encodes, so outputs differ by at most 1.5 LSB of
+    // the largest per-codebook scale per accumulated row.
+    let (x, _, _) = fixture_io(&m);
+    let h = fc1_forward(&g, &x);
+    let smax = parsed.qtable.scale.iter().cloned().fold(0.0f32, f32::max);
+    let atol = parsed.cb.c as f32 * 1.5 * smax + 1e-4;
+    let out_a = rebuilt.forward_f32_table(&h.data, h.rows(), LutOpts::deployed());
+    let out_b = parsed.forward_f32_table(&h.data, h.rows(), LutOpts::deployed());
+    prop::assert_close(&out_a, &out_b, 0.0, atol).unwrap();
+}
+
+#[test]
+fn rust_distilled_equivalent_tracks_the_same_teacher() {
+    let g = model_fmt::parse_bundle(FIXTURE).unwrap();
+    let m = meta();
+    let teacher = m.get("teacher").unwrap();
+    let w2 = f32_vec(teacher.get("w").unwrap());
+    let b2 = f32_vec(teacher.get("b").unwrap());
+    let c = teacher.get("c").unwrap().as_usize().unwrap();
+    let k = teacher.get("k").unwrap().as_usize().unwrap();
+    let out_m = lut_layer(&g, "fc2").m;
+
+    // Calibrate on rust-generated activations from the same model
+    // prefix, then distill against the identical dense teacher.
+    let mut rng = Prng::new(0);
+    let x_cal = Tensor::new(vec![256, 8], rng.normal_vec(256 * 8, 1.0));
+    let h_cal = fc1_forward(&g, &x_cal);
+    let cfg = TrainConfig { epochs: 8, anneal: 0.8, ..TrainConfig::default() };
+    let (layer, report) =
+        distill_layer(&h_cal.data, h_cal.rows(), &w2, Some(&b2), out_m, c, k, &cfg);
+    assert!(report.epoch_loss.iter().all(|l| l.is_finite()));
+
+    // Evaluate on the committed fixture batch. Documented tolerance:
+    // both the python export and the rust-trained equivalent stay
+    // within mse < 0.5 * teacher signal power, which bounds their
+    // pairwise mse by 2 * (mse_py + mse_rust).
+    let (x, expected, _) = fixture_io(&m);
+    let h_fix = fc1_forward(&g, &x);
+    let teacher_out = ops::linear(&h_fix, &w2, Some(&b2), out_m);
+    let f32_opts = LutOpts { mixed_accum: false, ..LutOpts::deployed() };
+    let rust_out = layer.into_lut(8).forward(&h_fix.data, h_fix.rows(), f32_opts);
+
+    let sig = teacher_out.data.iter().map(|v| (v * v) as f64).sum::<f64>()
+        / teacher_out.len() as f64;
+    let mse_py = mse(&expected, &teacher_out.data);
+    let mse_rust = mse(&rust_out, &teacher_out.data);
+    assert!(mse_py < 0.5 * sig, "python export off teacher: {mse_py} vs signal {sig}");
+    assert!(mse_rust < 0.5 * sig, "rust distillation off teacher: {mse_rust} vs signal {sig}");
+    let pairwise = mse(&rust_out, &expected);
+    assert!(
+        pairwise <= 2.0 * (mse_py + mse_rust) + 1e-6,
+        "pairwise {pairwise} vs bound {}",
+        2.0 * (mse_py + mse_rust)
+    );
+}
