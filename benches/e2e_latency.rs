@@ -6,6 +6,9 @@
 //!      `dense` vs `lut` (scalar) vs `lut-simd` vs `lut-i8` through the
 //!      same `LinearKernel` interface (always runs; the whole bench's
 //!      machine-readable output lands in `BENCH_e2e_latency.json`).
+//!   0b. Replica sweep (always runs): closed-loop throughput of the
+//!      coordinator's work-stealing batcher over 1/2/4 engine replicas
+//!      of a small LUT model — the serving-layer parallelism record.
 //!   1. VGG11 (CIFAR10) at the paper's exact layer shapes, rust-native
 //!      engine: dense (im2col+GEMM) vs LUT (converted in-process).
 //!   2. The trained resnet_tiny bundles (requires `make artifacts`),
@@ -18,12 +21,18 @@
 //! `lut-simd` <= `lut` on the shootout layer.
 //!
 //! Run: `cargo bench --bench e2e_latency [--features simd]`
-//! `E2E_FAST=1` runs only the kernel shootout (the CI artifact path).
+//! `E2E_FAST=1` runs the kernel shootout + a shortened replica sweep
+//! (the CI artifact path).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use lutnn::api::{
     DenseKernel, Engine, LinearKernel, LutI8Kernel, LutKernel, PjrtEngine, Scratch,
     SessionBuilder, SimdLutKernel,
 };
+use lutnn::coordinator::batcher::{Batcher, BatcherConfig};
+use lutnn::coordinator::ModelEntry;
 use lutnn::lut::{simd, LutLinear, LutOpts};
 use lutnn::model_fmt;
 use lutnn::nn::graph::Graph;
@@ -34,6 +43,7 @@ use lutnn::tensor::Tensor;
 use lutnn::util::benchmark::{bench, black_box, record_jsonl, BenchConfig, Table};
 use lutnn::util::json::{self, Json};
 use lutnn::util::prng::Prng;
+use lutnn::util::stats::Summary;
 
 /// Bench one compiled session on `x` (reused output tensor: the timed
 /// loop allocates nothing).
@@ -121,6 +131,87 @@ fn kernel_shootout(cfg: &BenchConfig) -> Json {
     ])
 }
 
+/// Throughput-vs-replicas sweep: one small LUT model served through the
+/// coordinator's replica pool + work-stealing batcher, driven closed
+/// loop by 8 in-process client threads. This measures the replica level
+/// of parallelism the serving stack adds on top of the kernels — on a
+/// multi-core host, throughput should scale with replicas at
+/// comparable per-request latency until the cores run out.
+fn replica_sweep(fast: bool) -> Json {
+    let specs = [
+        ConvSpec { cout: 8, k: 3, stride: 1 },
+        ConvSpec { cout: 16, k: 3, stride: 2 },
+    ];
+    let dense = build_cnn_graph("sweep_cnn", [8, 8, 3], &specs, 10, 0);
+    let mut rng = Prng::new(5);
+    let sample = Tensor::new(vec![8, 8, 8, 3], rng.normal_vec(8 * 8 * 8 * 3, 1.0));
+    eprintln!("replica sweep: converting the sweep model to LUT...");
+    let lut = lutify_graph(&dense, &sample, 8, 8, 0);
+    let clients = 8usize;
+    let per_client = if fast { 40 } else { 150 };
+    let item_len = 8 * 8 * 3;
+    let mut table =
+        Table::new(&["replicas", "throughput req/s", "speedup", "p50 ms", "p95 ms"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_thr = 0.0f64;
+    for replicas in [1usize, 2, 4] {
+        let entry =
+            ModelEntry::native("sweep", &lut, LutOpts::deployed(), 8, replicas).unwrap();
+        let batcher = Arc::new(Batcher::spawn(
+            Arc::new(entry),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                queue_cap: 256,
+            },
+        ));
+        let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let batcher = Arc::clone(&batcher);
+                let latencies = &latencies;
+                s.spawn(move || {
+                    let mut rng = Prng::new(100 + c as u64);
+                    let mut lats = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let input = rng.normal_vec(item_len, 1.0);
+                        let sent = Instant::now();
+                        batcher.submit(input).expect("sweep submit");
+                        lats.push(sent.elapsed().as_secs_f64());
+                    }
+                    latencies.lock().unwrap().extend(lats);
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let thr = (clients * per_client) as f64 / wall;
+        if replicas == 1 {
+            base_thr = thr;
+        }
+        let lat = Summary::of(&latencies.lock().unwrap());
+        table.row(&[
+            format!("{replicas}"),
+            format!("{thr:.1}"),
+            format!("{:.2}x", thr / base_thr),
+            format!("{:.3}", lat.p50 * 1e3),
+            format!("{:.3}", lat.p95 * 1e3),
+        ]);
+        rows.push(Json::obj(vec![
+            ("replicas", Json::num(replicas as f64)),
+            ("throughput_rps", Json::num(thr)),
+            ("speedup_vs_1", Json::num(thr / base_thr)),
+            ("p50_ms", Json::num(lat.p50 * 1e3)),
+            ("p95_ms", Json::num(lat.p95 * 1e3)),
+        ]));
+    }
+    println!(
+        "\n== Replica sweep (closed loop, {clients} clients x {per_client} reqs) ==\n"
+    );
+    table.print();
+    Json::Arr(rows)
+}
+
 fn main() {
     let fast = lutnn::util::env_flag("E2E_FAST");
     let cfg = BenchConfig { min_iters: 4, max_iters: 30, ..Default::default() };
@@ -128,8 +219,9 @@ fn main() {
     let mut t = Table::new(&["model", "engine", "dense ms", "lut ms", "speedup"]);
     let mut model_rows: Vec<Json> = Vec::new();
 
-    // ---- 0. kernel shootout (always) ------------------------------------
+    // ---- 0. kernel shootout + replica sweep (always) --------------------
     let shootout = kernel_shootout(&cfg);
+    let sweep = replica_sweep(fast);
 
     if !fast {
         // ---- 1. VGG11 (CIFAR) exact shapes, native ----------------------
@@ -263,10 +355,15 @@ fn main() {
         ("bench", Json::str("e2e_latency")),
         (
             "note",
-            Json::str(if fast { "measured (E2E_FAST: shootout only)" } else { "measured" }),
+            Json::str(if fast {
+                "measured (E2E_FAST: shootout + short replica sweep only)"
+            } else {
+                "measured"
+            }),
         ),
         ("simd_backend", Json::str(simd::active_backend())),
         ("kernel_shootout", shootout),
+        ("replica_sweep", sweep),
         ("models", Json::Arr(model_rows)),
     ]);
     // Schema guard: the committed BENCH_e2e_latency.json doubles as the

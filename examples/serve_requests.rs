@@ -71,6 +71,10 @@ fn main() -> anyhow::Result<()> {
     let requests = args.get_usize("requests", 200);
     let rate = args.get_f64("rate", 50.0);
     let clients = args.get_usize("clients", 4);
+    // Engine replicas per model: N sessions from one shared bundle,
+    // drained by N work-stealing batcher workers (--replicas 4 on a
+    // multi-core host scales closed-loop throughput near-linearly).
+    let replicas = args.get_usize("replicas", 1).max(1);
 
     anyhow::ensure!(
         artifacts_available(),
@@ -79,16 +83,19 @@ fn main() -> anyhow::Result<()> {
     let mut registry = Registry::new();
     for name in ["resnet_tiny_lut", "resnet_tiny_dense"] {
         let graph = model_fmt::load_bundle(&artifact_path(&format!("{name}.lutnn")))?;
-        // Compile to a Session-backed engine; the batcher borrows each
-        // stacked batch, so requests are never cloned on the hot path.
-        registry.register(ModelEntry::native(name, &graph, LutOpts::deployed(), 8)?);
+        // Compile to a Session-backed engine pool; the batcher borrows
+        // each stacked batch, so requests are never cloned on the hot
+        // path, and each replica owns its own scratch arenas.
+        // ServerConfig::replicas grows the pool — one knob.
+        registry.register(ModelEntry::native(name, &graph, LutOpts::deployed(), 8, 1)?);
     }
     let server = Server::start(
         registry,
-        ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        ServerConfig { addr: "127.0.0.1:0".into(), replicas, ..Default::default() },
     )?;
     println!(
-        "serving on {} — {requests} requests @ {rate}/s, {clients} clients\n",
+        "serving on {} — {requests} requests @ {rate}/s, {clients} clients, \
+         {replicas} replica(s)\n",
         server.addr
     );
 

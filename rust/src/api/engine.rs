@@ -7,7 +7,7 @@
 //! plug into `coordinator::ModelEntry` without touching the batcher or
 //! the server.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
@@ -30,26 +30,71 @@ pub trait Engine: Send + Sync {
 
     /// One-line human description for listings and logs.
     fn describe(&self) -> String;
+
+    /// Replication capability for engine pools
+    /// ([`crate::coordinator::pool::EnginePool`]): build an independent
+    /// replica of this engine — own scratch arenas, shared immutable
+    /// model — without re-deriving the model (no second lutification,
+    /// no second AOT compile). A replica must be numerically identical
+    /// to the original (bitwise on the native path).
+    ///
+    /// `None` means the engine does not support replication (the
+    /// default); `Some(Err(..))` means it tried and failed.
+    fn clone_replica(&self) -> Option<Result<Box<dyn Engine>>> {
+        None
+    }
+}
+
+/// Everything needed to stamp out another [`NativeEngine`] replica:
+/// the immutable bundle (shared via `Arc`, never copied again) plus
+/// the session build configuration.
+#[derive(Clone)]
+struct ReplicaSpec {
+    graph: Arc<Graph>,
+    opts: LutOpts,
+    max_batch: usize,
 }
 
 /// The rust-native table-lookup/dense engine: a [`Session`] behind a
-/// mutex (the session owns mutable scratch arenas; the batcher worker
-/// is the only steady-state caller, so the lock is uncontended).
+/// mutex (the session owns mutable scratch arenas; one batcher worker
+/// is the only steady-state caller per replica, so the lock is
+/// uncontended).
 pub struct NativeEngine {
     session: Mutex<Session>,
+    /// Present when built from a graph; enables [`Engine::clone_replica`].
+    spec: Option<ReplicaSpec>,
 }
 
 impl NativeEngine {
+    /// Wrap an already-built session. Such an engine cannot replicate
+    /// itself (it has no bundle to rebuild from); use
+    /// [`NativeEngine::from_graph`] when the engine should be poolable.
     pub fn new(session: Session) -> NativeEngine {
-        NativeEngine { session: Mutex::new(session) }
+        NativeEngine { session: Mutex::new(session), spec: None }
     }
 
     /// Convenience: compile `graph` with `opts`, arenas sized for
-    /// `max_batch`.
+    /// `max_batch`. Keeps one shared copy of the graph so replicas can
+    /// be cloned off this engine without re-lutifying.
+    ///
+    /// Memory note: the retained bundle costs one extra copy of the
+    /// model parameters per *model* (replicas share it via `Arc`) for
+    /// the engine's lifetime — the price of late replication (serve
+    /// `--replicas`, future autoscaling). Memory-constrained
+    /// single-replica deployments can wrap a built session in
+    /// [`NativeEngine::new`] instead, which retains nothing.
     pub fn from_graph(graph: &Graph, opts: LutOpts, max_batch: usize) -> Result<NativeEngine> {
-        Ok(NativeEngine::new(
-            SessionBuilder::new(graph).opts(opts).max_batch(max_batch).build()?,
-        ))
+        NativeEngine::from_shared(Arc::new(graph.clone()), opts, max_batch)
+    }
+
+    /// As [`NativeEngine::from_graph`] but reusing a caller-held
+    /// `Arc<Graph>` (no graph copy at all).
+    pub fn from_shared(graph: Arc<Graph>, opts: LutOpts, max_batch: usize) -> Result<NativeEngine> {
+        let session = SessionBuilder::new(&graph).opts(opts).max_batch(max_batch).build()?;
+        Ok(NativeEngine {
+            session: Mutex::new(session),
+            spec: Some(ReplicaSpec { graph, opts, max_batch }),
+        })
     }
 
     /// Per-request input shape (without the batch dim).
@@ -69,6 +114,21 @@ impl Engine for NativeEngine {
 
     fn describe(&self) -> String {
         self.session.lock().unwrap().describe()
+    }
+
+    fn clone_replica(&self) -> Option<Result<Box<dyn Engine>>> {
+        let spec = self.spec.as_ref()?;
+        let built = SessionBuilder::new(&spec.graph)
+            .opts(spec.opts)
+            .max_batch(spec.max_batch)
+            .build()
+            .map(|session| {
+                Box::new(NativeEngine {
+                    session: Mutex::new(session),
+                    spec: Some(spec.clone()),
+                }) as Box<dyn Engine>
+            });
+        Some(built)
     }
 }
 
@@ -148,6 +208,33 @@ mod tests {
             assert_eq!(out.shape, vec![n, 5]);
         }
         assert!(eng.describe().contains("c0:dense"), "{}", eng.describe());
+    }
+
+    #[test]
+    fn clone_replica_is_bitwise_identical_and_independent() {
+        let g = build_cnn_graph(
+            "rep",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            2,
+        );
+        let eng = NativeEngine::from_graph(&g, LutOpts::deployed(), 4).unwrap();
+        let replica = eng.clone_replica().expect("from_graph engines replicate").unwrap();
+        let mut rng = crate::util::prng::Prng::new(11);
+        let x = Tensor::new(vec![3, 8, 8, 3], rng.normal_vec(3 * 8 * 8 * 3, 1.0));
+        let (mut a, mut b) = (Tensor::zeros(vec![0]), Tensor::zeros(vec![0]));
+        eng.run_batch(&x, &mut a).unwrap();
+        replica.run_batch(&x, &mut b).unwrap();
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data, "replica must match the original bitwise");
+        // replicas of replicas keep the capability
+        assert!(replica.clone_replica().is_some());
+        // wrapping a bare session does not (no bundle to rebuild from)
+        let bare = NativeEngine::new(
+            SessionBuilder::new(&g).opts(LutOpts::deployed()).max_batch(2).build().unwrap(),
+        );
+        assert!(bare.clone_replica().is_none());
     }
 
     #[test]

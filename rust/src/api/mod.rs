@@ -10,15 +10,18 @@
 //!   client ──TCP──> coordinator::Server ─┐
 //!   in-proc caller (example / bench) ────┤
 //!                                        v
-//!                            Router -> Batcher queue
-//!                                        │ stack [B, item]
+//!                    Router -> Batcher injector queue
+//!                                        │ work-stealing workers,
+//!                                        │ one per engine replica,
+//!                                        │ stack [B, item] each
 //!                                        v
-//!                         dyn Engine::run_batch(&x, &mut out)
+//!              EnginePool: dyn Engine::run_batch(&x, &mut out)
 //!                          │                          │
-//!                  NativeEngine                  PjrtEngine
+//!                  NativeEngine × N              PjrtEngine
 //!                          │                          │
 //!                  Session::run              PJRT host thread
-//!                          │                  (AOT XLA graph)
+//!                  (own arenas per            (AOT XLA graph)
+//!                   replica)
 //!                          v
 //!            plan of Steps over scratch arenas
 //!            (ping-pong activations, im2col patches,
@@ -46,7 +49,9 @@
 //! * [`Engine`] ([`engine`]) — `run_batch`/`max_batch`/`describe` over
 //!   whole batches; [`NativeEngine`] wraps a session, [`PjrtEngine`]
 //!   wraps an AOT-compiled XLA executable. The coordinator stack is
-//!   generic over `dyn Engine`.
+//!   generic over `dyn Engine`; engines that implement the optional
+//!   `clone_replica` capability can be pooled into N-replica
+//!   `coordinator::EnginePool`s without re-deriving the model.
 //!
 //! ## Registering a custom kernel
 //!

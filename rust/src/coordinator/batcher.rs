@@ -1,16 +1,32 @@
-//! Dynamic batcher: the serving core.
+//! Dynamic batcher: the serving core — now a replica-pool scheduler.
 //!
-//! Requests enter a bounded queue; a dedicated worker thread drains up to
-//! `max_batch` items (waiting at most `max_wait` after the first), stacks
-//! them into one reusable tensor, runs the model's `Engine` once (the
-//! engine borrows the batch — no input clone), splits the outputs and
-//! replies on per-request channels. Backpressure: `submit` blocks on
-//! the bounded queue (closed-loop clients) while `try_submit` fails fast
-//! (open-loop / SLO-shedding clients).
+//! Requests enter one bounded injector queue per model
+//! ([`crate::util::threadpool::WorkQueue`]); one worker thread per
+//! engine replica drains it. Work distribution is stealing by
+//! construction: no request is pinned to a replica, so any idle worker
+//! picks up whatever is queued while its siblings are busy. Each
+//! worker forms batches against *its own* replica's `max_batch` (a
+//! fixed-batch PJRT replica pads to its compiled size; an elastic
+//! native replica beside it batches as large as the config allows —
+//! no pool-wide clamp to the most restrictive engine), waiting at most
+//! `max_wait` after the first request, stacks them into one reusable
+//! tensor, runs the replica once (the engine borrows the batch), splits
+//! the outputs and replies on per-request channels.
+//!
+//! Backpressure and shedding: [`Batcher::submit`] blocks on the bounded
+//! queue (closed-loop clients); [`Batcher::try_submit`] fails fast when
+//! the queue is full, and [`Batcher::try_submit_deadline`] additionally
+//! sheds at *dequeue* time if the request aged past its deadline while
+//! queued — SLO clients get a fast error instead of a stale result.
+//!
+//! Shutdown is graceful: dropping the batcher closes the queue (new
+//! submits fail), then the workers drain and answer every request
+//! already accepted before exiting — no reply channel is ever dropped
+//! mid-flight.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{mpsc, Arc};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -19,10 +35,16 @@ use anyhow::{anyhow, Result};
 use super::metrics::Metrics;
 use super::{Engine, ModelEntry};
 use crate::tensor::Tensor;
+use crate::util::threadpool::{PushError, WorkQueue};
 
 pub struct BatcherConfig {
+    /// Upper batch bound per worker (each worker additionally clamps to
+    /// its own replica's `max_batch`).
     pub max_batch: usize,
+    /// How long a worker waits for follow-up requests after the first.
     pub max_wait: Duration,
+    /// Injector queue capacity (`submit` blocks beyond it, `try_submit`
+    /// sheds).
     pub queue_cap: usize,
 }
 
@@ -40,27 +62,37 @@ struct Request {
     input: Vec<f32>,
     reply: SyncSender<Result<Vec<f32>>>,
     enqueued: Instant,
+    /// Queue-age SLO: shed (reply with an error) if the request waited
+    /// longer than this before a worker picked it up.
+    deadline: Option<Duration>,
 }
 
-/// Handle to a running batcher (one per model).
+/// Handle to a running batcher (one per model, one worker per replica).
 pub struct Batcher {
-    tx: SyncSender<Request>,
+    queue: Arc<WorkQueue<Request>>,
     pub metrics: Arc<Metrics>,
     item_len: usize,
-    worker: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl Batcher {
     pub fn spawn(entry: Arc<ModelEntry>, cfg: BatcherConfig) -> Batcher {
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_cap);
+        let queue = Arc::new(WorkQueue::bounded(cfg.queue_cap));
         let metrics = Arc::new(Metrics::new());
-        let m2 = Arc::clone(&metrics);
         let item_len = entry.item_len();
-        let worker = thread::Builder::new()
-            .name(format!("batcher-{}", entry.name))
-            .spawn(move || batch_loop(entry, cfg, rx, m2))
-            .expect("spawn batcher");
-        Batcher { tx, metrics, item_len, worker: Some(worker) }
+        let workers = (0..entry.pool.len())
+            .map(|i| {
+                let entry2 = Arc::clone(&entry);
+                let queue2 = Arc::clone(&queue);
+                let metrics2 = Arc::clone(&metrics);
+                let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
+                thread::Builder::new()
+                    .name(format!("batcher-{}-{i}", entry.name))
+                    .spawn(move || worker_loop(entry2, i, max_batch, max_wait, queue2, metrics2))
+                    .expect("spawn batcher worker")
+            })
+            .collect();
+        Batcher { queue, metrics, item_len, workers }
     }
 
     /// Blocking submit (applies backpressure when the queue is full).
@@ -72,78 +104,141 @@ impl Batcher {
             self.item_len
         );
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Request { input, reply: reply_tx, enqueued: Instant::now() })
+        self.queue
+            .push(Request {
+                input,
+                reply: reply_tx,
+                enqueued: Instant::now(),
+                deadline: None,
+            })
             .map_err(|_| anyhow!("batcher shut down"))?;
         reply_rx.recv().map_err(|_| anyhow!("batcher dropped request"))?
     }
 
+    /// Metrics snapshot with the pending-depth gauge sampled live from
+    /// the injector queue (always exact — there is no hand-maintained
+    /// counter to drift or to overcount blocked `submit` callers).
+    pub fn snapshot(&self) -> super::metrics::MetricsSnapshot {
+        self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
+        self.metrics.snapshot()
+    }
+
     /// Non-blocking submit: sheds load when the queue is full.
     pub fn try_submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
+        self.try_submit_opt(input, None)
+    }
+
+    /// Non-blocking submit with a queue-age SLO: sheds when the queue
+    /// is full, *and* sheds at dequeue time (the reply channel yields
+    /// an error) if the request waited longer than `deadline` before
+    /// any replica picked it up.
+    pub fn try_submit_deadline(
+        &self,
+        input: Vec<f32>,
+        deadline: Duration,
+    ) -> Result<Receiver<Result<Vec<f32>>>> {
+        self.try_submit_opt(input, Some(deadline))
+    }
+
+    fn try_submit_opt(
+        &self,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<Vec<f32>>>> {
         anyhow::ensure!(input.len() == self.item_len, "bad input len");
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        match self.tx.try_send(Request {
+        match self.queue.try_push(Request {
             input,
             reply: reply_tx,
             enqueued: Instant::now(),
+            deadline,
         }) {
             Ok(()) => Ok(reply_rx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("queue full (shed)")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher shut down")),
+            Err(PushError::Full(_)) => {
+                self.metrics.record_shed();
+                Err(anyhow!("queue full (shed)"))
+            }
+            Err(PushError::Closed(_)) => Err(anyhow!("batcher shut down")),
         }
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // Close the queue; worker drains and exits.
-        let (dead_tx, _) = mpsc::sync_channel(1);
-        let _ = std::mem::replace(&mut self.tx, dead_tx);
-        if let Some(w) = self.worker.take() {
+        // Close the queue: submits fail from here on, the workers drain
+        // every already-accepted request (replying to each) and exit.
+        self.queue.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn batch_loop(
+/// Admit `r` into `batch` unless its queue-age deadline already passed
+/// (SLO shedding at dequeue: the client gets a prompt error instead of
+/// a stale result). Returns whether the request was admitted.
+fn admit(r: Request, metrics: &Metrics, batch: &mut Vec<Request>) -> bool {
+    if let Some(d) = r.deadline {
+        let waited = r.enqueued.elapsed();
+        if waited > d {
+            metrics.record_shed();
+            let _ = r
+                .reply
+                .send(Err(anyhow!("deadline exceeded after {waited:?} in queue (shed)")));
+            return false;
+        }
+    }
+    batch.push(r);
+    true
+}
+
+fn worker_loop(
     entry: Arc<ModelEntry>,
-    cfg: BatcherConfig,
-    rx: Receiver<Request>,
+    replica: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    queue: Arc<WorkQueue<Request>>,
     metrics: Arc<Metrics>,
 ) {
+    let engine = entry.pool.replica(replica);
     let item_len = entry.item_len();
-    let hard_cap = entry.engine.max_batch().unwrap_or(cfg.max_batch).min(cfg.max_batch);
+    // Per-replica clamp: this worker batches against its OWN replica's
+    // capacity, so one fixed-batch replica never constrains the rest of
+    // the pool.
+    let max_batch = max_batch.max(1);
+    let hard_cap = engine.max_batch().unwrap_or(max_batch).min(max_batch);
     // Reused across batches: the engine borrows `xbatch` and writes
     // into `out` — no per-request clone on the native path.
     let mut xbatch = Tensor::zeros(vec![0]);
     let mut out = Tensor::zeros(vec![0]);
+    let mut batch: Vec<Request> = Vec::with_capacity(hard_cap);
     loop {
-        // Block for the first request of the batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
+        // Block for the first request of this worker's next batch. All
+        // workers pop from the one shared queue, so an idle replica
+        // steals work a busy sibling cannot take. `None` = the batcher
+        // closed and the backlog is fully drained.
+        let Some(first) = queue.pop() else { return };
+        batch.clear();
+        if !admit(first, &metrics, &mut batch) {
+            continue; // expired in the queue; no batch window started
+        }
+        let window = Instant::now() + max_wait;
         while batch.len() < hard_cap {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            match queue.pop_until(window) {
+                Some(r) => {
+                    admit(r, &metrics, &mut batch);
+                }
+                None => break, // window elapsed (or closed + drained)
             }
         }
         metrics.record_batch(batch.len());
-        metrics.queue_depth.store(batch.len() as u64, Ordering::Relaxed);
+        metrics.replicas_busy.fetch_add(1, Ordering::Relaxed);
 
         // Stack into the reusable [B, item...] tensor; fixed-batch
         // engines (PJRT) need exactly `max_batch` rows, so pad with
         // zeros and drop padded outputs.
         let real = batch.len();
-        let exec_rows = match entry.engine.max_batch() {
+        let exec_rows = match engine.max_batch() {
             Some(b) => b,
             None => real,
         };
@@ -155,12 +250,13 @@ fn batch_loop(
         xbatch.shape.clear();
         xbatch.shape.push(exec_rows);
         xbatch.shape.extend_from_slice(&entry.item_shape);
-        let result = entry.engine.run_batch(&xbatch, &mut out);
+        let result = engine.run_batch(&xbatch, &mut out);
+        metrics.replicas_busy.fetch_sub(1, Ordering::Relaxed);
 
         match result {
             Ok(()) => {
                 let m = out.len() / exec_rows;
-                for (i, r) in batch.into_iter().enumerate() {
+                for (i, r) in batch.drain(..).enumerate() {
                     let slice = out.data[i * m..(i + 1) * m].to_vec();
                     metrics.record_request(r.enqueued.elapsed().as_secs_f64());
                     let _ = r.reply.send(Ok(slice));
@@ -168,7 +264,7 @@ fn batch_loop(
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                for r in batch {
+                for r in batch.drain(..) {
                     metrics.record_error();
                     let _ = r.reply.send(Err(anyhow!("{msg}")));
                 }
@@ -180,10 +276,16 @@ fn batch_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::stubs::StubEngine;
     use crate::lut::LutOpts;
     use crate::nn::models::{build_cnn_graph, ConvSpec};
+    use crate::util::prng::Prng;
 
     fn entry() -> Arc<ModelEntry> {
+        entry_with_replicas(1)
+    }
+
+    fn entry_with_replicas(replicas: usize) -> Arc<ModelEntry> {
         let g = build_cnn_graph(
             "b",
             [8, 8, 3],
@@ -191,7 +293,7 @@ mod tests {
             5,
             0,
         );
-        Arc::new(ModelEntry::native("b", &g, LutOpts::all(), 8).unwrap())
+        Arc::new(ModelEntry::native("b", &g, LutOpts::all(), 8, replicas).unwrap())
     }
 
     #[test]
@@ -225,7 +327,7 @@ mod tests {
         }
         let snap = b.metrics.snapshot();
         assert_eq!(snap.requests, 16);
-        // with a 20ms window on a single model, far fewer batches than reqs
+        // with a 20ms window on a single replica, far fewer batches than reqs
         assert!(snap.batches < 16, "batches={}", snap.batches);
     }
 
@@ -233,15 +335,249 @@ mod tests {
     fn rejects_bad_input_len() {
         let b = Batcher::spawn(entry(), BatcherConfig::default());
         assert!(b.submit(vec![0.0; 7]).is_err());
+        assert!(b.try_submit(vec![0.0; 7]).is_err());
     }
 
+    /// Deterministic shedding, both kinds: the single replica is gated
+    /// inside `run_batch`, so the test controls exactly what is queued
+    /// when. A full queue sheds at submit; an aged-out deadline request
+    /// sheds at dequeue with an error reply.
     #[test]
-    fn try_submit_sheds_when_full() {
-        // queue_cap 1 and a worker kept busy by slow first request is racy
-        // to orchestrate; instead just verify try_submit works when idle.
-        let b = Batcher::spawn(entry(), BatcherConfig::default());
-        let rx = b.try_submit(vec![0.0; 192]).unwrap();
-        let out = rx.recv().unwrap().unwrap();
-        assert_eq!(out.len(), 5);
+    fn shed_on_queue_full_and_on_deadline() {
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (stub, engine) =
+            StubEngine::elastic().with_entered(entered_tx).with_gate(gate_rx).shared();
+        let entry =
+            Arc::new(ModelEntry::from_engine("shed", engine, vec![4]));
+        let b = Batcher::spawn(
+            entry,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 3,
+            },
+        );
+        // A is picked up by the worker, which then blocks in the gate.
+        let rx_a = b.try_submit(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        entered_rx.recv().unwrap();
+        assert_eq!(b.snapshot().replicas_busy, 1);
+
+        // Fill the queue behind the blocked worker: B, E (1ns deadline,
+        // will age out long before the gate opens), C.
+        let rx_b = b.try_submit(vec![1.0; 4]).unwrap();
+        let rx_e = b
+            .try_submit_deadline(vec![2.0; 4], Duration::from_nanos(1))
+            .unwrap();
+        let rx_c = b.try_submit(vec![3.0; 4]).unwrap();
+        assert_eq!(b.snapshot().queue_depth, 3, "true pending depth, not batch size");
+
+        // Queue full -> capacity shed at submit time.
+        let err = b.try_submit(vec![4.0; 4]).unwrap_err();
+        assert!(format!("{err}").contains("queue full"), "{err}");
+
+        // Open the gate for good; the worker finishes A, then drains
+        // B/E/C — admitting B and C, shedding E on queue age.
+        drop(gate_tx);
+        assert_eq!(rx_a.recv().unwrap().unwrap(), StubEngine::expected_row(&[1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(rx_b.recv().unwrap().unwrap(), StubEngine::expected_row(&[1.0; 4]));
+        assert_eq!(rx_c.recv().unwrap().unwrap(), StubEngine::expected_row(&[3.0; 4]));
+        let shed = rx_e.recv().unwrap().unwrap_err();
+        assert!(format!("{shed}").contains("deadline exceeded"), "{shed}");
+
+        let snap = b.snapshot();
+        assert_eq!(snap.requests, 3, "A, B, C served");
+        assert_eq!(snap.shed, 2, "one capacity shed + one deadline shed");
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.queue_depth, 0);
+        assert_eq!(snap.replicas_busy, 0);
+        assert!(stub.execs().iter().all(|e| !e.is_empty()));
+    }
+
+    /// Graceful shutdown: dropping the batcher while requests are
+    /// queued behind a blocked replica must still answer every one of
+    /// them (the close drains; no reply channel is dropped mid-batch).
+    #[test]
+    fn drop_drains_queued_requests_and_replies() {
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (_stub, engine) =
+            StubEngine::elastic().with_entered(entered_tx).with_gate(gate_rx).shared();
+        let entry = Arc::new(ModelEntry::from_engine("drain", engine, vec![2]));
+        let b = Batcher::spawn(
+            entry,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 8,
+            },
+        );
+        let rx_a = b.try_submit(vec![1.0, 1.0]).unwrap();
+        entered_rx.recv().unwrap(); // worker holds A inside the gate
+        let rx_b = b.try_submit(vec![2.0, 2.0]).unwrap();
+        let rx_c = b.try_submit(vec![3.0, 3.0]).unwrap();
+
+        // Drop with the engine still blocked: Drop closes the queue and
+        // joins the worker, which must first drain B and C.
+        let dropper = thread::spawn(move || drop(b));
+        drop(gate_tx); // release the engine
+        assert_eq!(rx_a.recv().unwrap().unwrap(), StubEngine::expected_row(&[1.0, 1.0]));
+        assert_eq!(rx_b.recv().unwrap().unwrap(), StubEngine::expected_row(&[2.0, 2.0]));
+        assert_eq!(rx_c.recv().unwrap().unwrap(), StubEngine::expected_row(&[3.0, 3.0]));
+        dropper.join().unwrap();
+    }
+
+    /// Heterogeneous pool: a fixed-batch replica pads to its compiled
+    /// size while the elastic replica beside it runs unpadded, and both
+    /// produce outputs byte-identical to the single-engine path. Also
+    /// the deterministic work-stealing witness: the second request is
+    /// necessarily taken by the idle worker while the first worker is
+    /// blocked inside its engine.
+    #[test]
+    fn heterogeneous_pool_pads_fixed_replica_only_and_matches_single_engine() {
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (gate_fixed_tx, gate_fixed_rx) = mpsc::channel();
+        let (gate_elastic_tx, gate_elastic_rx) = mpsc::channel();
+        let (fixed, fixed_engine) = StubEngine::fixed(4)
+            .with_entered(entered_tx.clone())
+            .with_gate(gate_fixed_rx)
+            .shared();
+        let (elastic, elastic_engine) = StubEngine::elastic()
+            .with_entered(entered_tx)
+            .with_gate(gate_elastic_rx)
+            .shared();
+        let entry = Arc::new(
+            ModelEntry::from_engines("hetero", vec![fixed_engine, elastic_engine], vec![4])
+                .unwrap(),
+        );
+        assert_eq!(entry.pool.max_batches(), vec![Some(4), None]);
+        let b = Batcher::spawn(
+            entry,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 16,
+            },
+        );
+        let in_a = vec![1.0, 2.0, 3.0, 4.0];
+        let in_b = vec![5.0, 6.0, 7.0, 8.0];
+        let rx_a = b.try_submit(in_a.clone()).unwrap();
+        entered_rx.recv().unwrap(); // one worker committed to A, gated
+        // The other worker is the only idle one: it must steal B.
+        let rx_b = b.try_submit(in_b.clone()).unwrap();
+        entered_rx.recv().unwrap();
+        drop(gate_fixed_tx);
+        drop(gate_elastic_tx);
+        let out_a = rx_a.recv().unwrap().unwrap();
+        let out_b = rx_b.recv().unwrap().unwrap();
+        assert_eq!(out_a, StubEngine::expected_row(&in_a));
+        assert_eq!(out_b, StubEngine::expected_row(&in_b));
+
+        // Each replica executed exactly one single-request batch.
+        let fixed_execs = fixed.execs();
+        let elastic_execs = elastic.execs();
+        assert_eq!(fixed_execs.len() + elastic_execs.len(), 2);
+        for e in &fixed_execs {
+            assert_eq!(e.len(), 4, "fixed replica always runs padded to 4 rows");
+            assert!(e[1..].iter().all(|&s| s == 0.0), "padding rows are zeros: {e:?}");
+        }
+        for e in &elastic_execs {
+            assert_eq!(e.len(), 1, "elastic replica runs the real batch unpadded");
+        }
+
+        // Byte-identical to the single-engine path on the same inputs.
+        let (_ref_stub, ref_engine) = StubEngine::elastic().shared();
+        let single = Batcher::spawn(
+            Arc::new(ModelEntry::from_engine("single", ref_engine, vec![4])),
+            BatcherConfig::default(),
+        );
+        assert_eq!(single.submit(in_a).unwrap(), out_a);
+        assert_eq!(single.submit(in_b).unwrap(), out_b);
+    }
+
+    /// A replicated native pool must return bytes identical to the
+    /// single-engine reference for the same request set, whatever
+    /// batches the four workers happened to form (per-item outputs are
+    /// batch-composition independent on the native path).
+    #[test]
+    fn replicated_native_pool_is_bitwise_equal_to_single_engine() {
+        let g = build_cnn_graph(
+            "bw",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            3,
+        );
+        let reference = ModelEntry::native("ref", &g, LutOpts::all(), 8, 1).unwrap();
+        let pool = Arc::new(ModelEntry::native("pool", &g, LutOpts::all(), 8, 4).unwrap());
+        let b = Arc::new(Batcher::spawn(
+            pool,
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+        ));
+        let mut rng = Prng::new(17);
+        let inputs: Vec<Vec<f32>> = (0..16).map(|_| rng.normal_vec(192, 1.0)).collect();
+        let mut handles = Vec::new();
+        for input in &inputs {
+            let b = Arc::clone(&b);
+            let input = input.clone();
+            handles.push(thread::spawn(move || b.submit(input).unwrap()));
+        }
+        let got: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let mut out = Tensor::zeros(vec![0]);
+        for (input, got) in inputs.iter().zip(&got) {
+            let x = Tensor::new(vec![1, 8, 8, 3], input.clone());
+            reference.engine().run_batch(&x, &mut out).unwrap();
+            assert_eq!(&out.data, got, "pool output must match single-engine bitwise");
+        }
+    }
+
+    /// Seeded threaded stress over a 4-replica stub pool (the CI serving
+    /// stress job pins `SERVE_STRESS_SEED`): every reply must carry the
+    /// submitted request's own result, and the counters must balance.
+    #[test]
+    fn stress_replicated_pool_under_concurrent_load() {
+        let seed: u64 = std::env::var("SERVE_STRESS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(42);
+        let engines: Vec<Box<dyn crate::api::Engine>> =
+            (0..4).map(|_| StubEngine::elastic().shared().1).collect();
+        let entry = Arc::new(ModelEntry::from_engines("stress", engines, vec![4]).unwrap());
+        let b = Arc::new(Batcher::spawn(
+            entry,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 64,
+            },
+        ));
+        let clients = 8usize;
+        let per_client = 40usize;
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let b = Arc::clone(&b);
+            handles.push(thread::spawn(move || {
+                let mut rng = Prng::new(seed.wrapping_add(c as u64));
+                for _ in 0..per_client {
+                    let input = rng.normal_vec(4, 1.0);
+                    let out = b.submit(input.clone()).unwrap();
+                    assert_eq!(out, StubEngine::expected_row(&input));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = b.snapshot();
+        assert_eq!(snap.requests, (clients * per_client) as u64);
+        assert_eq!(snap.queue_depth, 0, "injector queue drained");
+        assert_eq!(snap.items, snap.requests, "every request in exactly one batch");
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.replicas_busy, 0, "all replicas idle after the load");
     }
 }

@@ -14,7 +14,16 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub items: AtomicU64,
     pub errors: AtomicU64,
+    /// requests shed before execution (queue full at `try_submit`, or
+    /// deadline exceeded while queued)
+    pub shed: AtomicU64,
+    /// gauge: requests currently waiting in the injector queue (the
+    /// true pending depth — NOT the size of the last drained batch).
+    /// `Batcher::snapshot` samples it live from the queue; reading the
+    /// atomic directly returns the last sampled value.
     pub queue_depth: AtomicU64,
+    /// gauge: replicas currently executing a batch
+    pub replicas_busy: AtomicU64,
     /// per-request end-to-end latency samples (seconds)
     latencies: Mutex<Vec<f64>>,
     /// per-batch sizes
@@ -47,6 +56,10 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn latency_summary(&self) -> Option<Summary> {
         let g = self.latencies.lock().unwrap();
         if g.is_empty() {
@@ -71,6 +84,9 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             items: self.items.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            replicas_busy: self.replicas_busy.load(Ordering::Relaxed),
             latency: self.latency_summary(),
             mean_batch: self.mean_batch_size(),
         }
@@ -83,6 +99,9 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub items: u64,
     pub errors: u64,
+    pub shed: u64,
+    pub queue_depth: u64,
+    pub replicas_busy: u64,
     pub latency: Option<Summary>,
     pub mean_batch: f64,
 }
@@ -90,11 +109,15 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     pub fn report(&self, wall_s: f64) -> String {
         let mut s = format!(
-            "requests={} batches={} items={} errors={} mean_batch={:.2} throughput={:.1}/s",
+            "requests={} batches={} items={} errors={} shed={} queue_depth={} \
+             replicas_busy={} mean_batch={:.2} throughput={:.1}/s",
             self.requests,
             self.batches,
             self.items,
             self.errors,
+            self.shed,
+            self.queue_depth,
+            self.replicas_busy,
             self.mean_batch,
             self.requests as f64 / wall_s.max(1e-9),
         );
@@ -139,14 +162,23 @@ mod tests {
         m.record_request(0.020);
         m.record_batch(4);
         m.record_error();
+        m.record_shed();
+        m.queue_depth.store(3, Ordering::Relaxed);
+        m.replicas_busy.store(2, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.items, 4);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.replicas_busy, 2);
         assert_eq!(s.mean_batch, 4.0);
         let l = s.latency.as_ref().unwrap();
         assert!((l.mean - 0.015).abs() < 1e-9);
-        assert!(!s.report(1.0).is_empty());
+        let report = s.report(1.0);
+        assert!(report.contains("queue_depth=3"), "{report}");
+        assert!(report.contains("replicas_busy=2"), "{report}");
+        assert!(report.contains("shed=1"), "{report}");
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! L3 serving coordinator: model registry, router, dynamic batcher,
-//! worker pool, metrics, workload traces and a TCP front-end.
+//! L3 serving coordinator: model registry, router, replica pools with a
+//! work-stealing dynamic batcher, metrics, workload traces and a TCP
+//! front-end.
 //!
 //! Request path (no python anywhere):
 //!
@@ -8,25 +9,38 @@
 //!   in-proc callers (examples/benches)┼──> Router (Registry::resolve)
 //!                                     │        │
 //!                                     │        v
-//!                                     │   Batcher queue (per model)
-//!                                     │        │ drain + stack [B, item]
-//!                                     │        v
-//!                                     └── dyn api::Engine::run_batch
-//!                                          │              │
-//!                                   NativeEngine     PjrtEngine
-//!                                   (Session, §5     (AOT XLA on the
-//!                                    zero-alloc)      PJRT host thread)
+//!                                     │  shared injector queue (per model,
+//!                                     │  bounded; try_submit sheds on full
+//!                                     │  queue or exceeded deadline)
+//!                                     │    │        │        │
+//!                                     │    v        v        v
+//!                                     │  worker0  worker1 … workerN-1
+//!                                     │  (one per replica; idle workers
+//!                                     │   steal from the shared queue,
+//!                                     │   each batches up to its OWN
+//!                                     │   replica's max_batch)
+//!                                     │    │        │        │
+//!                                     │    v        v        v
+//!                                     └─ EnginePool: dyn api::Engine × N
+//!                                         │                   │
+//!                                   NativeEngine         PjrtEngine
+//!                                   (Session per          (AOT XLA,
+//!                                    replica — no          fixed batch,
+//!                                    arena contention)     padded)
 //! ```
 //!
-//! The stack is backend-agnostic: a [`ModelEntry`] carries any
-//! `Box<dyn Engine>` (see [`crate::api::engine`]), the batcher stacks
-//! requests into one borrowed batch tensor and the engine writes into a
-//! reusable output tensor — no per-request input clone on the native
-//! path. New backends implement the three-method `Engine` trait and
-//! register here; the batcher, server and router never change.
+//! The stack is backend-agnostic: a [`ModelEntry`] carries an
+//! [`pool::EnginePool`] of `Box<dyn Engine>` replicas (see
+//! [`crate::api::engine`]). Each batcher worker stacks requests into
+//! one borrowed batch tensor and runs its own replica — no per-request
+//! input clone on the native path, no cross-replica lock contention.
+//! New backends implement the `Engine` trait (plus `clone_replica` to
+//! opt into homogeneous pooling) and register here; the batcher, server
+//! and router never change.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod server;
 pub mod trace;
 
@@ -38,41 +52,70 @@ use anyhow::{anyhow, Result};
 pub use crate::api::engine::{Engine, NativeEngine, PjrtEngine};
 use crate::lut::LutOpts;
 use crate::nn::graph::Graph;
+pub use pool::EnginePool;
 
-/// One registered model: a name, an executable engine, and the
+/// One registered model: a name, a pool of engine replicas, and the
 /// per-request input shape the router validates against.
 pub struct ModelEntry {
     pub name: String,
-    pub engine: Box<dyn Engine>,
+    pub pool: EnginePool,
     /// per-request input shape (without batch dim)
     pub item_shape: Vec<usize>,
 }
 
 impl ModelEntry {
-    /// Register a graph on the rust-native engine (compiled to a
-    /// `Session` with arenas sized for `max_batch`).
+    /// Register a graph on the rust-native engine: `replicas` sessions
+    /// compiled from one shared immutable bundle (each replica owns its
+    /// scratch arenas; the graph is lutified/loaded exactly once), each
+    /// with arenas sized for `max_batch`.
     pub fn native(
         name: &str,
         graph: &Graph,
         opts: LutOpts,
         max_batch: usize,
+        replicas: usize,
     ) -> Result<ModelEntry> {
         let engine = NativeEngine::from_graph(graph, opts, max_batch)?;
         let item_shape = engine.item_shape();
         Ok(ModelEntry {
             name: name.to_string(),
-            engine: Box::new(engine),
+            pool: EnginePool::replicate(Box::new(engine), replicas)?,
             item_shape,
         })
     }
 
-    /// Register any engine implementation.
+    /// Register any single engine implementation (one-replica pool).
     pub fn from_engine(
         name: &str,
         engine: Box<dyn Engine>,
         item_shape: Vec<usize>,
     ) -> ModelEntry {
-        ModelEntry { name: name.to_string(), engine, item_shape }
+        ModelEntry {
+            name: name.to_string(),
+            pool: EnginePool::single(engine),
+            item_shape,
+        }
+    }
+
+    /// Register a heterogeneous replica pool (e.g. a fixed-batch
+    /// `PjrtEngine` beside elastic `NativeEngine`s). The replicas must
+    /// compute the same function; the batcher routes any request to any
+    /// replica and batches against each replica's own `max_batch`.
+    pub fn from_engines(
+        name: &str,
+        engines: Vec<Box<dyn Engine>>,
+        item_shape: Vec<usize>,
+    ) -> Result<ModelEntry> {
+        Ok(ModelEntry {
+            name: name.to_string(),
+            pool: EnginePool::from_engines(engines)?,
+            item_shape,
+        })
+    }
+
+    /// The pool's primary replica, for direct (unbatched) execution.
+    pub fn engine(&self) -> &dyn Engine {
+        self.pool.primary()
     }
 
     pub fn item_len(&self) -> usize {
@@ -112,6 +155,19 @@ impl Registry {
     pub fn names(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }
+
+    /// Grow every model's pool to at least `n` replicas (best effort:
+    /// engines without `clone_replica` — and entries whose `Arc` has
+    /// already been shared out — keep their explicit pool size). Errors
+    /// only when a supported clone actually fails.
+    pub fn replicate_to(&mut self, n: usize) -> Result<()> {
+        for entry in self.models.values_mut() {
+            if let Some(e) = Arc::get_mut(entry) {
+                e.pool.try_grow_to(n)?;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -128,7 +184,7 @@ mod tests {
             5,
             0,
         );
-        ModelEntry::native(name, &g, LutOpts::all(), 8).unwrap()
+        ModelEntry::native(name, &g, LutOpts::all(), 8, 1).unwrap()
     }
 
     #[test]
@@ -148,10 +204,40 @@ mod tests {
         let mut out = Tensor::zeros(vec![0]);
         for n in [1usize, 3, 7] {
             let x = Tensor::zeros(vec![n, 8, 8, 3]);
-            e.engine.run_batch(&x, &mut out).unwrap();
+            e.engine().run_batch(&x, &mut out).unwrap();
             assert_eq!(out.shape, vec![n, 5]);
         }
-        assert_eq!(e.engine.max_batch(), None);
+        assert_eq!(e.engine().max_batch(), None);
         assert_eq!(e.item_len(), 192);
+    }
+
+    #[test]
+    fn native_entry_builds_replica_pools() {
+        let g = build_cnn_graph(
+            "mr",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            0,
+        );
+        let e = ModelEntry::native("mr", &g, LutOpts::all(), 8, 3).unwrap();
+        assert_eq!(e.pool.len(), 3);
+        // replicas are numerically interchangeable
+        let x = Tensor::new(vec![2, 8, 8, 3], vec![0.5; 2 * 192]);
+        let mut a = Tensor::zeros(vec![0]);
+        let mut b = Tensor::zeros(vec![0]);
+        e.pool.replica(0).run_batch(&x, &mut a).unwrap();
+        e.pool.replica(2).run_batch(&x, &mut b).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn registry_replicate_to_grows_native_pools() {
+        let mut r = Registry::new();
+        r.register(native_entry("grow"));
+        assert_eq!(r.resolve("grow").unwrap().pool.len(), 1);
+        // the resolve() Arc above is temporary, so get_mut succeeds
+        r.replicate_to(4).unwrap();
+        assert_eq!(r.resolve("grow").unwrap().pool.len(), 4);
     }
 }

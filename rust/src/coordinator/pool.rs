@@ -1,0 +1,296 @@
+//! Engine replica pools: N executable replicas of one model.
+//!
+//! A [`EnginePool`] owns the replicas the batcher's worker threads
+//! drain one-to-one: replica `i` is driven only by worker `i`, so each
+//! replica's scratch arenas (the `Session` ping-pong buffers, im2col
+//! patches, index slabs) are never contended — parallelism comes from
+//! running *different batches on different replicas*, not from sharing
+//! one session across threads.
+//!
+//! Pools are built two ways:
+//! * [`EnginePool::replicate`] — homogeneous: one engine plus `n-1`
+//!   copies stamped out through [`Engine::clone_replica`], sharing the
+//!   immutable bundle (the graph is never re-lutified or re-loaded).
+//! * [`EnginePool::from_engines`] — heterogeneous: explicit replicas,
+//!   e.g. a fixed-batch [`crate::api::PjrtEngine`] beside elastic
+//!   [`crate::api::NativeEngine`]s. Each batcher worker batches against
+//!   its *own* replica's `max_batch`, so a fixed-batch replica never
+//!   clamps the elastic ones.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::api::Engine;
+
+/// N engine replicas of one model (at least one).
+pub struct EnginePool {
+    replicas: Vec<Box<dyn Engine>>,
+}
+
+impl EnginePool {
+    /// Single-replica pool (the pre-pool serving behavior).
+    pub fn single(engine: Box<dyn Engine>) -> EnginePool {
+        EnginePool { replicas: vec![engine] }
+    }
+
+    /// Heterogeneous pool from explicit replicas. Errors on an empty
+    /// vector; callers are responsible for the replicas computing the
+    /// same function (the batcher routes any request to any replica).
+    pub fn from_engines(replicas: Vec<Box<dyn Engine>>) -> Result<EnginePool> {
+        ensure!(!replicas.is_empty(), "engine pool needs at least one replica");
+        Ok(EnginePool { replicas })
+    }
+
+    /// Homogeneous pool: `engine` plus `n - 1` replicas built through
+    /// [`Engine::clone_replica`]. With `n == 1` no replication support
+    /// is required.
+    pub fn replicate(engine: Box<dyn Engine>, n: usize) -> Result<EnginePool> {
+        ensure!(n >= 1, "engine pool needs at least one replica");
+        let mut pool = EnginePool::single(engine);
+        pool.try_grow_to(n)?;
+        ensure!(
+            pool.len() == n,
+            "engine '{}' does not support replication (implement Engine::clone_replica)",
+            pool.primary().describe()
+        );
+        Ok(pool)
+    }
+
+    /// Best-effort growth to `n` replicas by cloning the primary.
+    /// Engines without [`Engine::clone_replica`] keep their current
+    /// size (`Ok`, smaller pool); a failed clone is an error. Returns
+    /// the resulting pool size.
+    pub fn try_grow_to(&mut self, n: usize) -> Result<usize> {
+        while self.replicas.len() < n {
+            match self.primary().clone_replica() {
+                None => break,
+                Some(replica) => self
+                    .replicas
+                    .push(replica.map_err(|e| anyhow!("cloning replica: {e:#}"))?),
+            }
+        }
+        Ok(self.replicas.len())
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Replica `i` (panics out of range; workers are spawned 1:1).
+    pub fn replica(&self, i: usize) -> &dyn Engine {
+        self.replicas[i].as_ref()
+    }
+
+    /// The first replica — the reference engine for direct (unbatched)
+    /// calls and for stamping out further replicas.
+    pub fn primary(&self) -> &dyn Engine {
+        self.replicas[0].as_ref()
+    }
+
+    /// Per-replica `max_batch` (the batcher clamps each worker to its
+    /// own replica's capacity, not to the pool-wide minimum).
+    pub fn max_batches(&self) -> Vec<Option<usize>> {
+        self.replicas.iter().map(|r| r.max_batch()).collect()
+    }
+}
+
+/// Deterministic test engines for the serving stack (shared by the
+/// batcher/server/pool unit tests): a per-row function whose output is
+/// independent of batch composition, optional fixed batch (padding
+/// contract), and optional entry-signal + gate channels so tests can
+/// orchestrate *exactly* when a replica starts and finishes a batch.
+#[cfg(test)]
+pub(crate) mod stubs {
+    use std::sync::mpsc::{Receiver, Sender};
+    use std::sync::{Arc, Mutex};
+
+    use anyhow::Result;
+
+    use crate::api::Engine;
+    use crate::tensor::Tensor;
+
+    pub struct StubEngine {
+        /// `Some(b)`: fixed-batch engine — `run_batch` insists on
+        /// exactly `b` rows (the batcher must pad). `None`: elastic.
+        fixed: Option<usize>,
+        /// Signals every `run_batch` entry with the exec row count.
+        entered: Mutex<Option<Sender<usize>>>,
+        /// When present, `run_batch` blocks here until the test sends a
+        /// release token (or drops the sender).
+        gate: Option<Mutex<Receiver<()>>>,
+        /// Row sums of every executed batch, in execution order.
+        execs: Mutex<Vec<Vec<f32>>>,
+    }
+
+    impl StubEngine {
+        pub fn elastic() -> StubEngine {
+            StubEngine {
+                fixed: None,
+                entered: Mutex::new(None),
+                gate: None,
+                execs: Mutex::new(Vec::new()),
+            }
+        }
+
+        pub fn fixed(batch: usize) -> StubEngine {
+            StubEngine { fixed: Some(batch), ..StubEngine::elastic() }
+        }
+
+        pub fn with_entered(mut self, tx: Sender<usize>) -> StubEngine {
+            self.entered = Mutex::new(Some(tx));
+            self
+        }
+
+        pub fn with_gate(mut self, rx: Receiver<()>) -> StubEngine {
+            self.gate = Some(Mutex::new(rx));
+            self
+        }
+
+        /// Keep a handle for post-hoc inspection while handing the
+        /// engine to a pool.
+        pub fn shared(self) -> (Arc<StubEngine>, Box<dyn Engine>) {
+            let arc = Arc::new(self);
+            (Arc::clone(&arc), Box::new(SharedStub(arc)))
+        }
+
+        /// Row sums seen by each executed batch.
+        pub fn execs(&self) -> Vec<Vec<f32>> {
+            self.execs.lock().unwrap().clone()
+        }
+
+        /// The stub's per-row function: `[sum, 2*sum]` — depends only
+        /// on the row itself, so outputs are byte-identical whatever
+        /// batch (or padding) a request lands in.
+        pub fn expected_row(input: &[f32]) -> Vec<f32> {
+            let s: f32 = input.iter().sum();
+            vec![s, s * 2.0]
+        }
+    }
+
+    impl Engine for StubEngine {
+        fn run_batch(&self, x: &Tensor, out: &mut Tensor) -> Result<()> {
+            let n = x.shape[0];
+            let item: usize = x.shape[1..].iter().product();
+            if let Some(b) = self.fixed {
+                anyhow::ensure!(n == b, "fixed stub needs batch {b}, got {n}");
+            }
+            if let Some(tx) = &*self.entered.lock().unwrap() {
+                let _ = tx.send(n);
+            }
+            if let Some(gate) = &self.gate {
+                // a dropped sender releases permanently (shutdown tests)
+                let _ = gate.lock().unwrap().recv();
+            }
+            let sums: Vec<f32> = (0..n)
+                .map(|i| x.data[i * item..(i + 1) * item].iter().sum())
+                .collect();
+            self.execs.lock().unwrap().push(sums.clone());
+            out.shape.clear();
+            out.shape.extend_from_slice(&[n, 2]);
+            out.data.clear();
+            for s in sums {
+                out.data.push(s);
+                out.data.push(s * 2.0);
+            }
+            Ok(())
+        }
+
+        fn max_batch(&self) -> Option<usize> {
+            self.fixed
+        }
+
+        fn describe(&self) -> String {
+            match self.fixed {
+                Some(b) => format!("stub (fixed batch {b})"),
+                None => "stub (elastic)".to_string(),
+            }
+        }
+    }
+
+    /// `Arc`-backed handle so tests can keep inspecting a stub that a
+    /// pool owns.
+    pub struct SharedStub(pub Arc<StubEngine>);
+
+    impl Engine for SharedStub {
+        fn run_batch(&self, x: &Tensor, out: &mut Tensor) -> Result<()> {
+            self.0.run_batch(x, out)
+        }
+
+        fn max_batch(&self) -> Option<usize> {
+            self.0.max_batch()
+        }
+
+        fn describe(&self) -> String {
+            self.0.describe()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::NativeEngine;
+    use crate::lut::LutOpts;
+    use crate::nn::models::{build_cnn_graph, ConvSpec};
+    use crate::tensor::Tensor;
+
+    fn native() -> NativeEngine {
+        let g = build_cnn_graph(
+            "p",
+            [8, 8, 3],
+            &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+            5,
+            0,
+        );
+        NativeEngine::from_graph(&g, LutOpts::all(), 4).unwrap()
+    }
+
+    #[test]
+    fn replicate_builds_n_identical_replicas() {
+        let pool = EnginePool::replicate(Box::new(native()), 3).unwrap();
+        assert_eq!(pool.len(), 3);
+        assert_eq!(pool.max_batches(), vec![None, None, None]);
+        let x = Tensor::new(vec![2, 8, 8, 3], vec![0.25; 2 * 192]);
+        let mut first = Tensor::zeros(vec![0]);
+        pool.replica(0).run_batch(&x, &mut first).unwrap();
+        for i in 1..pool.len() {
+            let mut out = Tensor::zeros(vec![0]);
+            pool.replica(i).run_batch(&x, &mut out).unwrap();
+            assert_eq!(out.shape, first.shape);
+            assert_eq!(out.data, first.data, "replica {i} must match bitwise");
+        }
+    }
+
+    #[test]
+    fn replicate_rejects_non_replicable_engines_beyond_one() {
+        let (_, stub) = stubs::StubEngine::elastic().shared();
+        assert!(EnginePool::replicate(stub, 2).is_err());
+        // n == 1 needs no replication capability
+        let (_, stub) = stubs::StubEngine::elastic().shared();
+        assert_eq!(EnginePool::replicate(stub, 1).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn try_grow_is_best_effort() {
+        let (_, stub) = stubs::StubEngine::elastic().shared();
+        let mut pool = EnginePool::single(stub);
+        assert_eq!(pool.try_grow_to(4).unwrap(), 1, "stub cannot replicate");
+        let mut pool = EnginePool::single(Box::new(native()));
+        assert_eq!(pool.try_grow_to(4).unwrap(), 4);
+        assert_eq!(pool.try_grow_to(2).unwrap(), 4, "never shrinks");
+    }
+
+    #[test]
+    fn from_engines_accepts_heterogeneous_rejects_empty() {
+        assert!(EnginePool::from_engines(Vec::new()).is_err());
+        let (_, fixed) = stubs::StubEngine::fixed(4).shared();
+        let (_, elastic) = stubs::StubEngine::elastic().shared();
+        let pool = EnginePool::from_engines(vec![fixed, elastic]).unwrap();
+        assert_eq!(pool.max_batches(), vec![Some(4), None]);
+        assert!(!pool.is_empty());
+        assert!(pool.primary().describe().contains("fixed batch 4"));
+    }
+}

@@ -26,6 +26,11 @@ use crate::util::threadpool::ThreadPool;
 pub struct ServerConfig {
     pub addr: String,
     pub handler_threads: usize,
+    /// Grow every model's engine pool to at least this many replicas at
+    /// startup (best effort: engines without `clone_replica` keep their
+    /// registered pool size). The batcher then runs one worker per
+    /// replica with work stealing between them.
+    pub replicas: usize,
     pub batcher: BatcherConfig,
 }
 
@@ -34,6 +39,7 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:7070".into(),
             handler_threads: 4,
+            replicas: 1,
             batcher: BatcherConfig::default(),
         }
     }
@@ -48,13 +54,17 @@ pub struct Server {
 
 impl Server {
     /// Start serving `registry` on `cfg.addr` (port 0 = ephemeral).
-    pub fn start(registry: Registry, cfg: ServerConfig) -> Result<Server> {
+    pub fn start(mut registry: Registry, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
 
-        // One batcher per registered model.
+        // Grow replicable pools to the configured replica target, then
+        // run one batcher per model (one worker per replica inside it).
+        if cfg.replicas > 1 {
+            registry.replicate_to(cfg.replicas)?;
+        }
         let mut batchers: BTreeMap<String, Arc<Batcher>> = BTreeMap::new();
         for name in registry.names() {
             let entry = registry.resolve(&name)?;
@@ -189,10 +199,7 @@ fn handle_line(line: &str, shared: &Shared, stop: &AtomicBool) -> Json {
                 let mut obj = vec![("ok", Json::Bool(true))];
                 let mut per_model = std::collections::BTreeMap::new();
                 for (name, b) in &shared.batchers {
-                    per_model.insert(
-                        name.clone(),
-                        Json::str(b.metrics.snapshot().report(wall)),
-                    );
+                    per_model.insert(name.clone(), Json::str(b.snapshot().report(wall)));
                 }
                 obj.push(("metrics", Json::Obj(per_model)));
                 Json::obj(obj)
@@ -295,7 +302,7 @@ mod tests {
             0,
         );
         let mut r = Registry::new();
-        r.register(ModelEntry::native("m", &g, LutOpts::all(), 8).unwrap());
+        r.register(ModelEntry::native("m", &g, LutOpts::all(), 8, 1).unwrap());
         r.alias("default", "m");
         r
     }
@@ -356,5 +363,72 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    /// `ServerConfig::replicas` grows native pools at startup and the
+    /// replicated server answers identically to the single-replica one.
+    #[test]
+    fn replicated_server_serves_identical_results() {
+        let single = Server::start(
+            test_registry(),
+            ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let pooled = Server::start(
+            test_registry(),
+            ServerConfig { addr: "127.0.0.1:0".into(), replicas: 3, ..Default::default() },
+        )
+        .unwrap();
+        let mut c1 = Client::connect(&single.addr).unwrap();
+        let mut cp = Client::connect(&pooled.addr).unwrap();
+        for i in 0..6 {
+            let input = vec![0.05 * i as f32; 192];
+            assert_eq!(
+                c1.infer("m", &input).unwrap(),
+                cp.infer("m", &input).unwrap(),
+                "replicated server must match single-replica bytes"
+            );
+        }
+    }
+
+    /// Shutdown while a request is in flight: the handler's pending
+    /// submit must complete (batchers drain on drop) before `shutdown`
+    /// returns — the client receives its answer, not a closed socket.
+    #[test]
+    fn shutdown_completes_inflight_requests() {
+        use crate::coordinator::pool::stubs::StubEngine;
+        use std::sync::mpsc;
+
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (_stub, engine) =
+            StubEngine::elastic().with_entered(entered_tx).with_gate(gate_rx).shared();
+        let mut r = Registry::new();
+        r.register(ModelEntry::from_engine("gated", engine, vec![4]));
+        let mut server = Server::start(
+            r,
+            ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.addr;
+        let input = vec![1.0, 2.0, 3.0, 4.0];
+        let want = StubEngine::expected_row(&input);
+        let client = std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.infer("gated", &input).unwrap()
+        });
+        // The request is in flight (its worker is inside the engine)...
+        entered_rx.recv().unwrap();
+        // ...when shutdown begins; release the gate so the drain can
+        // finish, and both the client and shutdown() must complete.
+        let shutter = std::thread::spawn(move || {
+            server.shutdown();
+            server
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(gate_tx);
+        assert_eq!(client.join().unwrap(), want);
+        let server = shutter.join().unwrap();
+        assert!(server.stopped());
     }
 }

@@ -59,7 +59,7 @@ fn print_help() {
 USAGE: lutnn <serve|infer|cost|convert|compile|inspect> [flags]
 
   serve    --models <dir|bundle,...> [--port 7070] [--threads 4]
-           [--max-batch 8] [--max-wait-ms 2]
+           [--replicas 1] [--max-batch 8] [--max-wait-ms 2]
   infer    <bundle.lutnn> [--batch 1] [--iters 1] [--naive]
   cost     [--k 16] [--v <override>]
   convert  <dense.lutnn> <out.lutnn> [--centroids 16] [--bits 8]
@@ -103,17 +103,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spec = args.get_or("models", "artifacts");
     let port = args.get_usize("port", 7070);
     let max_batch = args.get_usize("max-batch", 8);
+    // N sessions per model from one shared bundle; the batcher runs one
+    // work-stealing worker per replica. Registration stays at one
+    // replica — Server::start grows every pool to the configured count
+    // (one knob, exercised on the production path).
+    let replicas = args.get_usize("replicas", 1).max(1);
     let mut registry = Registry::new();
     for (name, path) in load_models(&spec)? {
         let graph = model_fmt::load_bundle(&path)
             .with_context(|| format!("loading {path}"))?;
         println!(
-            "registered '{name}' ({} params bytes, lut/dense = {:?})",
+            "registered '{name}' ({} params bytes, lut/dense = {:?}, {replicas} replica(s))",
             graph.param_bytes(),
             graph.lut_fraction()
         );
         registry.register(
-            ModelEntry::native(&name, &graph, LutOpts::deployed(), max_batch)
+            ModelEntry::native(&name, &graph, LutOpts::deployed(), max_batch, 1)
                 .with_context(|| format!("compiling session for {name}"))?,
         );
     }
@@ -124,6 +129,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ServerConfig {
         addr: format!("127.0.0.1:{port}"),
         handler_threads: args.get_usize("threads", 4),
+        replicas,
         batcher: lutnn::coordinator::batcher::BatcherConfig {
             max_batch,
             max_wait: std::time::Duration::from_millis(

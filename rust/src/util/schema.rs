@@ -164,6 +164,16 @@ mod tests {
                 ]),
             ),
             (
+                "replica_sweep",
+                Json::Arr(vec![Json::obj(vec![
+                    ("replicas", ms(1.0)),
+                    ("throughput_rps", ms(500.0)),
+                    ("speedup_vs_1", ms(1.0)),
+                    ("p50_ms", ms(2.0)),
+                    ("p95_ms", ms(4.0)),
+                ])]),
+            ),
+            (
                 "models",
                 Json::Arr(vec![Json::obj(vec![
                     ("model", Json::str("VGG11 (CIFAR10)")),

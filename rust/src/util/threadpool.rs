@@ -1,12 +1,16 @@
-//! Fixed-size worker thread pool with scoped parallel-for.
+//! Fixed-size worker thread pool, scoped parallel-for, and the shared
+//! work-injector queue.
 //!
-//! The coordinator's worker pool and the multi-thread benches (Fig. 9)
-//! build on this. Plain std threads + channels; no external deps.
+//! The coordinator's worker pool, the replica batcher's injector
+//! ([`WorkQueue`]) and the multi-thread benches (Fig. 9) build on this.
+//! Plain std threads + channels + condvars; no external deps.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -87,6 +91,148 @@ where
     });
 }
 
+/// Why a `try_push` failed.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity; the item is handed back (load shedding).
+    Full(T),
+    /// Queue closed; the item is handed back.
+    Closed(T),
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer/multi-consumer injector queue.
+///
+/// The dynamic batcher's work-stealing core: producers push requests,
+/// one consumer per engine replica pops them. Because every consumer
+/// pops from this one shared deque, an idle replica automatically
+/// steals work that would otherwise wait behind a busy one — no
+/// per-replica assignment, no rebalancing pass.
+///
+/// Close semantics are drain-friendly: after [`WorkQueue::close`],
+/// pushes fail immediately but pops keep returning queued items until
+/// the queue is empty — consumers can reply to every accepted request
+/// before exiting (graceful shutdown).
+pub struct WorkQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> WorkQueue<T> {
+    /// Queue accepting at most `cap` pending items (min 1).
+    pub fn bounded(cap: usize) -> WorkQueue<T> {
+        WorkQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push (backpressure): waits while the queue is full.
+    /// `Err(item)` once the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.cap {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push: sheds instead of waiting when full.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: waits for an item; `None` only once the queue is
+    /// closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline: waits until `deadline` for an item; `None`
+    /// on timeout or on closed-and-drained (batch-window follow-ups).
+    pub fn pop_until(&self, deadline: Instant) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            (g, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let item = self.state.lock().unwrap().items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the queue: producers fail fast, consumers drain what is
+    /// already queued and then observe end-of-stream.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current pending-item count (the true queue depth).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Work-stealing-lite dynamic scheduling over `n` items: threads pull the
 /// next index from a shared atomic counter. Better than static chunks when
 /// per-item cost varies (e.g. mixed request sizes).
@@ -155,6 +301,83 @@ mod tests {
         parallel_items(57, 3, |i| {
             hits[i].fetch_add(1, Ordering::SeqCst);
         });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn work_queue_fifo_and_bounds() {
+        let q: WorkQueue<u32> = WorkQueue::bounded(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn work_queue_close_drains_then_ends() {
+        let q: WorkQueue<u32> = WorkQueue::bounded(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
+        assert!(q.push(4).is_err());
+        // consumers still drain queued items after close...
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop_until(Instant::now()), Some(2));
+        // ...then observe end-of-stream instead of blocking
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop_until(Instant::now() + std::time::Duration::from_secs(5)), None);
+    }
+
+    #[test]
+    fn work_queue_pop_until_times_out_when_empty() {
+        let q: WorkQueue<u32> = WorkQueue::bounded(1);
+        let t0 = Instant::now();
+        assert_eq!(q.pop_until(t0 + std::time::Duration::from_millis(20)), None);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+    }
+
+    #[test]
+    fn work_queue_blocking_push_waits_for_space() {
+        let q = Arc::new(WorkQueue::<u32>::bounded(1));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = thread::spawn(move || q2.push(2));
+        // the pusher is stuck on the full queue until a pop frees a slot
+        thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(1));
+        assert!(pusher.join().unwrap().is_ok());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn work_queue_mpmc_delivers_every_item_once() {
+        let q = Arc::new(WorkQueue::<usize>::bounded(16));
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..200).map(|_| AtomicUsize::new(0)).collect());
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let hits = Arc::clone(&hits);
+                thread::spawn(move || {
+                    while let Some(i) = q.pop() {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for i in 0..200 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
     }
 

@@ -194,7 +194,7 @@ fn serve_trained_bundle_over_tcp() {
     require_artifacts!();
     let graph = model_fmt::load_bundle(&artifact_path("resnet_tiny_lut.lutnn")).unwrap();
     let mut registry = Registry::new();
-    registry.register(ModelEntry::native("resnet_tiny_lut", &graph, LutOpts::all(), 8).unwrap());
+    registry.register(ModelEntry::native("resnet_tiny_lut", &graph, LutOpts::all(), 8, 2).unwrap());
     let mut server = Server::start(
         registry,
         ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
@@ -237,7 +237,7 @@ fn batcher_on_pjrt_engine_pads_batches() {
     // the hosted model returns for the full golden batch, row 0.
     let golden = golden_input();
     let mut full = Tensor::zeros(vec![0]);
-    entry.engine.run_batch(&golden, &mut full).unwrap();
+    entry.engine().run_batch(&golden, &mut full).unwrap();
     let b = Batcher::spawn(std::sync::Arc::clone(&entry), BatcherConfig::default());
     let out = b.submit(golden.data[..768].to_vec()).unwrap();
     assert_eq!(out.len(), 10);
