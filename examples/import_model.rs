@@ -1,0 +1,66 @@
+//! Importing models: parse an NNEF-style text graph, compile it to LUT
+//! layers with the native trainer, and serve it through `api::Session`
+//! — the full import -> compile -> serve flow in one file.
+//!
+//!   cargo run --release --example import_model
+//!
+//! Uses the committed `cnn_tiny` zoo fixture (embedded via
+//! `include_str!`), so the example always runs with no artifacts.
+
+use lutnn::api::SessionBuilder;
+use lutnn::model_fmt::{load_bundle, save_bundle};
+use lutnn::model_import::{import_str, zoo};
+use lutnn::tensor::Tensor;
+use lutnn::train::{compile_graph, TrainConfig};
+use lutnn::util::prng::Prng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Import: text graph -> validated dense Graph. Every weight is
+    //    derived deterministically from the fixture's `seed` attribute,
+    //    so this model is identical on every machine.
+    let dense = import_str(zoo::CNN_TINY).map_err(|e| anyhow::anyhow!("import failed: {e}"))?;
+    println!("imported '{}': input {:?}, {} ops, {} layers", dense.name, dense.input_shape,
+        dense.ops.len(), dense.layers.len());
+
+    // 2. Compile: distill every conv/linear after the stem into LUT
+    //    layers on a calibration batch (paper §3; the stem stays dense
+    //    per §6.1). A few epochs suffice for a demo.
+    let mut rng = Prng::new(0);
+    let item: usize = dense.input_shape[1..].iter().product();
+    let mut shape = vec![16usize];
+    shape.extend_from_slice(&dense.input_shape[1..]);
+    let sample = Tensor::new(shape, rng.normal_vec(16 * item, 1.0));
+    let cfg = TrainConfig { epochs: 3, kmeans_iters: 6, anneal: 0.8, ..TrainConfig::default() };
+    let (compiled, reports) = compile_graph(&dense, &sample, 16, 8, &cfg)?;
+    for r in &reports {
+        println!(
+            "  distilled {:<4} hard mse {:.4} -> {:.4}",
+            r.name, r.report.hard_mse_init, r.report.hard_mse_final
+        );
+    }
+
+    // 3. Bundle round-trip: the same `.lutnn` format `lutnn import` and
+    //    `lutnn compile` write from the CLI.
+    let path = std::env::temp_dir().join("import_model_example.lutnn");
+    let path = path.to_string_lossy().into_owned();
+    save_bundle(&compiled, &path)?;
+    let reloaded = load_bundle(&path)?;
+    println!("bundle round-trip ok: {path}");
+
+    // 4. Serve: compile the session once, classify a batch.
+    let mut session = SessionBuilder::new(&reloaded).max_batch(4).build()?;
+    println!("{}", session.describe());
+    let x = Tensor::new(vec![4, 16, 16, 3], rng.normal_vec(4 * item, 1.0));
+    let mut logits = Tensor::zeros(vec![0]);
+    session.run(&x, &mut logits)?;
+    for (i, row) in logits.data.chunks(logits.cols()).enumerate() {
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("  input {i}: class {pred} (logit {:.3})", row[pred]);
+    }
+    Ok(())
+}

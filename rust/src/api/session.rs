@@ -34,12 +34,16 @@ enum Step {
     Conv { name: String, kernel: Box<dyn LinearKernel>, k: usize, stride: usize },
     Linear { name: String, kernel: Box<dyn LinearKernel> },
     Bn { scale: Vec<f32>, shift: Vec<f32> },
+    Ln { gamma: Vec<f32>, beta: Vec<f32> },
     Relu,
+    Gelu,
     MaxPool { k: usize, stride: usize },
     Gap,
+    Flatten,
     Save { slot: usize },
     Restore { slot: usize },
     Add { slot: usize },
+    Mul { slot: usize },
 }
 
 /// Per-batch-item scratch sizes (every arena scales linearly with the
@@ -261,7 +265,21 @@ impl<'g> SessionBuilder<'g> {
                     param_bytes += 4 * gamma.len() * 4;
                     steps.push(Step::Bn { scale, shift });
                 }
+                Op::Ln { layer: lname } => {
+                    let LayerParams::Ln { gamma, beta } = layer(g, lname)? else {
+                        bail!("layer '{lname}' is not layernorm");
+                    };
+                    ensure!(
+                        gamma.len() == sh.channels(),
+                        "ln '{lname}': {} channels vs activation {}",
+                        gamma.len(),
+                        sh.channels()
+                    );
+                    param_bytes += 4 * gamma.len() * 2;
+                    steps.push(Step::Ln { gamma: gamma.clone(), beta: beta.clone() });
+                }
                 Op::Relu => steps.push(Step::Relu),
+                Op::Gelu => steps.push(Step::Gelu),
                 Op::MaxPool { k, stride } => {
                     let SimShape::S4 { h, w, c } = sh else {
                         bail!("maxpool needs a 4-D activation");
@@ -281,6 +299,12 @@ impl<'g> SessionBuilder<'g> {
                     };
                     sh = SimShape::S2 { cols: c };
                     steps.push(Step::Gap);
+                }
+                Op::Flatten => {
+                    // NHWC is row-major, so flattening is a pure reshape
+                    // (also the identity on already-2-D activations).
+                    sh = SimShape::S2 { cols: sh.elems() };
+                    steps.push(Step::Flatten);
                 }
                 Op::Save { slot } => {
                     let e = per.slots.entry(*slot).or_insert(0);
@@ -303,6 +327,16 @@ impl<'g> SessionBuilder<'g> {
                         "add: slot {slot} shape {saved:?} != activation {sh:?}"
                     );
                     steps.push(Step::Add { slot: *slot });
+                }
+                Op::Mul { slot } => {
+                    let saved = slot_shapes
+                        .get(slot)
+                        .ok_or_else(|| anyhow!("mul from never-saved slot {slot}"))?;
+                    ensure!(
+                        *saved == sh,
+                        "mul: slot {slot} shape {saved:?} != activation {sh:?}"
+                    );
+                    steps.push(Step::Mul { slot: *slot });
                 }
                 Op::Bert => bail!("bert op in a graph without a bert config"),
             }
@@ -537,6 +571,10 @@ impl Session {
                         }
                     }
                 }
+                Step::Ln { gamma, beta } => {
+                    let t = make_mut(x, &mut self.bufs, &mut cur);
+                    ops::layer_norm(t, gamma, beta);
+                }
                 Step::Relu => {
                     let t = make_mut(x, &mut self.bufs, &mut cur);
                     for v in &mut t.data {
@@ -544,6 +582,18 @@ impl Session {
                             *v = 0.0;
                         }
                     }
+                }
+                Step::Gelu => {
+                    let t = make_mut(x, &mut self.bufs, &mut cur);
+                    ops::gelu(t);
+                }
+                Step::Flatten => {
+                    // Pure metadata change; materialize first so the
+                    // borrowed input tensor is never reshaped.
+                    let t = make_mut(x, &mut self.bufs, &mut cur);
+                    let n0 = t.shape[0];
+                    let cols = t.data.len() / n0;
+                    set_shape(t, &[n0, cols]);
                 }
                 Step::MaxPool { k, stride } => {
                     let (src, dst, di) = src_dst(x, &mut self.bufs, cur);
@@ -587,6 +637,14 @@ impl Session {
                     debug_assert_eq!(t.shape, other.shape);
                     for (a, &b) in t.data.iter_mut().zip(&other.data) {
                         *a += b;
+                    }
+                }
+                Step::Mul { slot } => {
+                    let other = &self.slots[slot];
+                    let t = make_mut(x, &mut self.bufs, &mut cur);
+                    debug_assert_eq!(t.shape, other.shape);
+                    for (a, &b) in t.data.iter_mut().zip(&other.data) {
+                        *a *= b;
                     }
                 }
             }

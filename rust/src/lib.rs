@@ -13,6 +13,8 @@
 //! * [`tensor`] — f32 tensors + im2col
 //! * [`cost`] — analytic FLOPs/size model (paper Tables 1–2)
 //! * [`model_fmt`] — `.lutnn` bundle reader/writer
+//! * [`model_import`] — NNEF-style text-graph importer: op whitelist,
+//!   shape inference, line-numbered diagnostics, committed model zoo
 //! * [`train`] — native differentiable centroid learning (paper §3):
 //!   soft-argmin encoder, Adam, teacher distillation, `compile_graph`
 //! * [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt` via the `xla`
@@ -27,6 +29,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod lut;
 pub mod model_fmt;
+pub mod model_import;
 pub mod nn;
 pub mod pq;
 pub mod runtime;

@@ -4,16 +4,21 @@
 //!   serve     start the TCP inference server on .lutnn bundles
 //!   infer     one-shot inference from a bundle (native or pjrt engine)
 //!   cost      print the paper's Table 2 (analytic GFLOPs / model size)
+//!   import    parse an NNEF-style text graph into a dense .lutnn
+//!             bundle (deterministic weights; see models/zoo/)
 //!   convert   LUT-convert a dense bundle in rust (k-means on the fly)
 //!   compile   LUT-compile a dense bundle with differentiable centroid
 //!             learning (soft-argmin distillation, paper §3) — pass
-//!             `synth` as the source for a built-in synthetic teacher
+//!             `synth` as the source for a built-in synthetic teacher,
+//!             or a .nnef file to import-and-compile in one step
 //!   inspect   dump a bundle's graph/layers/sizes
 //!
 //! Examples:
 //!   lutnn serve --models artifacts --port 7070
 //!   lutnn infer artifacts/resnet_tiny_lut.lutnn --batch 4
 //!   lutnn cost --k 16
+//!   lutnn import models/zoo/cnn_tiny.nnef cnn_tiny.lutnn
+//!   lutnn compile models/zoo/cnn_tiny.nnef compiled.lutnn --epochs 10
 //!   lutnn compile synth compiled.lutnn --centroids 16 --epochs 10
 //!   lutnn inspect artifacts/resnet_tiny_lut.lutnn
 
@@ -24,7 +29,8 @@ use lutnn::coordinator::{ModelEntry, Registry};
 use lutnn::cost::{model_cost, LutConfig};
 use lutnn::lut::LutOpts;
 use lutnn::model_fmt;
-use lutnn::nn::graph::LayerParams;
+use lutnn::model_import;
+use lutnn::nn::graph::{Graph, LayerParams};
 use lutnn::nn::models;
 use lutnn::tensor::Tensor;
 use lutnn::train::{self, TrainConfig};
@@ -38,6 +44,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("infer") => cmd_infer(&args),
         Some("cost") => cmd_cost(&args),
+        Some("import") => cmd_import(&args),
         Some("convert") => cmd_convert(&args),
         Some("compile") => cmd_compile(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -62,8 +69,9 @@ USAGE: lutnn <serve|infer|cost|convert|compile|inspect> [flags]
            [--replicas 1] [--max-batch 8] [--max-wait-ms 2]
   infer    <bundle.lutnn> [--batch 1] [--iters 1] [--naive]
   cost     [--k 16] [--v <override>]
+  import   <graph.nnef> <out.lutnn>
   convert  <dense.lutnn> <out.lutnn> [--centroids 16] [--bits 8]
-  compile  <dense.lutnn|synth> <out.lutnn> [--centroids 16] [--bits 8]
+  compile  <dense.lutnn|graph.nnef|synth> <out.lutnn> [--centroids 16] [--bits 8]
            [--epochs 15] [--batch 64] [--samples 32] [--lr 0.005]
            [--t-lr 0.05] [--init-t 1.0] [--anneal 0.85] [--seed 0]
   inspect  <bundle.lutnn>"
@@ -150,6 +158,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Deterministic synthetic input batch matching the graph: normal
+/// activations, or uniform token ids below the vocab for BERT bundles.
+fn sample_input(graph: &Graph, batch: usize, seed: u64) -> Tensor {
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&graph.input_shape[1..]);
+    let n: usize = shape.iter().product();
+    let mut rng = Prng::new(seed);
+    match &graph.bert {
+        Some(b) => Tensor::new(shape, (0..n).map(|_| rng.below(b.vocab) as f32).collect()),
+        None => Tensor::new(shape, rng.normal_vec(n, 1.0)),
+    }
+}
+
 fn cmd_infer(args: &Args) -> Result<()> {
     let path = args
         .positional
@@ -159,16 +180,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 1);
     let iters = args.get_usize("iters", 1);
     let opts = if args.has("naive") { LutOpts::none() } else { LutOpts::deployed() };
-    let mut shape = vec![batch];
-    shape.extend_from_slice(&graph.input_shape[1..]);
-    let mut rng = Prng::new(0);
-    let n: usize = shape.iter().product();
-    let x = if graph.bert.is_some() {
-        let vocab = graph.bert.as_ref().unwrap().vocab;
-        Tensor::new(shape.clone(), (0..n).map(|_| rng.below(vocab) as f32).collect())
-    } else {
-        Tensor::new(shape.clone(), rng.normal_vec(n, 1.0))
-    };
+    let x = sample_input(&graph, batch, 0);
     let mut session = SessionBuilder::new(&graph)
         .opts(opts)
         .max_batch(batch)
@@ -221,6 +233,31 @@ fn cmd_cost(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_import(args: &Args) -> Result<()> {
+    let usage = "usage: lutnn import <graph.nnef> <out.lutnn>";
+    let src = args.positional.first().ok_or_else(|| anyhow!("{usage}"))?;
+    let dst = args.positional.get(1).ok_or_else(|| anyhow!("{usage}"))?;
+    let graph = model_import::import_file(src)?;
+    println!(
+        "imported '{}': input {:?}, {} op(s), {} layer(s), {} param bytes",
+        graph.name,
+        graph.input_shape,
+        graph.ops.len(),
+        graph.layers.len(),
+        graph.param_bytes()
+    );
+    model_fmt::save_bundle(&graph, dst)?;
+    // Load-back + session smoke: the written bundle must round-trip
+    // into a runnable session before we call the import good.
+    let reloaded = model_fmt::load_bundle(dst)?;
+    let mut session = SessionBuilder::new(&reloaded).build().context("compiling session")?;
+    let x = sample_input(&reloaded, graph.input_shape[0].max(1), 0);
+    let mut out = Tensor::zeros(vec![0]);
+    session.run(&x, &mut out)?;
+    println!("wrote {dst}; smoke run ok, out_shape={:?}", out.shape);
+    Ok(())
+}
+
 fn cmd_convert(args: &Args) -> Result<()> {
     let src = args
         .positional
@@ -235,11 +272,7 @@ fn cmd_convert(args: &Args) -> Result<()> {
     let bits = args.get_usize("bits", 8) as u8;
     // Synthetic calibration batch (rust-side conversion is meant for
     // benching; accuracy-preserving conversion happens in python training).
-    let mut shape = vec![32];
-    shape.extend_from_slice(&graph.input_shape[1..]);
-    let n: usize = shape.iter().product();
-    let mut rng = Prng::new(0);
-    let sample = Tensor::new(shape, rng.normal_vec(n, 1.0));
+    let sample = sample_input(&graph, 32, 0);
     let lut = models::lutify_graph(&graph, &sample, centroids, bits, 0);
     model_fmt::save_bundle(&lut, dst)?;
     println!(
@@ -279,6 +312,9 @@ fn cmd_compile(args: &Args) -> Result<()> {
             10,
             cfg.seed,
         )
+    } else if src.ends_with(".nnef") {
+        // Import-and-compile in one step.
+        model_import::import_file(src)?
     } else {
         model_fmt::load_bundle(src)?
     };
@@ -288,11 +324,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
 
     // Synthetic calibration activations; point `--samples` higher (and
     // feed a real bundle) when compiling for deployment.
-    let mut shape = vec![samples];
-    shape.extend_from_slice(&graph.input_shape[1..]);
-    let n: usize = shape.iter().product();
-    let mut rng = Prng::new(cfg.seed);
-    let sample = Tensor::new(shape, rng.normal_vec(n, 1.0));
+    let sample = sample_input(&graph, samples, cfg.seed);
 
     println!(
         "compiling '{}' (K={centroids}, {bits}-bit tables, {} epochs, t: {} x{}/epoch)",

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::lut::LutLinear;
 use crate::nn::bert::BertConfig;
@@ -23,10 +23,51 @@ pub const ALIGN: usize = 64;
 
 // ----------------------------------------------------------------- read
 
-fn read_u32(data: &[u8], off: usize) -> Result<u32> {
+/// Typed failure modes of bundle parsing. Every malformed input —
+/// truncation, corrupt header, unknown op/layer kind, out-of-range or
+/// overflowing blob descriptors — maps to one of these instead of a
+/// panic, so servers can probe untrusted bundle files defensively.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BundleError {
+    /// magic bytes are not `LUTN`
+    BadMagic,
+    /// version field is not [`VERSION`]
+    BadVersion(u32),
+    /// file ends before the named section does
+    Truncated(&'static str),
+    /// header is present but not the JSON the format requires
+    CorruptHeader(String),
+    /// graph references an op this build does not know
+    UnknownOp(String),
+    /// layer entry has a kind this build does not know
+    UnknownLayerKind(String),
+    /// blob descriptor points outside the file (or overflows)
+    BlobOutOfBounds(String),
+    /// blob shapes are internally inconsistent
+    ShapeMismatch(String),
+}
+
+impl std::fmt::Display for BundleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BundleError::BadMagic => write!(f, "not a .lutnn bundle (bad magic)"),
+            BundleError::BadVersion(v) => write!(f, "unsupported bundle version {v}"),
+            BundleError::Truncated(what) => write!(f, "truncated bundle ({what})"),
+            BundleError::CorruptHeader(m) => write!(f, "corrupt bundle header: {m}"),
+            BundleError::UnknownOp(op) => write!(f, "unknown graph op '{op}'"),
+            BundleError::UnknownLayerKind(k) => write!(f, "unknown layer kind '{k}'"),
+            BundleError::BlobOutOfBounds(key) => write!(f, "blob '{key}' out of bounds"),
+            BundleError::ShapeMismatch(m) => write!(f, "bundle shape mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for BundleError {}
+
+fn read_u32(data: &[u8], off: usize, what: &'static str) -> Result<u32> {
     Ok(u32::from_le_bytes(
         data.get(off..off + 4)
-            .ok_or_else(|| anyhow!("truncated bundle"))?
+            .ok_or(BundleError::Truncated(what))?
             .try_into()?,
     ))
 }
@@ -40,16 +81,16 @@ struct BlobRef {
 fn blob_ref(entry: &Json, key: &str) -> Result<BlobRef> {
     let b = entry
         .get(key)
-        .ok_or_else(|| anyhow!("layer missing blob '{key}'"))?;
+        .ok_or_else(|| BundleError::CorruptHeader(format!("layer missing blob '{key}'")))?;
     Ok(BlobRef {
         offset: b
             .get("offset")
             .and_then(|v| v.as_usize())
-            .ok_or_else(|| anyhow!("blob '{key}' missing offset"))?,
+            .ok_or_else(|| BundleError::CorruptHeader(format!("blob '{key}' missing offset")))?,
         shape: b
             .get("shape")
             .and_then(|v| v.as_usize_vec())
-            .ok_or_else(|| anyhow!("blob '{key}' missing shape"))?,
+            .ok_or_else(|| BundleError::CorruptHeader(format!("blob '{key}' missing shape")))?,
         dtype: b
             .get("dtype")
             .and_then(|v| v.as_str())
@@ -58,14 +99,28 @@ fn blob_ref(entry: &Json, key: &str) -> Result<BlobRef> {
     })
 }
 
+/// Byte range of a blob, with every arithmetic step checked so hostile
+/// shape/offset values fail typed instead of overflowing.
+fn blob_range(b: &BlobRef, elem_bytes: usize, len: usize) -> Result<std::ops::Range<usize>> {
+    let n = b
+        .shape
+        .iter()
+        .try_fold(1usize, |acc, &s| acc.checked_mul(s))
+        .and_then(|n| n.checked_mul(elem_bytes))
+        .ok_or_else(|| BundleError::ShapeMismatch(format!("blob shape {:?} overflows", b.shape)))?;
+    let end = b
+        .offset
+        .checked_add(n)
+        .filter(|&e| e <= len)
+        .ok_or_else(|| BundleError::BlobOutOfBounds(format!("{:?} @ {}", b.shape, b.offset)))?;
+    Ok(b.offset..end)
+}
+
 fn read_f32_blob(data: &[u8], b: &BlobRef) -> Result<Vec<f32>> {
     if b.dtype != "f32" {
-        bail!("expected f32 blob, got {}", b.dtype);
+        return Err(BundleError::ShapeMismatch(format!("expected f32 blob, got {}", b.dtype)).into());
     }
-    let n: usize = b.shape.iter().product();
-    let bytes = data
-        .get(b.offset..b.offset + 4 * n)
-        .ok_or_else(|| anyhow!("blob out of bounds"))?;
+    let bytes = &data[blob_range(b, 4, data.len())?];
     Ok(bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -74,12 +129,9 @@ fn read_f32_blob(data: &[u8], b: &BlobRef) -> Result<Vec<f32>> {
 
 fn read_i8_blob(data: &[u8], b: &BlobRef) -> Result<Vec<i8>> {
     if b.dtype != "i8" {
-        bail!("expected i8 blob, got {}", b.dtype);
+        return Err(BundleError::ShapeMismatch(format!("expected i8 blob, got {}", b.dtype)).into());
     }
-    let n: usize = b.shape.iter().product();
-    let bytes = data
-        .get(b.offset..b.offset + n)
-        .ok_or_else(|| anyhow!("blob out of bounds"))?;
+    let bytes = &data[blob_range(b, 1, data.len())?];
     Ok(bytes.iter().map(|&x| x as i8).collect())
 }
 
@@ -101,18 +153,22 @@ fn parse_op(j: &Json) -> Result<Op> {
             stride: j.get("stride").and_then(|v| v.as_usize()).unwrap_or(1),
         },
         "bn" => Op::Bn { layer: layer()? },
+        "layernorm" => Op::Ln { layer: layer()? },
         "relu" => Op::Relu,
+        "gelu" => Op::Gelu,
         "maxpool" => Op::MaxPool {
             k: j.get("k").and_then(|v| v.as_usize()).unwrap_or(2),
             stride: j.get("stride").and_then(|v| v.as_usize()).unwrap_or(2),
         },
         "gap" => Op::Gap,
+        "flatten" => Op::Flatten,
         "linear" => Op::Linear { layer: layer()? },
         "save" => Op::Save { slot: j.get("slot").and_then(|v| v.as_usize()).unwrap_or(0) },
         "restore" => Op::Restore { slot: j.get("slot").and_then(|v| v.as_usize()).unwrap_or(0) },
         "add" => Op::Add { slot: j.get("slot").and_then(|v| v.as_usize()).unwrap_or(0) },
+        "mul" => Op::Mul { slot: j.get("slot").and_then(|v| v.as_usize()).unwrap_or(0) },
         "bert" => Op::Bert,
-        other => bail!("unknown graph op '{other}'"),
+        other => return Err(BundleError::UnknownOp(other.to_string()).into()),
     })
 }
 
@@ -124,10 +180,9 @@ fn parse_layer(data: &[u8], entry: &Json) -> Result<LayerParams> {
     Ok(match kind {
         "dense" => {
             let w_ref = blob_ref(entry, "w")?;
-            if w_ref.shape.len() != 2 {
-                bail!("dense w must be 2-D");
-            }
-            let m = w_ref.shape[1];
+            let [_, m] = w_ref.shape[..] else {
+                return Err(BundleError::ShapeMismatch("dense w must be [D,M]".into()).into());
+            };
             let w = read_f32_blob(data, &w_ref)?;
             let b = match entry.get("b") {
                 Some(_) => Some(read_f32_blob(data, &blob_ref(entry, "b")?)?),
@@ -138,23 +193,44 @@ fn parse_layer(data: &[u8], entry: &Json) -> Result<LayerParams> {
         "lut" => {
             let c_ref = blob_ref(entry, "centroids")?;
             let [c, k, v] = c_ref.shape[..] else {
-                bail!("centroids must be [C,K,V]")
+                return Err(BundleError::ShapeMismatch("centroids must be [C,K,V]".into()).into());
             };
+            if c == 0 || k == 0 || v == 0 {
+                return Err(BundleError::ShapeMismatch("centroids dims must be > 0".into()).into());
+            }
             let centroids = read_f32_blob(data, &c_ref)?;
             let t_ref = blob_ref(entry, "table_q")?;
-            let m = *t_ref
-                .shape
-                .get(2)
-                .ok_or_else(|| anyhow!("table_q must be [C,K,M]"))?;
+            let [tc, tk, m] = t_ref.shape[..] else {
+                return Err(BundleError::ShapeMismatch("table_q must be [C,K,M]".into()).into());
+            };
+            if (tc, tk) != (c, k) {
+                return Err(BundleError::ShapeMismatch(format!(
+                    "table_q [{tc},{tk},{m}] disagrees with centroids [C={c},K={k}]"
+                ))
+                .into());
+            }
             let table = read_i8_blob(data, &t_ref)?;
             let scale = read_f32_blob(data, &blob_ref(entry, "scale")?)?;
             if scale.len() != c {
-                bail!("scale len {} != C {}", scale.len(), c);
+                return Err(BundleError::ShapeMismatch(format!(
+                    "scale len {} != C {c}",
+                    scale.len()
+                ))
+                .into());
             }
             let bias = match entry.get("b") {
                 Some(_) => Some(read_f32_blob(data, &blob_ref(entry, "b")?)?),
                 None => None,
             };
+            if let Some(b) = &bias {
+                if b.len() != m {
+                    return Err(BundleError::ShapeMismatch(format!(
+                        "bias len {} != M {m}",
+                        b.len()
+                    ))
+                    .into());
+                }
+            }
             let cb = Codebooks::new(c, k, v, centroids);
             let qt = QTable { data: table, c, k, m, scale };
             LayerParams::Lut(LutLinear::from_parts(cb, qt, bias))
@@ -171,32 +247,40 @@ fn parse_layer(data: &[u8], entry: &Json) -> Result<LayerParams> {
         },
         "embedding" => {
             let tok_ref = blob_ref(entry, "tok")?;
-            let d = tok_ref.shape[1];
+            let [_, d] = tok_ref.shape[..] else {
+                return Err(BundleError::ShapeMismatch("embedding tok must be [V,D]".into()).into());
+            };
+            if d == 0 {
+                return Err(BundleError::ShapeMismatch("embedding dim must be > 0".into()).into());
+            }
             LayerParams::Embedding {
                 tok: read_f32_blob(data, &tok_ref)?,
                 pos: read_f32_blob(data, &blob_ref(entry, "pos")?)?,
                 d,
             }
         }
-        other => bail!("unknown layer kind '{other}'"),
+        other => return Err(BundleError::UnknownLayerKind(other.to_string()).into()),
     })
 }
 
-/// Parse a bundle from raw bytes.
+/// Parse a bundle from raw bytes. Malformed input of any kind comes
+/// back as a [`BundleError`]-rooted `Err`, never a panic.
 pub fn parse_bundle(data: &[u8]) -> Result<Graph> {
-    if data.len() < 12 || &data[..4] != MAGIC {
-        bail!("not a .lutnn bundle (bad magic)");
+    if data.len() < 4 || &data[..4] != MAGIC {
+        return Err(BundleError::BadMagic.into());
     }
-    let version = read_u32(data, 4)?;
+    let version = read_u32(data, 4, "version field")?;
     if version != VERSION {
-        bail!("unsupported bundle version {version}");
+        return Err(BundleError::BadVersion(version).into());
     }
-    let hlen = read_u32(data, 8)? as usize;
+    let hlen = read_u32(data, 8, "header length field")? as usize;
     let header_bytes = data
-        .get(12..12 + hlen)
-        .ok_or_else(|| anyhow!("truncated header"))?;
-    let header = json::parse(std::str::from_utf8(header_bytes)?)
-        .map_err(|e| anyhow!("bad header json: {e}"))?;
+        .get(12..12usize.checked_add(hlen).ok_or(BundleError::Truncated("header"))?)
+        .ok_or(BundleError::Truncated("header"))?;
+    let header_str = std::str::from_utf8(header_bytes)
+        .map_err(|e| BundleError::CorruptHeader(format!("not utf-8: {e}")))?;
+    let header = json::parse(header_str)
+        .map_err(|e| BundleError::CorruptHeader(format!("bad json: {e}")))?;
 
     let name = header
         .get("model")
@@ -206,11 +290,11 @@ pub fn parse_bundle(data: &[u8]) -> Result<Graph> {
     let input_shape = header
         .get("input_shape")
         .and_then(|v| v.as_usize_vec())
-        .ok_or_else(|| anyhow!("header missing input_shape"))?;
+        .ok_or_else(|| BundleError::CorruptHeader("missing input_shape".into()))?;
     let ops = header
         .get("graph")
         .and_then(|v| v.as_arr())
-        .ok_or_else(|| anyhow!("header missing graph"))?
+        .ok_or_else(|| BundleError::CorruptHeader("missing graph".into()))?
         .iter()
         .map(parse_op)
         .collect::<Result<Vec<_>>>()?;
@@ -218,7 +302,7 @@ pub fn parse_bundle(data: &[u8]) -> Result<Graph> {
     for (lname, entry) in header
         .get("layers")
         .and_then(|v| v.as_obj())
-        .ok_or_else(|| anyhow!("header missing layers"))?
+        .ok_or_else(|| BundleError::CorruptHeader("missing layers".into()))?
     {
         layers.insert(
             lname.clone(),
@@ -466,13 +550,19 @@ pub fn save_bundle(g: &Graph, path: &str) -> Result<()> {
                 ("op", Json::str("bn")),
                 ("layer", Json::str(layer.clone())),
             ]),
+            Op::Ln { layer } => Json::obj(vec![
+                ("op", Json::str("layernorm")),
+                ("layer", Json::str(layer.clone())),
+            ]),
             Op::Relu => Json::obj(vec![("op", Json::str("relu"))]),
+            Op::Gelu => Json::obj(vec![("op", Json::str("gelu"))]),
             Op::MaxPool { k, stride } => Json::obj(vec![
                 ("op", Json::str("maxpool")),
                 ("k", Json::num(*k as f64)),
                 ("stride", Json::num(*stride as f64)),
             ]),
             Op::Gap => Json::obj(vec![("op", Json::str("gap"))]),
+            Op::Flatten => Json::obj(vec![("op", Json::str("flatten"))]),
             Op::Linear { layer } => Json::obj(vec![
                 ("op", Json::str("linear")),
                 ("layer", Json::str(layer.clone())),
@@ -487,6 +577,10 @@ pub fn save_bundle(g: &Graph, path: &str) -> Result<()> {
             ]),
             Op::Add { slot } => Json::obj(vec![
                 ("op", Json::str("add")),
+                ("slot", Json::num(*slot as f64)),
+            ]),
+            Op::Mul { slot } => Json::obj(vec![
+                ("op", Json::str("mul")),
                 ("slot", Json::num(*slot as f64)),
             ]),
             Op::Bert => Json::obj(vec![("op", Json::str("bert"))]),
@@ -588,6 +682,85 @@ mod tests {
         ok_magic.extend_from_slice(&1u32.to_le_bytes());
         ok_magic.extend_from_slice(&9999u32.to_le_bytes()); // header past EOF
         assert!(parse_bundle(&ok_magic).is_err());
+    }
+
+    /// Wrap a raw header string in the binary envelope (magic, version,
+    /// length) so tests can hand-craft hostile headers.
+    fn mini_bundle(header: &str) -> Vec<u8> {
+        let mut out = Vec::from(*MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out
+    }
+
+    fn err_text(data: &[u8]) -> String {
+        format!("{:#}", parse_bundle(data).expect_err("hostile bundle must not parse"))
+    }
+
+    #[test]
+    fn every_truncation_point_errors_cleanly() {
+        // A valid bundle cut at EVERY byte boundary must come back as a
+        // typed Err — no panic, no partial graph.
+        let g = build_cnn_graph("tr", [8, 8, 3], &[ConvSpec { cout: 4, k: 3, stride: 1 }], 5, 0);
+        let path = tmp("trunc.lutnn");
+        save_bundle(&g, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(parse_bundle(&data).is_ok());
+        for cut in 0..data.len() {
+            assert!(parse_bundle(&data[..cut]).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn corrupt_header_json_is_a_typed_error() {
+        let text = err_text(&mini_bundle("{\"model\": \"x\", nonsense"));
+        assert!(text.contains("corrupt bundle header"), "{text}");
+        // non-utf8 header bytes
+        let mut raw = mini_bundle("{}");
+        let n = raw.len();
+        raw[n - 1] = 0xFF;
+        assert!(err_text(&raw).contains("corrupt bundle header"));
+        // valid json missing required sections
+        assert!(err_text(&mini_bundle("{}")).contains("missing input_shape"));
+    }
+
+    #[test]
+    fn unknown_layer_kind_and_op_are_typed_errors() {
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"l":{"kind":"wat"}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("unknown layer kind 'wat'"));
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[{"op":"frobnicate"}],"layers":{},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("unknown graph op 'frobnicate'"));
+    }
+
+    #[test]
+    fn hostile_blob_descriptors_error_not_panic() {
+        // offset+shape past EOF
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"l":{"kind":"dense","w":{"offset":1000000,"shape":[4,4],"dtype":"f32"}}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("out of bounds"));
+        // shape product overflows usize
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"l":{"kind":"dense","w":{"offset":0,"shape":[4611686018427387904,4611686018427387904],"dtype":"f32"}}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("overflows"));
+        // embedding with rank-1 tok table used to index-panic
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"e":{"kind":"embedding","tok":{"offset":0,"shape":[8],"dtype":"f32"},"pos":{"offset":0,"shape":[8],"dtype":"f32"}}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("tok must be [V,D]"));
+    }
+
+    #[test]
+    fn lut_layer_shape_disagreement_is_a_typed_error() {
+        // table_q says [C=2,K=4] while centroids say [C=2,K=8]: the old
+        // reader fed this straight into LutLinear::from_parts and died
+        // on an assert. Blobs all point at offset 0 with in-bounds sizes
+        // (the header itself is the data region — contents are junk,
+        // which is fine: validation must reject before constructing).
+        let h = concat!(
+            r#"{"model":"x","input_shape":[1,8],"graph":[],"layers":{"l":{"kind":"lut","#,
+            r#""centroids":{"offset":0,"shape":[2,8,2],"dtype":"f32"},"#,
+            r#""table_q":{"offset":0,"shape":[2,4,3],"dtype":"i8"},"#,
+            r#""scale":{"offset":0,"shape":[2],"dtype":"f32"}}},"meta":{}}"#
+        );
+        let text = err_text(&mini_bundle(h));
+        assert!(text.contains("disagrees with centroids"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! Validated importer IR: the statement AST re-checked against the op
+//! whitelist, with every attribute typed and every activation shape
+//! inferred. All rejection paths produce an [`ImportError`] carrying
+//! the 1-based line of the offending statement — unknown ops, unknown
+//! or ill-typed attributes, arity mistakes, dtype violations and shape
+//! mismatches all diagnose here, before any weights are materialized.
+
+use std::collections::BTreeMap;
+
+use super::parse::{Attr, AttrValue, Stmt, StmtKind};
+use super::ImportError;
+use crate::tensor::im2col::same_out_size;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    /// token ids; only valid as the module input of an embedding chain
+    I32,
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        })
+    }
+}
+
+/// One whitelisted op with its validated attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpIr {
+    Conv { out: usize, k: usize, stride: usize },
+    Linear { out: usize },
+    BatchNorm,
+    LayerNorm,
+    Relu,
+    Gelu,
+    Pool { k: usize, stride: usize },
+    Gap,
+    /// `reshape { shape = [-1] }`: collapse to `[N, prod]`
+    Flatten,
+    /// identity `transpose`: pure rename, no instruction is emitted
+    Alias,
+    Add,
+    Mul,
+    Embedding { vocab: usize, dim: usize },
+    Attention { layers: usize, heads: usize, ffn: usize },
+    MeanPool,
+}
+
+/// One op statement after validation.
+#[derive(Debug, Clone)]
+pub struct NodeIr {
+    pub name: String,
+    pub op: OpIr,
+    pub args: Vec<String>,
+    /// inferred output shape (batch dim included)
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub line: usize,
+}
+
+/// A whole validated module: single input, single output, nodes in
+/// statement order.
+#[derive(Debug, Clone)]
+pub struct ModuleIr {
+    pub name: String,
+    pub seed: u64,
+    pub input_name: String,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: Dtype,
+    pub nodes: Vec<NodeIr>,
+    pub output: String,
+    pub output_line: usize,
+}
+
+const OPS: &[&str] = &[
+    "conv2d", "linear", "batchnorm", "layernorm", "relu", "gelu", "pool", "gap", "reshape",
+    "transpose", "add", "mul", "embedding", "attention", "mean_pool",
+];
+
+fn err(line: usize, msg: impl Into<String>) -> ImportError {
+    ImportError::new(line, msg)
+}
+
+/// Attribute bag: typed take-by-key with an unused-key sweep, so every
+/// op both gets the attributes it wants and rejects the ones it does
+/// not understand.
+struct Attrs<'a> {
+    op: &'a str,
+    line: usize,
+    map: BTreeMap<&'a str, &'a Attr>,
+}
+
+impl<'a> Attrs<'a> {
+    fn new(op: &'a str, line: usize, attrs: &'a [Attr]) -> Result<Attrs<'a>, ImportError> {
+        let mut map = BTreeMap::new();
+        for a in attrs {
+            if map.insert(a.key.as_str(), a).is_some() {
+                return Err(err(a.line, format!("duplicate attribute '{}' on {op}", a.key)));
+            }
+        }
+        Ok(Attrs { op, line, map })
+    }
+
+    fn usize_opt(&mut self, key: &str) -> Result<Option<usize>, ImportError> {
+        let Some(a) = self.map.remove(key) else { return Ok(None) };
+        match a.value {
+            AttrValue::Num(n) if n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64 => {
+                Ok(Some(n as usize))
+            }
+            _ => Err(err(
+                a.line,
+                format!("attribute '{key}' on {} must be a non-negative integer", self.op),
+            )),
+        }
+    }
+
+    fn usize_req(&mut self, key: &str) -> Result<usize, ImportError> {
+        self.usize_opt(key)?
+            .ok_or_else(|| err(self.line, format!("{} requires attribute '{key}'", self.op)))
+    }
+
+    fn str_opt(&mut self, key: &str) -> Result<Option<String>, ImportError> {
+        let Some(a) = self.map.remove(key) else { return Ok(None) };
+        match &a.value {
+            AttrValue::Str(s) => Ok(Some(s.clone())),
+            _ => Err(err(a.line, format!("attribute '{key}' on {} must be a string", self.op))),
+        }
+    }
+
+    fn list_req(&mut self, key: &str) -> Result<Vec<f64>, ImportError> {
+        let a = self
+            .map
+            .remove(key)
+            .ok_or_else(|| err(self.line, format!("{} requires attribute '{key}'", self.op)))?;
+        match &a.value {
+            AttrValue::List(v) => Ok(v.clone()),
+            _ => Err(err(a.line, format!("attribute '{key}' on {} must be a list", self.op))),
+        }
+    }
+
+    /// Reject whatever the op did not consume.
+    fn finish(self) -> Result<(), ImportError> {
+        if let Some((key, a)) = self.map.into_iter().next() {
+            return Err(err(a.line, format!("unsupported attribute '{key}' on {}", self.op)));
+        }
+        Ok(())
+    }
+}
+
+struct TensorInfo {
+    shape: Vec<usize>,
+    dtype: Dtype,
+}
+
+pub fn build(stmts: &[Stmt]) -> Result<ModuleIr, ImportError> {
+    let mut name = None;
+    let mut seed = 0u64;
+    let mut input: Option<(String, Vec<usize>, Dtype, usize)> = None;
+    let mut output: Option<(String, usize)> = None;
+    let mut nodes: Vec<NodeIr> = Vec::new();
+    let mut tensors: BTreeMap<String, TensorInfo> = BTreeMap::new();
+
+    for stmt in stmts {
+        let line = stmt.line;
+        match &stmt.kind {
+            StmtKind::Model { name: n, attrs } => {
+                if name.is_some() {
+                    return Err(err(line, "duplicate model statement"));
+                }
+                name = Some(n.clone());
+                let mut a = Attrs::new("model", line, attrs)?;
+                if let Some(s) = a.usize_opt("seed")? {
+                    seed = s as u64;
+                }
+                a.finish()?;
+            }
+            StmtKind::Input { name: n, dtype, shape } => {
+                if input.is_some() {
+                    return Err(err(line, "only one input is supported"));
+                }
+                let dt = match dtype.as_str() {
+                    "f32" => Dtype::F32,
+                    "i32" => Dtype::I32,
+                    other => return Err(err(line, format!("unknown dtype '{other}'"))),
+                };
+                let dims = shape
+                    .iter()
+                    .map(|&d| {
+                        if d >= 1.0 && d.fract() == 0.0 && d <= u32::MAX as f64 {
+                            Ok(d as usize)
+                        } else {
+                            Err(err(line, format!("input dims must be positive integers, got {d}")))
+                        }
+                    })
+                    .collect::<Result<Vec<usize>, _>>()?;
+                if tensors.contains_key(n) {
+                    return Err(err(line, format!("tensor '{n}' defined twice")));
+                }
+                tensors.insert(n.clone(), TensorInfo { shape: dims.clone(), dtype: dt });
+                input = Some((n.clone(), dims, dt, line));
+            }
+            StmtKind::Output { name: n } => {
+                if output.is_some() {
+                    return Err(err(line, "only one output is supported"));
+                }
+                if !tensors.contains_key(n) {
+                    return Err(err(line, format!("unknown tensor '{n}'")));
+                }
+                output = Some((n.clone(), line));
+            }
+            StmtKind::Op { result, op, args, attrs } => {
+                if output.is_some() {
+                    return Err(err(line, "op after output statement"));
+                }
+                if tensors.contains_key(result) {
+                    return Err(err(line, format!("tensor '{result}' defined twice")));
+                }
+                let node = check_op(result, op, args, attrs, line, &tensors)?;
+                tensors.insert(
+                    result.clone(),
+                    TensorInfo { shape: node.shape.clone(), dtype: node.dtype },
+                );
+                nodes.push(node);
+            }
+        }
+    }
+
+    let name = name.ok_or_else(|| err(1, "missing model statement"))?;
+    let (input_name, input_shape, input_dtype, input_line) =
+        input.ok_or_else(|| err(1, "missing input statement"))?;
+    let (output, output_line) = output.ok_or_else(|| err(1, "missing output statement"))?;
+    if input_dtype == Dtype::I32
+        && !nodes.iter().any(|n| matches!(n.op, OpIr::Embedding { .. }))
+    {
+        return Err(err(input_line, "i32 input requires an embedding op to consume it"));
+    }
+    Ok(ModuleIr {
+        name,
+        seed,
+        input_name,
+        input_shape,
+        input_dtype,
+        nodes,
+        output,
+        output_line,
+    })
+}
+
+fn check_op(
+    result: &str,
+    op: &str,
+    args: &[String],
+    attrs: &[Attr],
+    line: usize,
+    tensors: &BTreeMap<String, TensorInfo>,
+) -> Result<NodeIr, ImportError> {
+    if !OPS.contains(&op) {
+        return Err(err(line, format!("unknown op '{op}' (supported: {})", OPS.join(", "))));
+    }
+    let arity = match op {
+        "add" | "mul" => 2,
+        _ => 1,
+    };
+    if args.len() != arity {
+        return Err(err(line, format!("{op} takes {arity} argument(s), got {}", args.len())));
+    }
+    let mut ins = Vec::with_capacity(arity);
+    for a in args {
+        ins.push(
+            tensors.get(a).ok_or_else(|| err(line, format!("unknown tensor '{a}'")))?,
+        );
+    }
+    // Everything except embedding consumes f32 activations.
+    if op != "embedding" {
+        for (a, t) in args.iter().zip(&ins) {
+            if t.dtype != Dtype::F32 {
+                return Err(err(line, format!("{op} requires f32 input, but '{a}' is {}", t.dtype)));
+            }
+        }
+    }
+    let x = &ins[0];
+    let mut a = Attrs::new(op, line, attrs)?;
+    let rank_err = |want: &str| {
+        err(line, format!("{op} expects a {want} input, got shape {:?}", x.shape))
+    };
+
+    let (opir, shape, dtype) = match op {
+        "conv2d" => {
+            let out = a.usize_req("out")?;
+            let k = a.usize_req("kernel")?;
+            let stride = a.usize_opt("stride")?.unwrap_or(1);
+            if out == 0 || stride == 0 {
+                return Err(err(line, "conv2d 'out' and 'stride' must be >= 1"));
+            }
+            if k == 0 || k % 2 == 0 {
+                return Err(err(line, format!("conv2d kernel must be odd (same padding), got {k}")));
+            }
+            let [n, h, w, _c] = x.shape[..] else { return Err(rank_err("rank-4 NHWC")) };
+            let sh = vec![n, same_out_size(h, stride), same_out_size(w, stride), out];
+            (OpIr::Conv { out, k, stride }, sh, Dtype::F32)
+        }
+        "linear" => {
+            let out = a.usize_req("out")?;
+            if out == 0 {
+                return Err(err(line, "linear 'out' must be >= 1"));
+            }
+            let [n, _d] = x.shape[..] else { return Err(rank_err("rank-2 [N, D]")) };
+            (OpIr::Linear { out }, vec![n, out], Dtype::F32)
+        }
+        "batchnorm" => {
+            if x.shape.len() != 4 {
+                return Err(rank_err("rank-4 NHWC"));
+            }
+            (OpIr::BatchNorm, x.shape.clone(), Dtype::F32)
+        }
+        "layernorm" => {
+            if x.shape.len() < 2 {
+                return Err(rank_err("rank >= 2"));
+            }
+            (OpIr::LayerNorm, x.shape.clone(), Dtype::F32)
+        }
+        "relu" => (OpIr::Relu, x.shape.clone(), Dtype::F32),
+        "gelu" => (OpIr::Gelu, x.shape.clone(), Dtype::F32),
+        "pool" => {
+            if let Some(kind) = a.str_opt("kind")? {
+                if kind != "max" {
+                    return Err(err(
+                        line,
+                        format!("unsupported attribute value kind=\"{kind}\" — only \"max\" pooling is supported"),
+                    ));
+                }
+            }
+            let k = a.usize_opt("kernel")?.unwrap_or(2);
+            let stride = a.usize_opt("stride")?.unwrap_or(k);
+            if k == 0 || stride == 0 {
+                return Err(err(line, "pool 'kernel' and 'stride' must be >= 1"));
+            }
+            let [n, h, w, c] = x.shape[..] else { return Err(rank_err("rank-4 NHWC")) };
+            if h < k || w < k {
+                return Err(err(
+                    line,
+                    format!("pool kernel {k} does not fit the {h}x{w} activation"),
+                ));
+            }
+            let sh = vec![n, (h - k) / stride + 1, (w - k) / stride + 1, c];
+            (OpIr::Pool { k, stride }, sh, Dtype::F32)
+        }
+        "gap" => {
+            let [n, _h, _w, c] = x.shape[..] else { return Err(rank_err("rank-4 NHWC")) };
+            (OpIr::Gap, vec![n, c], Dtype::F32)
+        }
+        "reshape" => {
+            let target = a.list_req("shape")?;
+            if target != [-1.0] {
+                return Err(err(
+                    line,
+                    format!("only reshape to [-1] (flatten) is supported, got {target:?}"),
+                ));
+            }
+            let n = x.shape[0];
+            let cols: usize = x.shape[1..].iter().product();
+            (OpIr::Flatten, vec![n, cols], Dtype::F32)
+        }
+        "transpose" => {
+            let perm = a.list_req("perm")?;
+            let identity: Vec<f64> = (0..x.shape.len()).map(|i| i as f64).collect();
+            if perm != identity {
+                return Err(err(
+                    line,
+                    format!("only the identity transpose is supported, got perm {perm:?}"),
+                ));
+            }
+            (OpIr::Alias, x.shape.clone(), Dtype::F32)
+        }
+        "add" | "mul" => {
+            if ins[0].shape != ins[1].shape {
+                return Err(err(
+                    line,
+                    format!(
+                        "{op} operand shapes differ: '{}' is {:?}, '{}' is {:?}",
+                        args[0], ins[0].shape, args[1], ins[1].shape
+                    ),
+                ));
+            }
+            let o = if op == "add" { OpIr::Add } else { OpIr::Mul };
+            (o, x.shape.clone(), Dtype::F32)
+        }
+        "embedding" => {
+            let vocab = a.usize_req("vocab")?;
+            let dim = a.usize_req("dim")?;
+            if vocab == 0 || dim == 0 {
+                return Err(err(line, "embedding 'vocab' and 'dim' must be >= 1"));
+            }
+            if x.dtype != Dtype::I32 {
+                return Err(err(
+                    line,
+                    format!("embedding requires an i32 token input, but '{}' is {}", args[0], x.dtype),
+                ));
+            }
+            let [n, t] = x.shape[..] else { return Err(rank_err("rank-2 [N, T] token")) };
+            (OpIr::Embedding { vocab, dim }, vec![n, t, dim], Dtype::F32)
+        }
+        "attention" => {
+            let layers = a.usize_req("layers")?;
+            let heads = a.usize_req("heads")?;
+            let ffn = a.usize_req("ffn")?;
+            if layers == 0 || heads == 0 || ffn == 0 {
+                return Err(err(line, "attention 'layers', 'heads' and 'ffn' must be >= 1"));
+            }
+            let [_n, _t, d] = x.shape[..] else { return Err(rank_err("rank-3 [N, T, D]")) };
+            if d % heads != 0 {
+                return Err(err(
+                    line,
+                    format!("attention width {d} is not divisible by {heads} heads"),
+                ));
+            }
+            (OpIr::Attention { layers, heads, ffn }, x.shape.clone(), Dtype::F32)
+        }
+        "mean_pool" => {
+            let [n, _t, d] = x.shape[..] else { return Err(rank_err("rank-3 [N, T, D]")) };
+            (OpIr::MeanPool, vec![n, d], Dtype::F32)
+        }
+        _ => unreachable!("op whitelist covers every branch"),
+    };
+    a.finish()?;
+    Ok(NodeIr { name: result.to_string(), op: opir, args: args.to_vec(), shape, dtype, line })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_module;
+    use super::*;
+
+    #[test]
+    fn infers_cnn_shapes() {
+        let m = parse_module(
+            "model \"m\" { seed = 5 };\n\
+             input x: f32[1, 8, 8, 3];\n\
+             c = conv2d(x) { out = 4, kernel = 3, stride = 2 };\n\
+             p = pool(c) { kind = \"max\", kernel = 2, stride = 2 };\n\
+             g = gap(p);\n\
+             y = linear(g) { out = 10 };\n\
+             output y;\n",
+        )
+        .unwrap();
+        assert_eq!(m.seed, 5);
+        assert_eq!(m.nodes[0].shape, vec![1, 4, 4, 4]); // same-pad conv, stride 2
+        assert_eq!(m.nodes[1].shape, vec![1, 2, 2, 4]); // valid 2x2 max pool
+        assert_eq!(m.nodes[2].shape, vec![1, 4]);
+        assert_eq!(m.nodes[3].shape, vec![1, 10]);
+        assert_eq!(m.output, "y");
+    }
+
+    #[test]
+    fn unknown_op_names_the_line_and_whitelist() {
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4];\ny = frobnicate(x);\noutput y;\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.message.contains("unknown op 'frobnicate'"), "{e}");
+        assert!(e.message.contains("conv2d"), "whitelist hint: {e}");
+    }
+
+    #[test]
+    fn shape_and_dtype_violations_diagnose() {
+        // linear on rank-4
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4, 4, 2];\ny = linear(x) { out = 2 };\noutput y;\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.message.contains("rank-2"), "{e}");
+        // add with mismatched operands
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4];\na = linear(x) { out = 2 };\n\
+             b = add(a, x);\noutput b;\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 4);
+        assert!(e.message.contains("operand shapes differ"), "{e}");
+        // relu on tokens
+        let e = parse_module(
+            "model \"m\";\ninput t: i32[1, 4];\ny = relu(t);\noutput y;\n",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("requires f32 input"), "{e}");
+    }
+
+    #[test]
+    fn attribute_violations_diagnose() {
+        // avg pooling is not whitelisted
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4, 4, 2];\np = pool(x) { kind = \"avg\" };\noutput p;\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.message.contains("only \"max\" pooling"), "{e}");
+        // unknown attribute
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4, 4, 2];\n\
+             c = conv2d(x) { out = 2, kernel = 3, dilation = 2 };\noutput c;\n",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("unsupported attribute 'dilation'"), "{e}");
+        // even kernels have no same-padding
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4, 4, 2];\nc = conv2d(x) { out = 2, kernel = 4 };\noutput c;\n",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("must be odd"), "{e}");
+        // non-flatten reshape
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4, 4, 2];\nr = reshape(x) { shape = [4, 8] };\noutput r;\n",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("only reshape to [-1]"), "{e}");
+    }
+
+    #[test]
+    fn structural_violations_diagnose() {
+        let e = parse_module("model \"m\";\ninput x: f32[1, 4];\noutput nope;\n").unwrap_err();
+        assert!(e.message.contains("unknown tensor 'nope'"), "{e}");
+        let e = parse_module("input x: f32[1, 4];\noutput x;\n").unwrap_err();
+        assert!(e.message.contains("missing model statement"), "{e}");
+        let e = parse_module(
+            "model \"m\";\ninput x: f32[1, 4];\nx = relu(x);\noutput x;\n",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("defined twice"), "{e}");
+        let e = parse_module("model \"m\";\ninput t: i32[1, 4];\noutput t;\n").unwrap_err();
+        assert!(e.message.contains("requires an embedding"), "{e}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Line-tracked lexer for the neutral graph text format. Tokens are
+//! deliberately few — identifiers, string/number literals, and the
+//! punctuation the statement grammar needs — so every character the
+//! format does not know is rejected with its line number.
+
+use super::ImportError;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Str(String),
+    Num(f64),
+    /// one of `= ( ) { } [ ] , : ;`
+    Punct(char),
+}
+
+impl std::fmt::Display for Tok {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "'{s}'"),
+            Tok::Str(s) => write!(f, "\"{s}\""),
+            Tok::Num(n) => write!(f, "{n}"),
+            Tok::Punct(c) => write!(f, "'{c}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SpannedTok {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+pub fn lex(src: &str) -> Result<Vec<SpannedTok>, ImportError> {
+    let mut out = Vec::new();
+    let mut line = 1usize;
+    let mut it = src.chars().peekable();
+    while let Some(&ch) = it.peek() {
+        match ch {
+            '\n' => {
+                line += 1;
+                it.next();
+            }
+            c if c.is_whitespace() => {
+                it.next();
+            }
+            '#' => {
+                while let Some(&c) = it.peek() {
+                    if c == '\n' {
+                        break;
+                    }
+                    it.next();
+                }
+            }
+            '"' => {
+                it.next();
+                let mut s = String::new();
+                loop {
+                    match it.next() {
+                        Some('"') => break,
+                        Some('\n') | None => {
+                            return Err(ImportError::new(line, "unterminated string literal"))
+                        }
+                        Some(c) => s.push(c),
+                    }
+                }
+                out.push(SpannedTok { tok: Tok::Str(s), line });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let mut s = String::new();
+                while let Some(&c) = it.peek() {
+                    if c.is_ascii_alphanumeric() || c == '_' {
+                        s.push(c);
+                        it.next();
+                    } else {
+                        break;
+                    }
+                }
+                out.push(SpannedTok { tok: Tok::Ident(s), line });
+            }
+            c if c.is_ascii_digit() || c == '-' => {
+                let mut s = String::new();
+                s.push(c);
+                it.next();
+                if c == '-' && !it.peek().is_some_and(|d| d.is_ascii_digit()) {
+                    return Err(ImportError::new(line, "'-' must start a number literal"));
+                }
+                let mut prev = c;
+                while let Some(&d) = it.peek() {
+                    let exp_sign = (d == '+' || d == '-') && (prev == 'e' || prev == 'E');
+                    if d.is_ascii_digit() || d == '.' || d == 'e' || d == 'E' || exp_sign {
+                        s.push(d);
+                        prev = d;
+                        it.next();
+                    } else {
+                        break;
+                    }
+                }
+                let n: f64 = s
+                    .parse()
+                    .map_err(|_| ImportError::new(line, format!("bad number literal '{s}'")))?;
+                out.push(SpannedTok { tok: Tok::Num(n), line });
+            }
+            c if "=(){}[],:;".contains(c) => {
+                it.next();
+                out.push(SpannedTok { tok: Tok::Punct(c), line });
+            }
+            c => return Err(ImportError::new(line, format!("unexpected character '{c}'"))),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_statements_with_lines() {
+        let toks = lex("# hi\nmodel \"m\";\nx = f(y) { k = 2.5 };\n").unwrap();
+        assert_eq!(toks[0].tok, Tok::Ident("model".into()));
+        assert_eq!(toks[0].line, 2);
+        assert_eq!(toks[1].tok, Tok::Str("m".into()));
+        let num = toks.iter().find(|t| matches!(t.tok, Tok::Num(_))).unwrap();
+        assert_eq!(num.tok, Tok::Num(2.5));
+        assert_eq!(num.line, 3);
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let toks = lex("[-1, 2e3]").unwrap();
+        assert_eq!(toks[1].tok, Tok::Num(-1.0));
+        assert_eq!(toks[3].tok, Tok::Num(2000.0));
+    }
+
+    #[test]
+    fn rejects_junk_with_line_number() {
+        let err = lex("ok;\n@").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("unexpected character '@'"));
+        let err = lex("\"open").unwrap_err();
+        assert!(err.message.contains("unterminated"));
+    }
+}

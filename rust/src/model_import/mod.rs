@@ -1,0 +1,93 @@
+//! Neutral graph importer: parse an NNEF-style text description of a
+//! network into a validated IR, infer every activation shape, and lower
+//! it onto the engine's own [`Graph`] ISA — the front door for models
+//! that were not born inside this repository.
+//!
+//! The pipeline is three total passes, each with line-numbered
+//! diagnostics ([`ImportError`]):
+//!
+//! ```text
+//! .nnef text --lex/parse--> AST --validate--> ModuleIr --lower--> Graph
+//!                 |                  |                     |
+//!            syntax errors     op whitelist +        slot assignment,
+//!                              shape inference       deterministic weights
+//! ```
+//!
+//! The format (see `models/zoo/*.nnef` for worked examples):
+//!
+//! ```text
+//! # comment
+//! model "cnn_tiny" { seed = 11 };
+//! input x: f32[1, 16, 16, 3];
+//! c0 = conv2d(x) { out = 16, kernel = 3, stride = 1 };
+//! r0 = relu(c0);
+//! y  = linear(g) { out = 10 };
+//! output y;
+//! ```
+//!
+//! Weights are not carried in the text: every parameterized layer is
+//! materialized deterministically from the model seed and the layer
+//! name, so a fixture file fully determines the imported graph, bit for
+//! bit. The imported graph is a *dense teacher* — feed it to
+//! [`crate::train::compile_graph`] to distill LUT layers, then
+//! [`crate::model_fmt::save_bundle`] / [`crate::api::SessionBuilder`]
+//! to serve it (`lutnn import` wires the whole chain).
+//!
+//! Op whitelist: `conv2d`, `linear`, `batchnorm`, `layernorm`, `relu`,
+//! `gelu`, `pool` (max), `gap`, `reshape` (flatten only), `transpose`
+//! (identity only), `add`, `mul`, plus the BERT triple `embedding` /
+//! `attention` / `mean_pool`, which is accepted only as the exact chain
+//! `embedding -> attention -> mean_pool -> linear` and lowers to a
+//! [`Op::Bert`](crate::nn::graph::Op) graph.
+
+mod ir;
+mod lex;
+mod lower;
+mod parse;
+pub mod zoo;
+
+pub use ir::{Dtype, ModuleIr, NodeIr, OpIr};
+
+use anyhow::Context;
+
+use crate::nn::graph::Graph;
+
+/// A diagnostic pinned to a 1-based source line. Everything the
+/// importer can reject — syntax, unknown ops, bad attributes, shape
+/// mismatches — surfaces as one of these.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ImportError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl ImportError {
+    pub(crate) fn new(line: usize, message: impl Into<String>) -> ImportError {
+        ImportError { line, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ImportError {}
+
+/// Parse + validate + shape-infer, stopping before lowering. Useful
+/// for tooling that wants the typed IR (shapes, per-node lines).
+pub fn parse_module(src: &str) -> Result<ModuleIr, ImportError> {
+    ir::build(&parse::parse(&lex::lex(src)?)?)
+}
+
+/// Full import: text to an executable dense [`Graph`].
+pub fn import_str(src: &str) -> Result<Graph, ImportError> {
+    lower::lower(&parse_module(src)?)
+}
+
+/// Import from a file on disk.
+pub fn import_file(path: &str) -> anyhow::Result<Graph> {
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    import_str(&src).with_context(|| format!("importing {path}"))
+}

@@ -1,0 +1,266 @@
+//! Recursive-descent parser: token stream to statement AST. Syntax only
+//! — op names, attribute keys and shapes are checked later by `ir`, so
+//! the parser stays a faithful mirror of the grammar:
+//!
+//! ```text
+//! module    := stmt* ;
+//! stmt      := model | input | output | op ;
+//! model     := "model" STR attrs? ";" ;
+//! input     := "input" IDENT ":" IDENT "[" num ("," num)* "]" ";" ;
+//! output    := "output" IDENT ";" ;
+//! op        := IDENT "=" IDENT "(" IDENT ("," IDENT)* ")" attrs? ";" ;
+//! attrs     := "{" (IDENT "=" value) ("," IDENT "=" value)* "}" ;
+//! value     := NUM | STR | "[" NUM ("," NUM)* "]" ;
+//! ```
+
+use super::lex::{SpannedTok, Tok};
+use super::ImportError;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    Num(f64),
+    Str(String),
+    List(Vec<f64>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Attr {
+    pub key: String,
+    pub value: AttrValue,
+    pub line: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum StmtKind {
+    Model { name: String, attrs: Vec<Attr> },
+    Input { name: String, dtype: String, shape: Vec<f64> },
+    Op { result: String, op: String, args: Vec<String>, attrs: Vec<Attr> },
+    Output { name: String },
+}
+
+#[derive(Debug, Clone)]
+pub struct Stmt {
+    pub kind: StmtKind,
+    pub line: usize,
+}
+
+struct Parser<'a> {
+    toks: &'a [SpannedTok],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn line(&self) -> usize {
+        self.toks
+            .get(self.pos)
+            .or_else(|| self.toks.last())
+            .map(|t| t.line)
+            .unwrap_or(1)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ImportError {
+        ImportError::new(self.line(), msg)
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|t| &t.tok)
+    }
+
+    fn next(&mut self, what: &str) -> Result<&'a Tok, ImportError> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .ok_or_else(|| self.err(format!("expected {what}, found end of file")))?;
+        self.pos += 1;
+        Ok(&t.tok)
+    }
+
+    fn punct(&mut self, c: char) -> Result<(), ImportError> {
+        match self.next(&format!("'{c}'"))? {
+            Tok::Punct(p) if *p == c => Ok(()),
+            other => Err(ImportError::new(
+                self.toks[self.pos - 1].line,
+                format!("expected '{c}', found {other}"),
+            )),
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<String, ImportError> {
+        match self.next(what)? {
+            Tok::Ident(s) => Ok(s.clone()),
+            other => Err(ImportError::new(
+                self.toks[self.pos - 1].line,
+                format!("expected {what}, found {other}"),
+            )),
+        }
+    }
+
+    fn num(&mut self, what: &str) -> Result<f64, ImportError> {
+        match self.next(what)? {
+            Tok::Num(n) => Ok(*n),
+            other => Err(ImportError::new(
+                self.toks[self.pos - 1].line,
+                format!("expected {what}, found {other}"),
+            )),
+        }
+    }
+
+    fn num_list(&mut self, what: &str) -> Result<Vec<f64>, ImportError> {
+        self.punct('[')?;
+        let mut out = vec![self.num(what)?];
+        loop {
+            match self.next("',' or ']'")? {
+                Tok::Punct(',') => out.push(self.num(what)?),
+                Tok::Punct(']') => return Ok(out),
+                other => {
+                    return Err(ImportError::new(
+                        self.toks[self.pos - 1].line,
+                        format!("expected ',' or ']', found {other}"),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn attrs(&mut self) -> Result<Vec<Attr>, ImportError> {
+        let mut out = Vec::new();
+        if self.peek() != Some(&Tok::Punct('{')) {
+            return Ok(out);
+        }
+        self.punct('{')?;
+        loop {
+            let line = self.line();
+            let key = self.ident("attribute name")?;
+            self.punct('=')?;
+            let value = match self.peek() {
+                Some(Tok::Punct('[')) => AttrValue::List(self.num_list("list element")?),
+                Some(Tok::Str(_)) => match self.next("attribute value")? {
+                    Tok::Str(s) => AttrValue::Str(s.clone()),
+                    _ => unreachable!(),
+                },
+                _ => AttrValue::Num(self.num("attribute value")?),
+            };
+            out.push(Attr { key, value, line });
+            match self.next("',' or '}'")? {
+                Tok::Punct(',') => {}
+                Tok::Punct('}') => return Ok(out),
+                other => {
+                    return Err(ImportError::new(
+                        self.toks[self.pos - 1].line,
+                        format!("expected ',' or '}}', found {other}"),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ImportError> {
+        let line = self.line();
+        let head = self.ident("statement")?;
+        let kind = match head.as_str() {
+            "model" => {
+                let name = match self.next("model name string")? {
+                    Tok::Str(s) => s.clone(),
+                    other => {
+                        return Err(ImportError::new(
+                            self.toks[self.pos - 1].line,
+                            format!("expected model name string, found {other}"),
+                        ))
+                    }
+                };
+                let attrs = self.attrs()?;
+                StmtKind::Model { name, attrs }
+            }
+            "input" => {
+                let name = self.ident("input tensor name")?;
+                self.punct(':')?;
+                let dtype = self.ident("dtype")?;
+                let shape = self.num_list("shape dim")?;
+                StmtKind::Input { name, dtype, shape }
+            }
+            "output" => StmtKind::Output { name: self.ident("output tensor name")? },
+            _ => {
+                self.punct('=')?;
+                let op = self.ident("op name")?;
+                self.punct('(')?;
+                let mut args = vec![self.ident("argument tensor")?];
+                loop {
+                    match self.next("',' or ')'")? {
+                        Tok::Punct(',') => args.push(self.ident("argument tensor")?),
+                        Tok::Punct(')') => break,
+                        other => {
+                            return Err(ImportError::new(
+                                self.toks[self.pos - 1].line,
+                                format!("expected ',' or ')', found {other}"),
+                            ))
+                        }
+                    }
+                }
+                let attrs = self.attrs()?;
+                StmtKind::Op { result: head, op, args, attrs }
+            }
+        };
+        self.punct(';')?;
+        Ok(Stmt { kind, line })
+    }
+}
+
+pub fn parse(toks: &[SpannedTok]) -> Result<Vec<Stmt>, ImportError> {
+    let mut p = Parser { toks, pos: 0 };
+    let mut out = Vec::new();
+    while p.peek().is_some() {
+        out.push(p.stmt()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lex::lex;
+    use super::*;
+
+    fn parse_src(src: &str) -> Result<Vec<Stmt>, ImportError> {
+        parse(&lex(src)?)
+    }
+
+    #[test]
+    fn parses_all_statement_forms() {
+        let stmts = parse_src(
+            "model \"m\" { seed = 3 };\n\
+             input x: f32[1, 4];\n\
+             y = linear(x) { out = 2 };\n\
+             z = add(y, y);\n\
+             output z;\n",
+        )
+        .unwrap();
+        assert_eq!(stmts.len(), 5);
+        assert!(matches!(&stmts[0].kind, StmtKind::Model { name, .. } if name == "m"));
+        match &stmts[2].kind {
+            StmtKind::Op { result, op, args, attrs } => {
+                assert_eq!((result.as_str(), op.as_str()), ("y", "linear"));
+                assert_eq!(args, &["x"]);
+                assert_eq!(attrs[0].value, AttrValue::Num(2.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(stmts[3].line, 4);
+    }
+
+    #[test]
+    fn attr_value_kinds() {
+        let stmts =
+            parse_src("y = pool(x) { kind = \"max\", kernel = 2, shape = [1, -1] };\n").unwrap();
+        let StmtKind::Op { attrs, .. } = &stmts[0].kind else { panic!() };
+        assert_eq!(attrs[0].value, AttrValue::Str("max".into()));
+        assert_eq!(attrs[2].value, AttrValue::List(vec![1.0, -1.0]));
+    }
+
+    #[test]
+    fn syntax_errors_carry_the_line() {
+        let err = parse_src("input x: f32[1, 4];\ny = linear x;\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("expected '('"), "{}", err.message);
+        let err = parse_src("y = linear(x)").unwrap_err();
+        assert!(err.message.contains("end of file"), "{}", err.message);
+    }
+}

@@ -1,0 +1,88 @@
+//! The committed model zoo: three importable fixtures spanning the
+//! format's surface (residual CNN, keyword-spotting net with flatten,
+//! BERT-tiny), compiled into the binary via `include_str!` so tests and
+//! the CLI can exercise the full import -> compile -> serve path with
+//! no filesystem dependencies. Weights are derived deterministically
+//! from each fixture's seed, so these models are stable across
+//! machines and releases.
+
+use std::collections::BTreeSet;
+
+use super::{import_str, ImportError};
+use crate::nn::graph::{Graph, LayerParams};
+
+pub const CNN_TINY: &str = include_str!("../../../models/zoo/cnn_tiny.nnef");
+pub const KWS_TINY: &str = include_str!("../../../models/zoo/kws_tiny.nnef");
+pub const BERT_TINY: &str = include_str!("../../../models/zoo/bert_tiny.nnef");
+
+#[derive(Debug, Clone, Copy)]
+pub struct ZooModel {
+    pub name: &'static str,
+    pub source: &'static str,
+}
+
+pub const MODELS: [ZooModel; 3] = [
+    ZooModel { name: "cnn_tiny", source: CNN_TINY },
+    ZooModel { name: "kws_tiny", source: KWS_TINY },
+    ZooModel { name: "bert_tiny", source: BERT_TINY },
+];
+
+/// Import a zoo model by name.
+pub fn import(name: &str) -> Result<Graph, ImportError> {
+    let m = MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| ImportError::new(0, format!("no zoo model named '{name}'")))?;
+    import_str(m.source)
+}
+
+/// Deduplicated `(d_in, d_out)` shapes of every dense layer across the
+/// zoo — the realistic layer geometries the kernel parity harness draws
+/// from, instead of purely random dims.
+pub fn linear_shapes() -> Vec<(usize, usize)> {
+    let mut set = BTreeSet::new();
+    for m in &MODELS {
+        let g = import_str(m.source).expect("committed zoo fixtures always import");
+        for p in g.layers.values() {
+            if let LayerParams::Dense { w, m, .. } = p {
+                set.insert((w.len() / m, *m));
+            }
+        }
+    }
+    set.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_fixture_imports_with_expected_topology() {
+        let cnn = import("cnn_tiny").unwrap();
+        assert_eq!(cnn.input_shape, vec![1, 16, 16, 3]);
+        assert!(cnn.bert.is_none());
+        assert!(cnn.layers.contains_key("c2"));
+
+        let kws = import("kws_tiny").unwrap();
+        let LayerParams::Dense { w, m, .. } = &kws.layers["y"] else { panic!() };
+        assert_eq!((w.len() / m, *m), (1152, 12), "flattened feature width");
+
+        let bert = import("bert_tiny").unwrap();
+        let cfg = bert.bert.as_ref().expect("bert_tiny must lower to a fused bert graph");
+        assert_eq!((cfg.vocab, cfg.seq_len, cfg.d, cfg.n_layers, cfg.n_out), (64, 16, 32, 2, 4));
+
+        assert!(import("nope").is_err());
+    }
+
+    #[test]
+    fn linear_shapes_cover_all_three_models() {
+        let shapes = linear_shapes();
+        // one geometry from each fixture
+        assert!(shapes.contains(&(27, 16)), "cnn_tiny stem: {shapes:?}");
+        assert!(shapes.contains(&(1152, 12)), "kws_tiny fc: {shapes:?}");
+        assert!(shapes.contains(&(32, 32)), "bert_tiny projection: {shapes:?}");
+        let mut dedup = shapes.clone();
+        dedup.dedup();
+        assert_eq!(dedup, shapes, "shapes must be deduplicated");
+    }
+}

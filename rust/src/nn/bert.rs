@@ -4,6 +4,8 @@
 //! exactly like the CNN path; attention itself stays exact (paper §8:
 //! scaled dot-product attention has no weights to precompute).
 
+use std::collections::BTreeMap;
+
 use crate::lut::LutOpts;
 use crate::nn::graph::{Graph, LayerParams};
 use crate::nn::ops;
@@ -39,9 +41,35 @@ fn apply_ln(g: &Graph, name: &str, x: &mut Tensor) {
     }
 }
 
+/// Activation captures keyed by layer name: `(data, rows, cols)` of the
+/// input matrix each linear projection consumed during a forward pass.
+type Caps<'a> = Option<&'a mut BTreeMap<String, (Vec<f32>, usize, usize)>>;
+
+fn record(caps: &mut Caps, name: String, x: &Tensor) {
+    if let Some(c) = caps.as_mut() {
+        c.insert(name, (x.data.clone(), x.rows(), x.cols()));
+    }
+}
+
 /// Forward pass. `tokens` is a [N, T] tensor whose f32 values are token
 /// ids (the wire/bundle format carries them as f32 for uniformity).
 pub fn run_bert(g: &Graph, tokens: &Tensor, opts: LutOpts) -> Tensor {
+    run_bert_inner(g, tokens, opts, &mut None)
+}
+
+/// Dense-teacher forward that also records every linear projection's
+/// input activations (q/k/v/o/f1/f2 per block, plus the head) — the
+/// capture hook `nn::models::replace_linear_layers` uses for BERT
+/// graphs, mirroring `capture_linear_inputs` on the CNN path.
+pub(crate) fn run_bert_capture(
+    g: &Graph,
+    tokens: &Tensor,
+    out: &mut BTreeMap<String, (Vec<f32>, usize, usize)>,
+) -> Tensor {
+    run_bert_inner(g, tokens, LutOpts::deployed(), &mut Some(out))
+}
+
+fn run_bert_inner(g: &Graph, tokens: &Tensor, opts: LutOpts, caps: &mut Caps) -> Tensor {
     let cfg = g.bert.as_ref().expect("not a bert graph");
     let (n, t) = (tokens.shape[0], tokens.shape[1]);
     assert!(t <= cfg.seq_len, "sequence longer than model ({t} > {})", cfg.seq_len);
@@ -72,6 +100,9 @@ pub fn run_bert(g: &Graph, tokens: &Tensor, opts: LutOpts) -> Tensor {
     let scale = 1.0 / (dh as f32).sqrt();
 
     for l in 0..cfg.n_layers {
+        record(caps, format!("l{l}q"), &h);
+        record(caps, format!("l{l}k"), &h);
+        record(caps, format!("l{l}v"), &h);
         let q = apply_linear(g, &format!("l{l}q"), &h, opts);
         let k = apply_linear(g, &format!("l{l}k"), &h, opts);
         let v = apply_linear(g, &format!("l{l}v"), &h, opts);
@@ -104,12 +135,15 @@ pub fn run_bert(g: &Graph, tokens: &Tensor, opts: LutOpts) -> Tensor {
             }
         }
         let ctx = Tensor::new(vec![n * t, d], ctx);
+        record(caps, format!("l{l}o"), &ctx);
         let o = apply_linear(g, &format!("l{l}o"), &ctx, opts);
         ops::add_inplace(&mut h, &o);
         apply_ln(g, &format!("l{l}ln1"), &mut h);
 
+        record(caps, format!("l{l}f1"), &h);
         let mut f1 = apply_linear(g, &format!("l{l}f1"), &h, opts);
         ops::gelu(&mut f1);
+        record(caps, format!("l{l}f2"), &f1);
         let f2 = apply_linear(g, &format!("l{l}f2"), &f1, opts);
         ops::add_inplace(&mut h, &f2);
         apply_ln(g, &format!("l{l}ln2"), &mut h);
@@ -128,6 +162,7 @@ pub fn run_bert(g: &Graph, tokens: &Tensor, opts: LutOpts) -> Tensor {
         }
     }
     let pooled = Tensor::new(vec![n, d], pooled);
+    record(caps, "head".into(), &pooled);
     apply_linear(g, "head", &pooled, opts)
 }
 

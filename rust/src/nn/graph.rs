@@ -1,10 +1,11 @@
 //! Graph executor: runs a `.lutnn` bundle's instruction list with dense
 //! and/or LUT layers — the same graph measures both sides of Figs. 7–10.
 //!
-//! The instruction set mirrors `python/compile/export.py`:
-//! conv / bn / relu / maxpool / gap / linear / save / restore / add / bert.
-//! `save`/`restore`/`add` move activations through numbered slots to
-//! express residual blocks without a full dataflow graph.
+//! The instruction set mirrors `python/compile/export.py`, plus the
+//! importer-facing extensions: conv / bn / ln / relu / gelu / maxpool /
+//! gap / flatten / linear / save / restore / add / mul / bert.
+//! `save`/`restore`/`add`/`mul` move activations through numbered slots
+//! to express residual and gating blocks without a full dataflow graph.
 
 use std::collections::BTreeMap;
 
@@ -54,13 +55,21 @@ impl LayerParams {
 pub enum Op {
     Conv { layer: String, k: usize, stride: usize },
     Bn { layer: String },
+    /// LayerNorm over the channel (last) axis, via a named `Ln` layer.
+    Ln { layer: String },
     Relu,
+    Gelu,
     MaxPool { k: usize, stride: usize },
     Gap,
+    /// Collapse everything but the batch dim: `[N, ...] -> [N, prod]`.
+    /// NHWC activations are row-major, so this is a pure reshape.
+    Flatten,
     Linear { layer: String },
     Save { slot: usize },
     Restore { slot: usize },
     Add { slot: usize },
+    /// Elementwise multiply with a saved slot (gating blocks).
+    Mul { slot: usize },
     Bert,
 }
 
@@ -157,13 +166,31 @@ impl Graph {
                 }
                 cur
             }
+            Op::Ln { layer } => {
+                let mut cur = cur;
+                match self.layer(layer) {
+                    LayerParams::Ln { gamma, beta } => ops::layer_norm(&mut cur, gamma, beta),
+                    _ => panic!("layer '{layer}' is not layernorm"),
+                }
+                cur
+            }
             Op::Relu => {
                 let mut cur = cur;
                 ops::relu(&mut cur);
                 cur
             }
+            Op::Gelu => {
+                let mut cur = cur;
+                ops::gelu(&mut cur);
+                cur
+            }
             Op::MaxPool { k, stride } => ops::max_pool(&cur, *k, *stride),
             Op::Gap => ops::global_avg_pool(&cur),
+            Op::Flatten => {
+                let n = cur.shape[0];
+                let cols = cur.len() / n;
+                cur.reshape(vec![n, cols])
+            }
             Op::Linear { layer } => match self.layer(layer) {
                 LayerParams::Dense { w, b, m } => ops::linear(&cur, w, b.as_deref(), *m),
                 LayerParams::Lut(lut) => {
@@ -188,6 +215,14 @@ impl Graph {
                     .get(slot)
                     .unwrap_or_else(|| panic!("add from empty slot {slot}"));
                 ops::add_inplace(&mut cur, other);
+                cur
+            }
+            Op::Mul { slot } => {
+                let mut cur = cur;
+                let other = slots
+                    .get(slot)
+                    .unwrap_or_else(|| panic!("mul from empty slot {slot}"));
+                ops::mul_inplace(&mut cur, other);
                 cur
             }
             Op::Bert => unreachable!("bert graphs are dispatched in run()"),

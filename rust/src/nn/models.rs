@@ -306,12 +306,40 @@ pub fn lutify_graph(g: &Graph, sample: &Tensor, k_centroids: usize, bits: u8, se
 /// conv/linear with whatever `build(name, acts, rows, d, w, bias, m)`
 /// returns. Layers shared by several ops are built once; non-dense
 /// layers pass through untouched.
+///
+/// BERT graphs take the attention capture path: every q/k/v/o/f1/f2
+/// projection is replaced on its own captured input, while the tiny
+/// classification head stays dense (the attention-path analogue of the
+/// dense conv stem).
 pub(crate) fn replace_linear_layers(
     g: &Graph,
     sample: &Tensor,
     suffix: &str,
     mut build: impl FnMut(&str, &[f32], usize, usize, &[f32], Option<&[f32]>, usize) -> LayerParams,
 ) -> Graph {
+    if g.bert.is_some() {
+        let mut captures: BTreeMap<String, (Vec<f32>, usize, usize)> = BTreeMap::new();
+        crate::nn::bert::run_bert_capture(g, sample, &mut captures);
+        let mut layers = BTreeMap::new();
+        for (name, params) in &g.layers {
+            let replaced = match params {
+                LayerParams::Dense { w, b, m } if name != "head" => {
+                    let (acts, rows, d) = &captures[name];
+                    build(name, acts, *rows, *d, w, b.as_deref(), *m)
+                }
+                _ => params.clone(),
+            };
+            layers.insert(name.clone(), replaced);
+        }
+        return Graph {
+            name: format!("{}{suffix}", g.name),
+            input_shape: g.input_shape.clone(),
+            ops: g.ops.clone(),
+            layers,
+            bert: g.bert.clone(),
+        };
+    }
+
     // Re-run the graph, capturing inputs of each linear op.
     let mut captures: BTreeMap<String, (Vec<f32>, usize, usize)> = BTreeMap::new();
     capture_linear_inputs(g, sample, &mut captures);
@@ -353,9 +381,11 @@ pub(crate) fn replace_linear_layers(
     }
 }
 
-/// Largest supported sub-vector length dividing `d` (conversion-time
-/// heuristic shared with `train::compile_graph`).
-pub(crate) fn pick_v(d: usize) -> usize {
+/// Largest supported sub-vector length dividing `d` — the conversion-
+/// time heuristic shared by [`lutify_graph`], `train::compile_graph`
+/// and the kernel-parity harness (which replays real imported-model
+/// shapes through it).
+pub fn pick_v(d: usize) -> usize {
     for v in [9usize, 4, 2] {
         if d % v == 0 {
             return v;
@@ -397,15 +427,27 @@ fn capture_linear_inputs(
                     dops::batch_norm(&mut cur, gamma, beta, mean, var);
                 }
             }
+            Op::Ln { layer } => {
+                if let LayerParams::Ln { gamma, beta } = &g.layers[layer] {
+                    dops::layer_norm(&mut cur, gamma, beta);
+                }
+            }
             Op::Relu => dops::relu(&mut cur),
+            Op::Gelu => dops::gelu(&mut cur),
             Op::MaxPool { k, stride } => cur = dops::max_pool(&cur, *k, *stride),
             Op::Gap => cur = dops::global_avg_pool(&cur),
+            Op::Flatten => {
+                let n = cur.shape[0];
+                let cols = cur.len() / n;
+                cur = cur.reshape(vec![n, cols]);
+            }
             Op::Save { slot } => {
                 slots.insert(*slot, cur.clone());
             }
             Op::Restore { slot } => cur = slots[slot].clone(),
             Op::Add { slot } => dops::add_inplace(&mut cur, &slots[slot]),
-            Op::Bert => panic!("capture_linear_inputs: CNN graphs only"),
+            Op::Mul { slot } => dops::mul_inplace(&mut cur, &slots[slot]),
+            Op::Bert => panic!("capture_linear_inputs: bert graphs capture via run_bert_capture"),
         }
     }
 }

@@ -182,6 +182,14 @@ pub fn add_inplace(x: &mut Tensor, other: &Tensor) {
     }
 }
 
+/// Elementwise multiply (gating / squeeze-excite style). Shapes must match.
+pub fn mul_inplace(x: &mut Tensor, other: &Tensor) {
+    assert_eq!(x.shape, other.shape);
+    for (a, &b) in x.data.iter_mut().zip(&other.data) {
+        *a *= b;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -237,6 +237,11 @@ pub fn distill_layer(
 /// activation capture, so it should follow the deployment input
 /// distribution. Returns the compiled graph (name suffixed
 /// `_compiled`) plus one [`LayerReport`] per converted layer.
+///
+/// BERT bundles compile too: `sample` is then a `[N, T]` token-id
+/// tensor, every q/k/v/o/f1/f2 projection is distilled on the
+/// activations the dense teacher feeds it, and the classification head
+/// stays dense (the attention-path analogue of the dense conv stem).
 pub fn compile_graph(
     g: &Graph,
     sample: &Tensor,
@@ -245,16 +250,21 @@ pub fn compile_graph(
     cfg: &TrainConfig,
 ) -> Result<(Graph, Vec<LayerReport>)> {
     if g.bert.is_some() {
-        bail!("compile_graph covers instruction-list graphs; BERT bundles take the python path");
-    }
-    for op in &g.ops {
-        if let Op::Conv { layer, .. } | Op::Linear { layer } = op {
-            match g.layers.get(layer.as_str()) {
-                Some(LayerParams::Dense { .. }) => {}
-                Some(_) => {
-                    bail!("layer '{layer}' is not dense — compile_graph distills a dense teacher")
+        for (name, l) in &g.layers {
+            if matches!(l, LayerParams::Lut(_)) {
+                bail!("layer '{name}' is not dense — compile_graph distills a dense teacher");
+            }
+        }
+    } else {
+        for op in &g.ops {
+            if let Op::Conv { layer, .. } | Op::Linear { layer } = op {
+                match g.layers.get(layer.as_str()) {
+                    Some(LayerParams::Dense { .. }) => {}
+                    Some(_) => bail!(
+                        "layer '{layer}' is not dense — compile_graph distills a dense teacher"
+                    ),
+                    None => bail!("graph references unknown layer '{layer}'"),
                 }
-                None => bail!("graph references unknown layer '{layer}'"),
             }
         }
     }
@@ -447,6 +457,68 @@ mod tests {
         let sig: f32 = want.data.iter().map(|x| x * x).sum::<f32>() / want.len() as f32;
         let err = pre.mse(&want);
         assert!(err < 2.0 * sig, "compiled model too far from teacher: mse {err} sig {sig}");
+    }
+
+    #[test]
+    fn compile_graph_distills_bert_bundles_end_to_end() {
+        // BERT analogue of the CNN acceptance path: dense MiniBert
+        // teacher -> in-process compile (q/k/v/o/f1/f2 distilled on
+        // captured activations, head stays dense) -> bundle round-trip
+        // -> api::Session. Documented tolerance: output MSE below the
+        // teacher's signal power — tighter than the CNN bound because
+        // residual connections and layernorm keep the approximation
+        // error from compounding across blocks.
+        use crate::nn::bert::{tests::synthetic_bert, BertConfig};
+        let bcfg = BertConfig {
+            vocab: 32,
+            seq_len: 8,
+            d: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_layers: 2,
+            n_out: 4,
+        };
+        let dense = synthetic_bert(&bcfg, 7);
+        let mut rng = Prng::new(13);
+        let tokens: Vec<f32> = (0..6 * 8).map(|_| rng.below(32) as f32).collect();
+        let sample = Tensor::new(vec![6, 8], tokens);
+        let cfg = TrainConfig { epochs: 4, kmeans_iters: 6, anneal: 0.8, ..TrainConfig::default() };
+        let (compiled, reports) = compile_graph(&dense, &sample, 16, 8, &cfg).unwrap();
+
+        assert_eq!(compiled.name, "bert-test_compiled");
+        assert!(
+            matches!(compiled.layers["head"], LayerParams::Dense { .. }),
+            "head stays dense (attention-path analogue of the dense stem)"
+        );
+        for l in 0..2 {
+            for nm in ["q", "k", "v", "o", "f1", "f2"] {
+                let name = format!("l{l}{nm}");
+                assert!(matches!(compiled.layers[&name], LayerParams::Lut(_)), "{name}");
+            }
+        }
+        assert_eq!(reports.len(), 12, "6 projections x 2 blocks");
+        for r in &reports {
+            assert!(r.report.hard_mse_final.is_finite(), "{}", r.name);
+        }
+
+        let dir = std::env::temp_dir().join("lutnn_train_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("compiled_bert.lutnn").to_string_lossy().into_owned();
+        save_bundle(&compiled, &path).unwrap();
+        let reloaded = load_bundle(&path).unwrap();
+
+        let mut s_dense = SessionBuilder::new(&dense).max_batch(6).build().unwrap();
+        let mut s_pre = SessionBuilder::new(&compiled).max_batch(6).build().unwrap();
+        let mut s_post = SessionBuilder::new(&reloaded).max_batch(6).build().unwrap();
+        let want = s_dense.run_alloc(&sample).unwrap();
+        let pre = s_pre.run_alloc(&sample).unwrap();
+        let post = s_post.run_alloc(&sample).unwrap();
+        assert_eq!(pre.data, post.data, "bundle round-trip must be forward-exact");
+        assert_eq!(pre.shape, want.shape);
+        assert!(pre.data.iter().all(|x| x.is_finite()));
+        let sig: f32 = want.data.iter().map(|x| x * x).sum::<f32>() / want.len() as f32;
+        let err = pre.mse(&want);
+        assert!(err < sig, "compiled bert too far from teacher: mse {err} sig {sig}");
     }
 
     #[test]

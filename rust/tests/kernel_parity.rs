@@ -185,6 +185,40 @@ fn all_lut_family_kernels_agree_on_explicit_edge_shapes() {
 }
 
 #[test]
+fn zoo_model_shapes_hold_parity_across_the_lut_family() {
+    // The fuzz tests above draw synthetic geometries; this sweep replays
+    // the *real* layer shapes of the three committed importable models
+    // (`model_import::zoo`), split with the same `pick_v` heuristic the
+    // compile path uses — so the shapes kernels see in production are
+    // pre-verified here, down to the 27-wide conv stem and the
+    // 1152-wide post-flatten classifier.
+    use lutnn::nn::models::pick_v;
+    let shapes = lutnn::model_import::zoo::linear_shapes();
+    assert!(shapes.len() >= 8, "zoo must contribute a real spread of geometries: {shapes:?}");
+    let mut g = Gen::from_seed(fuzz_seed() ^ 0x5EED_3);
+    for &(d, m) in &shapes {
+        let v = pick_v(d);
+        let c = d / v;
+        for &k in &[8usize, 16] {
+            let n = *g.pick(&[1usize, 3, 8]);
+            let a = g.f32_vec(n * d, 1.0);
+            let w = g.f32_vec(d * m, 1.0);
+            let cb = learn_codebooks(&a, n, d, c, k, 4, g.case_seed);
+            let lut = LutLinear::new(cb, &w, m, Some(g.f32_vec(m, 0.5)), 8);
+            let case = LutCase { n, m, a, lut };
+            let opts = LutOpts::deployed();
+            let want = run_kernel("lut", &case, opts, 4.0);
+            let got_simd = run_kernel("lut-simd", &case, opts, -4.0);
+            assert_eq!(got_simd, want, "lut-simd @ zoo shape (d={d}, m={m}, k={k})");
+            let got_i8 = run_kernel("lut-i8", &case, opts, -4.0);
+            let tol = LutI8Kernel::new(case.lut.clone()).abs_tolerance();
+            prop::assert_close(&got_i8, &want, 0.0, tol)
+                .unwrap_or_else(|e| panic!("lut-i8 @ zoo shape (d={d}, m={m}, k={k}): {e}"));
+        }
+    }
+}
+
+#[test]
 fn scratch_reuse_across_kernels_is_deterministic() {
     // The session shares one Scratch across heterogeneous layers; a
     // kernel reading stale scratch state would show up as run-order
