@@ -1,20 +1,84 @@
-//! Paper Fig. 10: model memory consumption, LUT-NN vs dense.
+//! Paper Fig. 10: model memory consumption, LUT-NN vs dense — plus the
+//! CI **memory gate** over the zoo models' measured table bytes.
 //!
-//! Two accountings:
+//! Three accountings:
 //!   1. Analytic, on the paper's exact model shapes (params + peak
 //!      activation for batch 1) — directly comparable to Fig. 10.
-//!   2. Measured `param_bytes()` of the runnable graphs / trained bundles.
+//!   2. Measured per-kernel `table_bytes()` on the imported zoo models
+//!      (k=16, v=pick_v(d)): the hot lookup-table working set of the
+//!      INT8 kernels vs the decomposed `"lut-dec"` sub-tables. These
+//!      numbers are pure shape arithmetic — deterministic across
+//!      machines — so `BENCH_memory_footprint.json` commits them as
+//!      exact baselines and this bench FAILS (exit 1) when any model's
+//!      measured table bytes regress past `gate.tolerance`. Set
+//!      `MEMORY_GATE_INFLATE=1.10` to fake a regression and prove the
+//!      gate trips (CI's red-path self-test).
+//!   3. Measured `param_bytes()` of trained bundles, when artifacts exist.
 //!
 //! Paper: 1.4-2.8x memory saving for CNNs, 4.8-6.5x for BERT.
 //!
 //! Run: `cargo bench --bench memory_footprint`
 
+use std::collections::BTreeMap;
+
+use lutnn::api::{KernelBuildCtx, KernelRegistry};
 use lutnn::cost::{model_cost, LutConfig};
+use lutnn::lut::{LutLinear, LutOpts};
 use lutnn::model_fmt;
-use lutnn::nn::models;
+use lutnn::model_import::zoo;
+use lutnn::nn::graph::LayerParams;
+use lutnn::nn::models::{self, pick_v};
+use lutnn::pq::Codebooks;
 use lutnn::runtime::{artifact_path, artifacts_available};
 use lutnn::util::benchmark::{record_jsonl, Table};
-use lutnn::util::json::Json;
+use lutnn::util::json::{self, Json};
+use lutnn::util::prng::Prng;
+
+const BASELINE_FILE: &str = "BENCH_memory_footprint.json";
+
+/// Per-model measured table bytes: (dense layer count, int8 kernel
+/// bytes, decomposed kernel bytes, alignment every table is pinned to).
+struct Measured {
+    model: String,
+    dense_layers: usize,
+    int8_bytes: usize,
+    dec_bytes: usize,
+    align: usize,
+}
+
+/// Lutify every dense layer of a zoo model exactly like the compile
+/// path (k=16, v=pick_v(d), deterministic centroids) and sum each
+/// kernel family's `table_bytes()` through the registry.
+fn measure_zoo_model(name: &str) -> Measured {
+    let g = zoo::import(name).expect("committed zoo fixtures always import");
+    let reg = KernelRegistry::with_defaults();
+    let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+    let (mut int8_bytes, mut dec_bytes, mut dense_layers, mut align) = (0usize, 0usize, 0usize, 1usize);
+    for (i, params) in g.layers.values().enumerate() {
+        let LayerParams::Dense { w, m, .. } = params else { continue };
+        dense_layers += 1;
+        let (d, m) = (w.len() / m, *m);
+        let (k, v) = (16usize, pick_v(d));
+        let c = d / v;
+        let mut rng = Prng::new(0xF00D + i as u64);
+        let cb = Codebooks::new(c, k, v, rng.normal_vec(c * k * v, 1.0));
+        let lut = LayerParams::Lut(LutLinear::new(cb, w, m, None, 8));
+        let ki8 = reg.build("lut-i8", &lut, &ctx).expect("lut-i8 builds on every Lut layer");
+        let kdec = reg.build("lut-dec", &lut, &ctx).expect("lut-dec builds on every Lut layer");
+        // "lut"/"lut-simd" share the same common-scale INT8 table, so
+        // one int8 figure covers the whole non-decomposed family.
+        let kref = reg.build("lut", &lut, &ctx).expect("lut builds on every Lut layer");
+        assert_eq!(kref.table_bytes(), ki8.table_bytes(), "int8 family table bytes must agree");
+        int8_bytes += ki8.table_bytes();
+        dec_bytes += kdec.table_bytes();
+        align = align.max(ki8.table_alignment_bytes()).max(kdec.table_alignment_bytes());
+    }
+    Measured { model: name.to_string(), dense_layers, int8_bytes, dec_bytes, align }
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
 
 fn main() {
     println!("== Fig. 10: model memory (analytic, exact paper shapes) ==\n");
@@ -48,6 +112,117 @@ fn main() {
         );
     }
     t.print();
+
+    // ------------------------------------------------- zoo memory gate
+    println!("\n== measured: zoo model table bytes (memory gate) ==\n");
+    let measured: Vec<Measured> =
+        zoo::MODELS.iter().map(|m| measure_zoo_model(m.name)).collect();
+    let mut t = Table::new(&["model", "dense layers", "int8 table B", "dec table B", "saving", "align"]);
+    let mut rows = Vec::new();
+    for m in &measured {
+        let saving = m.int8_bytes as f64 / m.dec_bytes as f64;
+        t.row(&[
+            m.model.clone(),
+            m.dense_layers.to_string(),
+            m.int8_bytes.to_string(),
+            m.dec_bytes.to_string(),
+            format!("{saving:.2}x"),
+            m.align.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str(m.model.clone())),
+            ("dense_layers", Json::num(m.dense_layers as f64)),
+            ("int8_table_bytes", Json::num(m.int8_bytes as f64)),
+            ("dec_table_bytes", Json::num(m.dec_bytes as f64)),
+            ("dec_saving", Json::num(round2(saving))),
+            ("table_align", Json::num(m.align as f64)),
+        ]));
+    }
+    t.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("memory_footprint")),
+        (
+            "note",
+            Json::str(
+                "measured zoo table bytes (k=16, v=pick_v(d), registry kernels); shape \
+                 arithmetic only, so the committed values are exact cross-machine baselines",
+            ),
+        ),
+        ("gate", Json::obj(vec![("tolerance", Json::num(1.05))])),
+        ("models", Json::Arr(rows)),
+    ]);
+
+    // The committed file is both schema and baseline: refuse shape
+    // drift, then gate each model's table bytes against it.
+    let inflate = std::env::var("MEMORY_GATE_INFLATE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0);
+    if inflate != 1.0 {
+        eprintln!("(MEMORY_GATE_INFLATE={inflate}: scaling measured bytes to self-test the gate)");
+    }
+    match std::fs::read_to_string(BASELINE_FILE) {
+        Ok(old) => {
+            let schema = json::parse(&old).expect("committed BENCH_memory_footprint.json must parse");
+            if let Err(e) = lutnn::util::schema::check_shape(&schema, &doc) {
+                eprintln!("{BASELINE_FILE} schema drift: {e}");
+                std::process::exit(1);
+            }
+            let tolerance = schema
+                .get("gate")
+                .and_then(|g| g.get("tolerance"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(1.05);
+            let baseline: BTreeMap<String, (f64, f64)> = schema
+                .get("models")
+                .and_then(|v| v.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|e| {
+                            Some((
+                                e.get("model")?.as_str()?.to_string(),
+                                (
+                                    e.get("int8_table_bytes")?.as_f64()?,
+                                    e.get("dec_table_bytes")?.as_f64()?,
+                                ),
+                            ))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let mut violations = 0usize;
+            for m in &measured {
+                let Some(&(base_i8, base_dec)) = baseline.get(&m.model) else {
+                    eprintln!("(no committed baseline for '{}': gate skipped for it)", m.model);
+                    continue;
+                };
+                for (what, got, base) in [
+                    ("int8", m.int8_bytes as f64 * inflate, base_i8),
+                    ("dec", m.dec_bytes as f64 * inflate, base_dec),
+                ] {
+                    if got > base * tolerance {
+                        eprintln!(
+                            "MEMORY GATE: {}/{what} table bytes {got:.0} exceed baseline \
+                             {base:.0} x {tolerance} = {:.0}",
+                            m.model,
+                            base * tolerance
+                        );
+                        violations += 1;
+                    }
+                }
+            }
+            if violations > 0 {
+                eprintln!("memory gate FAILED: {violations} violation(s)");
+                std::process::exit(1);
+            }
+            eprintln!("memory gate passed ({} models within {tolerance}x)", measured.len());
+        }
+        Err(_) => eprintln!("(no committed {BASELINE_FILE}: gate skipped)"),
+    }
+    std::fs::write(BASELINE_FILE, json::to_string(&doc) + "\n")
+        .unwrap_or_else(|e| panic!("write {BASELINE_FILE}: {e}"));
+    eprintln!("wrote {BASELINE_FILE} (schema-checked + gated)");
 
     if artifacts_available() {
         println!("\n== measured: trained bundle deployed bytes ==\n");

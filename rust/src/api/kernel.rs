@@ -9,7 +9,8 @@
 //! allocates on the forward path — all working memory comes from the
 //! caller-owned [`Scratch`] and `out` buffers.
 
-use crate::lut::{simd, LutLinear, LutOpts, LutScratch};
+use crate::lut::layout::{AlignedVec, TABLE_ALIGN};
+use crate::lut::{simd, DecomposedTable, LutLinear, LutOpts, LutScratch};
 use crate::nn::gemm::gemm;
 use crate::nn::ops::add_bias_rows;
 
@@ -59,6 +60,20 @@ pub trait LinearKernel: Send + Sync {
     fn scratch_indices(&self, rows: usize) -> usize {
         let _ = rows;
         0
+    }
+
+    /// Bytes of the kernel's hot lookup-table storage — the table-read
+    /// working set `benches/memory_footprint` gates per model. 0 for
+    /// kernels without tables (dense GEMM).
+    fn table_bytes(&self) -> usize {
+        0
+    }
+
+    /// Alignment (bytes) the kernel's table storage is pinned to — the
+    /// tract `LutKer::table_alignment_bytes()` contract; 1 for kernels
+    /// without tables.
+    fn table_alignment_bytes(&self) -> usize {
+        1
     }
 
     /// Compute `out[..rows*out_dim] = forward(input[..rows*in_dim])`,
@@ -151,6 +166,14 @@ impl LinearKernel for LutKernel {
         rows * self.lut.cb.c
     }
 
+    fn table_bytes(&self) -> usize {
+        self.lut.table_bytes()
+    }
+
+    fn table_alignment_bytes(&self) -> usize {
+        self.lut.table_alignment_bytes()
+    }
+
     fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
         self.lut
             .forward_scratch(input, rows, self.opts, &mut scratch.lut, &mut out[..rows * self.lut.m]);
@@ -205,6 +228,14 @@ impl LinearKernel for SimdLutKernel {
         rows * self.lut.cb.c
     }
 
+    fn table_bytes(&self) -> usize {
+        self.lut.table_bytes()
+    }
+
+    fn table_alignment_bytes(&self) -> usize {
+        self.lut.table_alignment_bytes()
+    }
+
     fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
         let lut = &self.lut;
         assert_eq!(input.len(), rows * lut.input_dim(), "lut-simd input size");
@@ -231,8 +262,9 @@ impl LinearKernel for SimdLutKernel {
 /// the parity harness enforces.
 pub struct LutI8Kernel {
     lut: LutLinear,
-    /// whole table at one global scale, [C, K, M] row-major
-    q: Vec<i8>,
+    /// whole table at one global scale, [C, K, M] row-major (rows read
+    /// M-contiguously; first row cache-line pinned — see `lut::layout`)
+    q: AlignedVec<i8>,
     scale: f32,
 }
 
@@ -240,12 +272,12 @@ impl LutI8Kernel {
     pub fn new(lut: LutLinear) -> LutI8Kernel {
         let max_abs = lut.table_f32.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
         let scale = (max_abs / 127.0).max(1e-30);
-        let q = lut
+        let q: Vec<i8> = lut
             .table_f32
             .iter()
             .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
             .collect();
-        LutI8Kernel { lut, q, scale }
+        LutI8Kernel { lut, q: AlignedVec::from_slice(&q, TABLE_ALIGN), scale }
     }
 
     /// Global table quantization step.
@@ -289,6 +321,14 @@ impl LinearKernel for LutI8Kernel {
         rows * self.lut.cb.c
     }
 
+    fn table_bytes(&self) -> usize {
+        self.q.len()
+    }
+
+    fn table_alignment_bytes(&self) -> usize {
+        self.q.align_bytes()
+    }
+
     fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
         let lut = &self.lut;
         let (c_total, k, m) = (lut.cb.c, lut.cb.k, lut.m);
@@ -298,13 +338,14 @@ impl LinearKernel for LutI8Kernel {
         idx.clear();
         idx.resize(rows * c_total, 0);
         simd::encode_simd(lut, input, rows, scores, idx);
+        let q = self.q.as_slice();
         acc32.resize(m, 0);
         for i in 0..rows {
             acc32.fill(0);
             for c in 0..c_total {
                 let kk = idx[i * c_total + c] as usize;
                 let base = (c * k + kk) * m;
-                let row = &self.q[base..base + m];
+                let row = &q[base..base + m];
                 // multiplier-less lookup-add: i32 += i8 widening only
                 for (a, &qv) in acc32.iter_mut().zip(row) {
                     *a += qv as i32;
@@ -313,6 +354,114 @@ impl LinearKernel for LutI8Kernel {
             let dst = &mut out[i * m..(i + 1) * m];
             for (o, &a) in dst.iter_mut().zip(acc32.iter()) {
                 *o = a as f32 * self.scale;
+            }
+        }
+        if let Some(b) = &lut.bias {
+            add_bias_rows(out, b);
+        }
+    }
+}
+
+/// Decomposed-table LUT kernel (ReducedLUT-style, see
+/// [`crate::lut::decomposed`]): the `[C, K, M]` table split into a
+/// shared f32 base vector (folded across codebooks) plus 4-bit
+/// nibble-packed residual sub-tables at per-codebook scales —
+/// approaching **half** the deployed INT8 table's bytes on realistic
+/// geometry, at a bounded accuracy cost.
+///
+/// Output differs from the scalar `"lut"` reference by bounded residual
+/// quantization error — see [`DecLutKernel::abs_tolerance`] for the
+/// documented per-element bound the parity harness enforces.
+pub struct DecLutKernel {
+    lut: LutLinear,
+    dec: DecomposedTable,
+}
+
+impl DecLutKernel {
+    pub fn new(lut: LutLinear) -> DecLutKernel {
+        let dec = DecomposedTable::decompose(&lut);
+        DecLutKernel { lut, dec }
+    }
+
+    /// The decomposed table (base vector, residual scales, packed
+    /// sub-tables).
+    pub fn decomposed(&self) -> &DecomposedTable {
+        &self.dec
+    }
+
+    /// Documented per-element absolute error bound vs the scalar `"lut"`
+    /// reference: accumulating C residual rows carries at most half a
+    /// residual quantization step per codebook (`sum_c scales[c] / 2`,
+    /// the base is exact f32), while the reference itself re-rounds
+    /// per-codebook INT8 onto its common scale (up to half a common
+    /// step per codebook). Both contributions are doubled for slack the
+    /// way `LutI8Kernel::abs_tolerance` is.
+    pub fn abs_tolerance(&self) -> f32 {
+        let sum_scales: f32 = self.dec.scales.iter().sum();
+        sum_scales + self.lut.cb.c as f32 * self.lut.common_scale() + 1e-4
+    }
+}
+
+impl LinearKernel for DecLutKernel {
+    fn name(&self) -> &'static str {
+        "lut-dec"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.lut.input_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.lut.m
+    }
+
+    fn param_bytes(&self) -> usize {
+        // codebooks f32 + decomposed table (base + packed residuals +
+        // scales) + bias
+        self.lut.cb.data.len() * 4
+            + self.dec.table_bytes()
+            + self.lut.bias.as_ref().map(|b| b.len() * 4).unwrap_or(0)
+    }
+
+    fn scratch_indices(&self, rows: usize) -> usize {
+        rows * self.lut.cb.c
+    }
+
+    fn table_bytes(&self) -> usize {
+        self.dec.table_bytes()
+    }
+
+    fn table_alignment_bytes(&self) -> usize {
+        self.dec.table_alignment_bytes()
+    }
+
+    fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
+        let lut = &self.lut;
+        let (c_total, k, m) = (lut.cb.c, lut.cb.k, lut.m);
+        assert_eq!(input.len(), rows * lut.input_dim(), "lut-dec input size");
+        let out = &mut out[..rows * m];
+        let LutScratch { idx, scores, .. } = &mut scratch.lut;
+        idx.clear();
+        idx.resize(rows * c_total, 0);
+        simd::encode_simd(lut, input, rows, scores, idx);
+        let dec = &self.dec;
+        let row_bytes = dec.row_bytes();
+        let resid = dec.resid();
+        for i in 0..rows {
+            let dst = &mut out[i * m..(i + 1) * m];
+            // shared base first (the folded rank-one component), then
+            // one small residual row per codebook
+            dst.copy_from_slice(&dec.base_total);
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                let base = (c * k + kk) * row_bytes;
+                let row = &resid[base..base + row_bytes];
+                let s = dec.scales[c];
+                for j in 0..m {
+                    let byte = row[j / 2];
+                    let nib = if j & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+                    dst[j] += (nib as i32 - 8) as f32 * s;
+                }
             }
         }
         if let Some(b) = &lut.bias {
@@ -416,6 +565,45 @@ mod tests {
         // int8 table + f32 codebooks is smaller than the reference's
         // per-codebook-scale representation (C scales vs 1).
         assert!(candidate.param_bytes() <= reference.param_bytes() + 4 * lut.cb.c);
+    }
+
+    #[test]
+    fn dec_kernel_within_documented_tolerance() {
+        let (n, m) = (12, 10);
+        let (a, lut) = lut_fixture(9, n, 4, 4, 16, m);
+        let reference = LutKernel::new(lut.clone(), LutOpts::deployed());
+        let candidate = DecLutKernel::new(lut.clone());
+        let (mut s1, mut s2) = (Scratch::default(), Scratch::default());
+        let mut o1 = vec![5.0f32; n * m];
+        let mut o2 = vec![-5.0f32; n * m];
+        reference.forward_into(&a, n, &mut s1, &mut o1);
+        candidate.forward_into(&a, n, &mut s2, &mut o2);
+        prop::assert_close(&o2, &o1, 0.0, candidate.abs_tolerance()).unwrap();
+        assert_eq!(candidate.name(), "lut-dec");
+        assert_eq!((candidate.in_dim(), candidate.out_dim()), (16, m));
+        assert_eq!(candidate.scratch_indices(3), 3 * 4);
+    }
+
+    #[test]
+    fn dec_kernel_table_is_smaller_than_every_int8_sibling() {
+        let (_, lut) = lut_fixture(10, 16, 4, 4, 16, 32);
+        let dec = DecLutKernel::new(lut.clone());
+        let scalar = LutKernel::new(lut.clone(), LutOpts::deployed());
+        let i8k = LutI8Kernel::new(lut);
+        assert!(
+            dec.table_bytes() < scalar.table_bytes()
+                && dec.table_bytes() < i8k.table_bytes(),
+            "dec {} vs lut {} / lut-i8 {}",
+            dec.table_bytes(),
+            scalar.table_bytes(),
+            i8k.table_bytes()
+        );
+        // every LUT-family table is cache-line pinned; dense has none
+        assert_eq!(dec.table_alignment_bytes(), TABLE_ALIGN);
+        assert_eq!(scalar.table_alignment_bytes(), TABLE_ALIGN);
+        assert_eq!(i8k.table_alignment_bytes(), TABLE_ALIGN);
+        let dense = DenseKernel::new(vec![0.0; 8], None, 2);
+        assert_eq!((dense.table_bytes(), dense.table_alignment_bytes()), (0, 1));
     }
 
     #[test]

@@ -29,11 +29,11 @@
 //!                          │
 //!                          v
 //!              dyn LinearKernel::forward_into
-//!               │           │            │           │
-//!          DenseKernel  LutKernel  SimdLutKernel  LutI8Kernel   <- KernelRegistry
-//!        (blocked GEMM) (scalar     (AVX2/portable (global-scale   ("dense","lut",
-//!                        reference)  vector encode) int8 add)       "lut-simd","lut-i8",
-//!                                                                   your kernel here)
+//!               │           │            │           │            │
+//!          DenseKernel  LutKernel  SimdLutKernel  LutI8Kernel  DecLutKernel  <- KernelRegistry
+//!        (blocked GEMM) (scalar     (AVX2/portable (global-scale (shared base   ("dense","lut",
+//!                        reference)  vector encode) int8 add)     + 4-bit        "lut-simd","lut-i8",
+//!                                                                 residuals)     "lut-dec", yours)
 //! ```
 //!
 //! ## The three layers
@@ -93,7 +93,20 @@
 //! to one global INT8 scale and differs from `"lut"` by at most
 //! `C * (global_scale + common_scale)` per output element
 //! ([`LutI8Kernel::abs_tolerance`]) — pick it only where that bound is
-//! acceptable (the `AutoPickPolicy::fast` opt-in).
+//! acceptable (the `AutoPickPolicy::fast` opt-in). `"lut-dec"` executes
+//! the decomposed table (shared f32 base + 4-bit residual sub-tables,
+//! approaching half the table bytes — see [`crate::lut::decomposed`])
+//! and differs from `"lut"` by at most
+//! `sum_c resid_scale[c] + C * common_scale`
+//! ([`DecLutKernel::abs_tolerance`]); both bounds are fuzzed in
+//! `kernel_parity`.
+//!
+//! Memory contract per tag: every LUT-family kernel stores its hot
+//! table `[C, K, M]` row-major (rows M-contiguous — the inner-loop
+//! access order) pinned to a cache-line boundary, and reports
+//! `table_bytes()` / `table_alignment_bytes()` through
+//! [`Session::memory_report`] — the numbers `benches/memory_footprint`
+//! gates in CI. See `crate::lut::layout`.
 //!
 //! The legacy `Graph::run` entry point remains as a deprecated shim for
 //! one release; it clones activations per call and should not be used
@@ -105,6 +118,8 @@ pub mod registry;
 pub mod session;
 
 pub use engine::{Engine, NativeEngine, PjrtEngine};
-pub use kernel::{DenseKernel, LinearKernel, LutI8Kernel, LutKernel, Scratch, SimdLutKernel};
+pub use kernel::{
+    DecLutKernel, DenseKernel, LinearKernel, LutI8Kernel, LutKernel, Scratch, SimdLutKernel,
+};
 pub use registry::{KernelBuildCtx, KernelFactory, KernelRegistry};
-pub use session::{Session, SessionBuilder};
+pub use session::{LayerMemory, Session, SessionBuilder};

@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use super::kernel::{DenseKernel, LinearKernel, LutI8Kernel, LutKernel, SimdLutKernel};
+use super::kernel::{DecLutKernel, DenseKernel, LinearKernel, LutI8Kernel, LutKernel, SimdLutKernel};
 use crate::lut::LutOpts;
 use crate::nn::graph::LayerParams;
 
@@ -39,8 +39,10 @@ impl KernelRegistry {
 
     /// Registry with the built-in kernels: `"dense"`, `"lut"` (scalar
     /// reference), `"lut-simd"` (explicit-SIMD encode, bitwise-equal to
-    /// `"lut"`), and `"lut-i8"` (global-scale int8 lookup-add, bounded
-    /// requantization error — see `LutI8Kernel::abs_tolerance`).
+    /// `"lut"`), `"lut-i8"` (global-scale int8 lookup-add, bounded
+    /// requantization error — see `LutI8Kernel::abs_tolerance`), and
+    /// `"lut-dec"` (decomposed shared-base + 4-bit residual sub-tables,
+    /// ~half the table bytes — see `DecLutKernel::abs_tolerance`).
     pub fn with_defaults() -> KernelRegistry {
         let mut r = KernelRegistry::empty();
         r.register("dense", |params, _ctx| match params {
@@ -78,6 +80,16 @@ impl KernelRegistry {
                  centroid-stationary; abs_tolerance is stated vs that reference)"
             )),
             _ => Err(anyhow!("'lut-i8' kernel needs Lut layer params")),
+        });
+        r.register("lut-dec", |params, ctx| match params {
+            LayerParams::Lut(lut) if ctx.opts.centroid_stationary => {
+                Ok(Box::new(DecLutKernel::new(lut.clone())) as Box<dyn LinearKernel>)
+            }
+            LayerParams::Lut(_) => Err(anyhow!(
+                "'lut-dec' requires centroid_stationary opts (its encode is \
+                 centroid-stationary; abs_tolerance is stated vs that reference)"
+            )),
+            _ => Err(anyhow!("'lut-dec' kernel needs Lut layer params")),
         });
         r
     }
@@ -155,6 +167,7 @@ mod tests {
             vec![
                 "dense".to_string(),
                 "lut".to_string(),
+                "lut-dec".to_string(),
                 "lut-i8".to_string(),
                 "lut-simd".to_string(),
             ]
@@ -167,6 +180,7 @@ mod tests {
         assert!(r.build("lut", &dense, &ctx).is_err());
         assert!(r.build("lut-simd", &dense, &ctx).is_err());
         assert!(r.build("lut-i8", &dense, &ctx).is_err());
+        assert!(r.build("lut-dec", &dense, &ctx).is_err());
         let err = format!("{}", r.build("simd", &dense, &ctx).unwrap_err());
         assert!(err.contains("simd") && err.contains("dense"), "{err}");
     }
@@ -184,7 +198,7 @@ mod tests {
         let params = LayerParams::Lut(lut);
         let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
         let r = KernelRegistry::with_defaults();
-        for tag in ["lut", "lut-simd", "lut-i8"] {
+        for tag in ["lut", "lut-simd", "lut-i8", "lut-dec"] {
             let kern = r.build(tag, &params, &ctx).unwrap();
             assert_eq!(kern.name(), tag);
             assert_eq!((kern.in_dim(), kern.out_dim()), (d, m));
@@ -205,7 +219,7 @@ mod tests {
         let params = LayerParams::Lut(lut);
         let r = KernelRegistry::with_defaults();
         let naive = KernelBuildCtx { opts: LutOpts::none() };
-        for tag in ["lut-simd", "lut-i8"] {
+        for tag in ["lut-simd", "lut-i8", "lut-dec"] {
             let err = format!("{}", r.build(tag, &params, &naive).unwrap_err());
             assert!(err.contains("centroid_stationary"), "{tag}: {err}");
         }

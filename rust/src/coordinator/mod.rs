@@ -45,12 +45,13 @@ pub mod server;
 pub mod trace;
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
 pub use crate::api::engine::{Engine, NativeEngine, PjrtEngine};
 use crate::lut::LutOpts;
+use crate::model_fmt::{self, LazyBundle};
 use crate::nn::graph::Graph;
 pub use pool::EnginePool;
 
@@ -123,11 +124,38 @@ impl ModelEntry {
     }
 }
 
+/// A lazily registered model: a header-only [`LazyBundle`] plus the
+/// pool parameters to apply when the first request pages it in.
+struct ColdModel {
+    bundle: LazyBundle,
+    opts: LutOpts,
+    max_batch: usize,
+    replicas: usize,
+}
+
+#[derive(Default)]
+struct ColdState {
+    /// registered but never requested — only the bundle header is in memory
+    pending: BTreeMap<String, ColdModel>,
+    /// paged in on first request
+    warmed: BTreeMap<String, Arc<ModelEntry>>,
+}
+
 /// Name -> model registry with routing aliases.
+///
+/// Models register either **eagerly** ([`Registry::register`], the
+/// engine pool is built up front) or **cold** ([`Registry::register_lazy`],
+/// only the bundle header is read — name and input shape — while the
+/// table sections stay on disk). Cold models are paged in by the first
+/// [`Registry::resolve`] that hits them; paging happens under a lock so
+/// concurrent first requests build the pool exactly once, and the
+/// warmed entry is indistinguishable from an eager registration after
+/// that.
 #[derive(Default)]
 pub struct Registry {
     models: BTreeMap<String, Arc<ModelEntry>>,
     aliases: BTreeMap<String, String>,
+    cold: Mutex<ColdState>,
 }
 
 impl Registry {
@@ -139,6 +167,28 @@ impl Registry {
         self.models.insert(entry.name.clone(), Arc::new(entry));
     }
 
+    /// Register a bundle cold under the model name its header declares.
+    /// Costs one header read (~a few hundred bytes) regardless of table
+    /// size, so a server can register a large zoo cheaply; the engine
+    /// pool (`opts` / `max_batch` / `replicas`, as in
+    /// [`ModelEntry::native`]) is built when the first request arrives.
+    pub fn register_lazy(
+        &mut self,
+        path: &str,
+        opts: LutOpts,
+        max_batch: usize,
+        replicas: usize,
+    ) -> Result<String> {
+        let bundle = model_fmt::load_bundle_lazy(path)?;
+        let name = bundle.model_name().to_string();
+        self.cold
+            .get_mut()
+            .expect("cold-model lock poisoned")
+            .pending
+            .insert(name.clone(), ColdModel { bundle, opts, max_batch, replicas });
+        Ok(name)
+    }
+
     /// Route alias, e.g. "default" -> "resnet_tiny_lut".
     pub fn alias(&mut self, from: &str, to: &str) {
         self.aliases.insert(from.to_string(), to.to_string());
@@ -146,14 +196,52 @@ impl Registry {
 
     pub fn resolve(&self, name: &str) -> Result<Arc<ModelEntry>> {
         let target = self.aliases.get(name).map(|s| s.as_str()).unwrap_or(name);
-        self.models
-            .get(target)
-            .cloned()
-            .ok_or_else(|| anyhow!("unknown model '{name}'"))
+        if let Some(e) = self.models.get(target) {
+            return Ok(e.clone());
+        }
+        // Cold path: page the model in on first request. Building under
+        // the lock means concurrent first requests construct the pool
+        // exactly once; later resolves hit `warmed` (or `models`) and
+        // never wait on a build.
+        let mut cold = self.cold.lock().expect("cold-model lock poisoned");
+        if let Some(e) = cold.warmed.get(target) {
+            return Ok(e.clone());
+        }
+        if let Some(spec) = cold.pending.get(target) {
+            let graph = spec.bundle.graph()?;
+            let entry = Arc::new(ModelEntry::native(
+                target,
+                &graph,
+                spec.opts,
+                spec.max_batch,
+                spec.replicas,
+            )?);
+            // only drop the pending spec once the build succeeded, so a
+            // transiently unreadable bundle stays resolvable
+            cold.pending.remove(target);
+            cold.warmed.insert(target.to_string(), entry.clone());
+            return Ok(entry);
+        }
+        Err(anyhow!("unknown model '{name}'"))
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.models.keys().cloned().collect()
+        let mut names: std::collections::BTreeSet<String> = self.models.keys().cloned().collect();
+        let cold = self.cold.lock().expect("cold-model lock poisoned");
+        names.extend(cold.pending.keys().cloned());
+        names.extend(cold.warmed.keys().cloned());
+        names.into_iter().collect()
+    }
+
+    /// Lazily registered models that have not been paged in yet.
+    pub fn cold_names(&self) -> Vec<String> {
+        self.cold
+            .lock()
+            .expect("cold-model lock poisoned")
+            .pending
+            .keys()
+            .cloned()
+            .collect()
     }
 
     /// Grow every model's pool to at least `n` replicas (best effort:
@@ -239,5 +327,80 @@ mod tests {
         // the resolve() Arc above is temporary, so get_mut succeeds
         r.replicate_to(4).unwrap();
         assert_eq!(r.resolve("grow").unwrap().pool.len(), 4);
+    }
+
+    fn saved_graph(name: &str) -> (crate::nn::graph::Graph, String) {
+        let g = build_cnn_graph(name, [8, 8, 3], &[ConvSpec { cout: 4, k: 3, stride: 1 }], 5, 0);
+        let dir = std::env::temp_dir().join("lutnn_coord_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}.lutnn")).to_string_lossy().into_owned();
+        crate::model_fmt::save_bundle(&g, &path).unwrap();
+        (g, path)
+    }
+
+    #[test]
+    fn lazy_registration_pages_models_in_on_first_resolve() {
+        let (_, path) = saved_graph("cold1");
+        let mut r = Registry::new();
+        let name = r.register_lazy(&path, LutOpts::all(), 8, 1).unwrap();
+        assert_eq!(name, "cold1");
+        // visible before any paging, tables still on disk
+        assert_eq!(r.cold_names(), vec!["cold1".to_string()]);
+        assert!(r.names().contains(&"cold1".to_string()));
+
+        let e = r.resolve("cold1").unwrap();
+        assert!(r.cold_names().is_empty(), "first resolve must page the model in");
+        let e2 = r.resolve("cold1").unwrap();
+        assert!(Arc::ptr_eq(&e, &e2), "later resolves must reuse the warmed pool");
+
+        let x = Tensor::zeros(vec![2, 8, 8, 3]);
+        let mut out = Tensor::zeros(vec![0]);
+        e.engine().run_batch(&x, &mut out).unwrap();
+        assert_eq!(out.shape, vec![2, 5]);
+    }
+
+    #[test]
+    fn lazy_resolve_matches_eager_registration_bitwise() {
+        let (g, path) = saved_graph("cold_parity");
+        let eager = ModelEntry::native("cold_parity", &g, LutOpts::all(), 8, 1).unwrap();
+        let mut r = Registry::new();
+        r.register_lazy(&path, LutOpts::all(), 8, 1).unwrap();
+        let lazy = r.resolve("cold_parity").unwrap();
+
+        let x = Tensor::new(vec![3, 8, 8, 3], vec![0.25; 3 * 192]);
+        let mut a = Tensor::zeros(vec![0]);
+        let mut b = Tensor::zeros(vec![0]);
+        eager.engine().run_batch(&x, &mut a).unwrap();
+        lazy.engine().run_batch(&x, &mut b).unwrap();
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data, "paged-in model must compute bitwise what the eager one does");
+    }
+
+    #[test]
+    fn aliases_route_to_cold_models_and_errors_stay_typed() {
+        let (_, path) = saved_graph("cold_alias");
+        let mut r = Registry::new();
+        r.register_lazy(&path, LutOpts::all(), 4, 1).unwrap();
+        r.alias("default", "cold_alias");
+        assert_eq!(r.resolve("default").unwrap().name, "cold_alias");
+        assert!(r.resolve("still_missing").is_err());
+        // registering garbage fails at registration time, not resolve time
+        assert!(r.register_lazy("/nonexistent/zoo/m.lutnn", LutOpts::all(), 4, 1).is_err());
+    }
+
+    #[test]
+    fn many_cold_models_register_cheaply_and_page_independently() {
+        let mut r = Registry::new();
+        let n = 24;
+        for i in 0..n {
+            let (_, path) = saved_graph(&format!("zoo{i:02}"));
+            r.register_lazy(&path, LutOpts::all(), 4, 1).unwrap();
+        }
+        assert_eq!(r.names().len(), n);
+        assert_eq!(r.cold_names().len(), n);
+        // paging one in leaves the other n-1 cold
+        r.resolve("zoo07").unwrap();
+        assert_eq!(r.cold_names().len(), n - 1);
+        assert!(r.names().len() == n, "warmed models stay listed");
     }
 }

@@ -1,0 +1,266 @@
+//! Decomposed lookup tables (ReducedLUT-style, PAPERS.md: "Table
+//! Decomposition with Don't Care Conditions"): split each `[C, K, M]`
+//! table into a **shared base** plus **small residual sub-tables**.
+//!
+//! Per codebook `c`, the base row `base[c] = mean_k T[c, k, :]` carries
+//! the part of the table every centroid choice shares; since the base
+//! rows are added regardless of which centroid wins, they fold across
+//! codebooks into one `[M]` vector `base_total = sum_c base[c]` — the
+//! rank-one component of the output. What remains per `(c, k)` is the
+//! residual `T[c, k, :] - base[c]`, which is small (centroids cluster,
+//! so table rows cluster) and quantizes to **4-bit signed** values at a
+//! per-codebook scale, nibble-packed two to a byte.
+//!
+//! Memory: `4*M + C*K*ceil(M/2) + 4*C` bytes vs the deployed INT8
+//! table's `C*K*M` — approaching **2x smaller** as tables grow, at a
+//! bounded accuracy cost (residual quantization only; the base is kept
+//! exact f32). The residual sub-tables are stored `[C, K, ceil(M/2)]`
+//! row-major — the inner-loop access order — pinned to
+//! [`TABLE_ALIGN`](crate::lut::layout::TABLE_ALIGN) like every other
+//! hot table (see `lut::layout`).
+//!
+//! The `"lut-dec"` kernel (`api::DecLutKernel`) executes this
+//! decomposition; its documented error bound vs the scalar `"lut"`
+//! reference is pinned by the `kernel_parity` fuzz harness.
+
+use crate::lut::layout::{AlignedVec, TABLE_ALIGN};
+use crate::lut::LutLinear;
+
+/// 4-bit signed residual range: values quantize to `-7..=7` (symmetric,
+/// so the scale maps `max|resid|` to 7) and are stored biased by +8 in
+/// one nibble.
+const RESID_MAX: f32 = 7.0;
+
+/// A `[C, K, M]` table decomposed into a shared base vector plus
+/// nibble-packed 4-bit residual sub-tables.
+#[derive(Debug, Clone)]
+pub struct DecomposedTable {
+    /// rank-one component folded across codebooks: `sum_c mean_k T[c,k,:]`, `[M]` f32
+    pub base_total: Vec<f32>,
+    /// residual quantization step per codebook, `[C]`
+    pub scales: Vec<f32>,
+    /// nibble-packed residuals `[C, K, ceil(M/2)]`, low nibble = even
+    /// output index, biased by +8 (cache-line aligned)
+    resid: AlignedVec<u8>,
+    pub c: usize,
+    pub k: usize,
+    pub m: usize,
+}
+
+impl DecomposedTable {
+    /// Decompose the exact f32 table of `lut`.
+    pub fn decompose(lut: &LutLinear) -> DecomposedTable {
+        let (c_total, k, m) = (lut.qtable.c, lut.qtable.k, lut.m);
+        let table = &lut.table_f32;
+        assert_eq!(table.len(), c_total * k * m);
+
+        // Per-codebook mean rows, folded into the shared base vector.
+        let mut base = vec![0.0f32; c_total * m];
+        let mut base_total = vec![0.0f32; m];
+        for c in 0..c_total {
+            let brow = &mut base[c * m..(c + 1) * m];
+            for kk in 0..k {
+                let row = &table[(c * k + kk) * m..(c * k + kk + 1) * m];
+                for (b, &t) in brow.iter_mut().zip(row) {
+                    *b += t;
+                }
+            }
+            let inv_k = 1.0 / k as f32;
+            for (bt, b) in base_total.iter_mut().zip(brow.iter_mut()) {
+                *b *= inv_k;
+                *bt += *b;
+            }
+        }
+
+        // Per-codebook residual scale: max|resid| maps to RESID_MAX.
+        let mut scales = vec![0.0f32; c_total];
+        for c in 0..c_total {
+            let brow = &base[c * m..(c + 1) * m];
+            let mut max_abs = 0.0f32;
+            for kk in 0..k {
+                let row = &table[(c * k + kk) * m..(c * k + kk + 1) * m];
+                for (&t, &b) in row.iter().zip(brow) {
+                    max_abs = max_abs.max((t - b).abs());
+                }
+            }
+            scales[c] = (max_abs / RESID_MAX).max(1e-30);
+        }
+
+        // Quantize + nibble-pack the residual sub-tables.
+        let row_bytes = m.div_ceil(2);
+        let mut resid = AlignedVec::<u8>::zeroed(c_total * k * row_bytes, TABLE_ALIGN);
+        let packed = resid.as_mut_slice();
+        for c in 0..c_total {
+            let brow = &base[c * m..(c + 1) * m];
+            let inv_s = 1.0 / scales[c];
+            for kk in 0..k {
+                let row = &table[(c * k + kk) * m..(c * k + kk + 1) * m];
+                let dst = &mut packed[(c * k + kk) * row_bytes..(c * k + kk + 1) * row_bytes];
+                for j in 0..m {
+                    let r = (row[j] - brow[j]) * inv_s;
+                    let q = r.round().clamp(-RESID_MAX, RESID_MAX) as i32;
+                    let nib = (q + 8) as u8; // biased: 1..=15
+                    if j & 1 == 0 {
+                        dst[j / 2] = nib;
+                    } else {
+                        dst[j / 2] |= nib << 4;
+                    }
+                }
+            }
+        }
+
+        DecomposedTable { base_total, scales, resid, c: c_total, k, m }
+    }
+
+    /// Bytes per packed residual row (`ceil(M/2)`).
+    pub fn row_bytes(&self) -> usize {
+        self.m.div_ceil(2)
+    }
+
+    /// The packed residual sub-tables, `[C, K, row_bytes]` row-major.
+    pub fn resid(&self) -> &[u8] {
+        self.resid.as_slice()
+    }
+
+    /// Bytes held by the decomposed representation (base + residual
+    /// sub-tables + scales) — the Fig. 10-style table accounting the
+    /// memory bench reads.
+    pub fn table_bytes(&self) -> usize {
+        self.base_total.len() * 4 + self.resid.len() + self.scales.len() * 4
+    }
+
+    /// Alignment (bytes) the residual sub-tables are pinned to.
+    pub fn table_alignment_bytes(&self) -> usize {
+        self.resid.align_bytes()
+    }
+
+    /// Dequantized residual for output `j` of row `(c, kk)` — test/debug
+    /// path; the kernel inlines this unpacking.
+    pub fn residual_at(&self, c: usize, kk: usize, j: usize) -> f32 {
+        let byte = self.resid.as_slice()[(c * self.k + kk) * self.row_bytes() + j / 2];
+        let nib = if j & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+        (nib as i32 - 8) as f32 * self.scales[c]
+    }
+
+    /// Reconstructed table entry `(c, kk, j)` = shared mean row +
+    /// dequantized residual. Reconstruction error is bounded by half a
+    /// residual step: `|recon - T[c,kk,j]| <= scales[c] / 2`.
+    pub fn reconstruct_at(&self, base: &[f32], c: usize, kk: usize, j: usize) -> f32 {
+        base[c * self.m + j] + self.residual_at(c, kk, j)
+    }
+
+    /// Worst-case per-element reconstruction error accumulated across
+    /// all C codebooks: `sum_c scales[c] / 2`.
+    pub fn max_abs_error(&self) -> f32 {
+        self.scales.iter().sum::<f32>() * 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::kmeans::learn_codebooks;
+    use crate::util::prng::Prng;
+
+    fn fixture(seed: u64, n: usize, c: usize, v: usize, k: usize, m: usize) -> LutLinear {
+        let mut rng = Prng::new(seed);
+        let d = c * v;
+        let a = rng.normal_vec(n * d, 1.0);
+        let w = rng.normal_vec(d * m, 1.0);
+        let cb = learn_codebooks(&a, n, d, c, k, 5, seed);
+        LutLinear::new(cb, &w, m, None, 8)
+    }
+
+    /// Recompute the per-codebook mean rows the decomposition is
+    /// defined against (the folded `base_total` loses the per-codebook
+    /// split, which the reconstruction bound needs).
+    fn mean_rows(lut: &LutLinear) -> Vec<f32> {
+        let (c_total, k, m) = (lut.qtable.c, lut.qtable.k, lut.m);
+        let mut base = vec![0.0f32; c_total * m];
+        for c in 0..c_total {
+            for kk in 0..k {
+                for j in 0..m {
+                    base[c * m + j] += lut.table_f32[(c * k + kk) * m + j];
+                }
+            }
+            for j in 0..m {
+                base[c * m + j] /= k as f32;
+            }
+        }
+        base
+    }
+
+    #[test]
+    fn reconstruction_error_within_half_step_per_codebook() {
+        for (seed, c, v, k, m) in [(0u64, 4, 4, 16, 8), (1, 2, 9, 8, 17), (2, 1, 3, 1, 5)] {
+            let lut = fixture(seed, 32, c, v, k, m);
+            let dec = DecomposedTable::decompose(&lut);
+            let base = mean_rows(&lut);
+            for ci in 0..c {
+                let half = dec.scales[ci] * 0.5 + 1e-6;
+                for kk in 0..k {
+                    for j in 0..m {
+                        let got = dec.reconstruct_at(&base, ci, kk, j);
+                        let want = lut.table_f32[(ci * k + kk) * m + j];
+                        assert!(
+                            (got - want).abs() <= half,
+                            "c={ci} k={kk} j={j}: |{got} - {want}| > {half}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn base_total_is_the_sum_of_mean_rows() {
+        let lut = fixture(3, 24, 3, 4, 8, 6);
+        let dec = DecomposedTable::decompose(&lut);
+        let base = mean_rows(&lut);
+        for j in 0..6 {
+            let want: f32 = (0..3).map(|c| base[c * 6 + j]).sum();
+            assert!((dec.base_total[j] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn decomposed_table_is_smaller_than_the_int8_table() {
+        // On realistic table geometry the nibble-packed residuals
+        // approach half the INT8 table; base + scales are O(M + C).
+        let lut = fixture(4, 64, 4, 4, 16, 32);
+        let dec = DecomposedTable::decompose(&lut);
+        let int8_bytes = lut.qtable.data.len();
+        assert!(
+            dec.table_bytes() < int8_bytes,
+            "{} !< {int8_bytes}",
+            dec.table_bytes()
+        );
+        // exact accounting: 4M + C*K*ceil(M/2) + 4C
+        assert_eq!(dec.table_bytes(), 4 * 32 + 4 * 16 * 16 + 4 * 4);
+    }
+
+    #[test]
+    fn residual_storage_is_cache_line_aligned() {
+        let lut = fixture(5, 16, 2, 4, 8, 7);
+        let dec = DecomposedTable::decompose(&lut);
+        assert_eq!(dec.table_alignment_bytes(), TABLE_ALIGN);
+        assert_eq!(dec.resid().as_ptr() as usize % TABLE_ALIGN, 0);
+        // odd M: rows pack to ceil(7/2) = 4 bytes
+        assert_eq!(dec.row_bytes(), 4);
+        assert_eq!(dec.resid().len(), 2 * 8 * 4);
+    }
+
+    #[test]
+    fn single_centroid_tables_have_zero_residuals() {
+        // K = 1: the mean row IS the only row, so residuals vanish and
+        // the scale floors at the epsilon.
+        let lut = fixture(6, 16, 2, 3, 1, 5);
+        let dec = DecomposedTable::decompose(&lut);
+        for c in 0..2 {
+            for j in 0..5 {
+                assert_eq!(dec.residual_at(c, 0, j), 0.0, "c={c} j={j}");
+            }
+        }
+        assert!(dec.max_abs_error() <= 1e-6);
+    }
+}

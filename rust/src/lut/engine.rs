@@ -25,6 +25,7 @@
 //! `forward_into` is the allocation-free entry point the kernel calls;
 //! `forward` is an allocating convenience for tests and one-shot use.
 
+use crate::lut::layout::{AlignedVec, TABLE_ALIGN};
 use crate::pq::{build_table, quantize_table, Codebooks};
 use crate::tensor::QTable;
 
@@ -110,8 +111,10 @@ pub struct LutLinear {
     /// INT8 table with per-codebook scales (bundle format)
     pub qtable: QTable,
     /// table requantized to one common scale (enables cross-codebook
-    /// integer accumulation — paper §5.2 mixed precision)
-    qcommon: Vec<i8>,
+    /// integer accumulation — paper §5.2 mixed precision); rows are
+    /// `[C, K, M]` row-major — the inner-loop access order — with the
+    /// first row pinned to a cache line (see `lut::layout`)
+    qcommon: AlignedVec<i8>,
     common_scale: f32,
     /// dequantized f32 table (naive/FP32 paths and tests)
     pub table_f32: Vec<f32>,
@@ -165,12 +168,13 @@ impl LutLinear {
         // requantize to common scale for integer accumulation (§5.2):
         // q' = round(q * scale_c / scale_max) keeps |q'| <= 127.
         let common_scale = qtable.scale.iter().cloned().fold(0.0f32, f32::max).max(1e-30);
-        let mut qcommon = vec![0i8; qtable.data.len()];
+        let mut qcommon = AlignedVec::<i8>::zeroed(qtable.data.len(), TABLE_ALIGN);
+        let qc = qcommon.as_mut_slice();
         for c in 0..qtable.c {
             let ratio = qtable.scale[c] / common_scale;
             let base = c * qtable.k * m;
             for i in 0..qtable.k * m {
-                qcommon[base + i] =
+                qc[base + i] =
                     (qtable.data[base + i] as f32 * ratio).round().clamp(-128.0, 127.0) as i8;
             }
         }
@@ -186,6 +190,19 @@ impl LutLinear {
     /// tolerance bounds are expressed in.
     pub fn common_scale(&self) -> f32 {
         self.common_scale
+    }
+
+    /// Bytes of the hot lookup table the deployed path reads (the
+    /// common-scale INT8 table) — the quantity `benches/memory_footprint`
+    /// gates per model.
+    pub fn table_bytes(&self) -> usize {
+        self.qcommon.len()
+    }
+
+    /// Alignment (bytes) the hot table's first row is pinned to — the
+    /// tract `LutKer::table_alignment_bytes()` contract.
+    pub fn table_alignment_bytes(&self) -> usize {
+        self.qcommon.align_bytes()
     }
 
     /// Bytes held by the deployed representation (Fig. 10 accounting):
@@ -353,13 +370,14 @@ impl LutLinear {
     /// per-element indexed reads.
     fn accumulate_int_scalar(&self, idx: &[u16], n: usize, acc: &mut Vec<i32>, out: &mut [f32]) {
         let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
+        let qc = self.qcommon.as_slice();
         acc.resize(m, 0);
         for i in 0..n {
             acc.fill(0);
             for c in 0..c_total {
                 let kk = idx[i * c_total + c] as usize;
                 for j in 0..m {
-                    acc[j] += self.qcommon[(c * k + kk) * m + j] as i32;
+                    acc[j] += qc[(c * k + kk) * m + j] as i32;
                 }
             }
             for j in 0..m {
@@ -381,6 +399,7 @@ impl LutLinear {
         out: &mut [f32],
     ) {
         let (c_total, k, m) = (self.cb.c, self.cb.k, self.m);
+        let qc = self.qcommon.as_slice();
         // |q| <= 127, i16 max 32767 -> up to 256 safe adds per i16 lane.
         const GROUP: usize = 256;
         acc16.resize(m, 0);
@@ -395,7 +414,7 @@ impl LutLinear {
                     let c = g * GROUP + cc;
                     let kk = kk16 as usize;
                     let base = (c * k + kk) * m;
-                    let row = &self.qcommon[base..base + m];
+                    let row = &qc[base..base + m];
                     for (a, &q) in acc16.iter_mut().zip(row) {
                         *a += q as i16;
                     }
@@ -682,5 +701,16 @@ mod tests {
         let (_, _, lut) = setup(5, 16, 4, 9, 16, 32);
         let expect = 4 * 16 * 9 * 4 + 4 * 16 * 32 + 4 * 4;
         assert_eq!(lut.deployed_bytes(), expect);
+    }
+
+    #[test]
+    fn hot_table_is_cache_line_aligned_even_after_clone() {
+        let (_, _, lut) = setup(6, 16, 3, 4, 8, 7);
+        assert_eq!(lut.table_bytes(), 3 * 8 * 7);
+        assert_eq!(lut.table_alignment_bytes(), crate::lut::TABLE_ALIGN);
+        assert!(lut.qcommon.is_aligned());
+        let cloned = lut.clone();
+        assert!(cloned.qcommon.is_aligned(), "clone must re-pin the table");
+        assert_eq!(cloned.qcommon.as_slice(), lut.qcommon.as_slice());
     }
 }

@@ -1,0 +1,138 @@
+//! Cache-aware table storage: alignment-pinned buffers for the hot
+//! lookup tables.
+//!
+//! Every LUT-family kernel reads its table rows M-contiguously in the
+//! inner accumulation loop, so the layout contract is: tables are
+//! stored `[C, K, M]` row-major (rows packed, no stride padding — the
+//! access order *is* the storage order) with the first element pinned
+//! to a cache-line boundary. This is the same discipline tract's
+//! `LutKer::table_alignment_bytes()` imposes per micro-kernel: the
+//! kernel declares the alignment, the storage honors it, and the
+//! session's memory report exposes both so regressions are measurable
+//! (`benches/memory_footprint.rs`).
+//!
+//! [`AlignedVec`] is the safe realization: it over-allocates a plain
+//! `Vec<T>` by one alignment unit and exposes the aligned window, so no
+//! `unsafe` allocator calls are needed and the buffer stays a normal
+//! owned allocation.
+
+/// Cache-line alignment every LUT-family kernel pins its hot table to.
+pub const TABLE_ALIGN: usize = 64;
+
+/// A fixed-length buffer whose first exposed element sits on an
+/// `align`-byte boundary. The buffer never grows after construction;
+/// `Clone` re-derives the aligned window for the new allocation.
+#[derive(Debug)]
+pub struct AlignedVec<T: Copy + Default> {
+    buf: Vec<T>,
+    /// element offset of the aligned window inside `buf`
+    offset: usize,
+    len: usize,
+    align: usize,
+}
+
+impl<T: Copy + Default> AlignedVec<T> {
+    /// A zero-filled aligned buffer of `len` elements. `align` must be
+    /// a power of two and a multiple of the element size.
+    pub fn zeroed(len: usize, align: usize) -> AlignedVec<T> {
+        let size = std::mem::size_of::<T>();
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        assert!(align % size == 0, "alignment must be a multiple of the element size");
+        let slack = align / size;
+        let buf = vec![T::default(); len + slack];
+        // The Vec allocation is element-aligned, so the byte misfit is a
+        // multiple of the element size and the window offset is exact.
+        let mis = buf.as_ptr() as usize % align;
+        let offset = if mis == 0 { 0 } else { (align - mis) / size };
+        AlignedVec { buf, offset, len, align }
+    }
+
+    /// An aligned copy of `data`.
+    pub fn from_slice(data: &[T], align: usize) -> AlignedVec<T> {
+        let mut v = Self::zeroed(data.len(), align);
+        v.as_mut_slice().copy_from_slice(data);
+        v
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.buf[self.offset..self.offset + self.len]
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.buf[self.offset..self.offset + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The alignment (bytes) the window was pinned to at construction.
+    pub fn align_bytes(&self) -> usize {
+        self.align
+    }
+
+    /// Whether the exposed window actually starts on the pinned
+    /// boundary (true by construction; asserted in tests).
+    pub fn is_aligned(&self) -> bool {
+        self.as_slice().as_ptr() as usize % self.align == 0
+    }
+}
+
+impl<T: Copy + Default> Clone for AlignedVec<T> {
+    fn clone(&self) -> Self {
+        // Recompute the window for the fresh allocation — copying
+        // `offset` verbatim would mis-align the clone.
+        Self::from_slice(self.as_slice(), self.align)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_is_aligned_and_zero() {
+        for len in [0usize, 1, 7, 64, 255] {
+            for align in [1usize, 16, 64, 128] {
+                let v = AlignedVec::<u8>::zeroed(len, align);
+                assert!(v.is_aligned(), "len={len} align={align}");
+                assert_eq!(v.len(), len);
+                assert_eq!(v.align_bytes(), align);
+                assert!(v.as_slice().iter().all(|&b| b == 0));
+            }
+        }
+    }
+
+    #[test]
+    fn from_slice_round_trips_every_element_type() {
+        let bytes: Vec<i8> = (0..100).map(|i| (i as i8).wrapping_mul(3)).collect();
+        let v = AlignedVec::from_slice(&bytes, TABLE_ALIGN);
+        assert!(v.is_aligned());
+        assert_eq!(v.as_slice(), &bytes[..]);
+
+        let floats: Vec<f32> = (0..33).map(|i| i as f32 * 0.5).collect();
+        let f = AlignedVec::from_slice(&floats, TABLE_ALIGN);
+        assert!(f.is_aligned());
+        assert_eq!(f.as_slice(), &floats[..]);
+    }
+
+    #[test]
+    fn clone_stays_aligned() {
+        let v = AlignedVec::from_slice(&[1i8, 2, 3, 4, 5], TABLE_ALIGN);
+        let c = v.clone();
+        assert!(c.is_aligned(), "clone must re-derive its window");
+        assert_eq!(c.as_slice(), v.as_slice());
+    }
+
+    #[test]
+    fn mutation_stays_in_window() {
+        let mut v = AlignedVec::<u8>::zeroed(16, 64);
+        v.as_mut_slice().copy_from_slice(&[7u8; 16]);
+        assert!(v.as_slice().iter().all(|&b| b == 7));
+        assert!(v.is_aligned());
+    }
+}

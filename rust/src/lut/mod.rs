@@ -15,7 +15,11 @@
 //!   ③ blocked sequential table reads (the role NEON/SSE shuffle served)
 //!   ④ mixed-precision integer accumulation with a common table scale
 
+pub mod decomposed;
 pub mod engine;
+pub mod layout;
 pub mod simd;
 
+pub use decomposed::DecomposedTable;
 pub use engine::{LutLinear, LutOpts, LutScratch};
+pub use layout::{AlignedVec, TABLE_ALIGN};

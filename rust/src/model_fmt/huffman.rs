@@ -1,0 +1,453 @@
+//! Canonical Huffman coding for bundle blob sections (format v2).
+//!
+//! Dependency-free byte-stream codec in the classic canonical style
+//! (the JPEG/DEFLATE discipline): the encoder ships only a 256-entry
+//! *code length* table; both sides derive identical codes by assigning
+//! consecutive values to symbols sorted by `(length, symbol)`. That
+//! makes the stream deterministic — same input bytes, same output
+//! bytes, on every platform — which the bundle round-trip tests pin.
+//!
+//! Stream layout (`compress` output):
+//!
+//! ```text
+//!   u8 mode               0 = stored, 1 = huffman
+//!   mode 0: raw bytes verbatim
+//!   mode 1: u32 raw_len (LE)
+//!           256 x u8 code length per symbol (0 = symbol absent)
+//!           bit stream, MSB-first within each byte, zero-padded
+//! ```
+//!
+//! `compress` falls back to mode 0 whenever coding does not shrink the
+//! data (incompressible mantissa bytes, tiny blobs), so the encoded
+//! section is never more than one byte larger than the raw section.
+//! `decompress` is hostile-input safe: corrupt length tables
+//! (over-subscribed Kraft sums, absurd lengths), truncated bit streams
+//! and wrong raw lengths all come back as typed errors, never panics —
+//! the same contract `model_fmt::parse_bundle` keeps for the envelope.
+
+/// Decoder failure on a malformed or truncated stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HuffError(pub String);
+
+impl std::fmt::Display for HuffError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "huffman stream error: {}", self.0)
+    }
+}
+
+impl std::error::Error for HuffError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, HuffError> {
+    Err(HuffError(msg.into()))
+}
+
+/// Longest admissible code. Honest encodes of u32-counted data stay
+/// well under this (Fibonacci bound ~46); anything longer in a length
+/// table is hostile.
+const MAX_LEN: usize = 60;
+
+/// Build Huffman code lengths from byte frequencies. Deterministic:
+/// ties in the merge queue break on ascending node id, and leaves get
+/// ids in symbol order.
+fn code_lengths(freq: &[u64; 256]) -> [u8; 256] {
+    let mut lens = [0u8; 256];
+    let symbols: Vec<usize> = (0..256).filter(|&s| freq[s] > 0).collect();
+    match symbols.len() {
+        0 => return lens,
+        1 => {
+            // a single symbol still needs one bit on the wire
+            lens[symbols[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+
+    // Plain two-queue-free Huffman via a sorted merge list: node ids
+    // are assigned in creation order, and the candidate set is kept
+    // sorted by (count, id) so extraction order is fully deterministic.
+    struct Node {
+        count: u64,
+        kids: Option<(usize, usize)>,
+        symbol: usize,
+    }
+    let mut nodes: Vec<Node> = symbols
+        .iter()
+        .map(|&s| Node { count: freq[s], kids: None, symbol: s })
+        .collect();
+    // live = indices of unmerged roots, kept sorted ascending by
+    // (count, id); pop the two smallest, push the merged node.
+    let mut live: Vec<usize> = (0..nodes.len()).collect();
+    live.sort_by_key(|&i| (nodes[i].count, i));
+    while live.len() > 1 {
+        let a = live.remove(0);
+        let b = live.remove(0);
+        let merged = Node { count: nodes[a].count + nodes[b].count, kids: Some((a, b)), symbol: 0 };
+        nodes.push(merged);
+        let id = nodes.len() - 1;
+        let key = (nodes[id].count, id);
+        let pos = live.partition_point(|&i| (nodes[i].count, i) < key);
+        live.insert(pos, id);
+    }
+
+    // Depth-first depth assignment (iterative, the tree can be deep).
+    let mut stack = vec![(live[0], 0u8)];
+    while let Some((id, depth)) = stack.pop() {
+        match nodes[id].kids {
+            Some((a, b)) => {
+                stack.push((a, depth + 1));
+                stack.push((b, depth + 1));
+            }
+            None => lens[nodes[id].symbol] = depth.max(1),
+        }
+    }
+    lens
+}
+
+/// Canonical code assignment: symbols sorted by (length, value) get
+/// consecutive codes, shorter lengths first. Returns (code, len) per
+/// symbol; len 0 = absent.
+fn canonical_codes(lens: &[u8; 256]) -> [(u64, u8); 256] {
+    let mut codes = [(0u64, 0u8); 256];
+    let mut order: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    order.sort_by_key(|&s| (lens[s], s));
+    let mut code = 0u64;
+    let mut prev_len = 0u8;
+    for &s in &order {
+        code <<= lens[s] - prev_len;
+        codes[s] = (code, lens[s]);
+        code += 1;
+        prev_len = lens[s];
+    }
+    codes
+}
+
+/// MSB-first bit sink.
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter { out: Vec::new(), acc: 0, nbits: 0 }
+    }
+
+    fn push(&mut self, code: u64, len: u8) {
+        self.acc = (self.acc << len) | code;
+        self.nbits += len as u32;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.out.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc << (8 - self.nbits)) as u8);
+        }
+        self.out
+    }
+}
+
+/// Huffman-code `data`; `None` when coding would not shrink it.
+fn encode_huffman(data: &[u8]) -> Option<Vec<u8>> {
+    let mut freq = [0u64; 256];
+    for &b in data {
+        freq[b as usize] += 1;
+    }
+    let lens = code_lengths(&freq);
+    let codes = canonical_codes(&lens);
+    let payload_bits: u64 = data.iter().map(|&b| codes[b as usize].1 as u64).sum();
+    let encoded_len = 1 + 4 + 256 + payload_bits.div_ceil(8) as usize;
+    if encoded_len >= 1 + data.len() {
+        return None;
+    }
+    let mut out = Vec::with_capacity(encoded_len);
+    out.push(1u8); // mode: huffman
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&lens);
+    let mut bits = BitWriter::new();
+    for &b in data {
+        let (code, len) = codes[b as usize];
+        bits.push(code, len);
+    }
+    out.extend_from_slice(&bits.finish());
+    Some(out)
+}
+
+/// Compress `data` into a self-describing stream: Huffman-coded when
+/// that shrinks it, stored verbatim otherwise (1-byte overhead).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    if let Some(encoded) = encode_huffman(data) {
+        return encoded;
+    }
+    let mut out = Vec::with_capacity(1 + data.len());
+    out.push(0u8); // mode: stored
+    out.extend_from_slice(data);
+    out
+}
+
+/// Decode a `compress` stream; `raw_len` is the expected decoded byte
+/// count (the bundle knows it from the blob shape). Every malformed
+/// input returns `Err`, never panics.
+pub fn decompress(stream: &[u8], raw_len: usize) -> Result<Vec<u8>, HuffError> {
+    let (&mode, rest) = match stream.split_first() {
+        Some(x) => x,
+        None => return err("empty stream"),
+    };
+    match mode {
+        0 => {
+            if rest.len() != raw_len {
+                return err(format!("stored section is {} bytes, expected {raw_len}", rest.len()));
+            }
+            Ok(rest.to_vec())
+        }
+        1 => decode_huffman(rest, raw_len),
+        other => err(format!("unknown stream mode {other}")),
+    }
+}
+
+fn decode_huffman(rest: &[u8], raw_len: usize) -> Result<Vec<u8>, HuffError> {
+    if rest.len() < 4 + 256 {
+        return err("truncated header");
+    }
+    let stated_len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+    if stated_len != raw_len {
+        return err(format!("stream says {stated_len} raw bytes, blob shape says {raw_len}"));
+    }
+    let mut lens = [0u8; 256];
+    lens.copy_from_slice(&rest[4..4 + 256]);
+    let payload = &rest[4 + 256..];
+
+    // Canonical decode tables: per length, the first code value, and
+    // the symbols in canonical order.
+    let mut order: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    order.sort_by_key(|&s| (lens[s], s));
+    if order.is_empty() {
+        return if raw_len == 0 { Ok(Vec::new()) } else { err("empty code table") };
+    }
+    let mut kraft = 0u128;
+    for &s in &order {
+        let l = lens[s] as usize;
+        if l > MAX_LEN {
+            return err(format!("code length {l} exceeds max {MAX_LEN}"));
+        }
+        kraft += 1u128 << (MAX_LEN - l);
+    }
+    if kraft > 1u128 << MAX_LEN {
+        return err("over-subscribed code table (Kraft sum > 1)");
+    }
+    // first_code[l], count[l], first_index[l]
+    let mut first_code = [0u64; MAX_LEN + 1];
+    let mut count = [0usize; MAX_LEN + 1];
+    let mut first_index = [0usize; MAX_LEN + 1];
+    for &s in &order {
+        count[lens[s] as usize] += 1;
+    }
+    let mut code = 0u64;
+    let mut idx = 0usize;
+    for l in 1..=MAX_LEN {
+        first_code[l] = code;
+        first_index[l] = idx;
+        code = (code + count[l] as u64) << 1;
+        idx += count[l];
+    }
+
+    let mut out = Vec::with_capacity(raw_len);
+    let mut acc = 0u64;
+    let mut len = 0usize;
+    let mut bits = payload.iter().flat_map(|&b| (0..8).rev().map(move |i| (b >> i) & 1));
+    while out.len() < raw_len {
+        let bit = match bits.next() {
+            Some(b) => b,
+            None => return err("bit stream ends before all symbols decoded"),
+        };
+        acc = (acc << 1) | bit as u64;
+        len += 1;
+        if len > MAX_LEN {
+            return err("code longer than any table entry");
+        }
+        if count[len] > 0 {
+            let offset = acc.wrapping_sub(first_code[len]);
+            if acc >= first_code[len] && (offset as usize) < count[len] {
+                out.push(order[first_index[len] + offset as usize] as u8);
+                acc = 0;
+                len = 0;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Interleave bytes into `stride` planes: all byte-0s of each
+/// `stride`-wide element, then all byte-1s, ... Exponent bytes of f32
+/// data land in one run with far lower entropy than the mantissa
+/// bytes, which is where the f32 coding win comes from. `data.len()`
+/// must be a multiple of `stride`.
+pub fn to_planes(data: &[u8], stride: usize) -> Vec<u8> {
+    debug_assert_eq!(data.len() % stride, 0);
+    let n = data.len() / stride;
+    let mut out = Vec::with_capacity(data.len());
+    for p in 0..stride {
+        for i in 0..n {
+            out.push(data[i * stride + p]);
+        }
+    }
+    out
+}
+
+/// Inverse of [`to_planes`].
+pub fn from_planes(planes: &[u8], stride: usize) -> Vec<u8> {
+    debug_assert_eq!(planes.len() % stride, 0);
+    let n = planes.len() / stride;
+    let mut out = vec![0u8; planes.len()];
+    for p in 0..stride {
+        for i in 0..n {
+            out[i * stride + p] = planes[p * n + i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn round_trip(data: &[u8]) -> Vec<u8> {
+        let stream = compress(data);
+        decompress(&stream, data.len()).expect("round trip")
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_round_trip() {
+        for data in [&[][..], &[0u8][..], &[7, 7, 7][..], &[1, 2][..]] {
+            assert_eq!(round_trip(data), data);
+        }
+    }
+
+    #[test]
+    fn single_symbol_runs_round_trip_and_shrink() {
+        let data = vec![42u8; 4096];
+        let stream = compress(&data);
+        assert_eq!(decompress(&stream, data.len()).unwrap(), data);
+        // one symbol costs 1 bit -> ~512 payload bytes + 261 header
+        assert!(stream.len() * 2 < data.len(), "{} !< {}/2", stream.len(), data.len());
+    }
+
+    #[test]
+    fn peaked_distributions_beat_2x() {
+        // 4-bit-ish residual bytes: 16 values, strongly peaked at 8 —
+        // the decomposed-table regime the v2 bundle targets.
+        let mut rng = Prng::new(5);
+        let data: Vec<u8> = (0..8192)
+            .map(|_| {
+                let r = rng.normal_vec(1, 1.0)[0];
+                (8.0 + (r * 2.0).round().clamp(-7.0, 7.0)) as u8
+            })
+            .collect();
+        let stream = compress(&data);
+        assert_eq!(decompress(&stream, data.len()).unwrap(), data);
+        assert!(
+            stream.len() * 2 <= data.len(),
+            "peaked bytes must compress >= 2x: {} vs {}",
+            stream.len(),
+            data.len()
+        );
+    }
+
+    #[test]
+    fn incompressible_input_falls_back_to_stored() {
+        // high-entropy bytes: mode 0, exactly one byte of overhead
+        let mut rng = Prng::new(9);
+        let data: Vec<u8> = rng.normal_vec(997, 1.0).iter().map(|v| v.to_bits() as u8).collect();
+        let stream = compress(&data);
+        assert!(stream.len() <= data.len() + 1);
+        assert_eq!(decompress(&stream, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn all_256_symbols_round_trip() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(2048).collect();
+        assert_eq!(round_trip(&data), data);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let mut rng = Prng::new(3);
+        let data: Vec<u8> =
+            rng.normal_vec(500, 1.0).iter().map(|v| (v * 3.0) as i8 as u8).collect();
+        assert_eq!(compress(&data), compress(&data), "same bytes in, same bytes out");
+    }
+
+    #[test]
+    fn hostile_streams_error_not_panic() {
+        // empty / unknown mode
+        assert!(decompress(&[], 4).is_err());
+        assert!(decompress(&[9, 1, 2], 2).is_err());
+        // stored length mismatch
+        assert!(decompress(&[0, 1, 2], 5).is_err());
+        // truncated huffman header
+        assert!(decompress(&[1, 0, 0], 4).is_err());
+        // valid stream truncated at every byte must error cleanly
+        let data = vec![1u8, 2, 3, 1, 2, 1, 1, 1, 200, 9];
+        let data = data.repeat(40); // long enough to take the huffman path
+        let stream = compress(&data);
+        assert_eq!(stream[0], 1, "fixture should be huffman-coded");
+        for cut in 0..stream.len() {
+            assert!(decompress(&stream[..cut], data.len()).is_err(), "cut at {cut}");
+        }
+        // raw-length disagreement with the bit stream
+        assert!(decompress(&stream, data.len() + 1).is_err());
+        // over-subscribed kraft table: every symbol claims 1 bit
+        let mut bad = vec![1u8];
+        bad.extend_from_slice(&8u32.to_le_bytes());
+        bad.extend_from_slice(&[1u8; 256]);
+        bad.extend_from_slice(&[0u8; 8]);
+        let e = decompress(&bad, 8).unwrap_err();
+        assert!(e.0.contains("Kraft"), "{e}");
+        // absurd code length
+        let mut bad = vec![1u8];
+        bad.extend_from_slice(&8u32.to_le_bytes());
+        let mut lens = [0u8; 256];
+        lens[0] = 200;
+        lens[1] = 2;
+        lens[2] = 2;
+        bad.extend_from_slice(&lens);
+        bad.extend_from_slice(&[0u8; 8]);
+        assert!(decompress(&bad, 8).is_err());
+    }
+
+    #[test]
+    fn plane_transform_is_invertible_and_helps_f32() {
+        let mut rng = Prng::new(11);
+        let vals = rng.normal_vec(2048, 0.05);
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let planes = to_planes(&bytes, 4);
+        assert_eq!(from_planes(&planes, 4), bytes);
+        // same-scale normal data: exponent/sign bytes cluster, so the
+        // plane-split stream must code strictly smaller than raw
+        let split = compress(&planes);
+        assert!(
+            split.len() < bytes.len(),
+            "plane-split f32 must shrink: {} !< {}",
+            split.len(),
+            bytes.len()
+        );
+    }
+
+    #[test]
+    fn bounded_expansion_on_every_input() {
+        let mut rng = Prng::new(13);
+        for n in [0usize, 1, 2, 63, 64, 257] {
+            let data: Vec<u8> = rng.normal_vec(n, 1.0).iter().map(|v| v.to_bits() as u8).collect();
+            let stream = compress(&data);
+            assert!(stream.len() <= data.len() + 1, "n={n}");
+            assert_eq!(decompress(&stream, n).unwrap(), data);
+        }
+    }
+}

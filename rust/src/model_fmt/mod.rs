@@ -1,12 +1,39 @@
-//! `.lutnn` model bundle reader/writer (format v1, see DESIGN.md).
+//! `.lutnn` model bundle reader/writer (formats v1 + v2, see DESIGN.md).
 //!
 //! Layout: magic `LUTN` | u32 version | u32 header-JSON length | header
 //! JSON | 64-byte-aligned blobs. The header carries the execution graph
 //! and per-layer blob descriptors {offset, shape, dtype}. Written by
 //! `python/compile/export.py` after training; the writer here exists for
 //! round-trip tests and for saving rust-side converted models.
+//!
+//! **Format v2 (entropy-coded sections).** Any blob may carry two extra
+//! descriptor fields: `"enc"` (the section codec) and `"bytes"` (the
+//! encoded byte length in the file — with a codec, the shape product no
+//! longer determines the on-disk range). Codecs:
+//!
+//! | enc       | section contents                                        |
+//! |-----------|---------------------------------------------------------|
+//! | (absent)  | raw little-endian values, `shape_product * elem` bytes  |
+//! | `huff`    | canonical-Huffman stream ([`huffman`]) of the raw bytes |
+//! | `huff-p4` | bytes split into 4 interleaved planes, then `huff` —    |
+//! |           | groups f32 sign/exponent bytes into low-entropy runs    |
+//!
+//! [`save_bundle`] keeps writing pure-v1 bytes (no codecs, version 1 on
+//! the wire) so existing bundles, goldens and the python exporter stay
+//! byte-for-byte compatible; [`save_bundle_compressed`] writes version
+//! 2 and codes every blob that actually shrinks. The reader accepts
+//! both versions through the same [`parse_bundle`] entry point, and
+//! decoded graphs are bitwise-identical to their uncompressed twins.
+//!
+//! **Lazy loading.** [`load_bundle_lazy`] reads only the 12-byte
+//! envelope plus the header JSON — table sections stay cold on disk —
+//! so a server can register thousands of models cheaply and page each
+//! one in on first request ([`LazyBundle::graph`], used by
+//! `coordinator::Registry::register_lazy`).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
+use std::io::Read;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -17,8 +44,14 @@ use crate::pq::Codebooks;
 use crate::tensor::QTable;
 use crate::util::json::{self, Json};
 
+pub mod huffman;
+
 pub const MAGIC: &[u8; 4] = b"LUTN";
-pub const VERSION: u32 = 1;
+/// Current write version: v2 adds entropy-coded blob sections.
+pub const VERSION: u32 = 2;
+/// Legacy raw-blob version — still what [`save_bundle`] and the python
+/// exporter emit, and fully supported by the reader.
+pub const V1: u32 = 1;
 pub const ALIGN: usize = 64;
 
 // ----------------------------------------------------------------- read
@@ -45,6 +78,8 @@ pub enum BundleError {
     BlobOutOfBounds(String),
     /// blob shapes are internally inconsistent
     ShapeMismatch(String),
+    /// encoded blob section failed to decode (or names an unknown codec)
+    Codec(String),
 }
 
 impl std::fmt::Display for BundleError {
@@ -58,6 +93,7 @@ impl std::fmt::Display for BundleError {
             BundleError::UnknownLayerKind(k) => write!(f, "unknown layer kind '{k}'"),
             BundleError::BlobOutOfBounds(key) => write!(f, "blob '{key}' out of bounds"),
             BundleError::ShapeMismatch(m) => write!(f, "bundle shape mismatch: {m}"),
+            BundleError::Codec(m) => write!(f, "blob codec error: {m}"),
         }
     }
 }
@@ -76,6 +112,10 @@ struct BlobRef {
     offset: usize,
     shape: Vec<usize>,
     dtype: String,
+    /// v2 section codec (`"huff"` / `"huff-p4"`); absent = raw
+    enc: Option<String>,
+    /// encoded byte length in the file — required whenever `enc` is set
+    enc_bytes: Option<usize>,
 }
 
 fn blob_ref(entry: &Json, key: &str) -> Result<BlobRef> {
@@ -96,31 +136,67 @@ fn blob_ref(entry: &Json, key: &str) -> Result<BlobRef> {
             .and_then(|v| v.as_str())
             .unwrap_or("f32")
             .to_string(),
+        enc: b.get("enc").and_then(|v| v.as_str()).map(|s| s.to_string()),
+        enc_bytes: b.get("bytes").and_then(|v| v.as_usize()),
     })
 }
 
-/// Byte range of a blob, with every arithmetic step checked so hostile
-/// shape/offset values fail typed instead of overflowing.
-fn blob_range(b: &BlobRef, elem_bytes: usize, len: usize) -> Result<std::ops::Range<usize>> {
-    let n = b
-        .shape
+/// Decoded (raw) byte length a blob's shape implies, with every
+/// arithmetic step checked so hostile shape values fail typed instead
+/// of overflowing.
+fn raw_byte_len(b: &BlobRef, elem_bytes: usize) -> Result<usize> {
+    b.shape
         .iter()
         .try_fold(1usize, |acc, &s| acc.checked_mul(s))
         .and_then(|n| n.checked_mul(elem_bytes))
-        .ok_or_else(|| BundleError::ShapeMismatch(format!("blob shape {:?} overflows", b.shape)))?;
+        .ok_or_else(|| BundleError::ShapeMismatch(format!("blob shape {:?} overflows", b.shape)).into())
+}
+
+/// The raw little-endian bytes of a blob: borrowed straight from the
+/// file for raw sections, decoded into an owned buffer for entropy-coded
+/// ones. All range math is checked and every codec failure maps to
+/// [`BundleError::Codec`].
+fn blob_bytes<'a>(data: &'a [u8], b: &BlobRef, elem_bytes: usize) -> Result<Cow<'a, [u8]>> {
+    let raw_len = raw_byte_len(b, elem_bytes)?;
+    let section_len = match &b.enc {
+        None => raw_len,
+        Some(_) => b
+            .enc_bytes
+            .ok_or_else(|| BundleError::CorruptHeader("encoded blob missing 'bytes'".into()))?,
+    };
     let end = b
         .offset
-        .checked_add(n)
-        .filter(|&e| e <= len)
+        .checked_add(section_len)
+        .filter(|&e| e <= data.len())
         .ok_or_else(|| BundleError::BlobOutOfBounds(format!("{:?} @ {}", b.shape, b.offset)))?;
-    Ok(b.offset..end)
+    let section = &data[b.offset..end];
+    match b.enc.as_deref() {
+        None => Ok(Cow::Borrowed(section)),
+        Some("huff") => Ok(Cow::Owned(
+            huffman::decompress(section, raw_len).map_err(|e| BundleError::Codec(e.to_string()))?,
+        )),
+        Some("huff-p4") => {
+            if raw_len % 4 != 0 {
+                return Err(BundleError::Codec(format!(
+                    "huff-p4 blob raw length {raw_len} is not a multiple of 4"
+                ))
+                .into());
+            }
+            let planes = huffman::decompress(section, raw_len)
+                .map_err(|e| BundleError::Codec(e.to_string()))?;
+            Ok(Cow::Owned(huffman::from_planes(&planes, 4)))
+        }
+        Some(other) => {
+            Err(BundleError::Codec(format!("unknown blob encoding '{other}'")).into())
+        }
+    }
 }
 
 fn read_f32_blob(data: &[u8], b: &BlobRef) -> Result<Vec<f32>> {
     if b.dtype != "f32" {
         return Err(BundleError::ShapeMismatch(format!("expected f32 blob, got {}", b.dtype)).into());
     }
-    let bytes = &data[blob_range(b, 4, data.len())?];
+    let bytes = blob_bytes(data, b, 4)?;
     Ok(bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -131,7 +207,7 @@ fn read_i8_blob(data: &[u8], b: &BlobRef) -> Result<Vec<i8>> {
     if b.dtype != "i8" {
         return Err(BundleError::ShapeMismatch(format!("expected i8 blob, got {}", b.dtype)).into());
     }
-    let bytes = &data[blob_range(b, 1, data.len())?];
+    let bytes = blob_bytes(data, b, 1)?;
     Ok(bytes.iter().map(|&x| x as i8).collect())
 }
 
@@ -270,7 +346,7 @@ pub fn parse_bundle(data: &[u8]) -> Result<Graph> {
         return Err(BundleError::BadMagic.into());
     }
     let version = read_u32(data, 4, "version field")?;
-    if version != VERSION {
+    if version != V1 && version != VERSION {
         return Err(BundleError::BadVersion(version).into());
     }
     let hlen = read_u32(data, 8, "header length field")? as usize;
@@ -340,9 +416,11 @@ pub fn load_bundle(path: &str) -> Result<Graph> {
 // ---------------------------------------------------------------- write
 
 struct BlobOut {
+    /// final on-disk bytes (encoded when `enc` is set, raw otherwise)
     bytes: Vec<u8>,
     shape: Vec<usize>,
     dtype: &'static str,
+    enc: Option<&'static str>,
 }
 
 /// Writer mirror of `python/compile/export.py::BundleWriter`.
@@ -355,6 +433,7 @@ pub struct BundleWriter {
     meta: BTreeMap<String, Json>,
     extra: BTreeMap<String, BTreeMap<String, Json>>,
     blobs: Vec<BlobOut>,
+    compress: bool,
 }
 
 impl BundleWriter {
@@ -368,11 +447,47 @@ impl BundleWriter {
             meta: BTreeMap::new(),
             extra: BTreeMap::new(),
             blobs: Vec::new(),
+            compress: false,
         }
+    }
+
+    /// Entropy-code every blob that actually shrinks (v2 sections).
+    /// Must be called before `add_layer` — encoding happens at push
+    /// time. The written file is version 2 only if some blob encoded;
+    /// otherwise the output stays bit-identical v1.
+    pub fn enable_compression(&mut self) {
+        self.compress = true;
     }
 
     pub fn set_meta(&mut self, key: &str, value: Json) {
         self.meta.insert(key.to_string(), value);
+    }
+
+    /// Section codec choice for a raw blob: `huff-p4` (plane-split) for
+    /// f32, plain `huff` otherwise — kept only when it actually shrinks
+    /// the section, so a v2 bundle is never larger than its v1 twin
+    /// blob-for-blob.
+    fn encode_section(raw: Vec<u8>, dtype: &str) -> (Vec<u8>, Option<&'static str>) {
+        let (stream, enc) = if dtype == "f32" && raw.len() % 4 == 0 {
+            (huffman::compress(&huffman::to_planes(&raw, 4)), "huff-p4")
+        } else {
+            (huffman::compress(&raw), "huff")
+        };
+        if stream.len() < raw.len() {
+            (stream, Some(enc))
+        } else {
+            (raw, None)
+        }
+    }
+
+    fn push_blob(&mut self, raw: Vec<u8>, shape: Vec<usize>, dtype: &'static str) -> usize {
+        let (bytes, enc) = if self.compress {
+            Self::encode_section(raw, dtype)
+        } else {
+            (raw, None)
+        };
+        self.blobs.push(BlobOut { bytes, shape, dtype, enc });
+        self.blobs.len() - 1
     }
 
     fn push_f32(&mut self, data: &[f32], shape: Vec<usize>) -> usize {
@@ -380,17 +495,11 @@ impl BundleWriter {
         for v in data {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
-        self.blobs.push(BlobOut { bytes, shape, dtype: "f32" });
-        self.blobs.len() - 1
+        self.push_blob(bytes, shape, "f32")
     }
 
     fn push_i8(&mut self, data: &[i8], shape: Vec<usize>) -> usize {
-        self.blobs.push(BlobOut {
-            bytes: data.iter().map(|&v| v as u8).collect(),
-            shape,
-            dtype: "i8",
-        });
-        self.blobs.len() - 1
+        self.push_blob(data.iter().map(|&v| v as u8).collect(), shape, "i8")
     }
 
     pub fn add_layer(&mut self, name: &str, params: &LayerParams) {
@@ -470,9 +579,12 @@ impl BundleWriter {
             .last()
             .map(|&o| o + self.blobs.last().unwrap().bytes.len())
             .unwrap_or(12 + header_json.len());
+        // v2 on the wire only when a section is actually encoded; pure
+        // raw bundles stay bit-identical to what v1 writers produce.
+        let version = if self.blobs.iter().any(|b| b.enc.is_some()) { VERSION } else { V1 };
         let mut out = vec![0u8; total];
         out[..4].copy_from_slice(MAGIC);
-        out[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        out[4..8].copy_from_slice(&version.to_le_bytes());
         out[8..12].copy_from_slice(&(header_json.len() as u32).to_le_bytes());
         out[12..12 + header_json.len()].copy_from_slice(header_json.as_bytes());
         for (blob, &off) in self.blobs.iter().zip(&offsets) {
@@ -504,18 +616,20 @@ impl BundleWriter {
             }
             for (key, idx) in fields {
                 let blob = &self.blobs[*idx];
-                entry.insert(
-                    key.clone(),
-                    Json::obj(vec![
-                        ("offset", Json::num(offsets[*idx] as f64)),
-                        (
-                            "shape",
-                            Json::Arr(blob.shape.iter().map(|&s| Json::num(s as f64)).collect()),
-                        ),
-                        ("dtype", Json::str(blob.dtype)),
-                        ("index", Json::num(*idx as f64)),
-                    ]),
-                );
+                let mut desc = vec![
+                    ("offset", Json::num(offsets[*idx] as f64)),
+                    (
+                        "shape",
+                        Json::Arr(blob.shape.iter().map(|&s| Json::num(s as f64)).collect()),
+                    ),
+                    ("dtype", Json::str(blob.dtype)),
+                    ("index", Json::num(*idx as f64)),
+                ];
+                if let Some(enc) = blob.enc {
+                    desc.push(("enc", Json::str(enc)));
+                    desc.push(("bytes", Json::num(blob.bytes.len() as f64)));
+                }
+                entry.insert(key.clone(), Json::obj(desc));
             }
             layers.insert(lname.clone(), Json::Obj(entry));
         }
@@ -534,8 +648,20 @@ impl BundleWriter {
 }
 
 /// Serialize a Graph back to a bundle (round-trip tests / rust-converted
-/// model export).
+/// model export). Raw v1 sections — bit-identical output to earlier
+/// releases.
 pub fn save_bundle(g: &Graph, path: &str) -> Result<()> {
+    bundle_writer(g, false).write(path)
+}
+
+/// Serialize a Graph with entropy-coded blob sections (format v2).
+/// Sections that don't shrink stay raw, and if nothing shrinks the
+/// output degrades gracefully to a bit-identical v1 bundle.
+pub fn save_bundle_compressed(g: &Graph, path: &str) -> Result<()> {
+    bundle_writer(g, true).write(path)
+}
+
+fn bundle_writer(g: &Graph, compress: bool) -> BundleWriter {
     let graph_ops: Vec<Json> = g
         .ops
         .iter()
@@ -587,6 +713,9 @@ pub fn save_bundle(g: &Graph, path: &str) -> Result<()> {
         })
         .collect();
     let mut w = BundleWriter::new(&g.name, &g.input_shape, graph_ops);
+    if compress {
+        w.enable_compression();
+    }
     if let Some(cfg) = &g.bert {
         for (k, v) in [
             ("vocab", cfg.vocab),
@@ -603,7 +732,91 @@ pub fn save_bundle(g: &Graph, path: &str) -> Result<()> {
     for (name, params) in &g.layers {
         w.add_layer(name, params);
     }
-    w.write(path)
+    w
+}
+
+// ----------------------------------------------------------------- lazy
+
+/// A bundle whose envelope + header have been read and validated but
+/// whose blob sections are still cold on disk. Cheap enough to hold by
+/// the thousand — registration-time metadata without the table I/O.
+#[derive(Debug, Clone)]
+pub struct LazyBundle {
+    path: String,
+    name: String,
+    input_shape: Vec<usize>,
+    version: u32,
+    header_bytes: usize,
+}
+
+impl LazyBundle {
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Header JSON length — all this loader has actually read.
+    pub fn header_bytes(&self) -> usize {
+        self.header_bytes
+    }
+
+    /// Materialize the full graph — the paging step. Goes through the
+    /// same validated [`parse_bundle`] path as the eager loader, so a
+    /// paged-in graph is bitwise-identical to an eagerly loaded one.
+    pub fn graph(&self) -> Result<Graph> {
+        load_bundle(&self.path)
+    }
+}
+
+/// Open a bundle lazily: read ONLY the 12-byte envelope plus the header
+/// JSON (magic and version validated, model name and input shape
+/// extracted). Blob sections are not touched until
+/// [`LazyBundle::graph`] pages the model in.
+pub fn load_bundle_lazy(path: &str) -> Result<LazyBundle> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut env = [0u8; 12];
+    f.read_exact(&mut env).map_err(|_| BundleError::Truncated("envelope"))?;
+    if &env[..4] != MAGIC {
+        return Err(BundleError::BadMagic.into());
+    }
+    let version = u32::from_le_bytes(env[4..8].try_into().unwrap());
+    if version != V1 && version != VERSION {
+        return Err(BundleError::BadVersion(version).into());
+    }
+    let hlen = u32::from_le_bytes(env[8..12].try_into().unwrap()) as usize;
+    // Bound the header read by the actual file size before allocating,
+    // so a hostile length field can't force a multi-GB buffer.
+    let file_len = f.metadata().map(|m| m.len()).unwrap_or(0);
+    if hlen as u64 > file_len.saturating_sub(12) {
+        return Err(BundleError::Truncated("header").into());
+    }
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header).map_err(|_| BundleError::Truncated("header"))?;
+    let header_str = std::str::from_utf8(&header)
+        .map_err(|e| BundleError::CorruptHeader(format!("not utf-8: {e}")))?;
+    let header = json::parse(header_str)
+        .map_err(|e| BundleError::CorruptHeader(format!("bad json: {e}")))?;
+    let name = header
+        .get("model")
+        .and_then(|v| v.as_str())
+        .unwrap_or("model")
+        .to_string();
+    let input_shape = header
+        .get("input_shape")
+        .and_then(|v| v.as_usize_vec())
+        .ok_or_else(|| BundleError::CorruptHeader("missing input_shape".into()))?;
+    Ok(LazyBundle { path: path.to_string(), name, input_shape, version, header_bytes: hlen })
 }
 
 #[cfg(test)]
@@ -761,6 +974,160 @@ mod tests {
         );
         let text = err_text(&mini_bundle(h));
         assert!(text.contains("disagrees with centroids"), "{text}");
+    }
+
+    /// Hand-built LUT graph whose quantized table is strongly peaked —
+    /// the regime where entropy coding must actually engage (random
+    /// tables hover near 8 bits/byte and stay raw).
+    fn peaked_lut_graph() -> Graph {
+        let (c, k, v, m) = (4usize, 16usize, 2usize, 32usize);
+        let mut rng = Prng::new(7);
+        let centroids = rng.normal_vec(c * k * v, 1.0);
+        let mut data = vec![0i8; c * k * m];
+        for (i, d) in data.iter_mut().enumerate() {
+            *d = match i % 97 {
+                0 => 117,
+                1 => -90,
+                _ => (i % 5) as i8 - 2,
+            };
+        }
+        let cb = crate::pq::Codebooks::new(c, k, v, centroids);
+        let qt = crate::tensor::QTable { data, c, k, m, scale: vec![0.01f32; c] };
+        let mut layers = BTreeMap::new();
+        layers.insert("l".to_string(), LayerParams::Lut(LutLinear::from_parts(cb, qt, None)));
+        Graph {
+            name: "peaked".into(),
+            input_shape: vec![1, c * v],
+            ops: vec![Op::Linear { layer: "l".into() }],
+            layers,
+            bert: None,
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn save_bundle_still_writes_version_1_bytes() {
+        // back-compat contract: the raw writer's wire version stays 1,
+        // so bundles remain readable by pre-v2 tooling (and the python
+        // exporter's output stays in sync with ours).
+        let g = build_cnn_graph("v1", [8, 8, 3], &[ConvSpec { cout: 4, k: 3, stride: 1 }], 5, 0);
+        let path = tmp("v1_wire.lutnn");
+        save_bundle(&g, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(data[4..8].try_into().unwrap()), V1);
+        assert!(parse_bundle(&data).is_ok());
+    }
+
+    #[test]
+    fn compressed_bundle_is_v2_smaller_and_bitwise_identical() {
+        let g = peaked_lut_graph();
+        let p1 = tmp("peaked_v1.lutnn");
+        let p2 = tmp("peaked_v2.lutnn");
+        save_bundle(&g, &p1).unwrap();
+        save_bundle_compressed(&g, &p2).unwrap();
+        let raw = std::fs::read(&p1).unwrap();
+        let enc = std::fs::read(&p2).unwrap();
+        assert_eq!(u32::from_le_bytes(enc[4..8].try_into().unwrap()), VERSION);
+        assert!(enc.len() < raw.len(), "coded {} !< raw {}", enc.len(), raw.len());
+        // decoded graphs must agree bit-for-bit with the raw bundle
+        let (g1, g2) = (parse_bundle(&raw).unwrap(), parse_bundle(&enc).unwrap());
+        assert_eq!(g1.ops, g2.ops);
+        match (&g1.layers["l"], &g2.layers["l"]) {
+            (LayerParams::Lut(a), LayerParams::Lut(b)) => {
+                assert_eq!(a.qtable.data, b.qtable.data);
+                assert_eq!(bits(&a.qtable.scale), bits(&b.qtable.scale));
+                assert_eq!(bits(&a.cb.data), bits(&b.cb.data));
+            }
+            _ => panic!("'l' should be lut on both sides"),
+        }
+    }
+
+    #[test]
+    fn compression_degrades_to_v1_when_nothing_shrinks() {
+        // tiny blobs: the 261-byte huffman header can never pay for
+        // itself, so every section stays raw and the writer emits a
+        // file byte-identical to the uncompressed path
+        let g = build_cnn_graph("tiny", [8, 8, 3], &[ConvSpec { cout: 4, k: 3, stride: 1 }], 5, 0);
+        let p1 = tmp("tiny_raw.lutnn");
+        let p2 = tmp("tiny_cmp.lutnn");
+        save_bundle(&g, &p1).unwrap();
+        save_bundle_compressed(&g, &p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    }
+
+    #[test]
+    fn compressed_bundle_truncation_errors_cleanly_at_every_byte() {
+        let g = peaked_lut_graph();
+        let path = tmp("peaked_trunc.lutnn");
+        save_bundle_compressed(&g, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(parse_bundle(&data).is_ok());
+        for cut in 0..data.len() {
+            assert!(parse_bundle(&data[..cut]).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn hostile_encoded_blobs_error_not_panic() {
+        // unknown codec name
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"l":{"kind":"dense","w":{"offset":0,"shape":[2,2],"dtype":"f32","enc":"zstd","bytes":4}}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("unknown blob encoding 'zstd'"));
+        // encoded blob without the required 'bytes' length
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"l":{"kind":"dense","w":{"offset":0,"shape":[2,2],"dtype":"f32","enc":"huff"}}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("missing 'bytes'"));
+        // 'bytes' range past EOF
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"l":{"kind":"dense","w":{"offset":0,"shape":[2,2],"dtype":"f32","enc":"huff","bytes":1000000}}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("out of bounds"));
+        // in-bounds section that is not a valid huffman stream (offset 0
+        // points at the magic bytes: mode 'L' is unknown)
+        let h = r#"{"model":"x","input_shape":[1,4],"graph":[],"layers":{"l":{"kind":"dense","w":{"offset":0,"shape":[2,2],"dtype":"f32","enc":"huff","bytes":4}}},"meta":{}}"#;
+        assert!(err_text(&mini_bundle(h)).contains("blob codec error"));
+    }
+
+    #[test]
+    fn lazy_load_reads_header_only_and_pages_in_bitwise_identical() {
+        let g = peaked_lut_graph();
+        let path = tmp("lazy.lutnn");
+        save_bundle_compressed(&g, &path).unwrap();
+        let lazy = load_bundle_lazy(&path).unwrap();
+        assert_eq!(lazy.model_name(), "peaked");
+        assert_eq!(lazy.input_shape(), &[1, 8]);
+        assert_eq!(lazy.version(), VERSION);
+        assert!(lazy.header_bytes() > 0);
+        let eager = load_bundle(&path).unwrap();
+        let paged = lazy.graph().unwrap();
+        assert_eq!(eager.ops, paged.ops);
+        match (&eager.layers["l"], &paged.layers["l"]) {
+            (LayerParams::Lut(a), LayerParams::Lut(b)) => {
+                assert_eq!(a.qtable.data, b.qtable.data);
+                assert_eq!(bits(&a.qtable.scale), bits(&b.qtable.scale));
+                assert_eq!(bits(&a.cb.data), bits(&b.cb.data));
+                assert_eq!(bits(&a.table_f32), bits(&b.table_f32));
+            }
+            _ => panic!("'l' should be lut on both sides"),
+        }
+    }
+
+    #[test]
+    fn lazy_load_rejects_bad_envelopes() {
+        assert!(load_bundle_lazy("/nonexistent/never/x.lutnn").is_err());
+        let bad_magic = tmp("lazy_badmagic.lutnn");
+        std::fs::write(&bad_magic, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(load_bundle_lazy(&bad_magic).is_err());
+        let bad_ver = tmp("lazy_badver.lutnn");
+        std::fs::write(&bad_ver, b"LUTN\x09\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(load_bundle_lazy(&bad_ver).is_err());
+        // header length way past EOF must fail without a giant alloc
+        let long_hdr = tmp("lazy_longhdr.lutnn");
+        let mut raw = Vec::from(*MAGIC);
+        raw.extend_from_slice(&V1.to_le_bytes());
+        raw.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&long_hdr, raw).unwrap();
+        let text = format!("{:#}", load_bundle_lazy(&long_hdr).unwrap_err());
+        assert!(text.contains("truncated"), "{text}");
     }
 
     #[test]

@@ -185,4 +185,57 @@ mod tests {
         ]);
         check_shape(&schema, &doc).expect("bench document shape drifted from the placeholder");
     }
+
+    /// The committed memory baseline must carry EXACTLY the table bytes
+    /// the registry kernels report on the zoo models — the same
+    /// accounting `benches/memory_footprint.rs` gates in CI. Table
+    /// bytes are pure shape arithmetic, so `cargo test` can pin the
+    /// committed numbers bit-exactly on any machine; a drifting
+    /// baseline (or a kernel storage regression) fails here before the
+    /// bench even runs.
+    #[test]
+    fn committed_memory_baseline_matches_measured_zoo_table_bytes() {
+        use crate::api::{KernelBuildCtx, KernelRegistry};
+        use crate::lut::{LutLinear, LutOpts};
+        use crate::model_import::zoo;
+        use crate::nn::graph::LayerParams;
+        use crate::nn::models::pick_v;
+        use crate::pq::Codebooks;
+        use crate::util::prng::Prng;
+
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_memory_footprint.json");
+        let text = std::fs::read_to_string(path).expect("committed BENCH_memory_footprint.json");
+        let schema = json::parse(&text).expect("baseline must be valid json");
+        let models = schema.get("models").and_then(|v| v.as_arr()).expect("baseline models array");
+        assert_eq!(models.len(), zoo::MODELS.len(), "one baseline row per zoo model");
+
+        let reg = KernelRegistry::with_defaults();
+        let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+        for (zm, row) in zoo::MODELS.iter().zip(models) {
+            assert_eq!(row.get("model").and_then(|v| v.as_str()), Some(zm.name));
+            let g = zoo::import(zm.name).unwrap();
+            let (mut int8, mut dec, mut layers) = (0usize, 0usize, 0usize);
+            for (i, params) in g.layers.values().enumerate() {
+                let LayerParams::Dense { w, m, .. } = params else { continue };
+                layers += 1;
+                let (d, m) = (w.len() / m, *m);
+                let v = pick_v(d);
+                let (c, k) = (d / v, 16usize);
+                let mut rng = Prng::new(0xF00D + i as u64);
+                let cb = Codebooks::new(c, k, v, rng.normal_vec(c * k * v, 1.0));
+                let lut = LayerParams::Lut(LutLinear::new(cb, w, m, None, 8));
+                int8 += reg.build("lut-i8", &lut, &ctx).unwrap().table_bytes();
+                dec += reg.build("lut-dec", &lut, &ctx).unwrap().table_bytes();
+            }
+            let get = |k: &str| row.get(k).and_then(|v| v.as_usize()).unwrap_or(usize::MAX);
+            assert_eq!(get("dense_layers"), layers, "{}: dense layer count", zm.name);
+            assert_eq!(get("int8_table_bytes"), int8, "{}: int8 table bytes", zm.name);
+            assert_eq!(get("dec_table_bytes"), dec, "{}: decomposed table bytes", zm.name);
+            assert!(
+                dec * 2 > int8 && dec < int8,
+                "{}: decomposition must shrink tables (towards 2x): {dec} vs {int8}",
+                zm.name
+            );
+        }
+    }
 }

@@ -1,0 +1,206 @@
+//! Seeded fuzz harness for the `.lutnn` bundle format — the v2
+//! entropy-coded sections and the lazy loader in particular.
+//!
+//! Properties:
+//! * **Round-trip**: a random graph saved raw (v1) and entropy-coded
+//!   (v2) parses back bitwise-identical both ways — every layer kind,
+//!   every f32 bit pattern, every quantized table byte.
+//! * **Lazy parity**: `load_bundle_lazy(..).graph()` is bitwise equal
+//!   to the eager `load_bundle` on the same file.
+//! * **Truncation**: a compressed bundle cut at every byte boundary
+//!   errors typed, never panics.
+//! * **Corruption**: random byte flips anywhere in the file must never
+//!   panic the parser (parsing may succeed — a flipped table byte is
+//!   still a valid bundle — but it must return, not crash).
+//!
+//! Seed: `BUNDLE_FUZZ_SEED` (decimal, env) — CI pins one so failures
+//! reproduce; locally each value explores a different stream.
+
+use lutnn::model_fmt::{
+    load_bundle, load_bundle_lazy, parse_bundle, save_bundle, save_bundle_compressed, V1, VERSION,
+};
+use lutnn::nn::graph::{Graph, LayerParams};
+use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+use lutnn::tensor::Tensor;
+use lutnn::util::prop::{self, Gen};
+
+fn fuzz_seed() -> u64 {
+    std::env::var("BUNDLE_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0xB0B5)
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("lutnn_bundle_fuzz");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().into_owned()
+}
+
+/// A random small CNN graph; about half the cases are lutified so both
+/// dense-only and LUT-table bundles are exercised.
+fn gen_graph(g: &mut Gen) -> Graph {
+    let convs: Vec<ConvSpec> = (0..g.usize(1..3))
+        .map(|_| ConvSpec { cout: *g.pick(&[4usize, 8]), k: 3, stride: *g.pick(&[1usize, 2]) })
+        .collect();
+    let nout = g.usize(2..7);
+    let seed = g.usize(0..1000) as u64;
+    let base = build_cnn_graph("fuzz", [8, 8, 3], &convs, nout, seed);
+    if g.bool() {
+        let n = g.usize(2..5);
+        let x = Tensor::new(vec![n, 8, 8, 3], g.f32_vec(n * 192, 1.0));
+        let k = *g.pick(&[8usize, 16]);
+        lutify_graph(&base, &x, k, 8, seed)
+    } else {
+        base
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Bitwise equality over every layer kind the format carries. `a` is
+/// the reference; when it is an in-memory graph built by
+/// `LutLinear::new` (not a parse), pass `a_is_source = true`: the
+/// builder keeps the exact FP32 table while the loader dequantizes it
+/// from the persisted INT8 table, so `table_f32` is only comparable
+/// between two *parsed* graphs.
+fn assert_graphs_bitwise(a: &Graph, b: &Graph, a_is_source: bool) -> Result<(), String> {
+    if a.ops != b.ops {
+        return Err("ops differ".into());
+    }
+    if a.layers.len() != b.layers.len() {
+        return Err("layer count differs".into());
+    }
+    for (name, pa) in &a.layers {
+        let pb = b.layers.get(name).ok_or_else(|| format!("layer '{name}' missing"))?;
+        let ok = match (pa, pb) {
+            (LayerParams::Dense { w: wa, b: ba, m: ma }, LayerParams::Dense { w: wb, b: bb, m: mb }) => {
+                ma == mb
+                    && bits(wa) == bits(wb)
+                    && ba.as_deref().map(bits) == bb.as_deref().map(bits)
+            }
+            (LayerParams::Lut(la), LayerParams::Lut(lb)) => {
+                la.qtable.data == lb.qtable.data
+                    && bits(&la.qtable.scale) == bits(&lb.qtable.scale)
+                    && bits(&la.cb.data) == bits(&lb.cb.data)
+                    && (a_is_source || bits(&la.table_f32) == bits(&lb.table_f32))
+                    && la.bias.as_deref().map(bits) == lb.bias.as_deref().map(bits)
+            }
+            (
+                LayerParams::Bn { gamma: ga, beta: ba, mean: ma, var: va },
+                LayerParams::Bn { gamma: gb, beta: bb, mean: mb, var: vb },
+            ) => {
+                bits(ga) == bits(gb)
+                    && bits(ba) == bits(bb)
+                    && bits(ma) == bits(mb)
+                    && bits(va) == bits(vb)
+            }
+            (LayerParams::Ln { gamma: ga, beta: ba }, LayerParams::Ln { gamma: gb, beta: bb }) => {
+                bits(ga) == bits(gb) && bits(ba) == bits(bb)
+            }
+            (
+                LayerParams::Embedding { tok: ta, pos: pa, d: da },
+                LayerParams::Embedding { tok: tb, pos: pb, d: db },
+            ) => da == db && bits(ta) == bits(tb) && bits(pa) == bits(pb),
+            _ => false,
+        };
+        if !ok {
+            return Err(format!("layer '{name}' differs bitwise"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn random_graphs_round_trip_bitwise_through_v1_and_v2() {
+    prop::check_seeded(fuzz_seed() ^ 0xB17E, 12, |g| {
+        let graph = gen_graph(g);
+        let p1 = tmp("rt_v1.lutnn");
+        let p2 = tmp("rt_v2.lutnn");
+        save_bundle(&graph, &p1).map_err(|e| e.to_string())?;
+        save_bundle_compressed(&graph, &p2).map_err(|e| e.to_string())?;
+
+        let d1 = std::fs::read(&p1).unwrap();
+        let d2 = std::fs::read(&p2).unwrap();
+        let v1 = u32::from_le_bytes(d1[4..8].try_into().unwrap());
+        let v2 = u32::from_le_bytes(d2[4..8].try_into().unwrap());
+        if v1 != V1 {
+            return Err(format!("raw writer must stay on version {V1}, wrote {v1}"));
+        }
+        if v2 != V1 && v2 != VERSION {
+            return Err(format!("compressed writer wrote unknown version {v2}"));
+        }
+        if d2.len() > d1.len() {
+            return Err(format!("compressed bundle grew: {} > {}", d2.len(), d1.len()));
+        }
+
+        let g1 = parse_bundle(&d1).map_err(|e| e.to_string())?;
+        let g2 = parse_bundle(&d2).map_err(|e| e.to_string())?;
+        assert_graphs_bitwise(&graph, &g1, true)?;
+        assert_graphs_bitwise(&g1, &g2, false)
+    });
+}
+
+#[test]
+fn lazy_loader_matches_eager_bitwise_on_random_bundles() {
+    prop::check_seeded(fuzz_seed() ^ 0x1A2B, 8, |g| {
+        let graph = gen_graph(g);
+        let path = tmp("lazy_fuzz.lutnn");
+        if g.bool() {
+            save_bundle(&graph, &path).map_err(|e| e.to_string())?;
+        } else {
+            save_bundle_compressed(&graph, &path).map_err(|e| e.to_string())?;
+        }
+        let lazy = load_bundle_lazy(&path).map_err(|e| e.to_string())?;
+        if lazy.model_name() != graph.name {
+            return Err(format!("lazy header name '{}' != '{}'", lazy.model_name(), graph.name));
+        }
+        if lazy.input_shape() != graph.input_shape.as_slice() {
+            return Err("lazy header input shape differs".into());
+        }
+        let eager = load_bundle(&path).map_err(|e| e.to_string())?;
+        let paged = lazy.graph().map_err(|e| e.to_string())?;
+        assert_graphs_bitwise(&eager, &paged, false)
+    });
+}
+
+#[test]
+fn truncated_compressed_bundles_error_at_every_byte() {
+    let mut g = Gen::from_seed(fuzz_seed() ^ 0x7C0F);
+    let graph = gen_graph(&mut g);
+    let path = tmp("trunc_fuzz.lutnn");
+    save_bundle_compressed(&graph, &path).unwrap();
+    let data = std::fs::read(&path).unwrap();
+    assert!(parse_bundle(&data).is_ok());
+    for cut in 0..data.len() {
+        assert!(parse_bundle(&data[..cut]).is_err(), "cut at {cut} must fail");
+    }
+}
+
+#[test]
+fn random_corruption_never_panics_the_parser() {
+    // a few base bundles built once (kmeans is the slow part), then many
+    // cheap flip cases over them: flips land in envelope, header and
+    // blob regions alike
+    let bases: Vec<Vec<u8>> = (0..3u64)
+        .map(|i| {
+            let mut gg = Gen::from_seed(fuzz_seed() ^ 0x5151 ^ i);
+            let graph = gen_graph(&mut gg);
+            let path = tmp(&format!("corrupt_fuzz_{i}.lutnn"));
+            save_bundle_compressed(&graph, &path).unwrap();
+            std::fs::read(&path).unwrap()
+        })
+        .collect();
+    prop::check_seeded(fuzz_seed() ^ 0xDEAD, 100, |g| {
+        let mut data = g.pick(&bases).clone();
+        for _ in 0..g.usize(1..6) {
+            let at = g.usize(0..data.len());
+            data[at] ^= 1u8 << g.usize(0..8);
+        }
+        // must return (Ok or typed Err), never panic
+        let _ = parse_bundle(&data);
+        Ok(())
+    });
+}

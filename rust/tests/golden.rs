@@ -123,6 +123,62 @@ fn golden_lut_session_bitwise_stable() {
 }
 
 #[test]
+fn golden_lut_dec_session_bitwise_stable() {
+    // The decomposed kernel is an *approximation* with its own output
+    // bytes (documented tolerance lives in kernel_parity); what must
+    // not drift silently is those bytes themselves — table split,
+    // residual quantization, accumulation order are all pinned here.
+    let (_, lut, x) = fixture();
+    let mut sess = SessionBuilder::new(&lut)
+        .kernel_override("c1", "lut-dec")
+        .kernel_override("fc", "lut-dec")
+        .max_batch(2)
+        .build()
+        .unwrap();
+    check_golden("cnn_lut_dec", &sess.run_alloc(&x).unwrap());
+}
+
+/// The committed python-exported fixture is a *version 1* bundle; the
+/// v2-capable loader must keep reading it forever, the lazy loader must
+/// page it in bitwise-identical to the eager path, and its session
+/// output bytes are pinned like any other golden.
+#[test]
+fn golden_v1_fixture_loads_lazily_and_stays_bitwise_stable() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/py_export_tiny.lutnn"
+    );
+    let eager = lutnn::model_fmt::load_bundle(path).expect("committed v1 fixture must load");
+    let lazy = lutnn::model_fmt::load_bundle_lazy(path).expect("lazy open of v1 fixture");
+    assert_eq!(lazy.version(), 1, "committed fixture must stay a v1 bundle");
+    assert_eq!(lazy.model_name(), eager.name);
+    assert_eq!(lazy.input_shape(), eager.input_shape.as_slice());
+    let paged = lazy.graph().expect("paging in the v1 fixture");
+
+    let key = |g: &Graph| -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for (name, p) in &g.layers {
+            bytes.extend_from_slice(name.as_bytes());
+            if let lutnn::nn::graph::LayerParams::Lut(l) = p {
+                bytes.extend(l.qtable.data.iter().map(|&q| q as u8));
+                for v in l.cb.data.iter().chain(&l.qtable.scale).chain(&l.table_f32) {
+                    bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+        bytes
+    };
+    assert_eq!(key(&eager), key(&paged), "lazy paging must be bitwise eager");
+
+    let batch = eager.input_shape[0];
+    let numel: usize = eager.input_shape.iter().product();
+    let mut rng = Prng::new(4242);
+    let x = Tensor::new(eager.input_shape.clone(), rng.normal_vec(numel, 1.0));
+    let mut sess = SessionBuilder::new(&eager).max_batch(batch).build().unwrap();
+    check_golden("py_fixture_session", &sess.run_alloc(&x).unwrap());
+}
+
+#[test]
 fn simd_session_matches_scalar_fixture_bitwise() {
     // Not file-pinned (the file pins the scalar reference); instead pin
     // the cross-kernel invariant on the same fixture: the lut-simd

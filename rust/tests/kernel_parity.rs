@@ -8,6 +8,9 @@
 //!   kernel bug, not "noise").
 //! * `"lut-i8"`  — within `LutI8Kernel::abs_tolerance()` absolute error
 //!   per element (global-scale table requantization bound).
+//! * `"lut-dec"` — within `DecLutKernel::abs_tolerance()` absolute error
+//!   per element (4-bit residual quantization of the decomposed table
+//!   plus the reference's own common-scale re-rounding).
 //! * `"dense"`   — bitwise-equal to `nn::ops::linear`.
 //!
 //! Shapes are drawn from a seeded PRNG (`util::prop`) including the
@@ -20,7 +23,7 @@
 //! reproduce; locally each value explores a different shape stream.
 //! Replay one case with `util::prop::check_one(<case_seed>, ...)`.
 
-use lutnn::api::{KernelBuildCtx, KernelRegistry, LinearKernel, LutI8Kernel, Scratch};
+use lutnn::api::{DecLutKernel, KernelBuildCtx, KernelRegistry, LinearKernel, LutI8Kernel, Scratch};
 use lutnn::lut::{LutLinear, LutOpts};
 use lutnn::nn::graph::LayerParams;
 use lutnn::nn::ops;
@@ -130,6 +133,23 @@ fn lut_i8_within_documented_tolerance_of_scalar_reference() {
 }
 
 #[test]
+fn lut_dec_within_documented_tolerance_of_scalar_reference() {
+    prop::check_seeded(fuzz_seed() ^ 0x5EED_4, CASES, |g| {
+        let case = gen_lut_case(g);
+        let opts = LutOpts::deployed();
+        let want = run_kernel("lut", &case, opts, 9.0);
+        let got = run_kernel("lut-dec", &case, opts, -9.0);
+        let tol = DecLutKernel::new(case.lut.clone()).abs_tolerance();
+        prop::assert_close(&got, &want, 0.0, tol).map_err(|e| {
+            format!(
+                "lut-dec out of tolerance {tol} (n={} m={} c={} k={} v={}): {e}",
+                case.n, case.m, case.lut.cb.c, case.lut.cb.k, case.lut.cb.v
+            )
+        })
+    });
+}
+
+#[test]
 fn dense_kernel_bitwise_equals_ops_linear() {
     prop::check_seeded(fuzz_seed() ^ 0x5EED_2, CASES, |g| {
         let n = *g.pick(&[1usize, 2, 3, 7, 16]);
@@ -181,6 +201,10 @@ fn all_lut_family_kernels_agree_on_explicit_edge_shapes() {
         let tol = LutI8Kernel::new(case.lut.clone()).abs_tolerance();
         prop::assert_close(&got_i8, &want, 0.0, tol)
             .unwrap_or_else(|e| panic!("lut-i8 @ ({n},{c},{v},{k},{m}): {e}"));
+        let got_dec = run_kernel("lut-dec", &case, opts, -2.0);
+        let tol = DecLutKernel::new(case.lut.clone()).abs_tolerance();
+        prop::assert_close(&got_dec, &want, 0.0, tol)
+            .unwrap_or_else(|e| panic!("lut-dec @ ({n},{c},{v},{k},{m}): {e}"));
     }
 }
 
@@ -214,6 +238,10 @@ fn zoo_model_shapes_hold_parity_across_the_lut_family() {
             let tol = LutI8Kernel::new(case.lut.clone()).abs_tolerance();
             prop::assert_close(&got_i8, &want, 0.0, tol)
                 .unwrap_or_else(|e| panic!("lut-i8 @ zoo shape (d={d}, m={m}, k={k}): {e}"));
+            let got_dec = run_kernel("lut-dec", &case, opts, -4.0);
+            let tol = DecLutKernel::new(case.lut.clone()).abs_tolerance();
+            prop::assert_close(&got_dec, &want, 0.0, tol)
+                .unwrap_or_else(|e| panic!("lut-dec @ zoo shape (d={d}, m={m}, k={k}): {e}"));
         }
     }
 }
@@ -222,7 +250,7 @@ fn zoo_model_shapes_hold_parity_across_the_lut_family() {
 fn scratch_reuse_across_kernels_is_deterministic() {
     // The session shares one Scratch across heterogeneous layers; a
     // kernel reading stale scratch state would show up as run-order
-    // dependence. Interleave all three LUT kernels over two shapes and
+    // dependence. Interleave all four LUT kernels over two shapes and
     // compare against fresh-scratch runs.
     let mut g = Gen::from_seed(0xACE5);
     let mk = |g: &mut Gen, n: usize, c: usize, v: usize, k: usize, m: usize| {
@@ -239,7 +267,7 @@ fn scratch_reuse_across_kernels_is_deterministic() {
     let mut shared = Scratch::default();
     for round in 0..2 {
         for case in [&case1, &case2] {
-            for tag in ["lut", "lut-simd", "lut-i8"] {
+            for tag in ["lut", "lut-simd", "lut-i8", "lut-dec"] {
                 let params = LayerParams::Lut(case.lut.clone());
                 let kernel = registry.build(tag, &params, &ctx).unwrap();
                 let mut out = vec![0.0f32; case.n * case.m];
