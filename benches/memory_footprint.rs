@@ -1,7 +1,7 @@
 //! Paper Fig. 10: model memory consumption, LUT-NN vs dense — plus the
 //! CI **memory gate** over the zoo models' measured table bytes.
 //!
-//! Three accountings:
+//! Four accountings:
 //!   1. Analytic, on the paper's exact model shapes (params + peak
 //!      activation for batch 1) — directly comparable to Fig. 10.
 //!   2. Measured per-kernel `table_bytes()` on the imported zoo models
@@ -13,7 +13,12 @@
 //!      measured table bytes regress past `gate.tolerance`. Set
 //!      `MEMORY_GATE_INFLATE=1.10` to fake a regression and prove the
 //!      gate trips (CI's red-path self-test).
-//!   3. Measured `param_bytes()` of trained bundles, when artifacts exist.
+//!   3. A lazy-registry **residency sweep**: the zoo pages through a
+//!      `coordinator::Registry` under a resident-bytes budget sized for
+//!      the largest model plus the smallest; the bench FAILS if the
+//!      resident gauge ever exceeds the budget, and
+//!      `RESIDENCY_GATE_INFLATE=1.10` proves that gate trips too.
+//!   4. Measured `param_bytes()` of trained bundles, when artifacts exist.
 //!
 //! Paper: 1.4-2.8x memory saving for CNNs, 4.8-6.5x for BERT.
 //!
@@ -22,6 +27,7 @@
 use std::collections::BTreeMap;
 
 use lutnn::api::{KernelBuildCtx, KernelRegistry};
+use lutnn::coordinator::Registry;
 use lutnn::cost::{model_cost, LutConfig};
 use lutnn::lut::{LutLinear, LutOpts};
 use lutnn::model_fmt;
@@ -140,6 +146,99 @@ fn main() {
     }
     t.print();
 
+    // -------------------------------------- residency sweep + CI gate
+    // Page the zoo through a lazy registry under a budget that holds
+    // exactly the largest model plus the smallest, resolving in
+    // ascending size order and revisiting the smallest: [s0, s1, s2,
+    // s0] forces two LRU evictions and ends with the resident gauge at
+    // the budget exactly, so the `resident_bytes <= budget` invariant
+    // is exercised at its boundary (and RESIDENCY_GATE_INFLATE=1.10
+    // reliably trips it for CI's red-path self-test).
+    println!("\n== measured: lazy-registry residency sweep (LRU eviction gate) ==\n");
+    let dir = std::env::temp_dir().join("lutnn_bench_residency");
+    std::fs::create_dir_all(&dir).expect("create residency temp dir");
+    let paths: Vec<String> = zoo::MODELS
+        .iter()
+        .map(|m| {
+            let g = zoo::import(m.name).expect("committed zoo fixtures always import");
+            let path = dir.join(format!("{}.lutnn", m.name)).to_string_lossy().into_owned();
+            model_fmt::save_bundle(&g, &path).expect("save zoo bundle");
+            path
+        })
+        .collect();
+    // Per-model footprints first, on an unbudgeted probe registry.
+    let mut probe = Registry::new();
+    let mut sized: Vec<(String, usize)> = paths
+        .iter()
+        .map(|p| {
+            let name = probe.register_lazy(p, LutOpts::deployed(), 4, 1).expect("register");
+            let bytes = probe.resolve(&name).expect("probe resolve").resident_bytes();
+            (name, bytes)
+        })
+        .collect();
+    assert_eq!(sized.len(), 3, "the sweep is written against the 3-model zoo");
+    sized.sort_by_key(|(_, b)| *b);
+    let budget = sized[0].1 + sized[2].1;
+    drop(probe);
+
+    let inflate_res = std::env::var("RESIDENCY_GATE_INFLATE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0);
+    if inflate_res != 1.0 {
+        eprintln!(
+            "(RESIDENCY_GATE_INFLATE={inflate_res}: scaling resident bytes to self-test the gate)"
+        );
+    }
+    let mut r = Registry::new();
+    for p in &paths {
+        r.register_lazy(p, LutOpts::deployed(), 4, 1).expect("register");
+    }
+    r.set_resident_budget(Some(budget));
+    let order = [&sized[0].0, &sized[1].0, &sized[2].0, &sized[0].0];
+    let mut peak = 0u64;
+    let mut res_violations = 0usize;
+    for name in order {
+        r.resolve(name).expect("budgeted resolve");
+        let resident = r.residency().resident_bytes;
+        peak = peak.max(resident);
+        if resident as f64 * inflate_res > budget as f64 {
+            eprintln!(
+                "RESIDENCY GATE: resident {resident} B (x{inflate_res}) exceeds budget \
+                 {budget} B after paging '{name}'"
+            );
+            res_violations += 1;
+        }
+    }
+    let snap = r.residency();
+    assert_eq!(snap.page_ins, 4, "sweep pages 3 models in plus 1 re-page of the evicted one");
+    assert_eq!(snap.evictions, 2, "smallest+largest budget must evict twice over [s0,s1,s2,s0]");
+    if res_violations > 0 {
+        eprintln!("residency gate FAILED: {res_violations} violation(s)");
+        std::process::exit(1);
+    }
+    eprintln!(
+        "residency gate passed (peak {peak} B within budget {budget} B, {} evictions)",
+        snap.evictions
+    );
+    let mut t = Table::new(&["models", "budget B", "peak resident B", "page-ins", "evictions"]);
+    t.row(&[
+        sized.len().to_string(),
+        budget.to_string(),
+        peak.to_string(),
+        snap.page_ins.to_string(),
+        snap.evictions.to_string(),
+    ]);
+    t.print();
+    let residency_json = Json::obj(vec![
+        ("models", Json::num(sized.len() as f64)),
+        ("budget_bytes", Json::num(budget as f64)),
+        ("peak_resident_bytes", Json::num(peak as f64)),
+        ("page_ins", Json::num(snap.page_ins as f64)),
+        ("evictions", Json::num(snap.evictions as f64)),
+        ("within_budget", Json::Bool(true)),
+    ]);
+
     let doc = Json::obj(vec![
         ("bench", Json::str("memory_footprint")),
         (
@@ -151,6 +250,7 @@ fn main() {
         ),
         ("gate", Json::obj(vec![("tolerance", Json::num(1.05))])),
         ("models", Json::Arr(rows)),
+        ("residency", residency_json),
     ]);
 
     // The committed file is both schema and baseline: refuse shape

@@ -43,6 +43,15 @@ pub trait Engine: Send + Sync {
     fn clone_replica(&self) -> Option<Result<Box<dyn Engine>>> {
         None
     }
+
+    /// Approximate bytes this replica keeps resident (deployed tables +
+    /// scratch arenas) — the unit `coordinator::Registry` budgets lazy
+    /// models against when `resident_budget_bytes` is set. The default
+    /// `0` marks an engine as unaccounted: the registry treats it as
+    /// free and never evicts on its behalf.
+    fn resident_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Everything needed to stamp out another [`NativeEngine`] replica:
@@ -114,6 +123,13 @@ impl Engine for NativeEngine {
 
     fn describe(&self) -> String {
         self.session.lock().unwrap().describe()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        // Tables + arenas of this replica's session. The `ReplicaSpec`'s
+        // shared `Arc<Graph>` (one per model, not per replica) is not
+        // counted — it is the price of late replication, not of serving.
+        self.session.lock().unwrap().resident_bytes()
     }
 
     fn clone_replica(&self) -> Option<Result<Box<dyn Engine>>> {

@@ -485,6 +485,20 @@ impl Session {
         self.memory_report().iter().map(|l| l.table_bytes).sum()
     }
 
+    /// Bytes this replica keeps resident: the deployed parameters and
+    /// tables ([`Session::memory_report`]'s `param_bytes` accounting,
+    /// plus folded norm layers) and the f32 activation arenas sized at
+    /// build time (ping-pong buffers, im2col patches, residual slots).
+    /// Index/accumulator scratch slabs are excluded — they are small
+    /// relative to tables and resized per batch shape. This is the unit
+    /// `coordinator::Registry` budgets warmed lazy models against.
+    pub fn resident_bytes(&self) -> usize {
+        let arena_f32s = self.bufs.iter().map(|b| b.data.capacity()).sum::<usize>()
+            + self.patches.capacity()
+            + self.slots.values().map(|t| t.data.capacity()).sum::<usize>();
+        self.param_bytes + 4 * arena_f32s
+    }
+
     /// `(layer, kernel tag, param bytes)` for every linear step.
     pub fn kernel_report(&self) -> Vec<(String, &'static str, usize)> {
         self.steps

@@ -37,6 +37,7 @@ use super::{Engine, ModelEntry};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{PushError, WorkQueue};
 
+#[derive(Clone)]
 pub struct BatcherConfig {
     /// Upper batch bound per worker (each worker additionally clamps to
     /// its own replica's `max_batch`).

@@ -133,6 +133,61 @@ impl MetricsSnapshot {
     }
 }
 
+/// Registry-level residency gauges and counters for the cold-model
+/// memory lifecycle (`Registry::register_lazy` paging + LRU eviction).
+/// Owned by the registry, not per model: the budget is fleet-wide.
+#[derive(Default)]
+pub struct ResidencyStats {
+    /// gauge: bytes of warmed lazy models currently registry-resident.
+    /// In-flight `Arc<ModelEntry>`s of an evicted model keep its pool
+    /// alive until they drop, but are no longer counted here — the
+    /// gauge tracks what the registry will hand out, which is what the
+    /// budget bounds.
+    pub resident_bytes: AtomicU64,
+    /// gauge: warmed lazy models currently registry-resident
+    pub resident_models: AtomicU64,
+    /// counter: cold -> warm page-ins (exactly one per pool build)
+    pub page_ins: AtomicU64,
+    /// counter: warm -> cold evictions (the spec is retained; the next
+    /// resolve pages the model back in from disk)
+    pub evictions: AtomicU64,
+}
+
+impl ResidencyStats {
+    pub fn snapshot(&self, budget_bytes: Option<usize>) -> ResidencySnapshot {
+        ResidencySnapshot {
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            resident_models: self.resident_models.load(Ordering::Relaxed),
+            page_ins: self.page_ins.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            budget_bytes: budget_bytes.map(|b| b as u64),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResidencySnapshot {
+    pub resident_bytes: u64,
+    pub resident_models: u64,
+    pub page_ins: u64,
+    pub evictions: u64,
+    /// `None` = unbudgeted (warmed models are never evicted)
+    pub budget_bytes: Option<u64>,
+}
+
+impl ResidencySnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "resident_bytes={} resident_models={} page_ins={} evictions={} budget_bytes={}",
+            self.resident_bytes,
+            self.resident_models,
+            self.page_ins,
+            self.evictions,
+            self.budget_bytes.map(|b| b.to_string()).unwrap_or_else(|| "none".into()),
+        )
+    }
+}
+
 /// RAII latency timer: records on drop.
 pub struct LatencyGuard<'a> {
     metrics: &'a Metrics,
@@ -179,6 +234,26 @@ mod tests {
         assert!(report.contains("queue_depth=3"), "{report}");
         assert!(report.contains("replicas_busy=2"), "{report}");
         assert!(report.contains("shed=1"), "{report}");
+    }
+
+    #[test]
+    fn residency_snapshot_and_report() {
+        let s = ResidencyStats::default();
+        s.resident_bytes.store(4096, Ordering::Relaxed);
+        s.resident_models.store(2, Ordering::Relaxed);
+        s.page_ins.store(5, Ordering::Relaxed);
+        s.evictions.store(3, Ordering::Relaxed);
+        let snap = s.snapshot(Some(8192));
+        assert_eq!(snap.resident_bytes, 4096);
+        assert_eq!(snap.resident_models, 2);
+        assert_eq!(snap.page_ins, 5);
+        assert_eq!(snap.evictions, 3);
+        assert_eq!(snap.budget_bytes, Some(8192));
+        let report = snap.report();
+        assert!(report.contains("resident_bytes=4096"), "{report}");
+        assert!(report.contains("evictions=3"), "{report}");
+        assert!(report.contains("budget_bytes=8192"), "{report}");
+        assert!(s.snapshot(None).report().contains("budget_bytes=none"));
     }
 
     #[test]

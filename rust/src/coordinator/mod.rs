@@ -45,7 +45,8 @@ pub mod server;
 pub mod trace;
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Result};
 
@@ -53,6 +54,7 @@ pub use crate::api::engine::{Engine, NativeEngine, PjrtEngine};
 use crate::lut::LutOpts;
 use crate::model_fmt::{self, LazyBundle};
 use crate::nn::graph::Graph;
+use metrics::{ResidencySnapshot, ResidencyStats};
 pub use pool::EnginePool;
 
 /// One registered model: a name, a pool of engine replicas, and the
@@ -122,10 +124,19 @@ impl ModelEntry {
     pub fn item_len(&self) -> usize {
         self.item_shape.iter().product()
     }
+
+    /// Bytes the pool keeps resident across all replicas (tables +
+    /// arenas; see [`Engine::resident_bytes`]) — what the registry's
+    /// `resident_budget_bytes` budgets against.
+    pub fn resident_bytes(&self) -> usize {
+        self.pool.resident_bytes()
+    }
 }
 
 /// A lazily registered model: a header-only [`LazyBundle`] plus the
-/// pool parameters to apply when the first request pages it in.
+/// pool parameters to apply when the first request pages it in. Also
+/// what a warmed model evicts *back to* — the spec is retained for the
+/// model's whole lifetime so eviction never loses resolvability.
 struct ColdModel {
     bundle: LazyBundle,
     opts: LutOpts,
@@ -133,29 +144,65 @@ struct ColdModel {
     replicas: usize,
 }
 
-#[derive(Default)]
-struct ColdState {
-    /// registered but never requested — only the bundle header is in memory
-    pending: BTreeMap<String, ColdModel>,
-    /// paged in on first request
-    warmed: BTreeMap<String, Arc<ModelEntry>>,
+/// A paged-in lazy model: the live entry, the retained spec it evicts
+/// back to, the byte footprint it was charged at page-in time, and its
+/// LRU stamp.
+struct WarmModel {
+    entry: Arc<ModelEntry>,
+    spec: ColdModel,
+    bytes: usize,
+    last_used: AtomicU64,
 }
 
-/// Name -> model registry with routing aliases.
+/// Per-model outcome of [`Registry::replicate_to`], so callers can see
+/// (and log) which pools actually grew instead of a silent best-effort
+/// no-op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicateOutcome {
+    /// pool reached the requested size (final replica count)
+    Grown(usize),
+    /// entry's `Arc` is shared out, so the pool cannot be mutated
+    SkippedShared,
+    /// engine lacks `clone_replica`; pool stayed at this size
+    Unsupported(usize),
+}
+
+/// Name -> model registry with routing aliases and a bounded-residency
+/// cold-model lifecycle.
 ///
 /// Models register either **eagerly** ([`Registry::register`], the
-/// engine pool is built up front) or **cold** ([`Registry::register_lazy`],
-/// only the bundle header is read — name and input shape — while the
-/// table sections stay on disk). Cold models are paged in by the first
-/// [`Registry::resolve`] that hits them; paging happens under a lock so
-/// concurrent first requests build the pool exactly once, and the
-/// warmed entry is indistinguishable from an eager registration after
-/// that.
+/// engine pool is built up front, never evicted) or **cold**
+/// ([`Registry::register_lazy`], only the bundle header is read — name
+/// and input shape — while the table sections stay on disk). Cold
+/// models are paged in by the first [`Registry::resolve`] that hits
+/// them; paging happens under the cold mutex so concurrent first
+/// requests build the pool exactly once. Warmed models then live in an
+/// `RwLock` map read on every resolve — the hot path never touches the
+/// cold mutex again.
+///
+/// With [`Registry::set_resident_budget`] set, page-ins evict
+/// least-recently-used warmed models *first* (back to their retained
+/// specs, resolvable again on the next request), so the
+/// `resident_bytes` gauge never exceeds the budget — not even
+/// transiently — unless a single model alone is bigger than the whole
+/// budget, in which case it still pages in (serving wins) with the
+/// cache otherwise empty. Eviction only drops the registry's `Arc`:
+/// in-flight handles keep the old pool serving until they drop, and a
+/// later resolve rebuilds the model from disk exactly once.
 #[derive(Default)]
 pub struct Registry {
     models: BTreeMap<String, Arc<ModelEntry>>,
     aliases: BTreeMap<String, String>,
-    cold: Mutex<ColdState>,
+    /// lazily registered and not currently paged in (never requested,
+    /// or evicted back) — header-only specs
+    cold: Mutex<BTreeMap<String, ColdModel>>,
+    /// paged-in lazy models, LRU-stamped; the read path for warm resolves
+    warmed: RwLock<BTreeMap<String, WarmModel>>,
+    /// byte bound over `warmed` (`None` = never evict)
+    resident_budget: Option<usize>,
+    stats: ResidencyStats,
+    /// monotonic LRU clock (ticks per touch — deterministic, no wall time)
+    clock: AtomicU64,
 }
 
 impl Registry {
@@ -184,7 +231,6 @@ impl Registry {
         self.cold
             .get_mut()
             .expect("cold-model lock poisoned")
-            .pending
             .insert(name.clone(), ColdModel { bundle, opts, max_batch, replicas });
         Ok(name)
     }
@@ -194,67 +240,199 @@ impl Registry {
         self.aliases.insert(from.to_string(), to.to_string());
     }
 
+    /// Bound the total bytes of warmed lazy models (`None` = never
+    /// evict). Page-ins that would exceed the budget evict LRU warmed
+    /// models first; see the type-level docs for the one exception
+    /// (a single model bigger than the whole budget).
+    pub fn set_resident_budget(&mut self, bytes: Option<usize>) {
+        self.resident_budget = bytes;
+    }
+
+    pub fn resident_budget(&self) -> Option<usize> {
+        self.resident_budget
+    }
+
+    /// Residency gauges and counters (resident bytes/models, page-ins,
+    /// evictions) plus the configured budget.
+    pub fn residency(&self) -> ResidencySnapshot {
+        self.stats.snapshot(self.resident_budget)
+    }
+
     pub fn resolve(&self, name: &str) -> Result<Arc<ModelEntry>> {
         let target = self.aliases.get(name).map(|s| s.as_str()).unwrap_or(name);
         if let Some(e) = self.models.get(target) {
             return Ok(e.clone());
         }
-        // Cold path: page the model in on first request. Building under
-        // the lock means concurrent first requests construct the pool
-        // exactly once; later resolves hit `warmed` (or `models`) and
-        // never wait on a build.
-        let mut cold = self.cold.lock().expect("cold-model lock poisoned");
-        if let Some(e) = cold.warmed.get(target) {
-            return Ok(e.clone());
+        // Hot path for lazy models: a read lock on the warmed map. This
+        // deliberately never touches the cold mutex — resolving an
+        // already-warmed model used to serialize every caller on it.
+        if let Some(e) = self.touch_warm(target) {
+            return Ok(e);
         }
-        if let Some(spec) = cold.pending.get(target) {
-            let graph = spec.bundle.graph()?;
-            let entry = Arc::new(ModelEntry::native(
-                target,
-                &graph,
-                spec.opts,
-                spec.max_batch,
-                spec.replicas,
-            )?);
-            // only drop the pending spec once the build succeeded, so a
-            // transiently unreadable bundle stays resolvable
-            cold.pending.remove(target);
-            cold.warmed.insert(target.to_string(), entry.clone());
-            return Ok(entry);
-        }
-        Err(anyhow!("unknown model '{name}'"))
+        self.page_in(target, name)
     }
 
+    /// The currently resident entry for `name` (eager or warmed),
+    /// without paging a cold model in and without bumping the LRU
+    /// stamp — for staleness checks (the server's batcher sweep), not
+    /// for serving.
+    pub fn peek(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        let target = self.aliases.get(name).map(|s| s.as_str()).unwrap_or(name);
+        if let Some(e) = self.models.get(target) {
+            return Some(e.clone());
+        }
+        self.warmed
+            .read()
+            .expect("warmed-model lock poisoned")
+            .get(target)
+            .map(|w| Arc::clone(&w.entry))
+    }
+
+    /// Warm-path lookup: read lock + LRU-stamp bump.
+    fn touch_warm(&self, target: &str) -> Option<Arc<ModelEntry>> {
+        let warmed = self.warmed.read().expect("warmed-model lock poisoned");
+        warmed.get(target).map(|w| {
+            w.last_used.store(self.tick(), Ordering::Relaxed);
+            Arc::clone(&w.entry)
+        })
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Cold path: build the pool from the retained spec. Runs under the
+    /// cold mutex so concurrent first requests construct the pool
+    /// exactly once — the racer that loses the lock re-checks `warmed`
+    /// and reuses the winner's entry.
+    fn page_in(&self, target: &str, requested: &str) -> Result<Arc<ModelEntry>> {
+        let mut cold = self.cold.lock().expect("cold-model lock poisoned");
+        if let Some(e) = self.touch_warm(target) {
+            return Ok(e);
+        }
+        let Some(spec) = cold.get(target) else {
+            return Err(anyhow!("unknown model '{requested}'"));
+        };
+        let graph = spec.bundle.graph()?;
+        let entry = Arc::new(ModelEntry::native(
+            target,
+            &graph,
+            spec.opts,
+            spec.max_batch,
+            spec.replicas,
+        )?);
+        drop(graph);
+        let bytes = entry.resident_bytes();
+        // Evict-before-insert: free LRU entries until the newcomer fits,
+        // so the resident gauge never exceeds the budget even
+        // transiently. `saturating_sub` handles the one exception — a
+        // model bigger than the whole budget empties the cache and pages
+        // in anyway (serving wins over the bound).
+        if let Some(budget) = self.resident_budget {
+            self.evict_warmed_to(budget.saturating_sub(bytes) as u64, &mut cold);
+        }
+        // Only drop the pending spec once the build succeeded (a
+        // transiently unreadable bundle stays resolvable); it moves into
+        // the warm entry so eviction can put it back.
+        let spec = cold.remove(target).expect("pending spec held under the cold lock");
+        self.stats.resident_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.stats.resident_models.fetch_add(1, Ordering::Relaxed);
+        self.stats.page_ins.fetch_add(1, Ordering::Relaxed);
+        self.warmed.write().expect("warmed-model lock poisoned").insert(
+            target.to_string(),
+            WarmModel {
+                entry: Arc::clone(&entry),
+                spec,
+                bytes,
+                last_used: AtomicU64::new(self.tick()),
+            },
+        );
+        Ok(entry)
+    }
+
+    /// Evict least-recently-used warmed models until the resident gauge
+    /// is at most `target`. Caller holds the cold mutex (lock order is
+    /// always cold -> warmed); evicted specs go back into `cold`, so
+    /// the models stay resolvable, and any in-flight `Arc` keeps the
+    /// old pool serving until it drops.
+    fn evict_warmed_to(&self, target: u64, cold: &mut BTreeMap<String, ColdModel>) {
+        let mut warmed = self.warmed.write().expect("warmed-model lock poisoned");
+        while self.stats.resident_bytes.load(Ordering::Relaxed) > target {
+            let victim = warmed
+                .iter()
+                .min_by_key(|(_, w)| w.last_used.load(Ordering::Relaxed))
+                .map(|(name, _)| name.clone());
+            let Some(victim) = victim else { break };
+            let w = warmed.remove(&victim).expect("victim vanished under the write lock");
+            self.stats.resident_bytes.fetch_sub(w.bytes as u64, Ordering::Relaxed);
+            self.stats.resident_models.fetch_sub(1, Ordering::Relaxed);
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            cold.insert(victim, w.spec);
+        }
+    }
+
+    /// Every registered model exactly once, whichever lifecycle state
+    /// it is in (eager, cold-pending, warmed, or evicted back to cold).
     pub fn names(&self) -> Vec<String> {
         let mut names: std::collections::BTreeSet<String> = self.models.keys().cloned().collect();
+        // lock order cold -> warmed matches the page-in path, so a
+        // listing taken mid-page-in sees each model in exactly one map
         let cold = self.cold.lock().expect("cold-model lock poisoned");
-        names.extend(cold.pending.keys().cloned());
-        names.extend(cold.warmed.keys().cloned());
+        let warmed = self.warmed.read().expect("warmed-model lock poisoned");
+        names.extend(cold.keys().cloned());
+        names.extend(warmed.keys().cloned());
         names.into_iter().collect()
     }
 
-    /// Lazily registered models that have not been paged in yet.
+    /// Lazily registered models not currently paged in (never resolved,
+    /// or evicted back to their pending spec).
     pub fn cold_names(&self) -> Vec<String> {
         self.cold
             .lock()
             .expect("cold-model lock poisoned")
-            .pending
             .keys()
             .cloned()
             .collect()
     }
 
-    /// Grow every model's pool to at least `n` replicas (best effort:
-    /// engines without `clone_replica` — and entries whose `Arc` has
-    /// already been shared out — keep their explicit pool size). Errors
-    /// only when a supported clone actually fails.
-    pub fn replicate_to(&mut self, n: usize) -> Result<()> {
-        for entry in self.models.values_mut() {
-            if let Some(e) = Arc::get_mut(entry) {
-                e.pool.try_grow_to(n)?;
+    /// Grow every model's pool — eager *and* warmed-lazy — to at least
+    /// `n` replicas, reporting a per-model [`ReplicateOutcome`] instead
+    /// of silently no-opping: entries whose `Arc` is already shared out
+    /// are `SkippedShared`, engines without `clone_replica` are
+    /// `Unsupported`. Errors only when a supported clone actually
+    /// fails. Growing a warmed model re-measures its footprint and
+    /// moves the resident gauge; the next page-in settles any budget
+    /// overshoot by evicting.
+    pub fn replicate_to(&mut self, n: usize) -> Result<Vec<(String, ReplicateOutcome)>> {
+        fn grow(entry: &mut Arc<ModelEntry>, n: usize) -> Result<ReplicateOutcome> {
+            match Arc::get_mut(entry) {
+                None => Ok(ReplicateOutcome::SkippedShared),
+                Some(e) => {
+                    let size = e.pool.try_grow_to(n)?;
+                    Ok(if size >= n {
+                        ReplicateOutcome::Grown(size)
+                    } else {
+                        ReplicateOutcome::Unsupported(size)
+                    })
+                }
             }
         }
-        Ok(())
+        let mut outcomes = Vec::new();
+        for (name, entry) in self.models.iter_mut() {
+            outcomes.push((name.clone(), grow(entry, n)?));
+        }
+        let warmed = self.warmed.get_mut().expect("warmed-model lock poisoned");
+        for (name, w) in warmed.iter_mut() {
+            let outcome = grow(&mut w.entry, n)?;
+            if !matches!(outcome, ReplicateOutcome::SkippedShared) {
+                let bytes = w.entry.resident_bytes();
+                self.stats.resident_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                self.stats.resident_bytes.fetch_sub(w.bytes as u64, Ordering::Relaxed);
+                w.bytes = bytes;
+            }
+            outcomes.push((name.clone(), outcome));
+        }
+        Ok(outcomes)
     }
 }
 
@@ -402,5 +580,255 @@ mod tests {
         r.resolve("zoo07").unwrap();
         assert_eq!(r.cold_names().len(), n - 1);
         assert!(r.names().len() == n, "warmed models stay listed");
+    }
+
+    #[test]
+    fn warmed_resolve_does_not_take_the_cold_mutex() {
+        let (_, path) = saved_graph("warm_nolock");
+        let mut r = Registry::new();
+        r.register_lazy(&path, LutOpts::all(), 4, 1).unwrap();
+        r.resolve("warm_nolock").unwrap();
+        let r = Arc::new(r);
+        // Jam the cold mutex from this thread: a warmed resolve must
+        // still complete (it used to serialize every caller on it).
+        let cold_held = r.cold.lock().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let r2 = Arc::clone(&r);
+        let resolver = std::thread::spawn(move || {
+            let e = r2.resolve("warm_nolock").unwrap();
+            tx.send(e.name.clone()).unwrap();
+        });
+        let name = rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("warmed resolve blocked on the cold mutex");
+        assert_eq!(name, "warm_nolock");
+        drop(cold_held);
+        resolver.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_first_resolves_page_in_exactly_once() {
+        let (_, path) = saved_graph("race_once");
+        let mut r = Registry::new();
+        r.register_lazy(&path, LutOpts::all(), 4, 1).unwrap();
+        let r = Arc::new(r);
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (r, barrier) = (Arc::clone(&r), Arc::clone(&barrier));
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    r.resolve("race_once").unwrap()
+                })
+            })
+            .collect();
+        let entries: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for e in &entries[1..] {
+            assert!(Arc::ptr_eq(&entries[0], e), "all racers must share one pool");
+        }
+        assert_eq!(r.residency().page_ins, 1, "the pool must build exactly once");
+    }
+
+    #[test]
+    fn eviction_keeps_resident_bytes_within_budget_and_old_arcs_serve() {
+        let (_, pa) = saved_graph("evict_a");
+        let (_, pb) = saved_graph("evict_b");
+        let mut r = Registry::new();
+        r.register_lazy(&pa, LutOpts::all(), 4, 1).unwrap();
+        r.register_lazy(&pb, LutOpts::all(), 4, 1).unwrap();
+        let a = r.resolve("evict_a").unwrap();
+        let bytes = r.residency().resident_bytes;
+        assert!(bytes > 0, "a paged-in model must account its footprint");
+        // budget fits exactly one of the (identically shaped) models
+        r.set_resident_budget(Some(bytes as usize));
+
+        let x = Tensor::new(vec![2, 8, 8, 3], vec![0.5; 2 * 192]);
+        let mut before = Tensor::zeros(vec![0]);
+        a.engine().run_batch(&x, &mut before).unwrap();
+
+        let _b = r.resolve("evict_b").unwrap();
+        let snap = r.residency();
+        assert_eq!(snap.evictions, 1, "paging b in must evict a");
+        assert_eq!(snap.page_ins, 2);
+        assert!(snap.resident_bytes <= bytes, "budget exceeded: {snap:?}");
+        assert_eq!(r.cold_names(), vec!["evict_a".to_string()]);
+
+        // the in-flight Arc keeps serving, bitwise, after eviction
+        let mut after = Tensor::zeros(vec![0]);
+        a.engine().run_batch(&x, &mut after).unwrap();
+        assert_eq!(before.data, after.data);
+
+        // re-resolving rebuilds a from its retained spec (evicting b)
+        let a2 = r.resolve("evict_a").unwrap();
+        assert!(!Arc::ptr_eq(&a, &a2), "evicted model must rebuild, not alias the old Arc");
+        let mut again = Tensor::zeros(vec![0]);
+        a2.engine().run_batch(&x, &mut again).unwrap();
+        assert_eq!(before.data, again.data, "re-paged model must match bitwise");
+        let snap = r.residency();
+        assert_eq!((snap.page_ins, snap.evictions), (3, 2));
+    }
+
+    #[test]
+    fn names_report_each_model_exactly_once_across_the_lifecycle() {
+        let (g, p1) = saved_graph("life_a");
+        let (_, p2) = saved_graph("life_b");
+        let mut r = Registry::new();
+        r.register(ModelEntry::native("life_eager", &g, LutOpts::all(), 4, 1).unwrap());
+        r.register_lazy(&p1, LutOpts::all(), 4, 1).unwrap();
+        r.register_lazy(&p2, LutOpts::all(), 4, 1).unwrap();
+        let all = vec!["life_a".to_string(), "life_b".to_string(), "life_eager".to_string()];
+        assert_eq!(r.names(), all, "while pending");
+        r.resolve("life_a").unwrap();
+        assert_eq!(r.names(), all, "after promotion");
+        let bytes = r.residency().resident_bytes as usize;
+        r.set_resident_budget(Some(bytes));
+        r.resolve("life_b").unwrap(); // evicts life_a
+        assert_eq!(r.residency().evictions, 1);
+        assert_eq!(r.names(), all, "after eviction");
+        assert_eq!(r.cold_names(), vec!["life_a".to_string()]);
+        r.resolve("life_a").unwrap(); // pages back in, evicting life_b
+        assert_eq!(r.names(), all, "after re-promotion");
+    }
+
+    #[test]
+    fn replicate_to_reports_per_model_outcomes_and_covers_warmed_entries() {
+        let (g, path) = saved_graph("rep_warm");
+        let mut r = Registry::new();
+        // eager entry whose Arc is shared out -> SkippedShared
+        r.register(ModelEntry::native("rep_shared", &g, LutOpts::all(), 4, 1).unwrap());
+        let held = r.resolve("rep_shared").unwrap();
+        // non-replicable engine -> Unsupported (pool stays at 1)
+        let (_, stub) = pool::stubs::StubEngine::elastic().shared();
+        r.register(ModelEntry::from_engine("rep_stub", stub, vec![8, 8, 3]));
+        // warmed lazy entry (resolve Arc dropped) -> Grown
+        r.register_lazy(&path, LutOpts::all(), 4, 1).unwrap();
+        r.resolve("rep_warm").unwrap();
+        let before_bytes = r.residency().resident_bytes;
+
+        let outcomes = r.replicate_to(3).unwrap();
+        let get = |name: &str| outcomes.iter().find(|(n, _)| n == name).unwrap().1;
+        assert_eq!(get("rep_shared"), ReplicateOutcome::SkippedShared);
+        assert_eq!(get("rep_stub"), ReplicateOutcome::Unsupported(1));
+        assert_eq!(get("rep_warm"), ReplicateOutcome::Grown(3));
+        assert_eq!(r.resolve("rep_warm").unwrap().pool.len(), 3, "warmed pools must grow");
+        assert_eq!(held.pool.len(), 1, "shared entries stay untouched");
+        assert!(
+            r.residency().resident_bytes > before_bytes,
+            "growing a warmed pool must move the resident gauge"
+        );
+    }
+
+    #[test]
+    fn eviction_while_request_in_flight_keeps_old_replica_serving() {
+        let (_, path_old) = saved_graph("gate_old");
+        let (_, path_new) = saved_graph("gate_new");
+        let mut r = Registry::new();
+        r.register_lazy(&path_new, LutOpts::all(), 4, 1).unwrap();
+
+        // Hand-warm "gate_old" around a gated stub so the test controls
+        // exactly when its in-flight batch finishes; the retained spec
+        // is the real bundle, so the post-eviction rebuild is native.
+        let bundle = crate::model_fmt::load_bundle_lazy(&path_old).unwrap();
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel();
+        let (stub, engine) = pool::stubs::StubEngine::elastic()
+            .with_entered(entered_tx)
+            .with_gate(gate_rx)
+            .shared();
+        let bytes = 1024usize;
+        r.warmed.get_mut().unwrap().insert(
+            "gate_old".to_string(),
+            WarmModel {
+                entry: Arc::new(ModelEntry::from_engine("gate_old", engine, vec![4])),
+                spec: ColdModel {
+                    bundle,
+                    opts: LutOpts::all(),
+                    max_batch: 4,
+                    replicas: 1,
+                },
+                bytes,
+                last_used: AtomicU64::new(0),
+            },
+        );
+        r.stats.resident_bytes.store(bytes as u64, Ordering::Relaxed);
+        r.stats.resident_models.store(1, Ordering::Relaxed);
+        r.set_resident_budget(Some(bytes));
+
+        // A request is mid-flight on the warmed stub, parked in the gate.
+        let inflight = r.resolve("gate_old").unwrap();
+        let worker = std::thread::spawn(move || {
+            let x = Tensor::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+            let mut out = Tensor::zeros(vec![0]);
+            inflight.engine().run_batch(&x, &mut out).unwrap();
+            out
+        });
+        entered_rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("in-flight request never reached the stub");
+
+        // Paging "gate_new" in evicts "gate_old" mid-request.
+        r.resolve("gate_new").unwrap();
+        assert_eq!(r.residency().evictions, 1);
+        assert!(r.cold_names().contains(&"gate_old".to_string()));
+
+        // Release the gate: the evicted replica still answers correctly.
+        gate_tx.send(()).unwrap();
+        let out = worker.join().unwrap();
+        assert_eq!(out.data, pool::stubs::StubEngine::expected_row(&[1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(stub.execs().len(), 1);
+
+        // The next resolve rebuilds from the retained spec — a native
+        // pool now (CNN shapes), exactly one more page-in.
+        let rebuilt = r.resolve("gate_old").unwrap();
+        let x = Tensor::zeros(vec![2, 8, 8, 3]);
+        let mut out = Tensor::zeros(vec![0]);
+        rebuilt.engine().run_batch(&x, &mut out).unwrap();
+        assert_eq!(out.shape, vec![2, 5]);
+        assert_eq!(r.residency().page_ins, 2, "hand-warmed entry never counted; rebuilds do");
+    }
+
+    #[test]
+    fn eviction_respects_budget_over_random_resolve_sequences() {
+        let mut r = Registry::new();
+        let n = 6usize;
+        for i in 0..n {
+            let (_, path) = saved_graph(&format!("prop{i}"));
+            r.register_lazy(&path, LutOpts::all(), 4, 1).unwrap();
+        }
+        // measure one model's footprint, then budget three of them
+        r.resolve("prop0").unwrap();
+        let bytes = r.residency().resident_bytes as usize;
+        let budget = 3 * bytes;
+        r.set_resident_budget(Some(budget));
+
+        let seed = std::env::var("SERVE_STRESS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let mut rng = crate::util::prng::Prng::new(seed);
+        let mut held: Vec<Arc<ModelEntry>> = Vec::new();
+        for step in 0..60 {
+            let e = r.resolve(&format!("prop{}", rng.below(n))).unwrap();
+            let snap = r.residency();
+            assert!(
+                snap.resident_bytes <= budget as u64,
+                "step {step} (seed {seed}): resident {} exceeds budget {budget}",
+                snap.resident_bytes
+            );
+            // randomly hold or release Arcs: in-flight handles must
+            // never block eviction or corrupt the gauge
+            if rng.below(2) == 0 {
+                held.push(e);
+            } else {
+                held.clear();
+            }
+        }
+        let snap = r.residency();
+        assert!(snap.evictions > 0, "a 6-model sweep under a 3-model budget must evict");
+        assert_eq!(
+            snap.resident_models as usize,
+            r.names().len() - r.cold_names().len(),
+            "gauge must agree with the maps"
+        );
     }
 }

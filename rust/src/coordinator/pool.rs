@@ -95,6 +95,13 @@ impl EnginePool {
     pub fn max_batches(&self) -> Vec<Option<usize>> {
         self.replicas.iter().map(|r| r.max_batch()).collect()
     }
+
+    /// Total resident bytes across all replicas (see
+    /// [`Engine::resident_bytes`]; each replica owns its own arenas, so
+    /// the sum is the pool's true footprint).
+    pub fn resident_bytes(&self) -> usize {
+        self.replicas.iter().map(|r| r.resident_bytes()).sum()
+    }
 }
 
 /// Deterministic test engines for the serving stack (shared by the

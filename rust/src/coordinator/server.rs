@@ -12,14 +12,14 @@
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
-use super::Registry;
+use super::{ModelEntry, Registry, ReplicateOutcome};
 use crate::util::json::{self, Json};
 use crate::util::threadpool::ThreadPool;
 
@@ -28,9 +28,14 @@ pub struct ServerConfig {
     pub handler_threads: usize,
     /// Grow every model's engine pool to at least this many replicas at
     /// startup (best effort: engines without `clone_replica` keep their
-    /// registered pool size). The batcher then runs one worker per
-    /// replica with work stealing between them.
+    /// registered pool size, and the skips are logged). The batcher then
+    /// runs one worker per replica with work stealing between them.
     pub replicas: usize,
+    /// Byte budget over warmed lazy models
+    /// ([`Registry::set_resident_budget`]): page-ins evict
+    /// least-recently-used warmed models back to their on-disk bundles
+    /// first. `None` = never evict.
+    pub resident_budget_bytes: Option<usize>,
     pub batcher: BatcherConfig,
 }
 
@@ -40,6 +45,7 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7070".into(),
             handler_threads: 4,
             replicas: 1,
+            resident_budget_bytes: None,
             batcher: BatcherConfig::default(),
         }
     }
@@ -60,27 +66,40 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
 
-        // Grow replicable pools to the configured replica target, then
-        // run one batcher per model (one worker per replica inside it).
+        registry.set_resident_budget(cfg.resident_budget_bytes);
+        // Grow replicable pools to the configured replica target, and
+        // log which models were skipped instead of silently no-opping.
         if cfg.replicas > 1 {
-            registry.replicate_to(cfg.replicas)?;
+            for (name, outcome) in registry.replicate_to(cfg.replicas)? {
+                match outcome {
+                    ReplicateOutcome::Grown(_) => {}
+                    ReplicateOutcome::SkippedShared => eprintln!(
+                        "serve: model '{name}' not replicated (entry already shared out)"
+                    ),
+                    ReplicateOutcome::Unsupported(size) => eprintln!(
+                        "serve: model '{name}' stays at {size} replica(s) (engine does not clone)"
+                    ),
+                }
+            }
         }
-        let mut batchers: BTreeMap<String, Arc<Batcher>> = BTreeMap::new();
+        // Batchers spawn on demand; eagerly spawn them only for models
+        // that are already resident — resolving a whole cold zoo at
+        // startup would defeat lazy registration and the budget.
+        let mut batchers: BTreeMap<String, ModelBatcher> = BTreeMap::new();
         for name in registry.names() {
-            let entry = registry.resolve(&name)?;
-            batchers.insert(
-                name,
-                Arc::new(Batcher::spawn(
-                    entry,
-                    BatcherConfig {
-                        max_batch: cfg.batcher.max_batch,
-                        max_wait: cfg.batcher.max_wait,
-                        queue_cap: cfg.batcher.queue_cap,
-                    },
-                )),
-            );
+            if let Some(entry) = registry.peek(&name) {
+                let batcher = Arc::new(Batcher::spawn(Arc::clone(&entry), cfg.batcher.clone()));
+                batchers.insert(name, ModelBatcher { batcher, entry });
+            }
         }
-        let shared = Arc::new(Shared { registry, batchers, start: Instant::now() });
+        let last_evictions = AtomicU64::new(registry.residency().evictions);
+        let shared = Arc::new(Shared {
+            registry,
+            batchers: RwLock::new(batchers),
+            batcher_cfg: cfg.batcher,
+            last_evictions,
+            start: Instant::now(),
+        });
 
         let stop2 = Arc::clone(&stop);
         let pool = ThreadPool::new(cfg.handler_threads);
@@ -129,10 +148,68 @@ impl Drop for Server {
     }
 }
 
+/// A model's batcher plus the exact pool `Arc` it was spawned against,
+/// so staleness (the registry evicted and re-paged the model) is one
+/// pointer comparison away.
+struct ModelBatcher {
+    batcher: Arc<Batcher>,
+    entry: Arc<ModelEntry>,
+}
+
 struct Shared {
     registry: Registry,
-    batchers: BTreeMap<String, Arc<Batcher>>,
+    /// Batchers keyed by canonical model name, spawned on first request
+    /// (lazy models must not page in at startup) and replaced when the
+    /// registry hands out a different pool for the name.
+    batchers: RwLock<BTreeMap<String, ModelBatcher>>,
+    batcher_cfg: BatcherConfig,
+    /// registry eviction counter at the last stale-batcher sweep
+    last_evictions: AtomicU64,
     start: Instant,
+}
+
+/// The batcher serving `entry`, spawned on first use. A cached batcher
+/// is stale when the registry no longer hands out the same `Arc` (the
+/// model was evicted and re-paged in): replacing it drops the old one,
+/// which drains its queue against the old pool before the workers exit.
+fn batcher_for(shared: &Shared, entry: &Arc<ModelEntry>) -> Arc<Batcher> {
+    {
+        let batchers = shared.batchers.read().expect("batcher map poisoned");
+        if let Some(mb) = batchers.get(&entry.name) {
+            if Arc::ptr_eq(&mb.entry, entry) {
+                return Arc::clone(&mb.batcher);
+            }
+        }
+    }
+    let mut batchers = shared.batchers.write().expect("batcher map poisoned");
+    // double-check under the write lock: another handler may have won
+    if let Some(mb) = batchers.get(&entry.name) {
+        if Arc::ptr_eq(&mb.entry, entry) {
+            return Arc::clone(&mb.batcher);
+        }
+    }
+    let batcher = Arc::new(Batcher::spawn(Arc::clone(entry), shared.batcher_cfg.clone()));
+    batchers.insert(
+        entry.name.clone(),
+        ModelBatcher { batcher: Arc::clone(&batcher), entry: Arc::clone(entry) },
+    );
+    batcher
+}
+
+/// Drop batchers whose model was evicted since the last sweep, so a
+/// cold model's worker threads and queue don't outlive its pool. Runs
+/// opportunistically on the request path, gated on the registry's
+/// eviction counter; `Registry::peek` never pages anything back in.
+fn sweep_stale_batchers(shared: &Shared) {
+    let evictions = shared.registry.residency().evictions;
+    if shared.last_evictions.swap(evictions, Ordering::Relaxed) == evictions {
+        return;
+    }
+    let mut batchers = shared.batchers.write().expect("batcher map poisoned");
+    batchers.retain(|name, mb| match shared.registry.peek(name) {
+        Some(current) => Arc::ptr_eq(&current, &mb.entry),
+        None => false,
+    });
 }
 
 fn handle_conn(stream: TcpStream, shared: &Shared, stop: &AtomicBool) -> Result<()> {
@@ -193,15 +270,24 @@ fn handle_line(line: &str, shared: &Shared, stop: &AtomicBool) -> Json {
                         shared.registry.names().into_iter().map(Json::Str).collect(),
                     ),
                 ),
+                (
+                    "cold",
+                    Json::Arr(
+                        shared.registry.cold_names().into_iter().map(Json::Str).collect(),
+                    ),
+                ),
             ]),
             "metrics" => {
                 let wall = shared.start.elapsed().as_secs_f64();
                 let mut obj = vec![("ok", Json::Bool(true))];
                 let mut per_model = std::collections::BTreeMap::new();
-                for (name, b) in &shared.batchers {
-                    per_model.insert(name.clone(), Json::str(b.snapshot().report(wall)));
+                let batchers = shared.batchers.read().expect("batcher map poisoned");
+                for (name, mb) in batchers.iter() {
+                    per_model.insert(name.clone(), Json::str(mb.batcher.snapshot().report(wall)));
                 }
+                drop(batchers);
                 obj.push(("metrics", Json::Obj(per_model)));
+                obj.push(("residency", Json::str(shared.registry.residency().report())));
                 Json::obj(obj)
             }
             "shutdown" => {
@@ -221,11 +307,15 @@ fn handle_line(line: &str, shared: &Shared, stop: &AtomicBool) -> Json {
     let Some(input) = input else {
         return err_json("missing 'input' array");
     };
-    let name = match shared.registry.resolve(model) {
-        Ok(e) => e.name.clone(),
+    let entry = match shared.registry.resolve(model) {
+        Ok(e) => e,
         Err(e) => return err_json(format!("{e}")),
     };
-    let batcher = &shared.batchers[&name];
+    // this resolve may have paged a cold model in (possibly evicting
+    // another): retire batchers stranded on evicted pools, then fetch
+    // or spawn the one for the current pool
+    sweep_stale_batchers(shared);
+    let batcher = batcher_for(shared, &entry);
     let t0 = Instant::now();
     match batcher.submit(input) {
         Ok(out) => Json::obj(vec![
@@ -430,5 +520,87 @@ mod tests {
         assert_eq!(client.join().unwrap(), want);
         let server = shutter.join().unwrap();
         assert!(server.stopped());
+    }
+
+    fn lazy_registry(names: &[&str]) -> Registry {
+        let dir = std::env::temp_dir().join("lutnn_server_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = Registry::new();
+        for name in names {
+            let g = build_cnn_graph(
+                name,
+                [8, 8, 3],
+                &[ConvSpec { cout: 4, k: 3, stride: 1 }],
+                5,
+                0,
+            );
+            let path = dir.join(format!("{name}.lutnn")).to_string_lossy().into_owned();
+            crate::model_fmt::save_bundle(&g, &path).unwrap();
+            r.register_lazy(&path, LutOpts::all(), 8, 1).unwrap();
+        }
+        r
+    }
+
+    /// Startup must not page lazy models in (no batcher, no pool build);
+    /// the first request does, and the metrics command exposes the
+    /// registry's residency gauges.
+    #[test]
+    fn lazy_models_page_in_on_first_request_not_at_startup() {
+        let server = Server::start(
+            lazy_registry(&["srv_cold"]),
+            ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+
+        let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
+        assert!(residency.contains("page_ins=0"), "startup paged a model in: {residency}");
+        let models = c.call(&Json::obj(vec![("cmd", Json::str("models"))])).unwrap();
+        assert_eq!(models.get("cold").unwrap().as_arr().unwrap().len(), 1);
+
+        let out = c.infer("srv_cold", &vec![0.25; 192]).unwrap();
+        assert_eq!(out.len(), 5);
+        let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
+        assert!(residency.contains("page_ins=1"), "{residency}");
+        assert!(residency.contains("resident_models=1"), "{residency}");
+        let models = c.call(&Json::obj(vec![("cmd", Json::str("models"))])).unwrap();
+        assert!(models.get("cold").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    /// With a resident budget sized for one model, serving model B
+    /// evicts model A; a later request for A transparently re-pages it
+    /// in and answers with the same bytes as before the eviction.
+    #[test]
+    fn eviction_and_repage_are_transparent_over_tcp() {
+        // measure one model's footprint on a throwaway registry
+        let probe = lazy_registry(&["srv_a"]);
+        probe.resolve("srv_a").unwrap();
+        let bytes = probe.residency().resident_bytes as usize;
+        assert!(bytes > 0);
+
+        let server = Server::start(
+            lazy_registry(&["srv_a", "srv_b"]),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                resident_budget_bytes: Some(bytes),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+        let input = vec![0.25; 192];
+        let first = c.infer("srv_a", &input).unwrap();
+        let _ = c.infer("srv_b", &input).unwrap(); // evicts srv_a
+        let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
+        assert!(residency.contains("evictions=1"), "{residency}");
+
+        let again = c.infer("srv_a", &input).unwrap();
+        assert_eq!(first, again, "re-paged model must answer identically");
+        let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
+        assert!(residency.contains("page_ins=3"), "{residency}");
     }
 }

@@ -67,6 +67,11 @@ USAGE: lutnn <serve|infer|cost|convert|compile|inspect> [flags]
 
   serve    --models <dir|bundle,...> [--port 7070] [--threads 4]
            [--replicas 1] [--max-batch 8] [--max-wait-ms 2]
+           [--lazy] [--resident-budget <bytes>]
+           (--lazy registers bundles cold — header only — and pages each
+            in on first request; --resident-budget bounds the bytes of
+            paged-in lazy models, evicting LRU models back to disk, and
+            implies --lazy)
   infer    <bundle.lutnn> [--batch 1] [--iters 1] [--naive]
   cost     [--k 16] [--v <override>]
   import   <graph.nnef> <out.lutnn>
@@ -116,28 +121,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // replica — Server::start grows every pool to the configured count
     // (one knob, exercised on the production path).
     let replicas = args.get_usize("replicas", 1).max(1);
+    // --resident-budget only makes sense over lazy models (eager pools
+    // are never evicted), so it implies --lazy.
+    let resident_budget = args.get("resident-budget").and_then(|v| v.parse::<usize>().ok());
+    let lazy = args.has("lazy") || resident_budget.is_some();
     let mut registry = Registry::new();
     for (name, path) in load_models(&spec)? {
-        let graph = model_fmt::load_bundle(&path)
-            .with_context(|| format!("loading {path}"))?;
-        println!(
-            "registered '{name}' ({} params bytes, lut/dense = {:?}, {replicas} replica(s))",
-            graph.param_bytes(),
-            graph.lut_fraction()
-        );
-        registry.register(
-            ModelEntry::native(&name, &graph, LutOpts::deployed(), max_batch, 1)
-                .with_context(|| format!("compiling session for {name}"))?,
-        );
+        if lazy {
+            // Header-only registration: tables stay on disk until the
+            // first request for this model pages them in.
+            let reg_name = registry
+                .register_lazy(&path, LutOpts::deployed(), max_batch, 1)
+                .with_context(|| format!("registering {path}"))?;
+            println!("registered '{reg_name}' cold (header only, pages in on first request)");
+        } else {
+            let graph = model_fmt::load_bundle(&path)
+                .with_context(|| format!("loading {path}"))?;
+            println!(
+                "registered '{name}' ({} params bytes, lut/dense = {:?}, {replicas} replica(s))",
+                graph.param_bytes(),
+                graph.lut_fraction()
+            );
+            registry.register(
+                ModelEntry::native(&name, &graph, LutOpts::deployed(), max_batch, 1)
+                    .with_context(|| format!("compiling session for {name}"))?,
+            );
+        }
     }
-    if let Ok(first) = registry.resolve(&registry.names()[0]) {
-        let first_name = first.name.clone();
+    // Alias by name (never resolve here: that would page a lazy model in
+    // before the first request).
+    if let Some(first_name) = registry.names().first().cloned() {
         registry.alias("default", &first_name);
     }
     let cfg = ServerConfig {
         addr: format!("127.0.0.1:{port}"),
         handler_threads: args.get_usize("threads", 4),
         replicas,
+        resident_budget_bytes: resident_budget,
         batcher: lutnn::coordinator::batcher::BatcherConfig {
             max_batch,
             max_wait: std::time::Duration::from_millis(

@@ -1,0 +1,165 @@
+//! Minimal vendored mmap wrapper for bundle paging (no `libc` crate —
+//! this build environment has no crates.io access, so the two syscalls
+//! are declared directly against the always-linked system libc).
+//!
+//! [`page_in`] is the one entry point: with the `mmap` cargo feature on
+//! a unix target it maps the bundle read-only (`PROT_READ`,
+//! `MAP_PRIVATE`) so the OS owns residency per page — cold table
+//! sections cost address space, not RSS, and the kernel reclaims clean
+//! pages under memory pressure. Without the feature (or when the map
+//! call fails — network filesystems, empty files) it falls back to
+//! `std::fs::read`, byte-for-byte identical: both paths feed the same
+//! `parse_bundle`, so a mapped graph is bitwise-equal to an eager one.
+
+use anyhow::{Context, Result};
+
+#[cfg(all(unix, feature = "mmap"))]
+mod sys {
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    /// A whole file mapped read-only. The mapping outlives the file
+    /// descriptor (POSIX: close does not unmap), so the `File` is
+    /// dropped at the end of `open`.
+    pub struct MappedFile {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    // The mapping is PROT_READ-only and owned until Drop: shared
+    // references to its bytes are as safe as any &[u8].
+    unsafe impl Send for MappedFile {}
+    unsafe impl Sync for MappedFile {}
+
+    impl MappedFile {
+        pub fn open(path: &str) -> std::io::Result<MappedFile> {
+            let f = std::fs::File::open(path)?;
+            let len = f.metadata()?.len();
+            if len == 0 {
+                // zero-length maps are EINVAL; let the caller fall back
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "empty file is not mappable",
+                ));
+            }
+            let len = usize::try_from(len).map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "file too large to map")
+            })?;
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, f.as_raw_fd(), 0)
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(MappedFile { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for MappedFile {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+/// Bytes of a paged-in bundle: either an OS mapping or a heap buffer.
+/// [`PagedBytes::mode`] reports which path actually served the read.
+pub struct PagedBytes {
+    #[cfg(all(unix, feature = "mmap"))]
+    map: Option<sys::MappedFile>,
+    buf: Vec<u8>,
+}
+
+impl PagedBytes {
+    pub fn bytes(&self) -> &[u8] {
+        #[cfg(all(unix, feature = "mmap"))]
+        if let Some(m) = &self.map {
+            return m.as_slice();
+        }
+        &self.buf
+    }
+
+    /// `"mmap"` when the OS mapping is live, `"read"` on the fallback.
+    pub fn mode(&self) -> &'static str {
+        #[cfg(all(unix, feature = "mmap"))]
+        if self.map.is_some() {
+            return "mmap";
+        }
+        "read"
+    }
+}
+
+/// Page a whole file in for parsing: mmap when the feature and platform
+/// allow it, a plain read otherwise. The returned bytes are identical
+/// either way.
+pub fn page_in(path: &str) -> Result<PagedBytes> {
+    #[cfg(all(unix, feature = "mmap"))]
+    if let Ok(map) = sys::MappedFile::open(path) {
+        return Ok(PagedBytes { map: Some(map), buf: Vec::new() });
+    }
+    let buf = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    Ok(PagedBytes {
+        #[cfg(all(unix, feature = "mmap"))]
+        map: None,
+        buf,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("lutnn_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn paged_bytes_match_fs_read_exactly() {
+        let path = tmp("parity.bin");
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &data).unwrap();
+        let paged = page_in(&path).unwrap();
+        assert_eq!(paged.bytes(), &data[..], "page_in must return the file's exact bytes");
+        // with the feature on a unix target the mapping must engage
+        #[cfg(all(unix, feature = "mmap"))]
+        assert_eq!(paged.mode(), "mmap");
+        #[cfg(not(all(unix, feature = "mmap")))]
+        assert_eq!(paged.mode(), "read");
+    }
+
+    #[test]
+    fn empty_files_fall_back_to_read() {
+        let path = tmp("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let paged = page_in(&path).unwrap();
+        assert_eq!(paged.mode(), "read", "zero-length maps are EINVAL; must fall back");
+        assert!(paged.bytes().is_empty());
+    }
+
+    #[test]
+    fn missing_files_error_in_both_modes() {
+        assert!(page_in("/nonexistent/never/x.bin").is_err());
+    }
+}

@@ -29,7 +29,10 @@
 //! envelope plus the header JSON — table sections stay cold on disk —
 //! so a server can register thousands of models cheaply and page each
 //! one in on first request ([`LazyBundle::graph`], used by
-//! `coordinator::Registry::register_lazy`).
+//! `coordinator::Registry::register_lazy`). With the `mmap` cargo
+//! feature the paging step reads the blob sections through a read-only
+//! OS mapping ([`mmap::page_in`]) instead of a heap read — same bytes,
+//! same [`parse_bundle`] validation, bitwise-identical graphs.
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
@@ -45,6 +48,7 @@ use crate::tensor::QTable;
 use crate::util::json::{self, Json};
 
 pub mod huffman;
+pub mod mmap;
 
 pub const MAGIC: &[u8; 4] = b"LUTN";
 /// Current write version: v2 adds entropy-coded blob sections.
@@ -771,11 +775,14 @@ impl LazyBundle {
         self.header_bytes
     }
 
-    /// Materialize the full graph — the paging step. Goes through the
-    /// same validated [`parse_bundle`] path as the eager loader, so a
+    /// Materialize the full graph — the paging step. The bundle bytes
+    /// arrive through [`mmap::page_in`] (an OS mapping under the `mmap`
+    /// feature, a plain read otherwise) and go through the same
+    /// validated [`parse_bundle`] path as the eager loader, so a
     /// paged-in graph is bitwise-identical to an eagerly loaded one.
     pub fn graph(&self) -> Result<Graph> {
-        load_bundle(&self.path)
+        let paged = mmap::page_in(&self.path)?;
+        parse_bundle(paged.bytes()).with_context(|| format!("parsing {}", self.path))
     }
 }
 
@@ -1108,6 +1115,32 @@ mod tests {
                 assert_eq!(bits(&a.table_f32), bits(&b.table_f32));
             }
             _ => panic!("'l' should be lut on both sides"),
+        }
+    }
+
+    /// mmap-vs-eager parity at the byte level: `mmap::page_in` (the
+    /// bytes `LazyBundle::graph` parses) must return exactly what
+    /// `fs::read` (the eager loader) returns, for v1 and v2 bundles.
+    /// Under `--features mmap` on unix this pins the mapped path; in
+    /// the default build it pins the read fallback — CI's feature
+    /// matrix runs both.
+    #[test]
+    fn mmap_page_in_bytes_match_eager_read_for_both_versions() {
+        let g = peaked_lut_graph();
+        for (label, compressed) in [("v1", false), ("v2", true)] {
+            let path = tmp(&format!("mmap_parity_{label}.lutnn"));
+            if compressed {
+                save_bundle_compressed(&g, &path).unwrap();
+            } else {
+                save_bundle(&g, &path).unwrap();
+            }
+            let paged = mmap::page_in(&path).unwrap();
+            let eager = std::fs::read(&path).unwrap();
+            assert_eq!(paged.bytes(), &eager[..], "{label}: page_in bytes must match fs::read");
+            #[cfg(all(unix, feature = "mmap"))]
+            assert_eq!(paged.mode(), "mmap", "{label}");
+            #[cfg(not(all(unix, feature = "mmap")))]
+            assert_eq!(paged.mode(), "read", "{label}");
         }
     }
 
