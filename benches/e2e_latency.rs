@@ -163,6 +163,7 @@ fn replica_sweep(fast: bool) -> Json {
                 max_batch: 8,
                 max_wait: Duration::from_micros(500),
                 queue_cap: 256,
+                spans: None,
             },
         ));
         let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());

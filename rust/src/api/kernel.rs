@@ -13,6 +13,7 @@ use crate::lut::layout::{AlignedVec, TABLE_ALIGN};
 use crate::lut::{simd, DecomposedTable, LutLinear, LutOpts, LutScratch};
 use crate::nn::gemm::gemm;
 use crate::nn::ops::add_bias_rows;
+use std::time::Instant;
 
 /// Caller-owned scratch shared across every kernel invocation in a
 /// forward pass. The index buffer is sized by `SessionBuilder` at build
@@ -32,6 +33,16 @@ impl Scratch {
             lut: LutScratch { idx: Vec::with_capacity(cap), ..LutScratch::default() },
         }
     }
+}
+
+/// Per-call phase timing reported by [`LinearKernel::forward_profiled`]:
+/// nanoseconds spent in closest-centroid encode (paper §5.1) vs table
+/// read/accumulate (§5.2). Kernels without a meaningful split report
+/// zeros — the caller still has the layer wall time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelPhases {
+    pub encode_ns: u64,
+    pub lookup_ns: u64,
 }
 
 /// An executable linear operator `[rows, in_dim] -> [rows, out_dim]`.
@@ -80,6 +91,30 @@ pub trait LinearKernel: Send + Sync {
     /// overwriting `out`. Must not allocate beyond `scratch` growth
     /// within its reserved capacity.
     fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]);
+
+    /// Table bytes a forward over `rows` rows reads (each codebook's
+    /// selected table row touched once per input row, in the kernel's
+    /// deployed element width); 0 for kernels without tables. A static
+    /// attribution, not a cache measurement.
+    fn table_bytes_touched(&self, rows: usize) -> usize {
+        let _ = rows;
+        0
+    }
+
+    /// Profiled forward: byte-identical output to
+    /// [`LinearKernel::forward_into`], additionally reporting the
+    /// encode/lookup phase split. The default delegates to
+    /// `forward_into` and reports zeros (no phase attribution).
+    fn forward_profiled(
+        &self,
+        input: &[f32],
+        rows: usize,
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) -> KernelPhases {
+        self.forward_into(input, rows, scratch, out);
+        KernelPhases::default()
+    }
 }
 
 /// Dense reference kernel: blocked GEMM + bias (the ORT/TVM stand-in).
@@ -178,6 +213,30 @@ impl LinearKernel for LutKernel {
         self.lut
             .forward_scratch(input, rows, self.opts, &mut scratch.lut, &mut out[..rows * self.lut.m]);
     }
+
+    fn table_bytes_touched(&self, rows: usize) -> usize {
+        // mixed_accum reads the common-scale i8 table, else the f32 one
+        let elem = if self.opts.mixed_accum { 1 } else { 4 };
+        rows * self.lut.cb.c * self.lut.m * elem
+    }
+
+    fn forward_profiled(
+        &self,
+        input: &[f32],
+        rows: usize,
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) -> KernelPhases {
+        let out = &mut out[..rows * self.lut.m];
+        let t0 = Instant::now();
+        self.lut.encode_scratch(input, rows, self.opts, &mut scratch.lut);
+        let t1 = Instant::now();
+        self.lut.accumulate_scratch(rows, self.opts, &mut scratch.lut, out);
+        KernelPhases {
+            encode_ns: (t1 - t0).as_nanos() as u64,
+            lookup_ns: t1.elapsed().as_nanos() as u64,
+        }
+    }
 }
 
 /// Explicit-SIMD LUT kernel: the [`crate::lut::simd`] vectorized
@@ -247,6 +306,35 @@ impl LinearKernel for SimdLutKernel {
         simd::encode_simd(lut, input, rows, scores, idx);
         lut.accumulate_buffered(idx, rows, self.opts, acc16, acc32, out);
     }
+
+    fn table_bytes_touched(&self, rows: usize) -> usize {
+        let elem = if self.opts.mixed_accum { 1 } else { 4 };
+        rows * self.lut.cb.c * self.lut.m * elem
+    }
+
+    fn forward_profiled(
+        &self,
+        input: &[f32],
+        rows: usize,
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) -> KernelPhases {
+        let lut = &self.lut;
+        assert_eq!(input.len(), rows * lut.input_dim(), "lut-simd input size");
+        let out = &mut out[..rows * lut.m];
+        out.fill(0.0);
+        let LutScratch { idx, scores, acc16, acc32, .. } = &mut scratch.lut;
+        idx.clear();
+        idx.resize(rows * lut.cb.c, 0);
+        let t0 = Instant::now();
+        simd::encode_simd(lut, input, rows, scores, idx);
+        let t1 = Instant::now();
+        lut.accumulate_buffered(idx, rows, self.opts, acc16, acc32, out);
+        KernelPhases {
+            encode_ns: (t1 - t0).as_nanos() as u64,
+            lookup_ns: t1.elapsed().as_nanos() as u64,
+        }
+    }
 }
 
 /// Int8 LUT kernel (TableNet-style multiplier-less lookup-add): the
@@ -294,6 +382,35 @@ impl LutI8Kernel {
     pub fn abs_tolerance(&self) -> f32 {
         self.lut.cb.c as f32 * (self.scale + self.lut.common_scale()) + 1e-4
     }
+
+    /// §5.2 half: global-scale i32 lookup-adds, one scale multiply per
+    /// output element, bias last (shared by the plain and profiled
+    /// forwards so the split cannot drift).
+    fn accumulate(&self, idx: &[u16], rows: usize, acc32: &mut Vec<i32>, out: &mut [f32]) {
+        let lut = &self.lut;
+        let (c_total, k, m) = (lut.cb.c, lut.cb.k, lut.m);
+        let q = self.q.as_slice();
+        acc32.resize(m, 0);
+        for i in 0..rows {
+            acc32.fill(0);
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                let base = (c * k + kk) * m;
+                let row = &q[base..base + m];
+                // multiplier-less lookup-add: i32 += i8 widening only
+                for (a, &qv) in acc32.iter_mut().zip(row) {
+                    *a += qv as i32;
+                }
+            }
+            let dst = &mut out[i * m..(i + 1) * m];
+            for (o, &a) in dst.iter_mut().zip(acc32.iter()) {
+                *o = a as f32 * self.scale;
+            }
+        }
+        if let Some(b) = &lut.bias {
+            add_bias_rows(out, b);
+        }
+    }
 }
 
 impl LinearKernel for LutI8Kernel {
@@ -331,33 +448,39 @@ impl LinearKernel for LutI8Kernel {
 
     fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
         let lut = &self.lut;
-        let (c_total, k, m) = (lut.cb.c, lut.cb.k, lut.m);
         assert_eq!(input.len(), rows * lut.input_dim(), "lut-i8 input size");
-        let out = &mut out[..rows * m];
+        let out = &mut out[..rows * lut.m];
         let LutScratch { idx, scores, acc32, .. } = &mut scratch.lut;
         idx.clear();
-        idx.resize(rows * c_total, 0);
+        idx.resize(rows * lut.cb.c, 0);
         simd::encode_simd(lut, input, rows, scores, idx);
-        let q = self.q.as_slice();
-        acc32.resize(m, 0);
-        for i in 0..rows {
-            acc32.fill(0);
-            for c in 0..c_total {
-                let kk = idx[i * c_total + c] as usize;
-                let base = (c * k + kk) * m;
-                let row = &q[base..base + m];
-                // multiplier-less lookup-add: i32 += i8 widening only
-                for (a, &qv) in acc32.iter_mut().zip(row) {
-                    *a += qv as i32;
-                }
-            }
-            let dst = &mut out[i * m..(i + 1) * m];
-            for (o, &a) in dst.iter_mut().zip(acc32.iter()) {
-                *o = a as f32 * self.scale;
-            }
-        }
-        if let Some(b) = &lut.bias {
-            add_bias_rows(out, b);
+        self.accumulate(idx, rows, acc32, out);
+    }
+
+    fn table_bytes_touched(&self, rows: usize) -> usize {
+        rows * self.lut.cb.c * self.lut.m
+    }
+
+    fn forward_profiled(
+        &self,
+        input: &[f32],
+        rows: usize,
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) -> KernelPhases {
+        let lut = &self.lut;
+        assert_eq!(input.len(), rows * lut.input_dim(), "lut-i8 input size");
+        let out = &mut out[..rows * lut.m];
+        let LutScratch { idx, scores, acc32, .. } = &mut scratch.lut;
+        idx.clear();
+        idx.resize(rows * lut.cb.c, 0);
+        let t0 = Instant::now();
+        simd::encode_simd(lut, input, rows, scores, idx);
+        let t1 = Instant::now();
+        self.accumulate(idx, rows, acc32, out);
+        KernelPhases {
+            encode_ns: (t1 - t0).as_nanos() as u64,
+            lookup_ns: t1.elapsed().as_nanos() as u64,
         }
     }
 }
@@ -400,6 +523,36 @@ impl DecLutKernel {
         let sum_scales: f32 = self.dec.scales.iter().sum();
         sum_scales + self.lut.cb.c as f32 * self.lut.common_scale() + 1e-4
     }
+
+    /// §5.2 half: shared base copy + nibble residual accumulation, bias
+    /// last (shared by the plain and profiled forwards).
+    fn accumulate(&self, idx: &[u16], rows: usize, out: &mut [f32]) {
+        let lut = &self.lut;
+        let (c_total, k, m) = (lut.cb.c, lut.cb.k, lut.m);
+        let dec = &self.dec;
+        let row_bytes = dec.row_bytes();
+        let resid = dec.resid();
+        for i in 0..rows {
+            let dst = &mut out[i * m..(i + 1) * m];
+            // shared base first (the folded rank-one component), then
+            // one small residual row per codebook
+            dst.copy_from_slice(&dec.base_total);
+            for c in 0..c_total {
+                let kk = idx[i * c_total + c] as usize;
+                let base = (c * k + kk) * row_bytes;
+                let row = &resid[base..base + row_bytes];
+                let s = dec.scales[c];
+                for j in 0..m {
+                    let byte = row[j / 2];
+                    let nib = if j & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+                    dst[j] += (nib as i32 - 8) as f32 * s;
+                }
+            }
+        }
+        if let Some(b) = &lut.bias {
+            add_bias_rows(out, b);
+        }
+    }
 }
 
 impl LinearKernel for DecLutKernel {
@@ -437,35 +590,41 @@ impl LinearKernel for DecLutKernel {
 
     fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
         let lut = &self.lut;
-        let (c_total, k, m) = (lut.cb.c, lut.cb.k, lut.m);
         assert_eq!(input.len(), rows * lut.input_dim(), "lut-dec input size");
-        let out = &mut out[..rows * m];
+        let out = &mut out[..rows * lut.m];
         let LutScratch { idx, scores, .. } = &mut scratch.lut;
         idx.clear();
-        idx.resize(rows * c_total, 0);
+        idx.resize(rows * lut.cb.c, 0);
         simd::encode_simd(lut, input, rows, scores, idx);
-        let dec = &self.dec;
-        let row_bytes = dec.row_bytes();
-        let resid = dec.resid();
-        for i in 0..rows {
-            let dst = &mut out[i * m..(i + 1) * m];
-            // shared base first (the folded rank-one component), then
-            // one small residual row per codebook
-            dst.copy_from_slice(&dec.base_total);
-            for c in 0..c_total {
-                let kk = idx[i * c_total + c] as usize;
-                let base = (c * k + kk) * row_bytes;
-                let row = &resid[base..base + row_bytes];
-                let s = dec.scales[c];
-                for j in 0..m {
-                    let byte = row[j / 2];
-                    let nib = if j & 1 == 0 { byte & 0x0F } else { byte >> 4 };
-                    dst[j] += (nib as i32 - 8) as f32 * s;
-                }
-            }
-        }
-        if let Some(b) = &lut.bias {
-            add_bias_rows(out, b);
+        self.accumulate(idx, rows, out);
+    }
+
+    fn table_bytes_touched(&self, rows: usize) -> usize {
+        // f32 base vector once per row + one packed residual row per
+        // codebook
+        rows * (4 * self.lut.m + self.lut.cb.c * self.dec.row_bytes())
+    }
+
+    fn forward_profiled(
+        &self,
+        input: &[f32],
+        rows: usize,
+        scratch: &mut Scratch,
+        out: &mut [f32],
+    ) -> KernelPhases {
+        let lut = &self.lut;
+        assert_eq!(input.len(), rows * lut.input_dim(), "lut-dec input size");
+        let out = &mut out[..rows * lut.m];
+        let LutScratch { idx, scores, .. } = &mut scratch.lut;
+        idx.clear();
+        idx.resize(rows * lut.cb.c, 0);
+        let t0 = Instant::now();
+        simd::encode_simd(lut, input, rows, scores, idx);
+        let t1 = Instant::now();
+        self.accumulate(idx, rows, out);
+        KernelPhases {
+            encode_ns: (t1 - t0).as_nanos() as u64,
+            lookup_ns: t1.elapsed().as_nanos() as u64,
         }
     }
 }
@@ -625,5 +784,36 @@ mod tests {
         let mut o2b = vec![7.0f32; 3 * 11];
         k2_ref.forward_into(&a2, 3, &mut fresh, &mut o2b);
         assert_eq!(o2, o2b, "scratch reuse must not change results");
+    }
+
+    #[test]
+    fn profiled_forward_is_bitwise_and_attributes_tables() {
+        let (n, m) = (10, 6);
+        let (a, lut) = lut_fixture(11, n, 3, 4, 8, m);
+        let kernels: Vec<Box<dyn LinearKernel>> = vec![
+            Box::new(LutKernel::new(lut.clone(), LutOpts::deployed())),
+            Box::new(SimdLutKernel::new(lut.clone(), LutOpts::deployed())),
+            Box::new(LutI8Kernel::new(lut.clone())),
+            Box::new(DecLutKernel::new(lut.clone())),
+        ];
+        for k in &kernels {
+            let (mut s1, mut s2) = (Scratch::default(), Scratch::default());
+            let mut o1 = vec![3.0f32; n * m];
+            let mut o2 = vec![-3.0f32; n * m];
+            k.forward_into(&a, n, &mut s1, &mut o1);
+            let _ph = k.forward_profiled(&a, n, &mut s2, &mut o2);
+            assert_eq!(o1, o2, "{}: profiled forward must be bitwise", k.name());
+            assert!(k.table_bytes_touched(n) > 0, "{} touches tables", k.name());
+            assert_eq!(k.table_bytes_touched(0), 0, "{}", k.name());
+        }
+        // deployed "lut" reads the common-scale i8 table: C*M bytes/row
+        assert_eq!(kernels[0].table_bytes_touched(n), n * 3 * m);
+        // kernels without a phase split report zeros via the default
+        let dense = DenseKernel::new(vec![0.0; 12], None, 3);
+        let mut s = Scratch::default();
+        let mut o = vec![0.0f32; 2 * 3];
+        let ph = dense.forward_profiled(&[0.0; 8], 2, &mut s, &mut o);
+        assert_eq!((ph.encode_ns, ph.lookup_ns), (0, 0));
+        assert_eq!(dense.table_bytes_touched(2), 0);
     }
 }

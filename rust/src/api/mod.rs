@@ -45,7 +45,11 @@
 //! * [`Session`] / [`SessionBuilder`] ([`session`]) — compiles a
 //!   [`crate::nn::graph::Graph`] into a step plan with every scratch
 //!   arena sized once at build time; `session.run(&input, &mut output)`
-//!   is zero-clone and, at steady state, zero-allocation.
+//!   is zero-clone and, at steady state, zero-allocation. Built with
+//!   [`SessionBuilder::profile`]`(true)` it also accumulates a
+//!   per-layer [`SessionProfile`] (wall time, encode vs
+//!   lookup-accumulate split, table bytes touched) at zero cost to
+//!   unprofiled sessions.
 //! * [`Engine`] ([`engine`]) — `run_batch`/`max_batch`/`describe` over
 //!   whole batches; [`NativeEngine`] wraps a session, [`PjrtEngine`]
 //!   wraps an AOT-compiled XLA executable. The coordinator stack is
@@ -119,7 +123,8 @@ pub mod session;
 
 pub use engine::{Engine, NativeEngine, PjrtEngine};
 pub use kernel::{
-    DecLutKernel, DenseKernel, LinearKernel, LutI8Kernel, LutKernel, Scratch, SimdLutKernel,
+    DecLutKernel, DenseKernel, KernelPhases, LinearKernel, LutI8Kernel, LutKernel, Scratch,
+    SimdLutKernel,
 };
 pub use registry::{KernelBuildCtx, KernelFactory, KernelRegistry};
-pub use session::{LayerMemory, Session, SessionBuilder};
+pub use session::{LayerMemory, LayerProfile, Session, SessionBuilder, SessionProfile};

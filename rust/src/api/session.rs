@@ -18,16 +18,18 @@
 //! loops) in the same order.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::kernel::{LinearKernel, Scratch};
+use super::kernel::{KernelPhases, LinearKernel, Scratch};
 use super::registry::{KernelBuildCtx, KernelRegistry};
 use crate::lut::LutOpts;
 use crate::nn::graph::{Graph, LayerParams, Op};
 use crate::nn::ops;
 use crate::tensor::im2col::{im2col_into, same_out_size};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 /// One lowered instruction of the compiled plan.
 enum Step {
@@ -56,6 +58,90 @@ struct PerItem {
     slots: BTreeMap<usize, usize>,
 }
 
+/// One linear layer's accumulated profile rows (see [`SessionProfile`]).
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub layer: String,
+    /// registry tag of the kernel executing the layer
+    pub kernel: &'static str,
+    /// index of the layer's step in the compiled plan
+    pub step: usize,
+    /// profiled `run` calls that executed this layer
+    pub calls: u64,
+    /// total input rows processed across those calls
+    pub rows: u64,
+    /// wall time inside the layer's step (im2col + kernel forward)
+    pub wall_ns: u64,
+    /// closest-centroid encode time (§5.1; 0 where the kernel reports
+    /// no phase split)
+    pub encode_ns: u64,
+    /// table read/accumulate time (§5.2; 0 without a phase split)
+    pub lookup_ns: u64,
+    /// table bytes attributed via
+    /// [`LinearKernel::table_bytes_touched`]
+    pub table_bytes_touched: u64,
+}
+
+/// Accumulated per-layer profile of a session built with
+/// [`SessionBuilder::profile`]`(true)`.
+///
+/// Zero overhead when off: the default session holds no
+/// `SessionProfile` allocation and `Session::run` takes no timestamps —
+/// the hot loop is byte-for-byte the unprofiled path.
+#[derive(Debug, Clone, Default)]
+pub struct SessionProfile {
+    /// one row per linear step, in plan order
+    pub layers: Vec<LayerProfile>,
+    /// time in non-linear steps (norms, pools, residual plumbing); for
+    /// BERT reference-path sessions, the whole forward
+    pub other_ns: u64,
+    /// total wall time across profiled runs (timed around the full
+    /// `run` body, so it dominates the per-step sums)
+    pub total_ns: u64,
+    /// profiled `run` calls
+    pub runs: u64,
+}
+
+impl SessionProfile {
+    /// Wall nanoseconds across all linear layers.
+    pub fn linear_wall_ns(&self) -> u64 {
+        self.layers.iter().map(|l| l.wall_ns).sum()
+    }
+
+    /// Nanoseconds attributed to steps (linear + other); always
+    /// `<= total_ns` since step windows are sub-intervals of the run.
+    pub fn accounted_ns(&self) -> u64 {
+        self.linear_wall_ns() + self.other_ns
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("layer", Json::str(l.layer.clone())),
+                    ("kernel", Json::str(l.kernel)),
+                    ("step", Json::num(l.step as f64)),
+                    ("calls", Json::num(l.calls as f64)),
+                    ("rows", Json::num(l.rows as f64)),
+                    ("wall_ns", Json::num(l.wall_ns as f64)),
+                    ("encode_ns", Json::num(l.encode_ns as f64)),
+                    ("lookup_ns", Json::num(l.lookup_ns as f64)),
+                    ("table_bytes_touched", Json::num(l.table_bytes_touched as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("runs", Json::num(self.runs as f64)),
+            ("total_ns", Json::num(self.total_ns as f64)),
+            ("other_ns", Json::num(self.other_ns as f64)),
+            ("linear_wall_ns", Json::num(self.linear_wall_ns() as f64)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+}
+
 /// Builder for [`Session`]: configure opts / registry / batch capacity,
 /// then `build()` to validate the graph and preallocate arenas.
 pub struct SessionBuilder<'g> {
@@ -65,6 +151,7 @@ pub struct SessionBuilder<'g> {
     max_batch: usize,
     overrides: BTreeMap<String, String>,
     auto: Option<crate::cost::AutoPickPolicy>,
+    profile: bool,
 }
 
 impl<'g> SessionBuilder<'g> {
@@ -76,6 +163,7 @@ impl<'g> SessionBuilder<'g> {
             max_batch: graph.input_shape.first().copied().unwrap_or(1).max(1),
             overrides: BTreeMap::new(),
             auto: None,
+            profile: false,
         }
     }
 
@@ -119,6 +207,16 @@ impl<'g> SessionBuilder<'g> {
         self
     }
 
+    /// Record per-layer wall time, the encode vs lookup-accumulate split
+    /// and table-bytes attribution on every [`Session::run`], surfaced
+    /// via [`Session::profile_report`]. Off by default: an unprofiled
+    /// session allocates no [`SessionProfile`] and takes no timestamps
+    /// in the hot loop.
+    pub fn profile(mut self, on: bool) -> Self {
+        self.profile = on;
+        self
+    }
+
     pub fn build(self) -> Result<Session> {
         let g = self.graph;
         if g.bert.is_some() {
@@ -138,6 +236,9 @@ impl<'g> SessionBuilder<'g> {
                 cap_batch: self.max_batch,
                 param_bytes: g.param_bytes(),
                 opts: self.opts,
+                // No lowered linear steps: the whole forward lands in
+                // `other_ns` when profiling is on.
+                profile: self.profile.then(|| Box::new(SessionProfile::default())),
                 bert: Some(g.clone()),
             });
         }
@@ -357,6 +458,31 @@ impl<'g> SessionBuilder<'g> {
             .iter()
             .map(|(&slot, &sz)| (slot, empty_buf(n * sz)))
             .collect();
+        let profile = self.profile.then(|| {
+            let layers = steps
+                .iter()
+                .enumerate()
+                .filter_map(|(si, s)| {
+                    let (name, kernel) = match s {
+                        Step::Conv { name, kernel, .. } => (name, kernel),
+                        Step::Linear { name, kernel } => (name, kernel),
+                        _ => return None,
+                    };
+                    Some(LayerProfile {
+                        layer: name.clone(),
+                        kernel: kernel.name(),
+                        step: si,
+                        calls: 0,
+                        rows: 0,
+                        wall_ns: 0,
+                        encode_ns: 0,
+                        lookup_ns: 0,
+                        table_bytes_touched: 0,
+                    })
+                })
+                .collect();
+            Box::new(SessionProfile { layers, ..SessionProfile::default() })
+        });
         Ok(Session {
             name: g.name.clone(),
             item_shape,
@@ -369,6 +495,7 @@ impl<'g> SessionBuilder<'g> {
             cap_batch: n,
             param_bytes,
             opts: self.opts,
+            profile,
             bert: None,
         })
     }
@@ -439,6 +566,9 @@ pub struct Session {
     cap_batch: usize,
     param_bytes: usize,
     opts: LutOpts,
+    /// `Some` only when built with [`SessionBuilder::profile`]; boxed so
+    /// the common unprofiled session stays pointer-thin.
+    profile: Option<Box<SessionProfile>>,
     bert: Option<Graph>,
 }
 
@@ -512,6 +642,12 @@ impl Session {
             .collect()
     }
 
+    /// The accumulated per-layer profile, when the session was built
+    /// with [`SessionBuilder::profile`]`(true)`; `None` otherwise.
+    pub fn profile_report(&self) -> Option<&SessionProfile> {
+        self.profile.as_deref()
+    }
+
     /// One-line human description (engine listings, logs).
     pub fn describe(&self) -> String {
         if self.bert.is_some() {
@@ -574,8 +710,15 @@ impl Session {
     /// allocation-free.
     pub fn run(&mut self, x: &Tensor, out: &mut Tensor) -> Result<()> {
         if let Some(g) = &self.bert {
+            let t0 = self.profile.is_some().then(Instant::now);
             let y = crate::nn::bert::run_bert(g, x, self.opts);
             write_out(out, &y.shape, &y.data);
+            if let (Some(t0), Some(p)) = (t0, self.profile.as_deref_mut()) {
+                let dt = t0.elapsed().as_nanos() as u64;
+                p.other_ns += dt;
+                p.total_ns += dt;
+                p.runs += 1;
+            }
             return Ok(());
         }
         ensure!(
@@ -588,8 +731,18 @@ impl Session {
         ensure!(n > 0, "empty batch");
         self.ensure_capacity(n);
 
+        let profiling = self.profile.is_some();
+        let t_run = profiling.then(Instant::now);
+        // Cursor into `profile.layers`, advanced on every linear step
+        // (layers were collected from the plan in the same order).
+        let mut li = 0usize;
         let mut cur = Cur::In;
         for si in 0..self.steps.len() {
+            let t_step = profiling.then(Instant::now);
+            // (rows, phases, table bytes) captured inside the linear
+            // arms; attributed after the match so the `steps` borrow
+            // is released first.
+            let mut lin: Option<(u64, KernelPhases, u64)> = None;
             match &self.steps[si] {
                 Step::Conv { kernel, k, stride, .. } => {
                     let (src, dst, di) = src_dst(x, &mut self.bufs, cur);
@@ -600,12 +753,22 @@ impl Session {
                     self.patches.resize(rows * d, 0.0);
                     im2col_into(src, *k, *stride, &mut self.patches[..rows * d]);
                     dst.data.resize(rows * m, 0.0);
-                    kernel.forward_into(
-                        &self.patches[..rows * d],
-                        rows,
-                        &mut self.scratch,
-                        &mut dst.data,
-                    );
+                    if profiling {
+                        let ph = kernel.forward_profiled(
+                            &self.patches[..rows * d],
+                            rows,
+                            &mut self.scratch,
+                            &mut dst.data,
+                        );
+                        lin = Some((rows as u64, ph, kernel.table_bytes_touched(rows) as u64));
+                    } else {
+                        kernel.forward_into(
+                            &self.patches[..rows * d],
+                            rows,
+                            &mut self.scratch,
+                            &mut dst.data,
+                        );
+                    }
                     set_shape(dst, &[nb, ho, wo, m]);
                     cur = Cur::Buf(di);
                 }
@@ -614,7 +777,17 @@ impl Session {
                     let rows = src.shape[0];
                     let m = kernel.out_dim();
                     dst.data.resize(rows * m, 0.0);
-                    kernel.forward_into(&src.data, rows, &mut self.scratch, &mut dst.data);
+                    if profiling {
+                        let ph = kernel.forward_profiled(
+                            &src.data,
+                            rows,
+                            &mut self.scratch,
+                            &mut dst.data,
+                        );
+                        lin = Some((rows as u64, ph, kernel.table_bytes_touched(rows) as u64));
+                    } else {
+                        kernel.forward_into(&src.data, rows, &mut self.scratch, &mut dst.data);
+                    }
                     set_shape(dst, &[rows, m]);
                     cur = Cur::Buf(di);
                 }
@@ -704,6 +877,23 @@ impl Session {
                     }
                 }
             }
+            if let Some(t0) = t_step {
+                let dt = t0.elapsed().as_nanos() as u64;
+                let p = self.profile.as_deref_mut().expect("profiling implies profile");
+                match lin {
+                    Some((rows, ph, bytes)) => {
+                        let l = &mut p.layers[li];
+                        li += 1;
+                        l.calls += 1;
+                        l.rows += rows;
+                        l.wall_ns += dt;
+                        l.encode_ns += ph.encode_ns;
+                        l.lookup_ns += ph.lookup_ns;
+                        l.table_bytes_touched += bytes;
+                    }
+                    None => p.other_ns += dt,
+                }
+            }
         }
 
         let final_t: &Tensor = match cur {
@@ -711,6 +901,10 @@ impl Session {
             Cur::Buf(i) => &self.bufs[i],
         };
         write_out(out, &final_t.shape, &final_t.data);
+        if let (Some(t0), Some(p)) = (t_run, self.profile.as_deref_mut()) {
+            p.total_ns += t0.elapsed().as_nanos() as u64;
+            p.runs += 1;
+        }
         Ok(())
     }
 
@@ -1135,6 +1329,55 @@ mod tests {
         let mut sess = SessionBuilder::new(&dense).build().unwrap();
         let bad = Tensor::zeros(vec![1, 4, 4, 3]);
         assert!(sess.run_alloc(&bad).is_err());
+    }
+
+    #[test]
+    fn profiling_is_opt_in_and_bitwise_free() {
+        let (_, lut, x) = lut_cnn(11);
+        // default: no SessionProfile is allocated at all
+        let mut plain = SessionBuilder::new(&lut).max_batch(4).build().unwrap();
+        assert!(plain.profile_report().is_none());
+        let want = plain.run_alloc(&x).unwrap();
+
+        let mut prof = SessionBuilder::new(&lut).profile(true).max_batch(4).build().unwrap();
+        let runs = 3u64;
+        let mut got = Tensor::zeros(vec![0]);
+        for _ in 0..runs {
+            prof.run(&x, &mut got).unwrap();
+        }
+        assert_eq!(got.shape, want.shape);
+        assert_eq!(got.data, want.data, "profiling must not change output bytes");
+
+        let p = prof.profile_report().unwrap();
+        assert_eq!(p.runs, runs);
+        assert!(p.total_ns > 0);
+        assert!(p.accounted_ns() <= p.total_ns, "step time exceeds run time");
+        // one profile row per linear step, aligned with kernel_report
+        let kr = prof.kernel_report();
+        assert_eq!(p.layers.len(), kr.len());
+        assert!(!p.layers.is_empty());
+        for (l, (name, tag, _)) in p.layers.iter().zip(&kr) {
+            assert_eq!(&l.layer, name);
+            assert_eq!(l.kernel, *tag);
+            assert_eq!(l.calls, runs);
+            assert!(l.rows > 0);
+            assert!(
+                l.encode_ns + l.lookup_ns <= l.wall_ns,
+                "phase split {}+{} exceeds step wall {} for '{}'",
+                l.encode_ns,
+                l.lookup_ns,
+                l.wall_ns,
+                l.layer
+            );
+            if l.kernel == "dense" {
+                assert_eq!(l.table_bytes_touched, 0, "dense '{}' has no tables", l.layer);
+            } else {
+                assert!(l.table_bytes_touched > 0, "lut '{}' touched no table bytes", l.layer);
+            }
+        }
+        let j = crate::util::json::to_string(&p.to_json());
+        assert!(j.contains("\"layers\":["), "{j}");
+        assert!(j.contains("\"runs\":3"), "{j}");
     }
 
     #[test]

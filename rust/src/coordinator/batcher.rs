@@ -34,6 +34,7 @@ use anyhow::{anyhow, Result};
 
 use super::metrics::Metrics;
 use super::{Engine, ModelEntry};
+use crate::obs::{SpanConfig, SpanOutcome, SpanRecord, SpanRing};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{PushError, WorkQueue};
 
@@ -47,6 +48,12 @@ pub struct BatcherConfig {
     /// Injector queue capacity (`submit` blocks beyond it, `try_submit`
     /// sheds).
     pub queue_cap: usize,
+    /// Stage-span recording: `Some` attaches a [`SpanRing`] to the
+    /// batcher and every request's queue → batch-form → execute → reply
+    /// timeline is offered to it, tagged with the executing replica and
+    /// the real (unpadded) batch size. `None` (the default) takes no
+    /// timestamps beyond the existing metrics.
+    pub spans: Option<SpanConfig>,
 }
 
 impl Default for BatcherConfig {
@@ -55,6 +62,7 @@ impl Default for BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             queue_cap: 256,
+            spans: None,
         }
     }
 }
@@ -72,6 +80,7 @@ struct Request {
 pub struct Batcher {
     queue: Arc<WorkQueue<Request>>,
     pub metrics: Arc<Metrics>,
+    spans: Option<Arc<SpanRing>>,
     item_len: usize,
     workers: Vec<thread::JoinHandle<()>>,
 }
@@ -80,20 +89,29 @@ impl Batcher {
     pub fn spawn(entry: Arc<ModelEntry>, cfg: BatcherConfig) -> Batcher {
         let queue = Arc::new(WorkQueue::bounded(cfg.queue_cap));
         let metrics = Arc::new(Metrics::new());
+        let spans = cfg.spans.map(|c| Arc::new(SpanRing::new(c)));
         let item_len = entry.item_len();
         let workers = (0..entry.pool.len())
             .map(|i| {
                 let entry2 = Arc::clone(&entry);
                 let queue2 = Arc::clone(&queue);
                 let metrics2 = Arc::clone(&metrics);
+                let spans2 = spans.clone();
                 let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
                 thread::Builder::new()
                     .name(format!("batcher-{}-{i}", entry.name))
-                    .spawn(move || worker_loop(entry2, i, max_batch, max_wait, queue2, metrics2))
+                    .spawn(move || {
+                        worker_loop(entry2, i, max_batch, max_wait, queue2, metrics2, spans2)
+                    })
                     .expect("spawn batcher worker")
             })
             .collect();
-        Batcher { queue, metrics, item_len, workers }
+        Batcher { queue, metrics, spans, item_len, workers }
+    }
+
+    /// The stage-span ring, when the config enabled span recording.
+    pub fn spans(&self) -> Option<&Arc<SpanRing>> {
+        self.spans.as_ref()
     }
 
     /// Blocking submit (applies backpressure when the queue is full).
@@ -157,6 +175,9 @@ impl Batcher {
             Ok(()) => Ok(reply_rx),
             Err(PushError::Full(_)) => {
                 self.metrics.record_shed();
+                if let Some(ring) = &self.spans {
+                    ring.record(SpanRecord::unexecuted(SpanOutcome::ShedQueueFull));
+                }
                 Err(anyhow!("queue full (shed)"))
             }
             Err(PushError::Closed(_)) => Err(anyhow!("batcher shut down")),
@@ -178,11 +199,21 @@ impl Drop for Batcher {
 /// Admit `r` into `batch` unless its queue-age deadline already passed
 /// (SLO shedding at dequeue: the client gets a prompt error instead of
 /// a stale result). Returns whether the request was admitted.
-fn admit(r: Request, metrics: &Metrics, batch: &mut Vec<Request>) -> bool {
+fn admit(
+    r: Request,
+    metrics: &Metrics,
+    spans: Option<&SpanRing>,
+    batch: &mut Vec<Request>,
+) -> bool {
     if let Some(d) = r.deadline {
         let waited = r.enqueued.elapsed();
         if waited > d {
             metrics.record_shed();
+            if let Some(ring) = spans {
+                let mut s = SpanRecord::unexecuted(SpanOutcome::ShedDeadline);
+                s.queue_us = waited.as_micros() as u64;
+                ring.record(s);
+            }
             let _ = r
                 .reply
                 .send(Err(anyhow!("deadline exceeded after {waited:?} in queue (shed)")));
@@ -193,6 +224,29 @@ fn admit(r: Request, metrics: &Metrics, batch: &mut Vec<Request>) -> bool {
     true
 }
 
+/// An executed request's span from its worker-side timeline (`reply_us`
+/// is measured at call time, so build the span right after replying).
+fn stage_span(
+    enqueued: Instant,
+    popped: Instant,
+    exec_start: Instant,
+    exec_end: Instant,
+    replica: usize,
+    batch_size: usize,
+    outcome: SpanOutcome,
+) -> SpanRecord {
+    SpanRecord {
+        seq: 0,
+        queue_us: popped.duration_since(enqueued).as_micros() as u64,
+        batch_form_us: exec_start.duration_since(popped).as_micros() as u64,
+        execute_us: exec_end.duration_since(exec_start).as_micros() as u64,
+        reply_us: exec_end.elapsed().as_micros() as u64,
+        replica: replica as i64,
+        batch_size: batch_size as u64,
+        outcome,
+    }
+}
+
 fn worker_loop(
     entry: Arc<ModelEntry>,
     replica: usize,
@@ -200,7 +254,9 @@ fn worker_loop(
     max_wait: Duration,
     queue: Arc<WorkQueue<Request>>,
     metrics: Arc<Metrics>,
+    spans: Option<Arc<SpanRing>>,
 ) {
+    let spans = spans.as_deref();
     let engine = entry.pool.replica(replica);
     let item_len = entry.item_len();
     // Per-replica clamp: this worker batches against its OWN replica's
@@ -213,6 +269,9 @@ fn worker_loop(
     let mut xbatch = Tensor::zeros(vec![0]);
     let mut out = Tensor::zeros(vec![0]);
     let mut batch: Vec<Request> = Vec::with_capacity(hard_cap);
+    // Pop timestamp per admitted request (parallel to `batch`); only
+    // filled when spans are on.
+    let mut popped: Vec<Instant> = Vec::with_capacity(hard_cap);
     loop {
         // Block for the first request of this worker's next batch. All
         // workers pop from the one shared queue, so an idle replica
@@ -220,14 +279,23 @@ fn worker_loop(
         // closed and the backlog is fully drained.
         let Some(first) = queue.pop() else { return };
         batch.clear();
-        if !admit(first, &metrics, &mut batch) {
+        popped.clear();
+        let t_pop = spans.map(|_| Instant::now());
+        if !admit(first, &metrics, spans, &mut batch) {
             continue; // expired in the queue; no batch window started
+        }
+        if let Some(t) = t_pop {
+            popped.push(t);
         }
         let window = Instant::now() + max_wait;
         while batch.len() < hard_cap {
             match queue.pop_until(window) {
                 Some(r) => {
-                    admit(r, &metrics, &mut batch);
+                    let t_pop = spans.map(|_| Instant::now());
+                    let admitted = admit(r, &metrics, spans, &mut batch);
+                    if let (true, Some(t)) = (admitted, t_pop) {
+                        popped.push(t);
+                    }
                 }
                 None => break, // window elapsed (or closed + drained)
             }
@@ -251,7 +319,9 @@ fn worker_loop(
         xbatch.shape.clear();
         xbatch.shape.push(exec_rows);
         xbatch.shape.extend_from_slice(&entry.item_shape);
+        let exec_start = spans.map(|_| Instant::now());
         let result = engine.run_batch(&xbatch, &mut out);
+        let exec_end = spans.map(|_| Instant::now());
         metrics.replicas_busy.fetch_sub(1, Ordering::Relaxed);
 
         match result {
@@ -261,13 +331,35 @@ fn worker_loop(
                     let slice = out.data[i * m..(i + 1) * m].to_vec();
                     metrics.record_request(r.enqueued.elapsed().as_secs_f64());
                     let _ = r.reply.send(Ok(slice));
+                    if let Some(ring) = spans {
+                        ring.record(stage_span(
+                            r.enqueued,
+                            popped[i],
+                            exec_start.expect("spans on"),
+                            exec_end.expect("spans on"),
+                            replica,
+                            real,
+                            SpanOutcome::Ok,
+                        ));
+                    }
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                for r in batch.drain(..) {
+                for (i, r) in batch.drain(..).enumerate() {
                     metrics.record_error();
                     let _ = r.reply.send(Err(anyhow!("{msg}")));
+                    if let Some(ring) = spans {
+                        ring.record(stage_span(
+                            r.enqueued,
+                            popped[i],
+                            exec_start.expect("spans on"),
+                            exec_end.expect("spans on"),
+                            replica,
+                            real,
+                            SpanOutcome::Error,
+                        ));
+                    }
                 }
             }
         }
@@ -313,6 +405,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_millis(20),
                 queue_cap: 64,
+                spans: None,
             },
         ));
         let mut handles = Vec::new();
@@ -357,6 +450,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 queue_cap: 3,
+                spans: None,
             },
         );
         // A is picked up by the worker, which then blocks in the gate.
@@ -411,6 +505,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 queue_cap: 8,
+                spans: None,
             },
         );
         let rx_a = b.try_submit(vec![1.0, 1.0]).unwrap();
@@ -458,6 +553,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 queue_cap: 16,
+                spans: None,
             },
         );
         let in_a = vec![1.0, 2.0, 3.0, 4.0];
@@ -517,6 +613,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
                 queue_cap: 64,
+                spans: None,
             },
         ));
         let mut rng = Prng::new(17);
@@ -554,6 +651,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_micros(200),
                 queue_cap: 64,
+                spans: None,
             },
         ));
         let clients = 8usize;
@@ -580,5 +678,72 @@ mod tests {
         assert_eq!(snap.errors, 0);
         assert_eq!(snap.shed, 0);
         assert_eq!(snap.replicas_busy, 0, "all replicas idle after the load");
+    }
+
+    /// Stage spans: the deterministic shed scenario, with spans on,
+    /// yields one span per terminal outcome — Ok for every served
+    /// request (tagged with the executing replica and the real batch
+    /// size), plus the capacity shed and the deadline shed.
+    #[test]
+    fn spans_record_outcomes_replicas_and_batch_sizes() {
+        use crate::obs::SpanConfig;
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (_stub, engine) =
+            StubEngine::elastic().with_entered(entered_tx).with_gate(gate_rx).shared();
+        let entry = Arc::new(ModelEntry::from_engine("spans", engine, vec![4]));
+        let b = Batcher::spawn(
+            entry,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 3,
+                spans: Some(SpanConfig::default()),
+            },
+        );
+        // A alone in batch 1, gated inside the engine; then B, E (ages
+        // out), C queue behind it and a 5th submit hits the full queue.
+        let rx_a = b.try_submit(vec![1.0; 4]).unwrap();
+        entered_rx.recv().unwrap();
+        let rx_b = b.try_submit(vec![1.0; 4]).unwrap();
+        let rx_e = b
+            .try_submit_deadline(vec![2.0; 4], Duration::from_nanos(1))
+            .unwrap();
+        let rx_c = b.try_submit(vec![3.0; 4]).unwrap();
+        assert!(b.try_submit(vec![4.0; 4]).is_err(), "queue full");
+        drop(gate_tx);
+        assert!(rx_a.recv().unwrap().is_ok());
+        assert!(rx_b.recv().unwrap().is_ok());
+        assert!(rx_c.recv().unwrap().is_ok());
+        assert!(rx_e.recv().unwrap().is_err());
+
+        let ring = b.spans().expect("config enabled spans");
+        assert_eq!(ring.offered(), 5);
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 5);
+        let count = |o: SpanOutcome| spans.iter().filter(|s| s.outcome == o).count();
+        assert_eq!(count(SpanOutcome::Ok), 3);
+        assert_eq!(count(SpanOutcome::ShedQueueFull), 1);
+        assert_eq!(count(SpanOutcome::ShedDeadline), 1);
+        for s in &spans {
+            match s.outcome {
+                SpanOutcome::Ok => {
+                    assert_eq!(s.replica, 0, "single replica executed everything");
+                    assert!(s.batch_size >= 1);
+                }
+                _ => {
+                    assert_eq!(s.replica, -1, "shed spans never executed");
+                    assert_eq!(s.batch_size, 0);
+                }
+            }
+        }
+        // A executed alone; B and C formed one batch behind the gate.
+        let mut ok_sizes: Vec<u64> = spans
+            .iter()
+            .filter(|s| s.outcome == SpanOutcome::Ok)
+            .map(|s| s.batch_size)
+            .collect();
+        ok_sizes.sort_unstable();
+        assert_eq!(ok_sizes, vec![1, 2, 2]);
     }
 }

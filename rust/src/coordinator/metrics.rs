@@ -1,14 +1,24 @@
-//! Serving metrics: counters + latency reservoir, all lock-cheap.
+//! Serving metrics: lock-cheap counters plus log-bucketed histograms.
+//!
+//! Latency and batch-size distributions are [`Hist`]s — fixed-memory
+//! HDR-style histograms with atomic buckets — so quantiles stay honest
+//! over unbounded runs. (The previous implementation kept the first
+//! 65,536 samples in a `Mutex<Vec<f64>>` and silently dropped the rest,
+//! biasing p50/p95/p99 toward startup behaviour.)
+//!
+//! `Metrics` also captures its own construction instant, so throughput
+//! in `metrics` responses is computed against the true serve uptime
+//! rather than a caller-supplied wall time; `report(wall_s)` remains
+//! for callers that measure their own window.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::prom::PromWriter;
+use crate::util::hist::{Hist, HistSnapshot};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
-const RESERVOIR: usize = 65_536;
-
-#[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
@@ -24,32 +34,45 @@ pub struct Metrics {
     pub queue_depth: AtomicU64,
     /// gauge: replicas currently executing a batch
     pub replicas_busy: AtomicU64,
-    /// per-request end-to-end latency samples (seconds)
-    latencies: Mutex<Vec<f64>>,
-    /// per-batch sizes
-    batch_sizes: Mutex<Vec<f64>>,
+    /// per-request end-to-end latency histogram (seconds)
+    latencies: Hist,
+    /// per-batch size histogram
+    batch_sizes: Hist,
+    /// monotonic construction instant — the serve-start for throughput
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics::default()
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            replicas_busy: AtomicU64::new(0),
+            latencies: Hist::new(),
+            batch_sizes: Hist::new(),
+            started: Instant::now(),
+        }
     }
 
     pub fn record_request(&self, latency_s: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.latencies.lock().unwrap();
-        if g.len() < RESERVOIR {
-            g.push(latency_s);
-        }
+        self.latencies.record(latency_s);
     }
 
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.items.fetch_add(size as u64, Ordering::Relaxed);
-        let mut g = self.batch_sizes.lock().unwrap();
-        if g.len() < RESERVOIR {
-            g.push(size as f64);
-        }
+        self.batch_sizes.record(size as f64);
     }
 
     pub fn record_error(&self) {
@@ -60,25 +83,22 @@ impl Metrics {
         self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Seconds since this `Metrics` was constructed (monotonic).
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
     pub fn latency_summary(&self) -> Option<Summary> {
-        let g = self.latencies.lock().unwrap();
-        if g.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&g))
-        }
+        self.latencies.snapshot().summary()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        let g = self.batch_sizes.lock().unwrap();
-        if g.is_empty() {
-            0.0
-        } else {
-            g.iter().sum::<f64>() / g.len() as f64
-        }
+        self.batch_sizes.snapshot().mean().unwrap_or(0.0)
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let latency_hist = self.latencies.snapshot();
+        let batch_hist = self.batch_sizes.snapshot();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
@@ -87,8 +107,11 @@ impl Metrics {
             shed: self.shed.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             replicas_busy: self.replicas_busy.load(Ordering::Relaxed),
-            latency: self.latency_summary(),
-            mean_batch: self.mean_batch_size(),
+            latency: latency_hist.summary(),
+            mean_batch: batch_hist.mean().unwrap_or(0.0),
+            latency_hist,
+            batch_hist,
+            uptime_s: self.uptime_s(),
         }
     }
 }
@@ -104,6 +127,12 @@ pub struct MetricsSnapshot {
     pub replicas_busy: u64,
     pub latency: Option<Summary>,
     pub mean_batch: f64,
+    /// full latency histogram (seconds) for quantile export
+    pub latency_hist: HistSnapshot,
+    /// full batch-size histogram for quantile export
+    pub batch_hist: HistSnapshot,
+    /// seconds since the `Metrics` was constructed, captured at snapshot
+    pub uptime_s: f64,
 }
 
 impl MetricsSnapshot {
@@ -131,6 +160,107 @@ impl MetricsSnapshot {
         }
         s
     }
+
+    /// `report` against the snapshot's own uptime — immune to callers
+    /// passing the wrong wall window.
+    pub fn report_uptime(&self) -> String {
+        self.report(self.uptime_s)
+    }
+
+    /// Structured numeric JSON: every counter/gauge as a number plus
+    /// `latency`/`batch` quantile objects; keeps the `report` string
+    /// alongside for compatibility.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("items", Json::num(self.items as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("replicas_busy", Json::num(self.replicas_busy as f64)),
+            ("mean_batch", Json::num(self.mean_batch)),
+            ("uptime_s", Json::num(self.uptime_s)),
+            ("throughput_rps", Json::num(self.requests as f64 / self.uptime_s.max(1e-9))),
+            ("latency", hist_json(&self.latency_hist)),
+            ("batch", hist_json(&self.batch_hist)),
+            ("report", Json::str(self.report_uptime())),
+        ])
+    }
+}
+
+fn hist_json(h: &HistSnapshot) -> Json {
+    if h.is_empty() {
+        return Json::Null;
+    }
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("mean", Json::num(h.mean().unwrap_or(0.0))),
+        ("min", Json::num(h.min)),
+        ("max", Json::num(h.max)),
+        ("p50", Json::num(h.quantile(0.50).unwrap_or(0.0))),
+        ("p90", Json::num(h.quantile(0.90).unwrap_or(0.0))),
+        ("p95", Json::num(h.quantile(0.95).unwrap_or(0.0))),
+        ("p99", Json::num(h.quantile(0.99).unwrap_or(0.0))),
+    ])
+}
+
+/// Render all per-model snapshots plus registry residency as prometheus
+/// text exposition (`obs::prom` grammar; counters suffixed `_total`).
+pub fn prometheus_text(
+    models: &[(String, MetricsSnapshot)],
+    residency: &ResidencySnapshot,
+) -> String {
+    let mut w = PromWriter::new();
+    for (model, s) in models {
+        let l = [("model", model.as_str())];
+        w.metric("lutnn_requests_total", "counter", "Requests replied");
+        w.sample("lutnn_requests_total", &l, s.requests as f64);
+        w.metric("lutnn_batches_total", "counter", "Batches executed");
+        w.sample("lutnn_batches_total", &l, s.batches as f64);
+        w.metric("lutnn_items_total", "counter", "Items across all batches");
+        w.sample("lutnn_items_total", &l, s.items as f64);
+        w.metric("lutnn_errors_total", "counter", "Engine errors replied");
+        w.sample("lutnn_errors_total", &l, s.errors as f64);
+        w.metric("lutnn_shed_total", "counter", "Requests shed before execution");
+        w.sample("lutnn_shed_total", &l, s.shed as f64);
+        w.metric("lutnn_queue_depth", "gauge", "Requests waiting in the injector queue");
+        w.sample("lutnn_queue_depth", &l, s.queue_depth as f64);
+        w.metric("lutnn_replicas_busy", "gauge", "Replicas currently executing a batch");
+        w.sample("lutnn_replicas_busy", &l, s.replicas_busy as f64);
+        summary_metric(
+            &mut w,
+            "lutnn_request_latency_seconds",
+            "End-to-end request latency",
+            model,
+            &s.latency_hist,
+        );
+        summary_metric(&mut w, "lutnn_batch_size", "Executed batch sizes", model, &s.batch_hist);
+    }
+    w.metric("lutnn_resident_bytes", "gauge", "Bytes of warmed lazy models resident");
+    w.sample("lutnn_resident_bytes", &[], residency.resident_bytes as f64);
+    w.metric("lutnn_resident_models", "gauge", "Warmed lazy models resident");
+    w.sample("lutnn_resident_models", &[], residency.resident_models as f64);
+    w.metric("lutnn_page_ins_total", "counter", "Cold to warm page-ins");
+    w.sample("lutnn_page_ins_total", &[], residency.page_ins as f64);
+    w.metric("lutnn_evictions_total", "counter", "Warm to cold evictions");
+    w.sample("lutnn_evictions_total", &[], residency.evictions as f64);
+    if let Some(b) = residency.budget_bytes {
+        w.metric("lutnn_resident_budget_bytes", "gauge", "Residency byte budget");
+        w.sample("lutnn_resident_budget_bytes", &[], b as f64);
+    }
+    w.finish()
+}
+
+fn summary_metric(w: &mut PromWriter, name: &str, help: &str, model: &str, h: &HistSnapshot) {
+    w.metric(name, "summary", help);
+    for (q, tag) in [(0.50, "0.5"), (0.90, "0.9"), (0.95, "0.95"), (0.99, "0.99")] {
+        if let Some(v) = h.quantile(q) {
+            w.sample(name, &[("model", model), ("quantile", tag)], v);
+        }
+    }
+    w.sample(&format!("{name}_sum"), &[("model", model)], h.sum);
+    w.sample(&format!("{name}_count"), &[("model", model)], h.count as f64);
 }
 
 /// Registry-level residency gauges and counters for the cold-model
@@ -186,6 +316,21 @@ impl ResidencySnapshot {
             self.budget_bytes.map(|b| b.to_string()).unwrap_or_else(|| "none".into()),
         )
     }
+
+    /// Structured numeric JSON with the `report` string alongside.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("resident_bytes", Json::num(self.resident_bytes as f64)),
+            ("resident_models", Json::num(self.resident_models as f64)),
+            ("page_ins", Json::num(self.page_ins as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            (
+                "budget_bytes",
+                self.budget_bytes.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+            ),
+            ("report", Json::str(self.report())),
+        ])
+    }
 }
 
 /// RAII latency timer: records on drop.
@@ -209,6 +354,8 @@ impl Drop for LatencyGuard<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::{Arc, Barrier};
 
     #[test]
     fn counters_and_summary() {
@@ -236,6 +383,151 @@ mod tests {
         assert!(report.contains("shed=1"), "{report}");
     }
 
+    /// Regression for the old first-65,536-samples truncation: a tail
+    /// distribution arriving *after* that many samples must still move
+    /// the reported quantiles.
+    #[test]
+    fn quantiles_track_a_shifted_tail_past_the_old_reservoir() {
+        const OLD_RESERVOIR: usize = 65_536;
+        let m = Metrics::new();
+        for _ in 0..70_000 {
+            m.record_request(0.001);
+        }
+        for _ in 0..30_000 {
+            m.record_request(0.1);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100_000);
+        assert_eq!(s.latency_hist.count, 100_000);
+        assert!(s.latency_hist.total() as usize > OLD_RESERVOIR);
+        let l = s.latency.unwrap();
+        assert_eq!(l.n, 100_000);
+        // 30% of mass is at 0.1 — p50 stays low, p95/p99 must be in the
+        // tail (the truncating reservoir reported ~0.001 for all three).
+        assert!(l.p50 < 0.01, "p50={}", l.p50);
+        assert!(l.p95 > 0.05, "p95={}", l.p95);
+        assert!(l.p99 > 0.05, "p99={}", l.p99);
+    }
+
+    /// Gate-sequenced concurrency: recorders pause at a barrier so the
+    /// mid-run snapshot sees an exact, quiescent state; a free-running
+    /// snapshotter meanwhile checks invariants under contention.
+    /// Latency values are dyadic (0.25/0.5) so f64 sums are exact in
+    /// any interleaving.
+    #[test]
+    fn concurrent_recording_is_exact_and_untorn() {
+        const THREADS: usize = 4;
+        const PER: usize = 2_000;
+        let m = Arc::new(Metrics::new());
+        let barrier = Arc::new(Barrier::new(THREADS + 1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let snapper = {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut prev = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let s = m.snapshot();
+                    assert!(s.requests >= prev, "requests went backwards");
+                    prev = s.requests;
+                    if let Some(l) = &s.latency {
+                        assert!(l.p50 <= l.p95 && l.p95 <= l.p99, "quantile order");
+                    }
+                }
+            })
+        };
+        let workers: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                let b = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    for _ in 0..PER {
+                        m.record_request(0.25);
+                        m.record_batch(2);
+                    }
+                    b.wait();
+                    b.wait();
+                    for _ in 0..PER {
+                        m.record_request(0.5);
+                    }
+                })
+            })
+            .collect();
+        barrier.wait(); // phase 1 complete on all threads
+        let s = m.snapshot();
+        let phase1 = (THREADS * PER) as u64;
+        assert_eq!(s.requests, phase1);
+        assert_eq!(s.batches, phase1);
+        assert_eq!(s.items, 2 * phase1);
+        assert_eq!(s.latency_hist.count, phase1);
+        assert_eq!(s.latency_hist.total(), phase1);
+        assert_eq!(s.latency_hist.sum, phase1 as f64 * 0.25);
+        assert_eq!(s.latency_hist.min, 0.25);
+        assert_eq!(s.latency_hist.max, 0.25);
+        barrier.wait(); // release phase 2
+        for w in workers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        snapper.join().unwrap();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2 * phase1);
+        assert_eq!(s.latency_hist.count, 2 * phase1);
+        assert_eq!(s.latency_hist.sum, phase1 as f64 * 0.25 + phase1 as f64 * 0.5);
+        assert_eq!(s.latency_hist.min, 0.25);
+        assert_eq!(s.latency_hist.max, 0.5);
+    }
+
+    #[test]
+    fn uptime_throughput_and_both_report_paths() {
+        let m = Metrics::new();
+        m.record_request(0.01);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let s = m.snapshot();
+        assert!(s.uptime_s > 0.0);
+        assert_eq!(s.report_uptime(), s.report(s.uptime_s));
+        // Caller-supplied wall path still works and differs.
+        assert!(s.report(1.0).contains("throughput=1.0/s"));
+    }
+
+    #[test]
+    fn metrics_snapshot_json_is_numeric() {
+        let m = Metrics::new();
+        m.record_request(0.004);
+        m.record_request(0.008);
+        m.record_batch(2);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("requests").and_then(|v| v.as_f64()), Some(2.0));
+        let lat = j.get("latency").expect("latency object");
+        let p50 = lat.get("p50").and_then(|v| v.as_f64()).unwrap();
+        let p99 = lat.get("p99").and_then(|v| v.as_f64()).unwrap();
+        assert!(p50 > 0.0 && p50 <= p99);
+        assert!(j.get("report").and_then(|v| v.as_str()).unwrap().contains("requests=2"));
+        // Empty histograms serialize as null, not a bogus object.
+        let empty = Metrics::new().snapshot().to_json();
+        assert!(matches!(empty.get("latency"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn prometheus_text_round_trips() {
+        let m = Metrics::new();
+        m.record_request(0.002);
+        m.record_batch(1);
+        let models = vec![("demo".to_string(), m.snapshot())];
+        let res = ResidencyStats::default().snapshot(Some(1 << 20));
+        let text = prometheus_text(&models, &res);
+        let samples = crate::obs::prom::parse(&text).expect("own exposition must parse");
+        let req = samples
+            .iter()
+            .find(|s| s.name == "lutnn_requests_total" && s.label("model") == Some("demo"))
+            .expect("requests sample");
+        assert_eq!(req.value, 1.0);
+        assert!(samples.iter().any(|s| s.name == "lutnn_resident_budget_bytes"));
+        // Both summaries (request latency + batch size) expose p99.
+        let p99s = samples.iter().filter(|s| s.label("quantile") == Some("0.99"));
+        assert_eq!(p99s.count(), 2, "latency and batch-size summaries expose p99");
+    }
+
     #[test]
     fn residency_snapshot_and_report() {
         let s = ResidencyStats::default();
@@ -254,6 +546,10 @@ mod tests {
         assert!(report.contains("evictions=3"), "{report}");
         assert!(report.contains("budget_bytes=8192"), "{report}");
         assert!(s.snapshot(None).report().contains("budget_bytes=none"));
+        let j = snap.to_json();
+        assert_eq!(j.get("page_ins").and_then(|v| v.as_f64()), Some(5.0));
+        assert_eq!(j.get("budget_bytes").and_then(|v| v.as_f64()), Some(8192.0));
+        assert!(matches!(s.snapshot(None).to_json().get("budget_bytes"), Some(Json::Null)));
     }
 
     #[test]

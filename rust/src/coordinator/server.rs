@@ -3,7 +3,14 @@
 //! Request : {"model": "name", "input": [f32...]}
 //! Response: {"ok": true, "output": [f32...], "latency_us": n}
 //!         | {"ok": false, "error": "..."}
-//! Special : {"cmd": "metrics"} | {"cmd": "models"} | {"cmd": "shutdown"}
+//! Special : {"cmd": "metrics"} — structured numeric JSON (per-model
+//!           counters + histogram quantiles + residency gauges, each
+//!           with the legacy report string alongside); add
+//!           {"format": "prometheus"} for text exposition in "text"
+//!         | {"cmd": "spans"} — per-model stage-span ring contents
+//!           (requires [`ServerConfig::profile`] or an explicit
+//!           [`BatcherConfig::spans`])
+//!         | {"cmd": "models"} | {"cmd": "shutdown"}
 //!
 //! One handler thread per connection (from a bounded pool); inference is
 //! funneled through each model's dynamic batcher, so concurrent clients
@@ -19,6 +26,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::{prometheus_text, MetricsSnapshot};
 use super::{ModelEntry, Registry, ReplicateOutcome};
 use crate::util::json::{self, Json};
 use crate::util::threadpool::ThreadPool;
@@ -36,6 +44,10 @@ pub struct ServerConfig {
     /// least-recently-used warmed models back to their on-disk bundles
     /// first. `None` = never evict.
     pub resident_budget_bytes: Option<usize>,
+    /// Convenience switch for `lutnn serve --profile`: turns on
+    /// stage-span recording with default [`crate::obs::SpanConfig`]
+    /// settings unless `batcher.spans` was already set explicitly.
+    pub profile: bool,
     pub batcher: BatcherConfig,
 }
 
@@ -46,6 +58,7 @@ impl Default for ServerConfig {
             handler_threads: 4,
             replicas: 1,
             resident_budget_bytes: None,
+            profile: false,
             batcher: BatcherConfig::default(),
         }
     }
@@ -60,7 +73,10 @@ pub struct Server {
 
 impl Server {
     /// Start serving `registry` on `cfg.addr` (port 0 = ephemeral).
-    pub fn start(mut registry: Registry, cfg: ServerConfig) -> Result<Server> {
+    pub fn start(mut registry: Registry, mut cfg: ServerConfig) -> Result<Server> {
+        if cfg.profile && cfg.batcher.spans.is_none() {
+            cfg.batcher.spans = Some(Default::default());
+        }
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -278,17 +294,50 @@ fn handle_line(line: &str, shared: &Shared, stop: &AtomicBool) -> Json {
                 ),
             ]),
             "metrics" => {
-                let wall = shared.start.elapsed().as_secs_f64();
-                let mut obj = vec![("ok", Json::Bool(true))];
-                let mut per_model = std::collections::BTreeMap::new();
                 let batchers = shared.batchers.read().expect("batcher map poisoned");
-                for (name, mb) in batchers.iter() {
-                    per_model.insert(name.clone(), Json::str(mb.batcher.snapshot().report(wall)));
-                }
+                let snaps: Vec<(String, MetricsSnapshot)> = batchers
+                    .iter()
+                    .map(|(name, mb)| (name.clone(), mb.batcher.snapshot()))
+                    .collect();
                 drop(batchers);
-                obj.push(("metrics", Json::Obj(per_model)));
-                obj.push(("residency", Json::str(shared.registry.residency().report())));
-                Json::obj(obj)
+                let residency = shared.registry.residency();
+                if req.get("format").and_then(|f| f.as_str()) == Some("prometheus") {
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("format", Json::str("prometheus")),
+                        ("text", Json::str(prometheus_text(&snaps, &residency))),
+                    ])
+                } else {
+                    let mut per_model = std::collections::BTreeMap::new();
+                    for (name, snap) in &snaps {
+                        per_model.insert(name.clone(), snap.to_json());
+                    }
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("uptime_s", Json::num(shared.start.elapsed().as_secs_f64())),
+                        ("metrics", Json::Obj(per_model)),
+                        ("residency", residency.to_json()),
+                    ])
+                }
+            }
+            "spans" => {
+                let batchers = shared.batchers.read().expect("batcher map poisoned");
+                let mut per_model = std::collections::BTreeMap::new();
+                for (name, mb) in batchers.iter() {
+                    let Some(ring) = mb.batcher.spans() else { continue };
+                    per_model.insert(
+                        name.clone(),
+                        Json::obj(vec![
+                            ("offered", Json::num(ring.offered() as f64)),
+                            ("sampled", Json::num(ring.sampled() as f64)),
+                            (
+                                "spans",
+                                Json::Arr(ring.snapshot().iter().map(|s| s.to_json()).collect()),
+                            ),
+                        ]),
+                    );
+                }
+                Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Obj(per_model))])
             }
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);
@@ -554,17 +603,21 @@ mod tests {
         let mut c = Client::connect(&server.addr).unwrap();
 
         let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
-        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
-        assert!(residency.contains("page_ins=0"), "startup paged a model in: {residency}");
+        let page_ins = |resp: &Json| {
+            resp.get("residency").unwrap().get("page_ins").unwrap().as_usize().unwrap()
+        };
+        assert_eq!(page_ins(&resp), 0, "startup paged a model in: {resp:?}");
         let models = c.call(&Json::obj(vec![("cmd", Json::str("models"))])).unwrap();
         assert_eq!(models.get("cold").unwrap().as_arr().unwrap().len(), 1);
 
         let out = c.infer("srv_cold", &vec![0.25; 192]).unwrap();
         assert_eq!(out.len(), 5);
         let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
-        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
-        assert!(residency.contains("page_ins=1"), "{residency}");
-        assert!(residency.contains("resident_models=1"), "{residency}");
+        assert_eq!(page_ins(&resp), 1);
+        let residency = resp.get("residency").unwrap();
+        assert_eq!(residency.get("resident_models").unwrap().as_usize().unwrap(), 1);
+        // the legacy report string rides along in the structured object
+        assert!(residency.get("report").unwrap().as_str().unwrap().contains("page_ins=1"));
         let models = c.call(&Json::obj(vec![("cmd", Json::str("models"))])).unwrap();
         assert!(models.get("cold").unwrap().as_arr().unwrap().is_empty());
     }
@@ -594,13 +647,73 @@ mod tests {
         let first = c.infer("srv_a", &input).unwrap();
         let _ = c.infer("srv_b", &input).unwrap(); // evicts srv_a
         let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
-        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
-        assert!(residency.contains("evictions=1"), "{residency}");
+        let residency = resp.get("residency").unwrap();
+        assert_eq!(residency.get("evictions").unwrap().as_usize().unwrap(), 1, "{resp:?}");
 
         let again = c.infer("srv_a", &input).unwrap();
         assert_eq!(first, again, "re-paged model must answer identically");
         let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
-        let residency = resp.get("residency").unwrap().as_str().unwrap().to_string();
-        assert!(residency.contains("page_ins=3"), "{residency}");
+        let residency = resp.get("residency").unwrap();
+        assert_eq!(residency.get("page_ins").unwrap().as_usize().unwrap(), 3, "{resp:?}");
+    }
+
+    /// The metrics command returns structured numbers (counters exact,
+    /// histogram quantiles ordered, residency gauges as fields) with the
+    /// legacy report string alongside; the prometheus exposition parses
+    /// through the CI parser with monotone counters; and `--profile`
+    /// wiring surfaces stage spans over the spans command.
+    #[test]
+    fn metrics_are_structured_and_prometheus_parse_round_trips() {
+        use crate::obs::prom;
+
+        let server = Server::start(
+            test_registry(),
+            ServerConfig { addr: "127.0.0.1:0".into(), profile: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+        let input = vec![0.25; 192];
+        for _ in 0..6 {
+            c.infer("m", &input).unwrap();
+        }
+
+        let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+        let m = resp.get("metrics").unwrap().get("m").unwrap();
+        assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(m.get("errors").unwrap().as_usize().unwrap(), 0);
+        let lat = m.get("latency").unwrap();
+        let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+        let p95 = lat.get("p95").unwrap().as_f64().unwrap();
+        let p99 = lat.get("p99").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0, "latency histogram recorded nothing");
+        assert!(p50 <= p95 && p95 <= p99, "quantile order: {p50} {p95} {p99}");
+        assert!(m.get("report").unwrap().as_str().unwrap().contains("requests=6"));
+        assert!(resp.get("residency").unwrap().get("resident_bytes").is_some());
+
+        // prometheus exposition round-trips through the CI parser
+        let req =
+            Json::obj(vec![("cmd", Json::str("metrics")), ("format", Json::str("prometheus"))]);
+        let reqs_total = |resp: &Json| {
+            let text = resp.get("text").unwrap().as_str().unwrap();
+            let samples = prom::parse(text).expect("server exposition must parse");
+            samples
+                .iter()
+                .find(|s| s.name == "lutnn_requests_total" && s.label("model") == Some("m"))
+                .expect("requests sample")
+                .value
+        };
+        let first = reqs_total(&c.call(&req).unwrap());
+        assert_eq!(first, 6.0);
+        c.infer("m", &input).unwrap();
+        let second = reqs_total(&c.call(&req).unwrap());
+        assert!(second > first, "counter must be monotone: {first} -> {second}");
+
+        // profile=true wired a span ring into the model's batcher
+        let spans = c.call(&Json::obj(vec![("cmd", Json::str("spans"))])).unwrap();
+        let ms = spans.get("models").unwrap().get("m").unwrap();
+        assert!(ms.get("offered").unwrap().as_usize().unwrap() >= 7);
+        let arr = ms.get("spans").unwrap().as_arr().unwrap();
+        assert!(!arr.is_empty());
+        assert!(arr.iter().all(|s| s.get("outcome").unwrap().as_str().unwrap() == "ok"));
     }
 }

@@ -21,6 +21,8 @@
 //!   crate and executes the AOT-compiled JAX graphs
 //! * [`coordinator`] — serving: router, dynamic batcher, worker pool,
 //!   metrics, workload traces
+//! * [`obs`] — observability substrates: stage-span ring buffer and
+//!   prometheus text exposition (writer + CI parser)
 //! * [`util`] — dependency-free substrates (json, prng, stats, threads,
 //!   cli, bench harness, property testing)
 
@@ -31,6 +33,7 @@ pub mod lut;
 pub mod model_fmt;
 pub mod model_import;
 pub mod nn;
+pub mod obs;
 pub mod pq;
 pub mod runtime;
 pub mod tensor;

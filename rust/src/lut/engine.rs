@@ -432,6 +432,33 @@ impl LutLinear {
 
     // ------------------------------------------------------------------
 
+    /// Stage-1-only scratch forward: encode `a` into `s.idx` (sized
+    /// here) using `s.slab`/`s.scores`. Op order is identical to the
+    /// encode half of [`LutLinear::forward_scratch`] — the profiling
+    /// path times the phases separately without changing behaviour.
+    pub fn encode_scratch(&self, a: &[f32], n: usize, opts: LutOpts, s: &mut LutScratch) {
+        let d = self.input_dim();
+        assert_eq!(a.len(), n * d);
+        let LutScratch { idx, slab, scores, .. } = s;
+        idx.clear();
+        idx.resize(n * self.cb.c, 0);
+        if opts.centroid_stationary {
+            self.encode_centroid_stationary(a, n, opts, slab, scores, idx);
+        } else {
+            self.encode_naive(a, n, opts, idx);
+        }
+    }
+
+    /// Stage-2-only scratch forward: zero `out[..n*M]` and accumulate
+    /// from the indices [`LutLinear::encode_scratch`] left in `s.idx`
+    /// (bias applied last).
+    pub fn accumulate_scratch(&self, n: usize, opts: LutOpts, s: &mut LutScratch, out: &mut [f32]) {
+        let LutScratch { idx, acc16, acc32, .. } = s;
+        let out = &mut out[..n * self.m];
+        out.fill(0.0);
+        self.accumulate_buffered(idx, n, opts, acc16, acc32, out);
+    }
+
     /// Full LUT-AMM forward: `out[n, M] = approx(a @ B) + bias`, with
     /// every working buffer taken from `s` (resized within capacity —
     /// the allocation-free path `api::LutKernel` drives).
@@ -443,19 +470,8 @@ impl LutLinear {
         s: &mut LutScratch,
         out: &mut [f32],
     ) {
-        let d = self.input_dim();
-        assert_eq!(a.len(), n * d);
-        let LutScratch { idx, slab, scores, acc16, acc32 } = s;
-        idx.clear();
-        idx.resize(n * self.cb.c, 0);
-        let out = &mut out[..n * self.m];
-        out.fill(0.0);
-        if opts.centroid_stationary {
-            self.encode_centroid_stationary(a, n, opts, slab, scores, idx);
-        } else {
-            self.encode_naive(a, n, opts, idx);
-        }
-        self.accumulate_buffered(idx, n, opts, acc16, acc32, out);
+        self.encode_scratch(a, n, opts, s);
+        self.accumulate_scratch(n, opts, s, out);
     }
 
     /// Full LUT-AMM forward: `out[n, M] = approx(a @ B) + bias`.

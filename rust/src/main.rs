@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   serve     start the TCP inference server on .lutnn bundles
 //!   infer     one-shot inference from a bundle (native or pjrt engine)
+//!   profile   per-layer kernel profile of a bundle: wall time, encode
+//!             vs lookup-accumulate split, table bytes touched
 //!   cost      print the paper's Table 2 (analytic GFLOPs / model size)
 //!   import    parse an NNEF-style text graph into a dense .lutnn
 //!             bundle (deterministic weights; see models/zoo/)
@@ -16,6 +18,7 @@
 //! Examples:
 //!   lutnn serve --models artifacts --port 7070
 //!   lutnn infer artifacts/resnet_tiny_lut.lutnn --batch 4
+//!   lutnn profile artifacts/resnet_tiny_lut.lutnn --batch 4 --iters 20
 //!   lutnn cost --k 16
 //!   lutnn import models/zoo/cnn_tiny.nnef cnn_tiny.lutnn
 //!   lutnn compile models/zoo/cnn_tiny.nnef compiled.lutnn --epochs 10
@@ -43,6 +46,7 @@ fn main() {
     let result = match args.command.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("infer") => cmd_infer(&args),
+        Some("profile") => cmd_profile(&args),
         Some("cost") => cmd_cost(&args),
         Some("import") => cmd_import(&args),
         Some("convert") => cmd_convert(&args),
@@ -63,16 +67,18 @@ fn print_help() {
     println!(
         "lutnn — DNN inference by centroid learning and table lookup (MobiCom'23)
 
-USAGE: lutnn <serve|infer|cost|convert|compile|inspect> [flags]
+USAGE: lutnn <serve|infer|profile|cost|convert|compile|inspect> [flags]
 
   serve    --models <dir|bundle,...> [--port 7070] [--threads 4]
            [--replicas 1] [--max-batch 8] [--max-wait-ms 2]
-           [--lazy] [--resident-budget <bytes>]
+           [--lazy] [--resident-budget <bytes>] [--profile]
            (--lazy registers bundles cold — header only — and pages each
             in on first request; --resident-budget bounds the bytes of
             paged-in lazy models, evicting LRU models back to disk, and
-            implies --lazy)
+            implies --lazy; --profile records per-request stage spans,
+            queryable over TCP with {{\"cmd\":\"spans\"}})
   infer    <bundle.lutnn> [--batch 1] [--iters 1] [--naive]
+  profile  <bundle.lutnn> [--batch 1] [--iters 10] [--json]
   cost     [--k 16] [--v <override>]
   import   <graph.nnef> <out.lutnn>
   convert  <dense.lutnn> <out.lutnn> [--centroids 16] [--bits 8]
@@ -164,7 +170,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 args.get_usize("max-wait-ms", 2) as u64,
             ),
             queue_cap: args.get_usize("queue-cap", 256),
+            spans: None,
         },
+        profile: args.has("profile"),
     };
     let server = Server::start(registry, cfg)?;
     println!("lutnn serving on {} — send {{\"cmd\":\"shutdown\"}} to stop", server.addr);
@@ -220,6 +228,89 @@ fn cmd_infer(args: &Args) -> Result<()> {
     );
     println!("logits[0] = {:?}", &out.data[..out.cols().min(16)]);
     println!("argmax = {:?}", out.argmax_rows());
+    Ok(())
+}
+
+fn pct(part: u64, total: u64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    part as f64 * 100.0 / total as f64
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: lutnn profile <bundle.lutnn>"))?;
+    let graph = model_fmt::load_bundle(path)?;
+    let batch = args.get_usize("batch", 1);
+    let iters = args.get_usize("iters", 10).max(1);
+    let x = sample_input(&graph, batch, 0);
+    let mut session = SessionBuilder::new(&graph)
+        .opts(LutOpts::deployed())
+        .max_batch(batch)
+        .profile(true)
+        .build()
+        .context("compiling session")?;
+    let mut out = Tensor::zeros(vec![0]);
+    for _ in 0..iters {
+        session.run(&x, &mut out)?;
+    }
+    let p = session
+        .profile_report()
+        .ok_or_else(|| anyhow!("profiling was not enabled"))?;
+    let total_ms = p.total_ns as f64 / 1e6;
+    println!(
+        "model={} batch={batch} iters={} total={total_ms:.3}ms ({:.3}ms/run)",
+        graph.name,
+        p.runs,
+        total_ms / p.runs.max(1) as f64
+    );
+    let mut t = Table::new(&[
+        "layer",
+        "kernel",
+        "rows",
+        "wall ms",
+        "encode ms",
+        "lookup ms",
+        "table KB",
+        "% total",
+    ]);
+    for l in &p.layers {
+        t.row(&[
+            l.layer.clone(),
+            l.kernel.into(),
+            format!("{}", l.rows),
+            format!("{:.3}", l.wall_ns as f64 / 1e6),
+            format!("{:.3}", l.encode_ns as f64 / 1e6),
+            format!("{:.3}", l.lookup_ns as f64 / 1e6),
+            format!("{:.1}", l.table_bytes_touched as f64 / 1024.0),
+            format!("{:.1}%", pct(l.wall_ns, p.total_ns)),
+        ]);
+    }
+    t.row(&[
+        "(other)".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.3}", p.other_ns as f64 / 1e6),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}%", pct(p.other_ns, p.total_ns)),
+    ]);
+    t.print();
+    // Per-layer walls plus untimed glue must account for the session
+    // total; the gap is the timing overhead itself.
+    let accounted = p.accounted_ns();
+    println!(
+        "accounted {:.3}ms of {total_ms:.3}ms ({:.1}%)",
+        accounted as f64 / 1e6,
+        pct(accounted, p.total_ns)
+    );
+    if args.has("json") {
+        println!("{}", lutnn::util::json::to_string(&p.to_json()));
+    }
     Ok(())
 }
 

@@ -1,0 +1,275 @@
+//! Observability substrates for the serving stack.
+//!
+//! * [`SpanRing`] — a fixed-capacity ring buffer of per-request stage
+//!   spans (queue → batch-form → execute → reply) with deterministic
+//!   seeded sampling. Recording takes a short mutex hold on the ring
+//!   plus two relaxed counters; the ring never allocates past its
+//!   capacity, so an idle-to-overloaded server keeps the *latest*
+//!   `capacity` spans rather than the first N.
+//! * [`prom`] — a minimal prometheus text-exposition writer and a
+//!   strict line-grammar parser used by the obs-smoke CI job to prove
+//!   the exposition round-trips.
+//!
+//! Spans carry **durations, not timestamps**: tests construct synthetic
+//! records with fixed microsecond values and never read the wall clock,
+//! and the sampling decision is a pure function of `(seed, seq)` so any
+//! run can be replayed.
+
+pub mod prom;
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Terminal state of a request's span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Executed and replied.
+    Ok,
+    /// Rejected at submit: the bounded injector queue was full.
+    ShedQueueFull,
+    /// Dropped at dequeue: its deadline expired while queued.
+    ShedDeadline,
+    /// Engine returned an error; the error was replied.
+    Error,
+}
+
+impl SpanOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanOutcome::Ok => "ok",
+            SpanOutcome::ShedQueueFull => "shed_queue_full",
+            SpanOutcome::ShedDeadline => "shed_deadline",
+            SpanOutcome::Error => "error",
+        }
+    }
+}
+
+/// One request's timeline through the batcher, as stage durations.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Monotonic per-ring sequence number (assigned by [`SpanRing::record`]).
+    pub seq: u64,
+    /// Time from enqueue to being popped by a worker.
+    pub queue_us: u64,
+    /// Time from pop to the batch being formed (window wait + padding).
+    pub batch_form_us: u64,
+    /// Time inside `Engine::run_batch`.
+    pub execute_us: u64,
+    /// Time from execute-end to the reply being sent.
+    pub reply_us: u64,
+    /// Replica id that executed the batch, or `-1` if never executed.
+    pub replica: i64,
+    /// Number of live (admitted) requests in the executed batch.
+    pub batch_size: u64,
+    pub outcome: SpanOutcome,
+}
+
+impl SpanRecord {
+    /// A zeroed shed/error span (no execution happened).
+    pub fn unexecuted(outcome: SpanOutcome) -> SpanRecord {
+        SpanRecord {
+            seq: 0,
+            queue_us: 0,
+            batch_form_us: 0,
+            execute_us: 0,
+            reply_us: 0,
+            replica: -1,
+            batch_size: 0,
+            outcome,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("queue_us", Json::num(self.queue_us as f64)),
+            ("batch_form_us", Json::num(self.batch_form_us as f64)),
+            ("execute_us", Json::num(self.execute_us as f64)),
+            ("reply_us", Json::num(self.reply_us as f64)),
+            ("replica", Json::num(self.replica as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("outcome", Json::str(self.outcome.as_str())),
+        ])
+    }
+}
+
+/// Ring capacity, sampling rate and sampling seed.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanConfig {
+    /// Spans retained (oldest overwritten first). Clamped to >= 1.
+    pub capacity: usize,
+    /// Fraction of offered spans recorded, in `[0, 1]`. `1.0` keeps all.
+    pub sample: f64,
+    /// Seed for the per-sequence sampling decision.
+    pub seed: u64,
+}
+
+impl Default for SpanConfig {
+    fn default() -> Self {
+        SpanConfig { capacity: 256, sample: 1.0, seed: 0 }
+    }
+}
+
+struct RingInner {
+    buf: Vec<SpanRecord>,
+    /// Next write slot; equals `buf.len()` until the ring first fills.
+    next: usize,
+}
+
+/// Fixed-capacity concurrent span recorder with seeded sampling.
+pub struct SpanRing {
+    inner: Mutex<RingInner>,
+    capacity: usize,
+    sample: f64,
+    seed: u64,
+    offered: AtomicU64,
+    sampled: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(cfg: SpanConfig) -> SpanRing {
+        let capacity = cfg.capacity.max(1);
+        SpanRing {
+            inner: Mutex::new(RingInner { buf: Vec::with_capacity(capacity), next: 0 }),
+            capacity,
+            sample: cfg.sample,
+            seed: cfg.seed,
+            offered: AtomicU64::new(0),
+            sampled: AtomicU64::new(0),
+        }
+    }
+
+    /// Offer a span. Assigns `seq`, applies the sampling decision
+    /// (deterministic in `(seed, seq)`), and overwrites the oldest
+    /// retained span once the ring is full.
+    pub fn record(&self, mut span: SpanRecord) {
+        let seq = self.offered.fetch_add(1, Ordering::Relaxed);
+        span.seq = seq;
+        if self.sample < 1.0 {
+            let roll = Prng::new(self.seed ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15)).uniform();
+            if roll >= self.sample {
+                return;
+            }
+        }
+        self.sampled.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().expect("span ring poisoned");
+        let i = g.next;
+        if g.buf.len() < self.capacity {
+            g.buf.push(span);
+        } else {
+            g.buf[i] = span;
+        }
+        g.next = (i + 1) % self.capacity;
+    }
+
+    /// Spans offered to the ring (sampled or not).
+    pub fn offered(&self) -> u64 {
+        self.offered.load(Ordering::Relaxed)
+    }
+
+    /// Spans actually retained at some point (may exceed capacity).
+    pub fn sampled(&self) -> u64 {
+        self.sampled.load(Ordering::Relaxed)
+    }
+
+    /// Retained spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let g = self.inner.lock().expect("span ring poisoned");
+        if g.buf.len() < self.capacity {
+            g.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(g.buf.len());
+            out.extend_from_slice(&g.buf[g.next..]);
+            out.extend_from_slice(&g.buf[..g.next]);
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(queue_us: u64) -> SpanRecord {
+        SpanRecord {
+            seq: 0,
+            queue_us,
+            batch_form_us: 1,
+            execute_us: 2,
+            reply_us: 3,
+            replica: 0,
+            batch_size: 4,
+            outcome: SpanOutcome::Ok,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_latest_capacity_spans_in_order() {
+        let ring = SpanRing::new(SpanConfig { capacity: 4, sample: 1.0, seed: 0 });
+        for i in 0..10 {
+            ring.record(span(i));
+        }
+        assert_eq!(ring.offered(), 10);
+        assert_eq!(ring.sampled(), 10);
+        let snap = ring.snapshot();
+        let seqs: Vec<u64> = snap.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        let queues: Vec<u64> = snap.iter().map(|s| s.queue_us).collect();
+        assert_eq!(queues, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn partial_ring_snapshots_in_insertion_order() {
+        let ring = SpanRing::new(SpanConfig { capacity: 8, sample: 1.0, seed: 0 });
+        for i in 0..3 {
+            ring.record(span(i));
+        }
+        let seqs: Vec<u64> = ring.snapshot().iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_in_seed_and_seq() {
+        let mk = || SpanRing::new(SpanConfig { capacity: 1024, sample: 0.5, seed: 42 });
+        let (a, b) = (mk(), mk());
+        for i in 0..500 {
+            a.record(span(i));
+            b.record(span(i));
+        }
+        assert_eq!(a.sampled(), b.sampled());
+        let sa: Vec<u64> = a.snapshot().iter().map(|s| s.seq).collect();
+        let sb: Vec<u64> = b.snapshot().iter().map(|s| s.seq).collect();
+        assert_eq!(sa, sb);
+        // Roughly half retained; the decision is per-seq, not per-run.
+        assert!(a.sampled() > 150 && a.sampled() < 350, "sampled {}", a.sampled());
+        // A different seed keeps a different subset.
+        let c = SpanRing::new(SpanConfig { capacity: 1024, sample: 0.5, seed: 7 });
+        for i in 0..500 {
+            c.record(span(i));
+        }
+        let sc: Vec<u64> = c.snapshot().iter().map(|s| s.seq).collect();
+        assert_ne!(sa, sc);
+    }
+
+    #[test]
+    fn zero_sampling_retains_nothing_but_counts_offers() {
+        let ring = SpanRing::new(SpanConfig { capacity: 16, sample: 0.0, seed: 0 });
+        for i in 0..20 {
+            ring.record(span(i));
+        }
+        assert_eq!(ring.offered(), 20);
+        assert_eq!(ring.sampled(), 0);
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn span_json_has_all_fields() {
+        let mut s = span(11);
+        s.outcome = SpanOutcome::ShedDeadline;
+        let j = crate::util::json::to_string(&s.to_json());
+        assert!(j.contains("\"queue_us\":11"), "{j}");
+        assert!(j.contains("\"outcome\":\"shed_deadline\""), "{j}");
+    }
+}

@@ -1,0 +1,274 @@
+//! Prometheus text exposition: a tiny writer and a strict parser.
+//!
+//! The writer emits the subset of the exposition format the server
+//! needs: `# HELP` / `# TYPE` comments (once per metric name) and
+//! sample lines `name{label="value",...} value` with label-value
+//! escaping of `\`, `"` and newline. No timestamps.
+//!
+//! The parser accepts exactly that grammar — metric names matching
+//! `[a-zA-Z_:][a-zA-Z0-9_:]*`, label names `[a-zA-Z_][a-zA-Z0-9_]*`,
+//! escaped double-quoted label values, and a finite or `Inf`/`NaN`
+//! float value — and reports the line number of the first violation.
+//! CI uses it to prove the server's exposition round-trips.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+/// One parsed sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// The value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Incremental exposition-text builder.
+pub struct PromWriter {
+    out: String,
+    seen: BTreeSet<String>,
+}
+
+impl Default for PromWriter {
+    fn default() -> Self {
+        PromWriter::new()
+    }
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter { out: String::new(), seen: BTreeSet::new() }
+    }
+
+    /// Emit `# HELP` / `# TYPE` for `name` the first time it is seen.
+    pub fn metric(&mut self, name: &str, mtype: &str, help: &str) {
+        if self.seen.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {mtype}");
+        }
+    }
+
+    /// Emit one sample line.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        let _ = writeln!(self.out, " {value}");
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Parse exposition text into samples; errors carry 1-based line numbers.
+pub fn parse(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_sample(line) {
+            Ok(s) => out.push(s),
+            Err(e) => return Err(format!("line {}: {e}", ln + 1)),
+        }
+    }
+    Ok(out)
+}
+
+fn is_name_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == ':'
+}
+
+fn is_name_char(c: char) -> bool {
+    is_name_start(c) || c.is_ascii_digit()
+}
+
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    if chars.is_empty() || !is_name_start(chars[0]) {
+        return Err(format!("metric name must start with [a-zA-Z_:] in {line:?}"));
+    }
+    while i < chars.len() && is_name_char(chars[i]) {
+        i += 1;
+    }
+    let name: String = chars[..i].iter().collect();
+    let mut labels = Vec::new();
+    if i < chars.len() && chars[i] == '{' {
+        i += 1;
+        loop {
+            while i < chars.len() && chars[i] == ' ' {
+                i += 1;
+            }
+            if i < chars.len() && chars[i] == '}' {
+                i += 1;
+                break;
+            }
+            let start = i;
+            if i >= chars.len() || !(chars[i].is_ascii_alphabetic() || chars[i] == '_') {
+                return Err(format!("label name must start with [a-zA-Z_] in {name}"));
+            }
+            while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let key: String = chars[start..i].iter().collect();
+            if i >= chars.len() || chars[i] != '=' {
+                return Err(format!("expected '=' after label {key:?}"));
+            }
+            i += 1;
+            if i >= chars.len() || chars[i] != '"' {
+                return Err(format!("expected opening '\"' for label {key:?}"));
+            }
+            i += 1;
+            let mut val = String::new();
+            loop {
+                if i >= chars.len() {
+                    return Err(format!("unterminated value for label {key:?}"));
+                }
+                match chars[i] {
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\\' => {
+                        match chars.get(i + 1) {
+                            Some('\\') => val.push('\\'),
+                            Some('"') => val.push('"'),
+                            Some('n') => val.push('\n'),
+                            other => {
+                                return Err(format!("bad escape {other:?} in label {key:?}"))
+                            }
+                        }
+                        i += 2;
+                    }
+                    c => {
+                        val.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            labels.push((key, val));
+            while i < chars.len() && chars[i] == ' ' {
+                i += 1;
+            }
+            match chars.get(i) {
+                Some(',') => i += 1,
+                Some('}') => {
+                    i += 1;
+                    break;
+                }
+                _ => return Err(format!("expected ',' or '}}' in label set of {name}")),
+            }
+        }
+    }
+    let rest: String = chars[i..].iter().collect();
+    let rest = rest.trim();
+    if rest.is_empty() {
+        return Err(format!("missing value for metric {name:?}"));
+    }
+    let value = match rest {
+        "Inf" | "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        _ => rest.parse::<f64>().map_err(|_| format!("bad value {rest:?} for {name:?}"))?,
+    };
+    Ok(Sample { name, labels, value })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_output_round_trips_through_parser() {
+        let mut w = PromWriter::new();
+        w.metric("lutnn_requests_total", "counter", "Requests replied");
+        w.sample("lutnn_requests_total", &[("model", "cnn_tiny")], 42.0);
+        w.sample("lutnn_requests_total", &[("model", "weird\"name\\x")], 1.0);
+        w.metric("lutnn_latency_seconds", "summary", "Request latency");
+        w.sample(
+            "lutnn_latency_seconds",
+            &[("model", "cnn_tiny"), ("quantile", "0.5")],
+            0.00125,
+        );
+        w.sample("lutnn_latency_seconds_count", &[("model", "cnn_tiny")], 42.0);
+        let text = w.finish();
+        let samples = parse(&text).expect("round-trip parse");
+        assert_eq!(samples.len(), 4);
+        assert_eq!(samples[0].name, "lutnn_requests_total");
+        assert_eq!(samples[0].label("model"), Some("cnn_tiny"));
+        assert_eq!(samples[0].value, 42.0);
+        assert_eq!(samples[1].label("model"), Some("weird\"name\\x"));
+        assert_eq!(samples[2].label("quantile"), Some("0.5"));
+        assert_eq!(samples[2].value, 0.00125);
+    }
+
+    #[test]
+    fn help_and_type_emitted_once_per_name() {
+        let mut w = PromWriter::new();
+        w.metric("m_total", "counter", "a counter");
+        w.metric("m_total", "counter", "a counter");
+        w.sample("m_total", &[], 1.0);
+        let text = w.finish();
+        assert_eq!(text.matches("# HELP m_total").count(), 1);
+        assert_eq!(text.matches("# TYPE m_total").count(), 1);
+    }
+
+    #[test]
+    fn parser_rejects_bad_lines_with_line_numbers() {
+        let bad = [
+            "ok_metric 1\n0bad 2",
+            "name{label=\"unterminated} 1",
+            "name{=\"x\"} 1",
+            "name_no_value",
+            "name twelve",
+            "name{l=\"v\" extra} 1",
+        ];
+        for text in bad {
+            let err = parse(text).expect_err(text);
+            assert!(err.starts_with("line "), "{err}");
+        }
+        assert_eq!(parse("ok_metric 1\n0bad 2").unwrap_err().split(':').next(), Some("line 2"));
+    }
+
+    #[test]
+    fn parser_accepts_comments_blanks_and_inf() {
+        let text = "# HELP x y\n\nx{a=\"b\"} +Inf\nx 3e-4\n";
+        let s = parse(text).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s[0].value.is_infinite());
+        assert_eq!(s[1].value, 3e-4);
+    }
+}

@@ -1,0 +1,378 @@
+//! Log-bucketed fixed-memory histograms (HDR-style).
+//!
+//! `Hist` records non-negative `f64` samples into a fixed array of
+//! atomic buckets derived from the IEEE-754 bit pattern: the unbiased
+//! exponent selects an octave and the top [`SUB_BITS`] mantissa bits
+//! split each octave into [`SUB`] linear sub-buckets. Within the
+//! covered exponent window ([`MIN_EXP`] ..= [`MAX_EXP`]) every bucket
+//! spans `2^e / SUB`, so a quantile estimated at the bucket midpoint is
+//! within half a bucket of the exact order statistic:
+//!
+//! ```text
+//! |mid - exact| <= width/2 = 2^e / (2*SUB)
+//! exact >= bucket_lo >= 2^e
+//! => relative error <= 1 / (2*SUB) = REL_ERROR_BOUND
+//! ```
+//!
+//! Recording is lock-free (`fetch_add` on the bucket + CAS loops for
+//! the f64 running sums), histograms merge bucket-wise, and the whole
+//! structure is a fixed ~32 KiB regardless of sample count — unlike a
+//! saturating sample vector, the tail of a long run is never dropped.
+//!
+//! Values outside the window clamp to the edge buckets; negative and
+//! non-finite samples clamp to zero. For latencies in seconds the
+//! window spans ~1 ns .. ~10^10 s, so clamping never occurs in
+//! practice.
+
+use super::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Mantissa bits used per octave (64 linear sub-buckets).
+pub const SUB_BITS: u32 = 6;
+/// Sub-buckets per octave.
+pub const SUB: usize = 1 << SUB_BITS;
+/// Smallest covered unbiased exponent (values below clamp to bucket 0).
+pub const MIN_EXP: i32 = -30;
+/// Largest covered unbiased exponent (values above clamp to the last bucket).
+pub const MAX_EXP: i32 = 33;
+/// Number of octaves in the window.
+pub const OCTAVES: usize = (MAX_EXP - MIN_EXP + 1) as usize;
+/// Total bucket count (`OCTAVES * SUB`).
+pub const BUCKETS: usize = OCTAVES * SUB;
+/// Documented worst-case relative quantile error inside the window.
+pub const REL_ERROR_BOUND: f64 = 1.0 / (2 * SUB) as f64;
+
+/// Bucket index for a sample (clamps negatives/non-finite to 0).
+fn bucket_of(v: f64) -> usize {
+    if !v.is_finite() || v <= 0.0 {
+        return 0;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+    if exp < MIN_EXP {
+        return 0;
+    }
+    if exp > MAX_EXP {
+        return BUCKETS - 1;
+    }
+    let sub = ((bits >> (52 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    (exp - MIN_EXP) as usize * SUB + sub
+}
+
+/// Midpoint of bucket `i` (the quantile estimate for samples landing there).
+fn bucket_mid(i: usize) -> f64 {
+    let exp = MIN_EXP + (i / SUB) as i32;
+    let sub = (i % SUB) as f64;
+    (exp as f64).exp2() * (1.0 + (sub + 0.5) / SUB as f64)
+}
+
+/// CAS-loop update of an `AtomicU64` holding `f64` bits.
+fn atomic_f64_update(cell: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = f(f64::from_bits(cur)).to_bits();
+        match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(prev) => cur = prev,
+        }
+    }
+}
+
+/// Fixed-memory concurrent histogram. All methods take `&self`.
+pub struct Hist {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// f64 bits of the running sum (exact mean, unlike bucketed moments).
+    sum: AtomicU64,
+    /// f64 bits of the running sum of squares.
+    sum_sq: AtomicU64,
+    /// f64 bits of the exact minimum (`+inf` when empty).
+    min: AtomicU64,
+    /// f64 bits of the exact maximum (`-inf` when empty).
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0.0f64.to_bits()),
+            sum_sq: AtomicU64::new(0.0f64.to_bits()),
+            min: AtomicU64::new(f64::INFINITY.to_bits()),
+            max: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    /// Record one sample. Negative or non-finite values clamp to `0.0`.
+    pub fn record(&self, v: f64) {
+        let v = if v.is_finite() && v >= 0.0 { v } else { 0.0 };
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        atomic_f64_update(&self.sum, |s| s + v);
+        atomic_f64_update(&self.sum_sq, |s| s + v * v);
+        atomic_f64_update(&self.min, |m| m.min(v));
+        atomic_f64_update(&self.max, |m| m.max(v));
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram into this one, bucket-wise.
+    pub fn merge(&self, other: &Hist) {
+        let n = other.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return;
+        }
+        for (b, ob) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = ob.load(Ordering::Relaxed);
+            if v != 0 {
+                b.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        let sum = f64::from_bits(other.sum.load(Ordering::Relaxed));
+        let sum_sq = f64::from_bits(other.sum_sq.load(Ordering::Relaxed));
+        let omin = f64::from_bits(other.min.load(Ordering::Relaxed));
+        let omax = f64::from_bits(other.max.load(Ordering::Relaxed));
+        atomic_f64_update(&self.sum, |s| s + sum);
+        atomic_f64_update(&self.sum_sq, |s| s + sum_sq);
+        atomic_f64_update(&self.min, |m| m.min(omin));
+        atomic_f64_update(&self.max, |m| m.max(omax));
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy. Concurrent recorders may leave the copy a few
+    /// samples ahead/behind between fields; quantiles are computed from
+    /// the bucket array itself so ordering invariants always hold.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum.load(Ordering::Relaxed)),
+            sum_sq: f64::from_bits(self.sum_sq.load(Ordering::Relaxed)),
+            min: f64::from_bits(self.min.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Owned copy of a [`Hist`] with quantile/summary accessors.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistSnapshot {
+    /// Total samples according to the bucket array (authoritative for
+    /// quantiles; equals `count` whenever the source was quiescent).
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Exact mean from the running sum (`None` when empty).
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(self.sum / self.count as f64)
+    }
+
+    /// Nearest-rank quantile estimate, `q` in `[0, 1]`. Within the
+    /// exponent window the estimate is within [`REL_ERROR_BOUND`]
+    /// relative error of the exact order statistic.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let n = self.total();
+        if n == 0 {
+            return None;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        let mut idx = self.buckets.len() - 1;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                idx = i;
+                break;
+            }
+        }
+        let mut v = bucket_mid(idx);
+        // Exact min/max can only tighten the estimate; skip when the
+        // copy raced and they are not yet coherent.
+        if self.min <= self.max {
+            v = v.clamp(self.min, self.max);
+        }
+        Some(v)
+    }
+
+    /// Bridge to [`Summary`]: exact n/mean/std/min/max, bucketed
+    /// p50/p95/p99. `None` when empty.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.count == 0 || self.is_empty() {
+            return None;
+        }
+        let n = self.count;
+        let mean = self.sum / n as f64;
+        let var = (self.sum_sq / n as f64 - mean * mean).max(0.0);
+        Some(Summary {
+            n: n as usize,
+            mean,
+            std: var.sqrt(),
+            min: self.min,
+            p50: self.quantile(0.50)?,
+            p95: self.quantile(0.95)?,
+            p99: self.quantile(0.99)?,
+            max: self.max,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let n = sorted.len() as u64;
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        sorted[(rank - 1) as usize]
+    }
+
+    fn assert_bound(values: &mut Vec<f64>, label: &str) {
+        let h = Hist::new();
+        for &v in values.iter() {
+            h.record(v);
+        }
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let snap = h.snapshot();
+        assert_eq!(snap.count, values.len() as u64, "{label}: count");
+        assert_eq!(snap.total(), values.len() as u64, "{label}: bucket total");
+        for &q in &[0.5, 0.9, 0.95, 0.99, 0.999] {
+            let est = snap.quantile(q).unwrap();
+            let exact = exact_quantile(values, q);
+            let rel = (est - exact).abs() / exact;
+            assert!(
+                rel <= REL_ERROR_BOUND + 1e-12,
+                "{label}: q={q} est={est} exact={exact} rel={rel} > {REL_ERROR_BOUND}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_error_bound_across_distributions() {
+        let n = 20_000;
+        let mut rng = Prng::new(0xB0B5);
+        let mut uniform: Vec<f64> = (0..n).map(|_| 1e-3 + rng.uniform()).collect();
+        assert_bound(&mut uniform, "uniform");
+        let mut lognormal: Vec<f64> = (0..n).map(|_| (rng.normal() as f64).exp()).collect();
+        assert_bound(&mut lognormal, "lognormal");
+        let mut bimodal: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.uniform() < 0.7 {
+                    1e-3 * (1.0 + rng.uniform())
+                } else {
+                    10.0 * (1.0 + rng.uniform())
+                }
+            })
+            .collect();
+        assert_bound(&mut bimodal, "bimodal");
+    }
+
+    #[test]
+    fn exact_moments_and_minmax() {
+        let h = Hist::new();
+        for v in [0.01, 0.015, 0.02] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert!((s.mean().unwrap() - 0.015).abs() < 1e-12);
+        assert_eq!(s.min, 0.01);
+        assert_eq!(s.max, 0.02);
+        let sum: Summary = s.summary().unwrap();
+        assert_eq!(sum.n, 3);
+        assert!((sum.mean - 0.015).abs() < 1e-12);
+        assert!(sum.p50 >= sum.min && sum.p50 <= sum.max);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        let mut rng = Prng::new(7);
+        let h = Hist::new();
+        for _ in 0..5_000 {
+            h.record(rng.exponential(2.0));
+        }
+        let s = h.snapshot();
+        let mut prev = 0.0;
+        for i in 1..=100 {
+            let q = i as f64 / 100.0;
+            let v = s.quantile(q).unwrap();
+            assert!(v >= prev, "quantile({q}) = {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let mut rng = Prng::new(42);
+        let a = Hist::new();
+        let b = Hist::new();
+        let whole = Hist::new();
+        for i in 0..4_000 {
+            let v = rng.exponential(1.0) + 1e-6;
+            let half = if i % 2 == 0 { &a } else { &b };
+            half.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        let (sa, sw) = (a.snapshot(), whole.snapshot());
+        assert_eq!(sa.buckets, sw.buckets);
+        assert_eq!(sa.count, sw.count);
+        assert_eq!(sa.min, sw.min);
+        assert_eq!(sa.max, sw.max);
+        assert!((sa.sum - sw.sum).abs() < 1e-9 * sw.sum.abs().max(1.0));
+        // Merging an empty histogram keeps min/max untouched.
+        a.merge(&Hist::new());
+        assert_eq!(a.snapshot().min, sw.min);
+    }
+
+    #[test]
+    fn clamps_out_of_range_samples() {
+        let h = Hist::new();
+        h.record(-5.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(0.0);
+        h.record(1e300); // above the window: last bucket
+        let s = h.snapshot();
+        assert_eq!(s.total(), 5);
+        assert_eq!(s.buckets[0], 4);
+        assert_eq!(s.buckets[BUCKETS - 1], 1);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 1e300);
+    }
+
+    #[test]
+    fn empty_histogram_reports_none() {
+        let s = Hist::new().snapshot();
+        assert!(s.is_empty());
+        assert!(s.quantile(0.5).is_none());
+        assert!(s.mean().is_none());
+        assert!(s.summary().is_none());
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod benchmark;
 pub mod cli;
+pub mod hist;
 pub mod json;
 pub mod prng;
 pub mod prop;

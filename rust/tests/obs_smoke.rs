@@ -1,0 +1,86 @@
+//! Observability smoke: the machine-readable metrics surface, end to
+//! end over TCP on a zoo model.
+//!
+//! CI (`obs-smoke`) runs this twice: once plain (must pass), and once
+//! with `OBS_SMOKE_CORRUPT=1`, which injects a malformed exposition
+//! line so the prometheus parse must fail — proving the gate can
+//! actually go red (the same pattern as `memory-gate`).
+
+use lutnn::coordinator::server::{Client, Server, ServerConfig};
+use lutnn::coordinator::{ModelEntry, Registry};
+use lutnn::lut::LutOpts;
+use lutnn::model_import::zoo;
+use lutnn::obs::prom;
+use lutnn::util::json::Json;
+
+fn prom_text(c: &mut Client) -> String {
+    let req = Json::obj(vec![("cmd", Json::str("metrics")), ("format", Json::str("prometheus"))]);
+    let resp = c.call(&req).unwrap();
+    let mut text = resp.get("text").unwrap().as_str().unwrap().to_string();
+    if std::env::var("OBS_SMOKE_CORRUPT").is_ok() {
+        // Red path: CI asserts this corruption makes the test fail.
+        text.push_str("0bad{x=\"y\" 1\n");
+    }
+    text
+}
+
+fn requests_total(samples: &[prom::Sample], model: &str) -> f64 {
+    samples
+        .iter()
+        .find(|s| s.name == "lutnn_requests_total" && s.label("model") == Some(model))
+        .expect("lutnn_requests_total sample for the model")
+        .value
+}
+
+#[test]
+fn obs_smoke_structured_metrics_prometheus_and_spans() {
+    let graph = zoo::import("cnn_tiny").unwrap();
+    let mut registry = Registry::new();
+    let entry = ModelEntry::native("cnn_tiny", &graph, LutOpts::deployed(), 8, 1).unwrap();
+    registry.register(entry);
+    let mut server = Server::start(
+        registry,
+        ServerConfig { addr: "127.0.0.1:0".into(), profile: true, ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let input = vec![0.1f32; 16 * 16 * 3];
+    for _ in 0..12 {
+        let out = c.infer("cnn_tiny", &input).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    // Structured numeric JSON: exact counters, ordered quantiles.
+    let resp = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap());
+    let m = resp.get("metrics").unwrap().get("cnn_tiny").unwrap();
+    assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 12, "{resp:?}");
+    assert_eq!(m.get("errors").unwrap().as_usize().unwrap(), 0);
+    assert!(m.get("batches").unwrap().as_usize().unwrap() >= 1);
+    let lat = m.get("latency").unwrap();
+    let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+    let p95 = lat.get("p95").unwrap().as_f64().unwrap();
+    let p99 = lat.get("p99").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0, "latency histogram recorded nothing: {lat:?}");
+    assert!(p50 <= p95 && p95 <= p99, "quantile order: {p50} {p95} {p99}");
+    let residency = resp.get("residency").unwrap();
+    assert!(residency.get("resident_bytes").unwrap().as_f64().is_some());
+
+    // Prometheus exposition parses and counters are monotone.
+    let samples = prom::parse(&prom_text(&mut c)).expect("exposition must parse");
+    let first = requests_total(&samples, "cnn_tiny");
+    assert_eq!(first, 12.0);
+    c.infer("cnn_tiny", &input).unwrap();
+    let again = prom::parse(&prom_text(&mut c)).expect("exposition must parse");
+    let second = requests_total(&again, "cnn_tiny");
+    assert!(second > first, "counter must be monotone: {first} -> {second}");
+
+    // The span ring saw every request and recorded clean outcomes.
+    let spans = c.call(&Json::obj(vec![("cmd", Json::str("spans"))])).unwrap();
+    let model = spans.get("models").unwrap().get("cnn_tiny").unwrap();
+    assert!(model.get("offered").unwrap().as_usize().unwrap() >= 13, "{spans:?}");
+    let arr = model.get("spans").unwrap().as_arr().unwrap();
+    assert!(!arr.is_empty());
+    assert!(arr.iter().all(|s| s.get("outcome").unwrap().as_str().unwrap() == "ok"));
+    server.shutdown();
+}
