@@ -3,9 +3,20 @@
 //!
 //! Measurements, all through the unified `api` entry points:
 //!   0. Kernel shootout on one representative encode-heavy layer shape:
-//!      `dense` vs `lut` (scalar) vs `lut-simd` vs `lut-i8` through the
-//!      same `LinearKernel` interface (always runs; the whole bench's
-//!      machine-readable output lands in `BENCH_e2e_latency.json`).
+//!      `dense` vs `dense-i8` vs `lut` (scalar) vs `lut-simd` vs
+//!      `lut-i8` vs `lut-dec` through the same `LinearKernel` interface
+//!      (always runs; the whole bench's machine-readable output lands
+//!      in `BENCH_e2e_latency.json`).
+//!   0a. Zoo-geometry sweep + per-layer profile (always run): every
+//!      kernel on every distinct zoo dense-layer shape, and the
+//!      wall/encode/lookup split of a profiled cnn_tiny LUT session.
+//!   0g. The **perf gate**: same-run kernel-vs-`lut` latency ratios
+//!      checked against the committed `perf_gate.max_ratio` thresholds
+//!      (machine speed cancels in the ratio). Report-only by default;
+//!      `PERF_GATE=1` makes violations exit 1 naming the guilty kernel
+//!      and the profiled model's slowest layer, and
+//!      `PERF_GATE_INFLATE=10` is CI's red-path self-test. See
+//!      docs/benching.md for the threshold model.
 //!   0b. Replica sweep (always runs): closed-loop throughput of the
 //!      coordinator's work-stealing batcher over 1/2/4 engine replicas
 //!      of a small LUT model — the serving-layer parallelism record.
@@ -24,20 +35,23 @@
 //! `E2E_FAST=1` runs the kernel shootout + a shortened replica sweep
 //! (the CI artifact path).
 
+use std::collections::BTreeSet;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use lutnn::api::{
-    DenseKernel, Engine, LinearKernel, LutI8Kernel, LutKernel, PjrtEngine, Scratch,
-    SessionBuilder, SimdLutKernel,
+    DecLutKernel, DenseI8Kernel, DenseKernel, Engine, LinearKernel, LutI8Kernel, LutKernel,
+    PjrtEngine, Scratch, SessionBuilder, SimdLutKernel,
 };
 use lutnn::coordinator::batcher::{Batcher, BatcherConfig};
 use lutnn::coordinator::ModelEntry;
 use lutnn::lut::{simd, LutLinear, LutOpts};
 use lutnn::model_fmt;
+use lutnn::model_import::zoo;
 use lutnn::nn::graph::Graph;
-use lutnn::nn::models::{build_cnn_graph, lutify_graph, ConvSpec};
+use lutnn::nn::models::{build_cnn_graph, lutify_graph, pick_v, ConvSpec};
 use lutnn::pq::kmeans::learn_codebooks;
+use lutnn::pq::Codebooks;
 use lutnn::runtime::{artifact_path, artifacts_available, pjrt_available, PjrtHost};
 use lutnn::tensor::Tensor;
 use lutnn::util::benchmark::{bench, black_box, record_jsonl, BenchConfig, Table};
@@ -62,8 +76,9 @@ fn bench_session(name: &str, cfg: &BenchConfig, graph: &Graph, x: &Tensor) -> f6
 }
 
 /// Kernel shootout: every registry LUT-family kernel (plus the dense
-/// GEMM baseline) on one encode-heavy layer — the `lut_amm_op` shape
-/// (3x3 conv, 64 ch at 16x16: rows=256, D=576, M=128, K=16, V=9).
+/// f32 GEMM and the int8 dense baselines) on one encode-heavy layer —
+/// the `lut_amm_op` shape (3x3 conv, 64 ch at 16x16: rows=256, D=576,
+/// M=128, K=16, V=9).
 fn kernel_shootout(cfg: &BenchConfig) -> Json {
     let (rows, c, v, k, m) = (256usize, 64usize, 9usize, 16usize, 128usize);
     let d = c * v;
@@ -76,9 +91,11 @@ fn kernel_shootout(cfg: &BenchConfig) -> Json {
     let opts = LutOpts::deployed();
     let kernels: Vec<Box<dyn LinearKernel>> = vec![
         Box::new(DenseKernel::new(w.clone(), Some(vec![0.1; m]), m)),
+        Box::new(DenseI8Kernel::new(w.clone(), Some(vec![0.1; m]), m)),
         Box::new(LutKernel::new(lut.clone(), opts)),
         Box::new(SimdLutKernel::new(lut.clone(), opts)),
-        Box::new(LutI8Kernel::new(lut)),
+        Box::new(LutI8Kernel::new(lut.clone())),
+        Box::new(DecLutKernel::new(lut)),
     ];
     let mut scratch = Scratch::default();
     let mut out = vec![0.0f32; rows * m];
@@ -129,6 +146,223 @@ fn kernel_shootout(cfg: &BenchConfig) -> Json {
         ("kernel_ms", Json::obj(ms_obj)),
         ("simd_speedup_vs_scalar", Json::num(scalar_ms / simd_ms)),
     ])
+}
+
+/// Zoo-geometry sweep: every registry kernel on every distinct dense
+/// layer geometry of the committed zoo models (k=16, v=pick_v(d),
+/// random centroids — timing does not depend on centroid values). This
+/// prices each kernel on the shapes the repo actually ships, per
+/// backend (`simd::active_backend()` is recorded at the top level).
+fn zoo_geometry_sweep(fast: bool) -> Json {
+    let rows = if fast { 32 } else { 128 };
+    let cfg = BenchConfig {
+        min_iters: 3,
+        max_iters: if fast { 8 } else { 20 },
+        target_time: Duration::from_millis(if fast { 120 } else { 400 }),
+        ..Default::default()
+    };
+    let mut out_rows: Vec<Json> = Vec::new();
+    let mut table = Table::new(&["model", "DxM", "dense", "dense-i8", "lut", "lut-simd", "lut-i8", "lut-dec"]);
+    for zm in zoo::MODELS.iter() {
+        let g = zoo::import(zm.name).expect("committed zoo fixtures always import");
+        let mut seen: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for params in g.layers.values() {
+            let lutnn::nn::graph::LayerParams::Dense { w, m, .. } = params else { continue };
+            let (d, m) = (w.len() / m, *m);
+            if !seen.insert((d, m)) {
+                continue;
+            }
+            let (k, v) = (16usize, pick_v(d));
+            let c = d / v;
+            let mut rng = Prng::new(0xD1CE + d as u64 * 31 + m as u64);
+            let a = rng.normal_vec(rows * d, 1.0);
+            let wr = rng.normal_vec(d * m, 1.0);
+            let cb = Codebooks::new(c, k, v, rng.normal_vec(c * k * v, 1.0));
+            let lut = LutLinear::new(cb, &wr, m, None, 8);
+            let opts = LutOpts::deployed();
+            let kernels: Vec<Box<dyn LinearKernel>> = vec![
+                Box::new(DenseKernel::new(wr.clone(), None, m)),
+                Box::new(DenseI8Kernel::new(wr.clone(), None, m)),
+                Box::new(LutKernel::new(lut.clone(), opts)),
+                Box::new(SimdLutKernel::new(lut.clone(), opts)),
+                Box::new(LutI8Kernel::new(lut.clone())),
+                Box::new(DecLutKernel::new(lut)),
+            ];
+            let mut scratch = Scratch::default();
+            let mut out = vec![0.0f32; rows * m];
+            let mut ms_obj: Vec<(&str, Json)> = Vec::new();
+            let mut cells = vec![zm.name.to_string(), format!("{d}x{m}")];
+            for kern in &kernels {
+                let r = bench(kern.name(), &cfg, || {
+                    kern.forward_into(black_box(&a), rows, &mut scratch, &mut out);
+                    black_box(&out);
+                });
+                let ms = r.summary.mean * 1e3;
+                ms_obj.push((kern.name(), Json::num(ms)));
+                cells.push(format!("{ms:.3}"));
+            }
+            table.row(&cells);
+            out_rows.push(Json::obj(vec![
+                ("model", Json::str(zm.name)),
+                ("d", Json::num(d as f64)),
+                ("m", Json::num(m as f64)),
+                ("kernel_ms", Json::obj(ms_obj)),
+            ]));
+        }
+    }
+    println!("\n== Zoo geometry sweep (rows={rows}, ms/forward, backend={}) ==\n", simd::active_backend());
+    table.print();
+    Json::Arr(out_rows)
+}
+
+/// Per-layer wall/encode/lookup split of a profiled session over the
+/// LUT-converted `cnn_tiny` zoo model — the same split `lutnn profile`
+/// prints. Returns the JSON record plus the slowest layer's name, which
+/// the perf gate uses to name the guilty layer on a violation.
+fn layer_profile(fast: bool) -> (Json, Option<String>) {
+    let g = zoo::import("cnn_tiny").expect("committed zoo fixtures always import");
+    let mut rng = Prng::new(9);
+    let mut shape = g.input_shape.clone();
+    shape[0] = 2;
+    let numel: usize = shape.iter().product();
+    let sample = Tensor::new(shape, rng.normal_vec(numel, 1.0));
+    eprintln!("layer profile: converting cnn_tiny to LUT...");
+    let lut = lutify_graph(&g, &sample, 16, 8, 0);
+    let mut sess = SessionBuilder::new(&lut)
+        .opts(LutOpts::deployed())
+        .max_batch(2)
+        .profile(true)
+        .build()
+        .expect("compile profiled session");
+    let mut out = Tensor::zeros(vec![0]);
+    for _ in 0..if fast { 10 } else { 40 } {
+        sess.run(&sample, &mut out).expect("profiled forward");
+    }
+    let p = sess.profile_report().expect("profiled session has a report").clone();
+    let mut t = Table::new(&["layer", "kernel", "wall ms", "encode ms", "lookup ms"]);
+    let mut layers: Vec<Json> = Vec::new();
+    let mut slowest: Option<(&str, u64)> = None;
+    for l in &p.layers {
+        if slowest.map(|(_, w)| l.wall_ns > w).unwrap_or(true) {
+            slowest = Some((&l.layer, l.wall_ns));
+        }
+        t.row(&[
+            l.layer.clone(),
+            l.kernel.to_string(),
+            format!("{:.3}", l.wall_ns as f64 / 1e6),
+            format!("{:.3}", l.encode_ns as f64 / 1e6),
+            format!("{:.3}", l.lookup_ns as f64 / 1e6),
+        ]);
+        layers.push(Json::obj(vec![
+            ("layer", Json::str(l.layer.clone())),
+            ("kernel", Json::str(l.kernel)),
+            ("wall_ms", Json::num(l.wall_ns as f64 / 1e6)),
+            ("encode_ms", Json::num(l.encode_ns as f64 / 1e6)),
+            ("lookup_ms", Json::num(l.lookup_ns as f64 / 1e6)),
+        ]));
+    }
+    let slowest = slowest.map(|(n, _)| n.to_string());
+    println!("\n== Per-layer profile (cnn_tiny LUT, {} runs) ==\n", p.runs);
+    t.print();
+    let doc = Json::obj(vec![
+        ("model", Json::str("cnn_tiny")),
+        ("layers", Json::Arr(layers)),
+        (
+            "slowest_layer",
+            slowest.as_deref().map(Json::str).unwrap_or(Json::Null),
+        ),
+    ]);
+    (doc, slowest)
+}
+
+/// Fallback thresholds when no committed `perf_gate.max_ratio` exists:
+/// ~3x the ratios of the first measured portable baseline (see
+/// docs/benching.md for the threshold model).
+const GATE_DEFAULT_MAX_RATIO: [(&str, f64); 5] = [
+    ("dense", 7.5),
+    ("dense-i8", 13.0),
+    ("lut-simd", 4.5),
+    ("lut-i8", 4.6),
+    ("lut-dec", 14.0),
+];
+
+/// The measured-performance gate (ROADMAP "ISA matrix + measured
+/// latency gate"): each kernel's shootout latency is compared as a
+/// *same-run ratio* against the scalar `"lut"` reference — machine
+/// speed cancels, so a committed `max_ratio` transfers across hosts.
+/// Violations exit 1 (naming the guilty kernel and the profiled
+/// model's slowest layer) only when `PERF_GATE=1`; otherwise the check
+/// is report-only. `PERF_GATE_INFLATE=<f>` scales the measured ratios
+/// to prove the gate trips (CI's red-path self-test).
+fn perf_gate(
+    committed: Option<&Json>,
+    shootout: &Json,
+    slowest_layer: Option<&str>,
+) -> (Json, usize) {
+    let gate_cfg = committed.and_then(|c| c.get("perf_gate"));
+    let reference = gate_cfg
+        .and_then(|g| g.get("reference"))
+        .and_then(|v| v.as_str())
+        .unwrap_or("lut")
+        .to_string();
+    let kernel_ms = shootout.get("kernel_ms").expect("shootout kernel_ms");
+    let ref_ms = kernel_ms
+        .get(&reference)
+        .and_then(|v| v.as_f64())
+        .expect("shootout must measure the gate reference kernel");
+    let inflate = std::env::var("PERF_GATE_INFLATE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0);
+    if inflate != 1.0 {
+        eprintln!("(PERF_GATE_INFLATE={inflate}: scaling measured ratios to self-test the gate)");
+    }
+    let enforce = lutnn::util::env_flag("PERF_GATE");
+    let mut max_obj: Vec<(&str, Json)> = Vec::new();
+    let mut ratio_obj: Vec<(&str, Json)> = Vec::new();
+    let mut violations = 0usize;
+    println!("\n== Perf gate (ratios vs '{reference}', {}) ==\n", if enforce { "ENFORCED" } else { "report-only" });
+    let mut t = Table::new(&["kernel", "ratio", "max", "verdict"]);
+    for (name, fallback) in GATE_DEFAULT_MAX_RATIO {
+        let Some(ms) = kernel_ms.get(name).and_then(|v| v.as_f64()) else {
+            eprintln!("(kernel '{name}' not measured: gate skipped for it)");
+            continue;
+        };
+        let max = gate_cfg
+            .and_then(|g| g.get("max_ratio"))
+            .and_then(|m| m.get(name))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(fallback);
+        let ratio = ms / ref_ms * inflate;
+        let ok = ratio <= max;
+        if !ok {
+            violations += 1;
+            eprintln!(
+                "PERF GATE: kernel '{name}' ratio {ratio:.3} vs '{reference}' exceeds \
+                 max_ratio {max} (measured {ms:.4} ms vs {ref_ms:.4} ms){}",
+                match slowest_layer {
+                    Some(l) => format!("; slowest profiled layer: '{l}'"),
+                    None => String::new(),
+                }
+            );
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{ratio:.3}"),
+            format!("{max}"),
+            (if ok { "ok" } else { "VIOLATION" }).to_string(),
+        ]);
+        max_obj.push((name, Json::num(max)));
+        ratio_obj.push((name, Json::num(ratio)));
+    }
+    t.print();
+    let doc = Json::obj(vec![
+        ("enforce_env", Json::str("PERF_GATE")),
+        ("reference", Json::str(reference)),
+        ("max_ratio", Json::obj(max_obj)),
+        ("measured_ratio", Json::obj(ratio_obj)),
+    ]);
+    (doc, if enforce { violations } else { 0 })
 }
 
 /// Throughput-vs-replicas sweep: one small LUT model served through the
@@ -220,8 +454,18 @@ fn main() {
     let mut t = Table::new(&["model", "engine", "dense ms", "lut ms", "speedup"]);
     let mut model_rows: Vec<Json> = Vec::new();
 
-    // ---- 0. kernel shootout + replica sweep (always) --------------------
+    // Committed document: schema placeholder + perf-gate config (the
+    // measured baseline promoted per docs/benching.md).
+    let committed: Option<Json> = std::fs::read_to_string("BENCH_e2e_latency.json")
+        .ok()
+        .map(|s| json::parse(&s).expect("committed BENCH_e2e_latency.json must parse"));
+
+    // ---- 0. kernel shootout + zoo sweep + profile + gate (always) -------
     let shootout = kernel_shootout(&cfg);
+    let zoo_sweep = zoo_geometry_sweep(fast);
+    let (profile, slowest_layer) = layer_profile(fast);
+    let (gate_doc, gate_violations) =
+        perf_gate(committed.as_ref(), &shootout, slowest_layer.as_deref());
     let sweep = replica_sweep(fast);
 
     if !fast {
@@ -364,22 +608,30 @@ fn main() {
         ),
         ("simd_backend", Json::str(simd::active_backend())),
         ("kernel_shootout", shootout),
+        ("zoo_geometry_sweep", zoo_sweep),
+        ("profile", profile),
+        ("perf_gate", gate_doc),
         ("replica_sweep", sweep),
         ("models", Json::Arr(model_rows)),
     ]);
     // Schema guard: the committed BENCH_e2e_latency.json doubles as the
     // schema placeholder (null leaves = measured values); refuse to
     // overwrite it with a document whose field names or types drifted.
-    match std::fs::read_to_string("BENCH_e2e_latency.json") {
-        Ok(old) => {
-            let schema = json::parse(&old).expect("committed BENCH_e2e_latency.json must parse");
-            if let Err(e) = lutnn::util::schema::check_shape(&schema, &doc) {
+    match &committed {
+        Some(schema) => {
+            if let Err(e) = lutnn::util::schema::check_shape(schema, &doc) {
                 panic!("BENCH_e2e_latency.json schema drift: {e}");
             }
         }
-        Err(_) => eprintln!("(no committed BENCH_e2e_latency.json: skipping schema check)"),
+        None => eprintln!("(no committed BENCH_e2e_latency.json: skipping schema check)"),
+    }
+    // Gate verdict last (mirrors memory-gate: a violation refuses to
+    // overwrite the committed baseline and exits non-zero).
+    if gate_violations > 0 {
+        eprintln!("perf gate FAILED: {gate_violations} violation(s)");
+        std::process::exit(1);
     }
     std::fs::write("BENCH_e2e_latency.json", json::to_string(&doc) + "\n")
         .expect("write BENCH_e2e_latency.json");
-    eprintln!("wrote BENCH_e2e_latency.json (schema-checked)");
+    eprintln!("wrote BENCH_e2e_latency.json (schema-checked + perf-gated)");
 }

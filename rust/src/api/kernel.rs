@@ -162,6 +162,224 @@ impl LinearKernel for DenseKernel {
     }
 }
 
+/// Int8 dense GEMM kernel (`"dense-i8"`): the honest quantized baseline
+/// the paper's int8 comparisons are made against (tract-`linalg`-style
+/// tiled micro-kernel with a portable fallback).
+///
+/// Weights are quantized once at build time to a single global scale
+/// (symmetric, `sw = max|W| / 127`); each input row is quantized
+/// dynamically at its own scale (`sa = max|row| / 127`). The inner loop
+/// is pure `i32` multiply-accumulate — exact and order-independent — so
+/// the AVX2 `madd` micro-kernel and the portable path produce **bitwise
+/// identical** output (unlike the f32 LUT encode, where only op-order
+/// discipline keeps arms equal). One `sa * sw` dequant multiply per
+/// output element at the end, bias last.
+///
+/// Output differs from the f32 `"dense"` reference by bounded
+/// quantization error — see [`DenseI8Kernel::abs_tolerance`] for the
+/// documented input-dependent per-element bound the parity harness
+/// enforces.
+pub struct DenseI8Kernel {
+    /// global-scale INT8 weights, [D, M] row-major (M-contiguous rows,
+    /// cache-line pinned so the 16-wide column loads never split lines)
+    qw: AlignedVec<i8>,
+    sw: f32,
+    wmax: f32,
+    b: Option<Vec<f32>>,
+    d: usize,
+    m: usize,
+}
+
+impl DenseI8Kernel {
+    pub fn new(w: Vec<f32>, b: Option<Vec<f32>>, m: usize) -> DenseI8Kernel {
+        assert!(m > 0 && w.len() % m == 0, "dense-i8 weight must be [D, M]");
+        let d = w.len() / m;
+        let wmax = w.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
+        let sw = (wmax / 127.0).max(1e-30);
+        let q: Vec<i8> = w
+            .iter()
+            .map(|&x| (x / sw).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        DenseI8Kernel { qw: AlignedVec::from_slice(&q, TABLE_ALIGN), sw, wmax, b, d, m }
+    }
+
+    /// Global weight quantization step (`max|W| / 127`).
+    pub fn weight_scale(&self) -> f32 {
+        self.sw
+    }
+
+    /// Documented per-element absolute error bound vs the f32 `"dense"`
+    /// reference, for inputs with `max|x| <= input_max_abs`. Each of the
+    /// D accumulated terms errs by at most
+    /// `sa*|qa|*ew + sw*|qw|*ea + ea*ew` with `ea <= sa/2`, `ew <= sw/2`
+    /// and `|qa|,|qw| <= 127`, i.e. `~ amax * wmax / 127` per term; the
+    /// 1.05 factor absorbs the cross term and the reference's own f32
+    /// accumulation rounding.
+    pub fn abs_tolerance(&self, input_max_abs: f32) -> f32 {
+        self.d as f32 * input_max_abs.abs() * self.wmax * (1.0 / 127.0) * 1.05 + 1e-4
+    }
+
+    /// One forward row: dynamic input quantization, exact-i32
+    /// accumulate via `row_acc`, dequant + write. `qa`/`acc32` are
+    /// caller scratch resized to D/M.
+    fn forward_row(
+        &self,
+        row: &[f32],
+        qa: &mut [i16],
+        acc32: &mut [i32],
+        row_acc: fn(&[i8], &[i16], usize, &mut [i32]),
+        dst: &mut [f32],
+    ) {
+        let amax = row.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
+        let sa = (amax / 127.0).max(1e-30);
+        for (q, &x) in qa.iter_mut().zip(row) {
+            *q = (x / sa).round().clamp(-127.0, 127.0) as i16;
+        }
+        row_acc(self.qw.as_slice(), qa, self.m, acc32);
+        let scale = sa * self.sw;
+        for (o, &a) in dst.iter_mut().zip(acc32.iter()) {
+            *o = a as f32 * scale;
+        }
+    }
+}
+
+/// Pick the int8 row-accumulate implementation once per forward: the
+/// AVX2 `madd` micro-kernel when the build carries it and the CPU
+/// reports it, the portable loop otherwise. Both are exact in i32, so
+/// the choice never changes output bytes.
+fn select_row_accumulate() -> fn(&[i8], &[i16], usize, &mut [i32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: avx2 runtime-verified; bounds asserted by callers.
+            return |qw: &[i8], qa: &[i16], m: usize, acc: &mut [i32]| unsafe {
+                dense_i8_row_avx2(qw, qa, m, acc)
+            };
+        }
+    }
+    dense_i8_row_portable
+}
+
+/// Portable int8 row kernel: `acc[j] = sum_t qa[t] * qw[t*M + j]`, all
+/// in exact i32 (max |acc| ~ D * 127^2, far from overflow for any D the
+/// importer admits). Overwrites `acc`.
+fn dense_i8_row_portable(qw: &[i8], qa: &[i16], m: usize, acc: &mut [i32]) {
+    acc.fill(0);
+    for (t, &av) in qa.iter().enumerate() {
+        let av = av as i32;
+        let wrow = &qw[t * m..(t + 1) * m];
+        for (a, &q) in acc.iter_mut().zip(wrow) {
+            *a += av * q as i32;
+        }
+    }
+}
+
+/// AVX2 int8 row kernel: per 16-output column block, depth is walked in
+/// pairs — two weight rows are sign-extended to i16
+/// (`_mm256_cvtepi8_epi16`), interleaved (`unpacklo/hi_epi16`) so each
+/// 32-bit element holds the `(w_t[j], w_{t+1}[j])` pair, and one
+/// `_mm256_madd_epi16` against the broadcast `(qa[t], qa[t+1])` pair
+/// produces `qa[t]*w_t[j] + qa[t+1]*w_{t+1}[j]` — two MACs per
+/// instruction with no repacked weight copy. The interleave leaves
+/// block columns permuted across the two accumulators
+/// (`acc_lo` = j {0..3, 8..11}, `acc_hi` = j {4..7, 12..15}); the
+/// store un-permutes. Odd depth takes a scalar last row per block; the
+/// column remainder (m % 16) is scalar. Exact i32 throughout — bitwise
+/// identical to [`dense_i8_row_portable`]. Overwrites `acc`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn dense_i8_row_avx2(qw: &[i8], qa: &[i16], m: usize, acc: &mut [i32]) {
+    use std::arch::x86_64::*;
+    let d = qa.len();
+    let d2 = d & !1usize;
+    let m16 = m & !15usize;
+    let mut j0 = 0usize;
+    while j0 < m16 {
+        let mut acc_lo = _mm256_setzero_si256();
+        let mut acc_hi = _mm256_setzero_si256();
+        let mut t = 0usize;
+        while t < d2 {
+            let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                qw.as_ptr().add(t * m + j0) as *const __m128i
+            ));
+            let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                qw.as_ptr().add((t + 1) * m + j0) as *const __m128i,
+            ));
+            let il_lo = _mm256_unpacklo_epi16(w0, w1);
+            let il_hi = _mm256_unpackhi_epi16(w0, w1);
+            let pair = (qa[t] as u16 as u32) | ((qa[t + 1] as u16 as u32) << 16);
+            let av = _mm256_set1_epi32(pair as i32);
+            acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(il_lo, av));
+            acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(il_hi, av));
+            t += 2;
+        }
+        let mut tmp_lo = [0i32; 8];
+        let mut tmp_hi = [0i32; 8];
+        _mm256_storeu_si256(tmp_lo.as_mut_ptr() as *mut __m256i, acc_lo);
+        _mm256_storeu_si256(tmp_hi.as_mut_ptr() as *mut __m256i, acc_hi);
+        for j in 0..4 {
+            acc[j0 + j] = tmp_lo[j];
+            acc[j0 + 4 + j] = tmp_hi[j];
+            acc[j0 + 8 + j] = tmp_lo[4 + j];
+            acc[j0 + 12 + j] = tmp_hi[4 + j];
+        }
+        if d2 < d {
+            let t = d - 1;
+            let av = qa[t] as i32;
+            for j in 0..16 {
+                acc[j0 + j] += av * qw[t * m + j0 + j] as i32;
+            }
+        }
+        j0 += 16;
+    }
+    for j in m16..m {
+        let mut s = 0i32;
+        for (t, &av) in qa.iter().enumerate() {
+            s += av as i32 * qw[t * m + j] as i32;
+        }
+        acc[j] = s;
+    }
+}
+
+impl LinearKernel for DenseI8Kernel {
+    fn name(&self) -> &'static str {
+        "dense-i8"
+    }
+
+    fn in_dim(&self) -> usize {
+        self.d
+    }
+
+    fn out_dim(&self) -> usize {
+        self.m
+    }
+
+    fn param_bytes(&self) -> usize {
+        // INT8 weights + one f32 scale + f32 bias
+        self.qw.len() + 4 + self.b.as_ref().map(|x| x.len() * 4).unwrap_or(0)
+    }
+
+    fn forward_into(&self, input: &[f32], rows: usize, scratch: &mut Scratch, out: &mut [f32]) {
+        let (d, m) = (self.d, self.m);
+        assert_eq!(input.len(), rows * d, "dense-i8 input size");
+        let out = &mut out[..rows * m];
+        // qa rides in the i16 scratch lane, the accumulator in the i32
+        // one — same buffers the LUT family uses, so a shared Scratch
+        // settles at the per-layer maximum either way.
+        let LutScratch { acc16: qa, acc32, .. } = &mut scratch.lut;
+        qa.resize(d, 0);
+        acc32.resize(m, 0);
+        let row_acc = select_row_accumulate();
+        for i in 0..rows {
+            let (row, dst) = (&input[i * d..(i + 1) * d], &mut out[i * m..(i + 1) * m]);
+            self.forward_row(row, qa, acc32, row_acc, dst);
+        }
+        if let Some(b) = &self.b {
+            add_bias_rows(out, b);
+        }
+    }
+}
+
 /// LUT-NN table-lookup kernel (paper §5): closest-centroid encode +
 /// quantized table read/accumulate, with the §6.3 optimization toggles
 /// frozen into the kernel at build time.
@@ -260,7 +478,7 @@ impl SimdLutKernel {
     }
 
     /// Which distance-kernel implementation this build/CPU dispatches to
-    /// (`"avx2"` or `"portable"`).
+    /// — one of [`crate::lut::simd::BACKENDS`].
     pub fn backend(&self) -> &'static str {
         simd::active_backend()
     }
@@ -703,7 +921,7 @@ mod tests {
             assert_eq!(o1, o2, "lut-simd must be bitwise lut ({opts:?})");
         }
         let kern = SimdLutKernel::new(lut, LutOpts::deployed());
-        assert!(["avx2", "portable"].contains(&kern.backend()));
+        assert!(simd::BACKENDS.contains(&kern.backend()));
         assert_eq!(kern.name(), "lut-simd");
         assert_eq!(kern.scratch_indices(3), 3 * 4);
     }
@@ -763,6 +981,78 @@ mod tests {
         assert_eq!(i8k.table_alignment_bytes(), TABLE_ALIGN);
         let dense = DenseKernel::new(vec![0.0; 8], None, 2);
         assert_eq!((dense.table_bytes(), dense.table_alignment_bytes()), (0, 1));
+    }
+
+    #[test]
+    fn dense_i8_kernel_within_documented_tolerance() {
+        prop::check(40, |g| {
+            let n = g.usize(1..8);
+            let d = g.usize(1..40);
+            let m = *g.pick(&[1usize, 4, 7, 9, 15, 16, 17, 31, 33]);
+            let mut rng = Prng::new(g.case_seed);
+            let w = rng.normal_vec(d * m, 0.7);
+            let b = Some(rng.normal_vec(m, 0.3));
+            let x = rng.normal_vec(n * d, 1.0);
+            let reference = DenseKernel::new(w.clone(), b.clone(), m);
+            let candidate = DenseI8Kernel::new(w, b, m);
+            let (mut s1, mut s2) = (Scratch::default(), Scratch::default());
+            let mut o1 = vec![4.0f32; n * m];
+            let mut o2 = vec![-4.0f32; n * m];
+            reference.forward_into(&x, n, &mut s1, &mut o1);
+            candidate.forward_into(&x, n, &mut s2, &mut o2);
+            let amax = x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+            prop::assert_close(&o2, &o1, 0.0, candidate.abs_tolerance(amax))
+                .map_err(|e| format!("n={n} d={d} m={m}: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn dense_i8_avx2_micro_kernel_is_bitwise_the_portable_loop() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return; // nothing to compare on this CPU
+        }
+        prop::check(60, |g| {
+            // depth parities + column remainders around the 16-wide block
+            let d = *g.pick(&[1usize, 2, 3, 8, 15, 16, 17, 64, 577]);
+            let m = *g.pick(&[1usize, 7, 9, 15, 16, 17, 31, 32, 33, 48]);
+            let qw: Vec<i8> = g
+                .f32_vec(d * m, 2.0)
+                .iter()
+                .map(|&x| (x * 40.0).clamp(-127.0, 127.0) as i8)
+                .collect();
+            let qa: Vec<i16> = g
+                .f32_vec(d, 2.0)
+                .iter()
+                .map(|&x| (x * 40.0).clamp(-127.0, 127.0) as i16)
+                .collect();
+            let mut want = vec![0i32; m];
+            dense_i8_row_portable(&qw, &qa, m, &mut want);
+            let mut got = vec![i32::MIN; m]; // poisoned: kernel must overwrite
+            unsafe { dense_i8_row_avx2(&qw, &qa, m, &mut got) };
+            if got != want {
+                return Err(format!("d={d} m={m}: {got:?} vs {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_i8_metadata_and_size() {
+        let mut rng = Prng::new(3);
+        let (d, m) = (20, 6);
+        let w = rng.normal_vec(d * m, 1.0);
+        let f32k = DenseKernel::new(w.clone(), Some(vec![0.1; m]), m);
+        let i8k = DenseI8Kernel::new(w, Some(vec![0.1; m]), m);
+        assert_eq!(i8k.name(), "dense-i8");
+        assert_eq!((i8k.in_dim(), i8k.out_dim()), (d, m));
+        assert_eq!(i8k.scratch_indices(9), 0);
+        // dense GEMM reads no lookup tables — the memory gate counts
+        // its weights under param_bytes only
+        assert_eq!((i8k.table_bytes(), i8k.table_alignment_bytes()), (0, 1));
+        assert!(i8k.param_bytes() < f32k.param_bytes() / 3, "int8 weights ~4x smaller");
+        assert!(i8k.weight_scale() > 0.0);
     }
 
     #[test]

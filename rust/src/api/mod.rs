@@ -29,11 +29,14 @@
 //!                          │
 //!                          v
 //!              dyn LinearKernel::forward_into
-//!               │           │            │           │            │
-//!          DenseKernel  LutKernel  SimdLutKernel  LutI8Kernel  DecLutKernel  <- KernelRegistry
-//!        (blocked GEMM) (scalar     (AVX2/portable (global-scale (shared base   ("dense","lut",
-//!                        reference)  vector encode) int8 add)     + 4-bit        "lut-simd","lut-i8",
-//!                                                                 residuals)     "lut-dec", yours)
+//!               │           │            │           │           │            │
+//!          DenseKernel DenseI8Kernel LutKernel SimdLutKernel LutI8Kernel DecLutKernel
+//!        (blocked GEMM) (int8 madd   (scalar    (SIMD vector  (global-    (shared base
+//!                        micro-kernel) reference) encode:      scale        + 4-bit
+//!                                                 neon/avx2/   int8 add)    residuals)
+//!                                                 avx512/
+//!                                                 portable)
+//!            <- KernelRegistry ("dense","dense-i8","lut","lut-simd","lut-i8","lut-dec", yours)
 //! ```
 //!
 //! ## The three layers
@@ -103,7 +106,13 @@
 //! and differs from `"lut"` by at most
 //! `sum_c resid_scale[c] + C * common_scale`
 //! ([`DecLutKernel::abs_tolerance`]); both bounds are fuzzed in
-//! `kernel_parity`.
+//! `kernel_parity`. `"dense-i8"` is the honest quantized *dense*
+//! baseline (global-scale int8 weights, dynamic per-row input
+//! quantization, exact-i32 accumulate) and differs from `"dense"` by at
+//! most `~ D * max|x| * max|W| / 127` per element
+//! ([`DenseI8Kernel::abs_tolerance`]); its AVX2 `madd` micro-kernel and
+//! portable loop are bitwise-identical (integer math is
+//! order-independent).
 //!
 //! Memory contract per tag: every LUT-family kernel stores its hot
 //! table `[C, K, M]` row-major (rows M-contiguous — the inner-loop
@@ -123,8 +132,8 @@ pub mod session;
 
 pub use engine::{Engine, NativeEngine, PjrtEngine};
 pub use kernel::{
-    DecLutKernel, DenseKernel, KernelPhases, LinearKernel, LutI8Kernel, LutKernel, Scratch,
-    SimdLutKernel,
+    DecLutKernel, DenseI8Kernel, DenseKernel, KernelPhases, LinearKernel, LutI8Kernel, LutKernel,
+    Scratch, SimdLutKernel,
 };
 pub use registry::{KernelBuildCtx, KernelFactory, KernelRegistry};
 pub use session::{LayerMemory, LayerProfile, Session, SessionBuilder, SessionProfile};

@@ -8,7 +8,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use super::kernel::{DecLutKernel, DenseKernel, LinearKernel, LutI8Kernel, LutKernel, SimdLutKernel};
+use super::kernel::{
+    DecLutKernel, DenseI8Kernel, DenseKernel, LinearKernel, LutI8Kernel, LutKernel, SimdLutKernel,
+};
 use crate::lut::LutOpts;
 use crate::nn::graph::LayerParams;
 
@@ -37,7 +39,9 @@ impl KernelRegistry {
         KernelRegistry { factories: BTreeMap::new() }
     }
 
-    /// Registry with the built-in kernels: `"dense"`, `"lut"` (scalar
+    /// Registry with the built-in kernels: `"dense"`, `"dense-i8"`
+    /// (global-scale int8 GEMM, the honest quantized dense baseline —
+    /// see `DenseI8Kernel::abs_tolerance`), `"lut"` (scalar
     /// reference), `"lut-simd"` (explicit-SIMD encode, bitwise-equal to
     /// `"lut"`), `"lut-i8"` (global-scale int8 lookup-add, bounded
     /// requantization error — see `LutI8Kernel::abs_tolerance`), and
@@ -50,6 +54,12 @@ impl KernelRegistry {
                 Ok(Box::new(DenseKernel::new(w.clone(), b.clone(), *m)) as Box<dyn LinearKernel>)
             }
             _ => Err(anyhow!("'dense' kernel needs Dense layer params")),
+        });
+        r.register("dense-i8", |params, _ctx| match params {
+            LayerParams::Dense { w, b, m } => {
+                Ok(Box::new(DenseI8Kernel::new(w.clone(), b.clone(), *m)) as Box<dyn LinearKernel>)
+            }
+            _ => Err(anyhow!("'dense-i8' kernel needs Dense layer params")),
         });
         r.register("lut", |params, ctx| match params {
             LayerParams::Lut(lut) => {
@@ -166,6 +176,7 @@ mod tests {
             r.names(),
             vec![
                 "dense".to_string(),
+                "dense-i8".to_string(),
                 "lut".to_string(),
                 "lut-dec".to_string(),
                 "lut-i8".to_string(),
@@ -176,6 +187,8 @@ mod tests {
         let dense = LayerParams::Dense { w: vec![0.0; 8], b: None, m: 2 };
         let k = r.build("dense", &dense, &ctx).unwrap();
         assert_eq!((k.name(), k.in_dim(), k.out_dim()), ("dense", 4, 2));
+        let k8 = r.build("dense-i8", &dense, &ctx).unwrap();
+        assert_eq!((k8.name(), k8.in_dim(), k8.out_dim()), ("dense-i8", 4, 2));
         // mismatched tag/params is an error, unknown tag names the options
         assert!(r.build("lut", &dense, &ctx).is_err());
         assert!(r.build("lut-simd", &dense, &ctx).is_err());

@@ -198,10 +198,12 @@ impl<'g> SessionBuilder<'g> {
     /// Let the analytic cost model ([`crate::cost::auto_pick_tag`]) pick
     /// a kernel per LUT layer from its shape (rows, D, M, K, V) — the
     /// Table 1 MAC counts decide between `lut`, `lut-simd` and (policy
-    /// permitting) `lut-i8`. Layers with an explicit
+    /// permitting) `lut-i8` / `lut-dec`. Layers with an explicit
     /// [`SessionBuilder::kernel_override`] are untouched; dense layers
-    /// keep the `dense` GEMM (there is no codebook to look up), and a
-    /// `dense` verdict on a LUT layer clamps to the scalar `lut` kernel.
+    /// keep the `dense` GEMM unless the policy allows int8, in which
+    /// case they take the quantized `dense-i8` baseline; a dense verdict
+    /// on a LUT layer clamps to the scalar `lut` kernel (there are no
+    /// dense weights to fall back to).
     pub fn auto_kernels(mut self, policy: crate::cost::AutoPickPolicy) -> Self {
         self.auto = Some(policy);
         self
@@ -278,6 +280,7 @@ impl<'g> SessionBuilder<'g> {
                             // never auto-pick them there.
                             policy.simd &= self.opts.centroid_stationary;
                             policy.allow_i8 &= self.opts.centroid_stationary;
+                            policy.allow_dec &= self.opts.centroid_stationary;
                             match crate::cost::auto_pick_tag(
                                 rows,
                                 l.input_dim(),
@@ -288,10 +291,14 @@ impl<'g> SessionBuilder<'g> {
                             ) {
                                 // a LUT layer has no dense weights to
                                 // fall back to — clamp to the reference
-                                "dense" => "lut",
+                                "dense" | "dense-i8" => "lut",
                                 t => t,
                             }
                         }
+                        // int8-vs-int8 pricing: an int8-permitting
+                        // policy routes dense layers through the
+                        // quantized dense baseline
+                        (Some(policy), LayerParams::Dense { .. }) if policy.allow_i8 => "dense-i8",
                         _ => default,
                     }
                 }
@@ -1201,7 +1208,7 @@ mod tests {
         // Explicit policy literal: the exact()/fast() constructors
         // consult the runtime backend, which would make this test
         // host-dependent. lut-simd stays bitwise on every backend.
-        let exact = AutoPickPolicy { simd: true, allow_i8: false };
+        let exact = AutoPickPolicy { simd: true, allow_i8: false, allow_dec: false };
         let mut auto = SessionBuilder::new(&lut)
             .auto_kernels(exact)
             .max_batch(4)
@@ -1222,9 +1229,12 @@ mod tests {
             scalar.run_alloc(&x).unwrap().data,
             "exact auto-pick must not change output bytes"
         );
-        // explicit override always beats the auto-picker
+        // explicit override always beats the auto-picker; an
+        // int8-permitting policy routes the dense stem through the
+        // quantized dense baseline
+        let fast = AutoPickPolicy { simd: true, allow_i8: true, allow_dec: false };
         let sess = SessionBuilder::new(&lut)
-            .auto_kernels(AutoPickPolicy::fast())
+            .auto_kernels(fast)
             .kernel_override("c1", "lut")
             .max_batch(4)
             .build()
@@ -1232,6 +1242,7 @@ mod tests {
         let report = sess.kernel_report();
         let tag = |n: &str| report.iter().find(|(l, _, _)| l.as_str() == n).unwrap().1;
         assert_eq!(tag("c1"), "lut");
+        assert_eq!(tag("c0"), "dense-i8");
         // naive-encode configs must never auto-pick the (centroid-
         // stationary) simd kernel, whatever the policy says
         let sess = SessionBuilder::new(&lut)

@@ -102,30 +102,56 @@ pub fn flops_reduction(m: usize, k: usize, v: usize) -> f64 {
 // ======================================================================
 
 /// Policy knobs for [`auto_pick_tag`]. `simd` should reflect whether the
-/// build carries the vector encode (`lut::simd::active_backend()`);
-/// `allow_i8` opts a layer into the global-scale int8 table kernel,
-/// which trades bounded requantization error (see
-/// `api::LutI8Kernel::abs_tolerance`) for the multiplier-less inner loop.
+/// build carries an intrinsic vector encode
+/// (`lut::simd::active_backend() != "portable"`); `allow_i8` opts a
+/// layer into the int8 kernels (`lut-i8` on the table side, `dense-i8`
+/// on the dense side — an int8-vs-int8 comparison), which trade bounded
+/// quantization error (see `api::LutI8Kernel::abs_tolerance` /
+/// `api::DenseI8Kernel::abs_tolerance`) for multiplier-less /
+/// `madd`-tiled inner loops; `allow_dec` additionally opts
+/// table-read-bound layers with large tables into the decomposed
+/// `lut-dec` kernel — a *memory* trade (≈half the table bytes, slower
+/// per element), only honest now that CI's perf gate measures what it
+/// costs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AutoPickPolicy {
     pub simd: bool,
     pub allow_i8: bool,
+    pub allow_dec: bool,
 }
+
+/// Table size (bytes) below which [`auto_pick_tag`] never answers
+/// `"lut-dec"`: decomposition pays nibble-unpack cost per element, so
+/// it only makes sense once the INT8 table itself is large enough to
+/// pressure caches / the resident-budget evictor.
+pub const DEC_TABLE_BYTES_MIN: u64 = 256 * 1024;
 
 impl AutoPickPolicy {
     /// Exact-output policy: only kernels bitwise-equal to the scalar
     /// reference (`lut`/`lut-simd`). `simd` is seeded from the build's
     /// actual vector backend — on a portable build the per-row fallback
     /// encode loses the scalar path's batched-GEMM amortization, so
-    /// `lut-simd` is only auto-picked when the AVX2 path will run.
+    /// `lut-simd` is only auto-picked when an intrinsic arm
+    /// (AVX2/AVX-512/NEON) will run.
     pub fn exact() -> AutoPickPolicy {
-        AutoPickPolicy { simd: crate::lut::simd::active_backend() == "avx2", allow_i8: false }
+        AutoPickPolicy {
+            simd: crate::lut::simd::active_backend() != "portable",
+            allow_i8: false,
+            allow_dec: false,
+        }
     }
 
     /// Throughput policy: additionally allows `lut-i8` on
-    /// table-read-bound layers.
+    /// table-read-bound layers and `dense-i8` where dense wins.
     pub fn fast() -> AutoPickPolicy {
         AutoPickPolicy { allow_i8: true, ..AutoPickPolicy::exact() }
+    }
+
+    /// Memory-lean policy: [`AutoPickPolicy::fast`] plus `lut-dec` on
+    /// table-read-bound layers whose INT8 table exceeds
+    /// [`DEC_TABLE_BYTES_MIN`].
+    pub fn compact() -> AutoPickPolicy {
+        AutoPickPolicy { allow_dec: true, ..AutoPickPolicy::fast() }
     }
 }
 
@@ -139,11 +165,15 @@ impl Default for AutoPickPolicy {
 /// LUT geometry, using the Table 1 MAC counts:
 ///
 /// * dense MACs `rows*D*M` vs LUT MACs `rows*D*K + rows*M*C` — when the
-///   table pipeline is not cheaper, answer `"dense"` (callers with
-///   LUT-only parameters clamp this back to `"lut"`).
+///   table pipeline is not cheaper, answer `"dense"`, or `"dense-i8"`
+///   under `allow_i8` (int8-vs-int8 pricing; callers with LUT-only
+///   parameters clamp either back to `"lut"`).
 /// * table-read-bound layers (`M*C > D*K`, accumulate dominates encode)
 ///   go `"lut-i8"` when the policy allows lossy kernels — the int8
-///   lookup-add attacks exactly that term.
+///   lookup-add attacks exactly that term; with `allow_dec` and an INT8
+///   table over [`DEC_TABLE_BYTES_MIN`], the decomposed `"lut-dec"`
+///   instead (half the table bytes at a measured per-element cost the
+///   perf gate keeps honest).
 /// * encode-bound layers take `"lut-simd"` when K fills the 8-wide
 ///   vector lanes, else the scalar `"lut"`.
 ///
@@ -167,9 +197,13 @@ pub fn auto_pick_tag(
     let dense_macs = rows * d as u64 * m as u64;
     let lut_macs = rows * d as u64 * k as u64 + rows * m as u64 * c;
     if dense_macs <= lut_macs {
-        return "dense";
+        return if policy.allow_i8 { "dense-i8" } else { "dense" };
     }
     if policy.allow_i8 && m as u64 * c > d as u64 * k as u64 {
+        let table_bytes = c * k as u64 * m as u64;
+        if policy.allow_dec && table_bytes >= DEC_TABLE_BYTES_MIN {
+            return "lut-dec";
+        }
         return "lut-i8";
     }
     if policy.simd && k >= 8 {
@@ -243,11 +277,13 @@ mod tests {
 
     #[test]
     fn default_policies_consult_the_simd_backend() {
-        let want = crate::lut::simd::active_backend() == "avx2";
+        let want = crate::lut::simd::active_backend() != "portable";
         assert_eq!(AutoPickPolicy::exact().simd, want);
         assert_eq!(AutoPickPolicy::fast().simd, want);
-        assert!(!AutoPickPolicy::exact().allow_i8);
-        assert!(AutoPickPolicy::fast().allow_i8);
+        assert_eq!(AutoPickPolicy::compact().simd, want);
+        assert!(!AutoPickPolicy::exact().allow_i8 && !AutoPickPolicy::exact().allow_dec);
+        assert!(AutoPickPolicy::fast().allow_i8 && !AutoPickPolicy::fast().allow_dec);
+        assert!(AutoPickPolicy::compact().allow_i8 && AutoPickPolicy::compact().allow_dec);
     }
 
     #[test]
@@ -255,15 +291,25 @@ mod tests {
         // Explicit policy literals so the decisions are host- and
         // feature-independent (the default constructors consult the
         // runtime backend).
-        let exact = AutoPickPolicy { simd: true, allow_i8: false };
-        let fast = AutoPickPolicy { simd: true, allow_i8: true };
+        let exact = AutoPickPolicy { simd: true, allow_i8: false, allow_dec: false };
+        let fast = AutoPickPolicy { simd: true, allow_i8: true, allow_dec: false };
+        let compact = AutoPickPolicy { simd: true, allow_i8: true, allow_dec: true };
         // VGG-wide conv (d=576, m=512, k=16, v=9, c=64): table pipeline
         // wins big; accumulate (m*c=32768) dominates encode (d*k=9216).
         assert_eq!(auto_pick_tag(1024, 576, 512, 16, 9, exact), "lut-simd");
         assert_eq!(auto_pick_tag(1024, 576, 512, 16, 9, fast), "lut-i8");
+        // Same layer under compact: its INT8 table is 64*16*512 = 512 KiB
+        // >= DEC_TABLE_BYTES_MIN, so the decomposed kernel takes it.
+        assert_eq!(auto_pick_tag(1024, 576, 512, 16, 9, compact), "lut-dec");
+        // Table-read-bound but with a small table (8*16*64 = 8 KiB):
+        // compact still answers lut-i8 — decomposition has nothing to buy.
+        assert_eq!(auto_pick_tag(64, 72, 64, 2, 9, compact), "lut-i8");
         // Narrow FC head (d=16, m=5, k=8, v=4): dense GEMM is cheaper
-        // than encode+lookup — LUT not worth it.
+        // than encode+lookup — LUT not worth it; int8 policies price the
+        // quantized dense baseline instead (int8-vs-int8).
         assert_eq!(auto_pick_tag(1, 16, 5, 8, 4, exact), "dense");
+        assert_eq!(auto_pick_tag(1, 16, 5, 8, 4, fast), "dense-i8");
+        assert_eq!(auto_pick_tag(1, 16, 5, 8, 4, compact), "dense-i8");
         // Encode-bound mid layer with K below the vector width: scalar.
         assert_eq!(auto_pick_tag(64, 72, 64, 4, 9, exact), "lut");
         // Same layer at K=16 fills the lanes.
@@ -279,7 +325,14 @@ mod tests {
     fn auto_picker_handles_d_not_divisible_by_v() {
         // d=20, v=9 -> C rounds up to 3 (the LutConfig::v_for fallback
         // geometry); must not panic like lut_flops' strict assert.
-        let tag = auto_pick_tag(128, 20, 400, 8, 9, AutoPickPolicy { simd: true, allow_i8: false });
+        let tag = auto_pick_tag(
+            128,
+            20,
+            400,
+            8,
+            9,
+            AutoPickPolicy { simd: true, allow_i8: false, allow_dec: false },
+        );
         assert!(["lut", "lut-simd"].contains(&tag), "{tag}");
         // and the v_for fallback itself picks a dividing V
         let op = LinearShape {

@@ -1,23 +1,36 @@
 //! Explicit-SIMD closest-centroid search (paper §5.1) — the encode core
 //! behind the `"lut-simd"` kernel.
 //!
-//! Two implementations of the same distance kernel, selected at runtime:
+//! Four implementations of the same distance kernel, selected at runtime
+//! (see [`BACKENDS`] / [`active_backend`]):
 //!
 //! * **portable** — safe Rust structured as 8-wide independent lanes the
 //!   compiler lowers to SIMD (the auto-vectorizing realization; always
-//!   compiled, used on non-x86 targets and when AVX2 is absent).
-//! * **avx2** — `core::arch::x86_64` intrinsics (`vmulps`/`vaddps`),
-//!   compiled only with `--features simd` on x86_64 and dispatched via
-//!   `is_x86_feature_detected!` (`std::simd` remains nightly-only, so the
-//!   stable intrinsic path realizes the paper's NEON distance kernel).
+//!   compiled, used whenever no intrinsic arm applies).
+//! * **avx2** — `core::arch::x86_64` 8-lane intrinsics
+//!   (`vmulps`/`vaddps`), compiled only with `--features simd` on x86_64
+//!   and dispatched via `is_x86_feature_detected!`.
+//! * **avx512** — the same kernel at 16 lanes (`_mm512_*`), probed via
+//!   `is_x86_feature_detected!("avx512f")` and preferred over AVX2 when
+//!   K fills a 16-wide register.
+//! * **neon** — `core::arch::aarch64` 4-lane intrinsics
+//!   (`vmulq_f32`/`vaddq_f32` — the paper's reference distance kernel).
+//!   NEON is architecturally mandatory on aarch64, so no runtime probe
+//!   is needed; the arm compiles with `--features simd` on aarch64 only
+//!   (kept buildable by the CI `aarch64-unknown-linux-gnu` check leg).
 //!
-//! **Bitwise contract**: both paths perform, per score element, the exact
+//! **Bitwise contract**: every arm performs, per score element, the exact
 //! FP operation sequence of the scalar centroid-stationary path
 //! (`scores[k] = sqn[k]`, then `+= a[t] * (-2 p[t][k])` for `t`
-//! ascending — the order `nn::gemm::gemm` uses). rustc never reorders or
-//! contracts float ops (no fast-math, no implicit FMA), so the SIMD
-//! encode is bit-identical to the scalar reference on every input — the
-//! `kernel_parity` fuzz harness asserts this across random shapes.
+//! ascending — the order `nn::gemm::gemm` uses). Each element's chain
+//! depends only on its own index, so lane width (4/8/16) cannot change
+//! results; what would break them is fused multiply-add, which rounds
+//! once where mul+add rounds twice — so `vfma`/`vfmadd` are **banned**
+//! in every arm (each uses an explicit multiply then an explicit add),
+//! and rustc never contracts float ops on its own (no fast-math). The
+//! `kernel_parity` fuzz harness asserts bitwise equality across random
+//! shapes, and the in-module tests pin every arm the running CPU can
+//! execute against the strict scalar oracle.
 //!
 //! The argmin is the §6.3 ② intra-codebook-parallel realization: a
 //! branch-free min reduction over 4 independent lanes followed by a
@@ -26,15 +39,29 @@
 
 use super::engine::{argmin, LutLinear};
 
+/// Every distance-kernel backend name [`active_backend`] can return —
+/// the closed enum `BENCH_e2e_latency.json`'s `simd_backend` field is
+/// documented against (`util::schema`'s mirror test pins membership).
+pub const BACKENDS: [&str; 4] = ["portable", "avx2", "avx512", "neon"];
+
 /// Name of the distance-kernel implementation the current build/CPU
-/// actually dispatches to: `"avx2"` or `"portable"`.
+/// actually dispatches to. One of [`BACKENDS`]; the x86 probe prefers
+/// the widest available arm (`avx512` > `avx2` > `portable`).
 pub fn active_backend() -> &'static str {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return "avx512";
+        }
         if std::arch::is_x86_feature_detected!("avx2") {
             return "avx2";
         }
     }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        return "neon";
+    }
+    #[allow(unreachable_code)]
     "portable"
 }
 
@@ -71,17 +98,33 @@ pub fn encode_simd(
     }
 }
 
-/// Pick the accumulate implementation once per encode: AVX2 when the
-/// build carries it, the CPU reports it, and K fills at least one
-/// 8-wide register; the portable lanes otherwise.
+/// Pick the accumulate implementation once per encode: the widest
+/// intrinsic arm the build carries, the CPU reports, and K fills at
+/// least one register of (16 lanes for AVX-512, 8 for AVX2, 4 for
+/// NEON); the portable lanes otherwise.
 fn select_accumulate(k: usize) -> fn(&[f32], &[f32], &mut [f32]) {
-    let _ = k; // only consulted on the intrinsic-capable cfg
+    let _ = k; // only consulted on the intrinsic-capable cfgs
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
+        if k >= 16 && std::arch::is_x86_feature_detected!("avx512f") {
+            // SAFETY: avx512f runtime-verified; bounds asserted by callers.
+            return |sub: &[f32], w: &[f32], scores: &mut [f32]| unsafe {
+                distance_accumulate_avx512(sub, w, scores)
+            };
+        }
         if k >= 8 && std::arch::is_x86_feature_detected!("avx2") {
             // SAFETY: avx2 runtime-verified; bounds asserted by callers.
             return |sub: &[f32], w: &[f32], scores: &mut [f32]| unsafe {
                 distance_accumulate_avx2(sub, w, scores)
+            };
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if k >= 4 {
+            // SAFETY: NEON is baseline on aarch64; bounds asserted by callers.
+            return |sub: &[f32], w: &[f32], scores: &mut [f32]| unsafe {
+                distance_accumulate_neon(sub, w, scores)
             };
         }
     }
@@ -148,6 +191,62 @@ unsafe fn distance_accumulate_avx2(sub: &[f32], w: &[f32], scores: &mut [f32]) {
     }
 }
 
+/// AVX-512 accumulate: the AVX2 kernel at 16 lanes (`_mm512_mul_ps` +
+/// `_mm512_add_ps`, never `_mm512_fmadd_ps` — same no-FMA rule). Each
+/// score element still sees exactly one multiply and one add per `t`,
+/// so widening the register changes nothing bitwise.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn distance_accumulate_avx512(sub: &[f32], w: &[f32], scores: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let k = scores.len();
+    let k16 = k & !15usize;
+    for (t, &a) in sub.iter().enumerate() {
+        let av = _mm512_set1_ps(a);
+        let wrow = w.as_ptr().add(t * k);
+        let sp = scores.as_mut_ptr();
+        let mut kk = 0usize;
+        while kk < k16 {
+            let acc = _mm512_loadu_ps(sp.add(kk));
+            let prod = _mm512_mul_ps(av, _mm512_loadu_ps(wrow.add(kk)));
+            _mm512_storeu_ps(sp.add(kk), _mm512_add_ps(acc, prod));
+            kk += 16;
+        }
+        while kk < k {
+            *sp.add(kk) += a * *wrow.add(kk);
+            kk += 1;
+        }
+    }
+}
+
+/// NEON accumulate: one `vdupq_n_f32` broadcast, 4-lane `vmulq_f32` +
+/// `vaddq_f32` per K chunk — the paper's reference distance kernel.
+/// Deliberately built from separate multiply and add intrinsics:
+/// `vmlaq_f32` lowers to `fmla` (fused, rounds once) on aarch64 and
+/// would break the bitwise contract with the scalar path.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+unsafe fn distance_accumulate_neon(sub: &[f32], w: &[f32], scores: &mut [f32]) {
+    use core::arch::aarch64::*;
+    let k = scores.len();
+    let k4 = k & !3usize;
+    for (t, &a) in sub.iter().enumerate() {
+        let av = vdupq_n_f32(a);
+        let wrow = w.as_ptr().add(t * k);
+        let sp = scores.as_mut_ptr();
+        let mut kk = 0usize;
+        while kk < k4 {
+            let acc = vld1q_f32(sp.add(kk));
+            let prod = vmulq_f32(av, vld1q_f32(wrow.add(kk)));
+            vst1q_f32(sp.add(kk), vaddq_f32(acc, prod));
+            kk += 4;
+        }
+        while kk < k {
+            *sp.add(kk) += a * *wrow.add(kk);
+            kk += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,7 +270,7 @@ mod tests {
     fn distance_scores_bitwise_matches_oracle() {
         prop::check(100, |g| {
             let v = g.usize(1..12);
-            let k = g.usize(1..40); // crosses the 8-lane boundary + remainders
+            let k = g.usize(1..40); // crosses the 8/16-lane boundaries + remainders
             let sub = g.f32_vec(v, 1.0);
             let w = g.f32_vec(v * k, 1.0);
             let seed = g.f32_vec(k, 1.0);
@@ -185,13 +284,53 @@ mod tests {
         });
     }
 
+    /// Every intrinsic arm the running CPU can execute, called directly
+    /// (bypassing `select_accumulate`'s K threshold), must be bitwise
+    /// the scalar oracle on every K — including lane remainders 7, 9,
+    /// 15, 17 and the sub-register sizes the dispatcher would normally
+    /// route to portable.
+    #[test]
+    fn every_executable_arm_is_bitwise_the_oracle() {
+        type Arm = (&'static str, fn(&[f32], &[f32], &mut [f32]));
+        let mut arms: Vec<Arm> = vec![("portable", distance_accumulate_portable)];
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                arms.push(("avx2", |s, w, sc| unsafe { distance_accumulate_avx2(s, w, sc) }));
+            }
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                arms.push(("avx512", |s, w, sc| unsafe {
+                    distance_accumulate_avx512(s, w, sc)
+                }));
+            }
+        }
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        arms.push(("neon", |s, w, sc| unsafe { distance_accumulate_neon(s, w, sc) }));
+        prop::check(120, |g| {
+            let v = g.usize(1..12);
+            let k = *g.pick(&[1usize, 3, 4, 7, 8, 9, 15, 16, 17, 24, 31, 32, 33]);
+            let sub = g.f32_vec(v, 1.0);
+            let w = g.f32_vec(v * k, 1.0);
+            let seed = g.f32_vec(k, 1.0);
+            let want = scores_oracle(&sub, &w, &seed);
+            for (name, arm) in &arms {
+                let mut got = seed.clone();
+                arm(&sub, &w, &mut got);
+                if got != want {
+                    return Err(format!("{name} k={k} v={v}: {got:?} vs {want:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn encode_simd_bitwise_matches_scalar_encode() {
         prop::check(60, |g| {
             let n = g.usize(1..12);
             let c = g.usize(1..5);
             let v = *g.pick(&[1usize, 2, 4, 9]);
-            let k = *g.pick(&[1usize, 4, 8, 12, 16]);
+            let k = *g.pick(&[1usize, 4, 7, 8, 9, 12, 15, 16, 17]);
             let d = c * v;
             let a = g.f32_vec(n * d, 1.0);
             let cb = learn_codebooks(&a, n, d, c, k, 4, g.case_seed);
@@ -210,6 +349,11 @@ mod tests {
 
     #[test]
     fn backend_reports_a_known_name() {
-        assert!(["avx2", "portable"].contains(&active_backend()));
+        assert!(BACKENDS.contains(&active_backend()));
+        // the enum itself stays closed and duplicate-free
+        assert_eq!(BACKENDS[0], "portable");
+        for (i, a) in BACKENDS.iter().enumerate() {
+            assert!(!BACKENDS[i + 1..].contains(a), "duplicate backend {a}");
+        }
     }
 }

@@ -85,6 +85,8 @@ USAGE: lutnn <serve|infer|profile|cost|convert|compile|inspect> [flags]
   compile  <dense.lutnn|graph.nnef|synth> <out.lutnn> [--centroids 16] [--bits 8]
            [--epochs 15] [--batch 64] [--samples 32] [--lr 0.005]
            [--t-lr 0.05] [--init-t 1.0] [--anneal 0.85] [--seed 0]
+           [--threads 1] (distillation workers; results are
+            deterministic per seed for any --threads > 1 count)
   inspect  <bundle.lutnn>"
     );
 }
@@ -408,6 +410,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
         init_t: args.get_f64("init-t", 1.0) as f32,
         anneal: args.get_f64("anneal", 0.85) as f32,
         seed: args.get_usize("seed", 0) as u64,
+        threads: args.get_usize("threads", 1),
         ..TrainConfig::default()
     };
     let graph = if src == "synth" {

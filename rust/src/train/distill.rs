@@ -57,6 +57,14 @@ pub struct TrainConfig {
     /// seed for k-means init and minibatch shuffling — the whole loop
     /// is deterministic for a fixed config
     pub seed: u64,
+    /// worker threads for minibatch forward/backward (1 = the legacy
+    /// exact sequential path). Any `threads > 1` is deterministic per
+    /// seed *and* thread-count-independent: work shards into fixed
+    /// [`super::softpq::MT_ROW_BLOCK`]-row blocks reduced in block
+    /// order, so 2 threads and 8 threads are bit-identical (they may
+    /// differ from `threads = 1` in final ulps — different f32
+    /// summation grouping).
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -73,6 +81,7 @@ impl Default for TrainConfig {
             grad_clip: 5.0,
             decouple_table: false,
             seed: 0,
+            threads: 1,
         }
     }
 }
@@ -121,6 +130,9 @@ fn hard_mse(layer: &SoftPqLayer, acts: &[f32], n: usize, target: &[f32]) -> f32 
 ///
 /// Deterministic: the same inputs and config produce bit-identical
 /// results (seeded k-means init, seeded shuffles, fixed FP op order).
+/// With `cfg.threads > 1` minibatch forward/backward shard across the
+/// thread pool; results stay bit-identical for any `threads > 1` count
+/// (see [`TrainConfig::threads`]).
 #[allow(clippy::too_many_arguments)] // mirrors pq::kmeans::learn_codebooks's flat signature
 pub fn distill_layer(
     acts: &[f32],
@@ -178,7 +190,7 @@ pub fn distill_layer(
                 batch[bi * d..(bi + 1) * d].copy_from_slice(&acts[src * d..(src + 1) * d]);
                 tbatch[bi * m..(bi + 1) * m].copy_from_slice(&target[src * m..(src + 1) * m]);
             }
-            let fwd = layer.forward(&batch[..nb * d], nb);
+            let fwd = layer.forward_mt(&batch[..nb * d], nb, cfg.threads);
             // MSE loss and its gradient w.r.t. the layer output.
             let denom = (nb * m) as f64;
             let mut loss = 0.0f64;
@@ -192,7 +204,8 @@ pub fn distill_layer(
             loss_sum += loss;
             rows_seen += nb;
 
-            let mut grads = layer.backward(&batch[..nb * d], nb, &fwd, &dout[..nb * m]);
+            let mut grads =
+                layer.backward_mt(&batch[..nb * d], nb, &fwd, &dout[..nb * m], cfg.threads);
             let mut lt = [grads.log_t];
             {
                 let mut groups: Vec<&mut [f32]> = vec![&mut grads.centroids, &mut lt];
@@ -403,6 +416,33 @@ mod tests {
         for (a, b) in r1.epoch_loss.iter().zip(&r2.epoch_loss) {
             assert_eq!(a.to_bits(), b.to_bits(), "loss curves must be bit-identical");
         }
+    }
+
+    #[test]
+    fn multithreaded_distillation_is_deterministic_per_seed() {
+        // batch_size > MT_ROW_BLOCK so the parallel shards actually
+        // engage; thread counts 2 and 5 must produce bit-identical
+        // layers (grouping is fixed by the block size, not the pool).
+        let (n, d, m, c, k) = (160, 8, 4, 2, 8);
+        let acts = clustered_acts(7, n, d, 6);
+        let (w, b) = teacher(7, d, m);
+        let base = TrainConfig { epochs: 3, batch_size: 80, ..TrainConfig::default() };
+        let cfg2 = TrainConfig { threads: 2, ..base };
+        let cfg5 = TrainConfig { threads: 5, ..base };
+        let (l2, r2) = distill_layer(&acts, n, &w, Some(&b), m, c, k, &cfg2);
+        let (l5, r5) = distill_layer(&acts, n, &w, Some(&b), m, c, k, &cfg5);
+        assert_eq!(l2.log_t.to_bits(), l5.log_t.to_bits());
+        for (x, y) in l2.cb.data.iter().zip(&l5.cb.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "centroids must be thread-count-independent");
+        }
+        for (x, y) in r2.epoch_loss.iter().zip(&r5.epoch_loss) {
+            assert_eq!(x.to_bits(), y.to_bits(), "loss curves must be thread-count-independent");
+        }
+        // and the parallel path still trains: loss ends below start
+        assert!(r2.epoch_loss.iter().all(|l| l.is_finite()));
+        let (_, r1) = distill_layer(&acts, n, &w, Some(&b), m, c, k, &base);
+        let rel = (r2.epoch_loss[0] - r1.epoch_loss[0]).abs() / r1.epoch_loss[0].max(1e-6);
+        assert!(rel < 1e-3, "parallel loss far from sequential: {rel}");
     }
 
     #[test]

@@ -28,8 +28,19 @@
 //! All gradients are hand-derived reverse mode (no autodiff substrate in
 //! this crate); the finite-difference tests below are the contract.
 
+use std::sync::Mutex;
+
 use crate::lut::LutLinear;
 use crate::pq::{build_table, quantize_table, Codebooks};
+use crate::util::threadpool::parallel_items;
+
+/// Fixed row-block size the multithreaded forward/backward paths shard
+/// minibatches on. The f32 summation *grouping* of the parallel
+/// backward is a function of this constant alone — never of the thread
+/// count — so `threads = 2` and `threads = 8` produce bit-identical
+/// gradients on any machine (`threads = 1` keeps the legacy ungrouped
+/// path and may differ in final ulps).
+pub const MT_ROW_BLOCK: usize = 32;
 
 /// Trainable state of one LUT-replaced linear operator.
 ///
@@ -166,11 +177,6 @@ impl SoftPqLayer {
     /// Soft forward pass (the `hard=False` relaxation of softpq.py),
     /// returning every intermediate the backward pass needs.
     pub fn forward(&self, a: &[f32], n: usize) -> SoftForward {
-        let (c_total, k) = (self.cb.c, self.cb.k);
-        let m = self.m;
-        let mut dist = Vec::new();
-        let mut soft = Vec::new();
-        self.soft_encode(a, n, &mut dist, &mut soft);
         let rebuilt = match &self.table {
             Some(_) => None,
             None => Some(build_table(&self.cb, &self.weight, self.m)),
@@ -180,6 +186,62 @@ impl SoftPqLayer {
             (None, Some(t)) => t,
             (None, None) => unreachable!(),
         };
+        let (dist, soft, out) = self.forward_rows(a, n, table);
+        SoftForward { dist, soft, table: rebuilt, out }
+    }
+
+    /// [`SoftPqLayer::forward`] with the minibatch sharded into
+    /// [`MT_ROW_BLOCK`]-row blocks across `threads` pool threads. Every
+    /// row's math is independent and block results are stitched back in
+    /// row order, so the result is **bitwise identical** to the
+    /// sequential forward for any thread count. `threads <= 1` falls
+    /// back to the plain path without spawning.
+    pub fn forward_mt(&self, a: &[f32], n: usize, threads: usize) -> SoftForward {
+        if threads <= 1 || n <= MT_ROW_BLOCK {
+            return self.forward(a, n);
+        }
+        let (c_total, k) = (self.cb.c, self.cb.k);
+        let d = self.cb.input_dim();
+        let m = self.m;
+        assert_eq!(a.len(), n * d);
+        let rebuilt = match &self.table {
+            Some(_) => None,
+            None => Some(build_table(&self.cb, &self.weight, self.m)),
+        };
+        let table: &[f32] = match (&self.table, &rebuilt) {
+            (Some(t), _) => t,
+            (None, Some(t)) => t,
+            (None, None) => unreachable!(),
+        };
+        let blocks = n.div_ceil(MT_ROW_BLOCK);
+        let slots: Mutex<Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>)>>> =
+            Mutex::new(vec![None; blocks]);
+        parallel_items(blocks, threads, |b| {
+            let lo = b * MT_ROW_BLOCK;
+            let hi = ((b + 1) * MT_ROW_BLOCK).min(n);
+            let part = self.forward_rows(&a[lo * d..hi * d], hi - lo, table);
+            slots.lock().unwrap()[b] = Some(part);
+        });
+        let mut dist = Vec::with_capacity(n * c_total * k);
+        let mut soft = Vec::with_capacity(n * c_total * k);
+        let mut out = Vec::with_capacity(n * m);
+        for slot in slots.into_inner().unwrap() {
+            let (bd, bs, bo) = slot.expect("every forward block ran");
+            dist.extend_from_slice(&bd);
+            soft.extend_from_slice(&bs);
+            out.extend_from_slice(&bo);
+        }
+        SoftForward { dist, soft, table: rebuilt, out }
+    }
+
+    /// Row-range core of the forward pass against an already-resolved
+    /// table: soft encode + table accumulate + bias for `n` rows of `a`.
+    fn forward_rows(&self, a: &[f32], n: usize, table: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (c_total, k) = (self.cb.c, self.cb.k);
+        let m = self.m;
+        let mut dist = Vec::new();
+        let mut soft = Vec::new();
+        self.soft_encode(a, n, &mut dist, &mut soft);
         let mut out = vec![0.0f32; n * m];
         for i in 0..n {
             let dst = &mut out[i * m..(i + 1) * m];
@@ -201,7 +263,7 @@ impl SoftPqLayer {
                 }
             }
         }
-        SoftForward { dist, soft, table: rebuilt, out }
+        (dist, soft, out)
     }
 
     /// Reverse-mode gradients for `dout = d loss / d out` ([n, M]).
@@ -216,13 +278,85 @@ impl SoftPqLayer {
     /// and, unless the table is decoupled, `dT` folds into `dP` through
     /// `T[c,k,m] = sum_v P[c,k,v] * B[c*V+v, m]`.
     pub fn backward(&self, a: &[f32], n: usize, fwd: &SoftForward, dout: &[f32]) -> SoftPqGrads {
+        let table = self.pass_table(fwd);
+        let (d_table, d_cent, d_log_t) =
+            self.backward_rows(a, n, &fwd.dist, &fwd.soft, dout, table);
+        self.finish_grads(d_table, d_cent, d_log_t)
+    }
+
+    /// [`SoftPqLayer::backward`] with per-row work sharded into
+    /// [`MT_ROW_BLOCK`]-row blocks across `threads` pool threads. Each
+    /// block accumulates its own partial `dT`/`dP`/`d log_t`; partials
+    /// are then reduced **sequentially in block order**, so the result
+    /// depends only on `MT_ROW_BLOCK` — never on the thread count or on
+    /// scheduling. It may differ from the `threads = 1` path in final
+    /// ulps (different f32 summation grouping); `threads <= 1` falls
+    /// back to the legacy exact path without spawning.
+    pub fn backward_mt(
+        &self,
+        a: &[f32],
+        n: usize,
+        fwd: &SoftForward,
+        dout: &[f32],
+        threads: usize,
+    ) -> SoftPqGrads {
+        if threads <= 1 || n <= MT_ROW_BLOCK {
+            return self.backward(a, n, fwd, dout);
+        }
+        let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
+        let d = self.cb.input_dim();
+        let m = self.m;
+        assert_eq!(a.len(), n * d);
+        assert_eq!(dout.len(), n * m);
+        let table = self.pass_table(fwd);
+        let blocks = n.div_ceil(MT_ROW_BLOCK);
+        let slots: Mutex<Vec<Option<(Vec<f32>, Vec<f32>, f64)>>> = Mutex::new(vec![None; blocks]);
+        parallel_items(blocks, threads, |b| {
+            let lo = b * MT_ROW_BLOCK;
+            let hi = ((b + 1) * MT_ROW_BLOCK).min(n);
+            let part = self.backward_rows(
+                &a[lo * d..hi * d],
+                hi - lo,
+                &fwd.dist[lo * c_total * k..hi * c_total * k],
+                &fwd.soft[lo * c_total * k..hi * c_total * k],
+                &dout[lo * m..hi * m],
+                table,
+            );
+            slots.lock().unwrap()[b] = Some(part);
+        });
+        let mut d_table = vec![0.0f32; c_total * k * m];
+        let mut d_cent = vec![0.0f32; c_total * k * v];
+        let mut d_log_t = 0.0f64;
+        for slot in slots.into_inner().unwrap() {
+            let (bt, bc, bl) = slot.expect("every backward block ran");
+            for (acc, &x) in d_table.iter_mut().zip(&bt) {
+                *acc += x;
+            }
+            for (acc, &x) in d_cent.iter_mut().zip(&bc) {
+                *acc += x;
+            }
+            d_log_t += bl;
+        }
+        self.finish_grads(d_table, d_cent, d_log_t)
+    }
+
+    /// Row-range core of the backward pass: raw `dT`/`dP`/`d log_t`
+    /// accumulated over `n` rows, *before* the rebuilt-table fold.
+    fn backward_rows(
+        &self,
+        a: &[f32],
+        n: usize,
+        dist_all: &[f32],
+        soft_all: &[f32],
+        dout: &[f32],
+        table: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, f64) {
         let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
         let d = self.cb.input_dim();
         let m = self.m;
         assert_eq!(a.len(), n * d);
         assert_eq!(dout.len(), n * m);
         let t = self.temperature();
-        let table = self.pass_table(fwd);
 
         let mut d_table = vec![0.0f32; c_total * k * m];
         let mut d_cent = vec![0.0f32; c_total * k * v];
@@ -234,8 +368,8 @@ impl SoftPqLayer {
             let dorow = &dout[i * m..(i + 1) * m];
             for c in 0..c_total {
                 let base = (i * c_total + c) * k;
-                let g = &fwd.soft[base..base + k];
-                let dist = &fwd.dist[base..base + k];
+                let g = &soft_all[base..base + k];
+                let dist = &dist_all[base..base + k];
                 for (kk, dgk) in dg.iter_mut().enumerate() {
                     let row = &table[(c * k + kk) * m..(c * k + kk + 1) * m];
                     let mut s = 0.0f32;
@@ -273,7 +407,14 @@ impl SoftPqLayer {
                 }
             }
         }
+        (d_table, d_cent, d_log_t)
+    }
 
+    /// Apply the rebuilt-table fold (once, after any block reduction)
+    /// and package the gradients.
+    fn finish_grads(&self, d_table: Vec<f32>, mut d_cent: Vec<f32>, d_log_t: f64) -> SoftPqGrads {
+        let (c_total, k, v) = (self.cb.c, self.cb.k, self.cb.v);
+        let m = self.m;
         if self.table.is_some() {
             return SoftPqGrads { centroids: d_cent, log_t: d_log_t as f32, table: Some(d_table) };
         }
@@ -515,6 +656,66 @@ mod tests {
         let mut out = [0.0f32; 4];
         softmax_neg_scaled(&d, 1e-6, &mut out);
         assert!(out[1] > 0.999, "{out:?}");
+    }
+
+    #[test]
+    fn forward_mt_is_bitwise_the_sequential_forward() {
+        // Rows are independent and blocks stitch back in row order, so
+        // any thread count must reproduce the sequential pass exactly.
+        let (n, c, v, k, m) = (3 * MT_ROW_BLOCK + 5, 2, 3, 4, 3);
+        let (a, mut layer) = fixture(5, n, c, v, k, m);
+        for decoupled in [false, true] {
+            if decoupled {
+                layer.decouple_table();
+            }
+            let seq = layer.forward(&a, n);
+            for threads in [2, 3, 8] {
+                let par = layer.forward_mt(&a, n, threads);
+                assert_eq!(seq.out.len(), par.out.len());
+                for (name, s, p) in [
+                    ("dist", &seq.dist, &par.dist),
+                    ("soft", &seq.soft, &par.soft),
+                    ("out", &seq.out, &par.out),
+                ] {
+                    let same = s.iter().zip(p).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "{name} differs (decoupled={decoupled}, threads={threads})");
+                }
+                assert_eq!(seq.table, par.table);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_mt_is_thread_count_independent_and_close_to_sequential() {
+        let (n, c, v, k, m) = (2 * MT_ROW_BLOCK + 9, 2, 3, 4, 3);
+        let (a, layer) = fixture(6, n, c, v, k, m);
+        let mut rng = Prng::new(42);
+        let target = rng.normal_vec(n * m, 1.0);
+        let fwd = layer.forward(&a, n);
+        let (_, dout) = mse_and_grad(&fwd.out, &target);
+        let seq = layer.backward(&a, n, &fwd, &dout);
+        let two = layer.backward_mt(&a, n, &fwd, &dout, 2);
+        // Grouping is fixed by MT_ROW_BLOCK: every threads > 1 count is
+        // bit-identical to every other.
+        for threads in [3, 5, 8] {
+            let other = layer.backward_mt(&a, n, &fwd, &dout, threads);
+            let same = two
+                .centroids
+                .iter()
+                .zip(&other.centroids)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "threads={threads} centroid grads differ from threads=2");
+            assert_eq!(two.log_t.to_bits(), other.log_t.to_bits(), "threads={threads}");
+        }
+        // And the blocked reduction only regroups f32 sums: it must stay
+        // within summation-noise of the legacy sequential path.
+        prop::assert_close(&two.centroids, &seq.centroids, 1e-5, 1e-6).unwrap();
+        assert!((two.log_t - seq.log_t).abs() <= 1e-5 * seq.log_t.abs().max(1.0));
+        // threads=1 is the legacy path, bit for bit.
+        let one = layer.backward_mt(&a, n, &fwd, &dout, 1);
+        let same =
+            one.centroids.iter().zip(&seq.centroids).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same && one.log_t.to_bits() == seq.log_t.to_bits());
     }
 
     #[test]

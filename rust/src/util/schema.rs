@@ -123,16 +123,60 @@ mod tests {
         assert!(err.contains("$.shootout.kernel_ms.lut"), "{err}");
     }
 
-    /// The committed bench placeholder must parse, carry the fields the
+    /// The committed bench baseline must parse, carry the fields the
     /// bench emits, and accept a document with the bench's exact shape —
     /// `cargo test` catches schema/bench drift without running the bench.
+    /// `simd_backend` (and the shootout's `backend`) are an enum:
+    /// exactly the names in [`crate::lut::simd::BACKENDS`].
     #[test]
     fn committed_bench_placeholder_matches_the_bench_document_shape() {
+        use crate::lut::simd::BACKENDS;
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_e2e_latency.json");
         let text = std::fs::read_to_string(path).expect("committed BENCH_e2e_latency.json");
         let schema = json::parse(&text).expect("placeholder must be valid json");
+        // The committed backend fields must be null (unmeasured wildcard)
+        // or a member of the documented backend enum — never a free-form
+        // string (kernel_parity and the bench dispatch on these names).
+        for field in [
+            schema.get("simd_backend"),
+            schema.get("kernel_shootout").and_then(|s| s.get("backend")),
+        ] {
+            let field = field.expect("backend fields must exist");
+            match field {
+                Json::Null => {}
+                Json::Str(s) => assert!(
+                    BACKENDS.contains(&s.as_str()),
+                    "backend '{s}' is not in lut::simd::BACKENDS {BACKENDS:?}"
+                ),
+                other => panic!("backend field must be null or string, got {other:?}"),
+            }
+        }
+        // The committed gate config must price every non-reference
+        // shootout kernel and carry provenance ratios.
+        let gate = schema.get("perf_gate").expect("perf_gate section");
+        assert_eq!(gate.get("reference").and_then(|v| v.as_str()), Some("lut"));
+        for name in ["dense", "dense-i8", "lut-simd", "lut-i8", "lut-dec"] {
+            let max = gate.get("max_ratio").and_then(|m| m.get(name)).and_then(|v| v.as_f64());
+            let meas =
+                gate.get("measured_ratio").and_then(|m| m.get(name)).and_then(|v| v.as_f64());
+            let (max, meas) = (
+                max.unwrap_or_else(|| panic!("perf_gate.max_ratio.{name} missing")),
+                meas.unwrap_or_else(|| panic!("perf_gate.measured_ratio.{name} missing")),
+            );
+            assert!(max > meas, "{name}: max_ratio {max} must leave slack over measured {meas}");
+        }
         // mirror of the document benches/e2e_latency.rs assembles
         let ms = |v: f64| Json::num(v);
+        let kernel_ms = |base: f64| {
+            Json::obj(vec![
+                ("dense", ms(base * 2.0)),
+                ("dense-i8", ms(base * 3.5)),
+                ("lut", ms(base)),
+                ("lut-simd", ms(base * 1.2)),
+                ("lut-i8", ms(base * 1.3)),
+                ("lut-dec", ms(base * 3.8)),
+            ])
+        };
         let doc = Json::obj(vec![
             ("bench", Json::str("e2e_latency")),
             ("note", Json::str("measured run")),
@@ -151,16 +195,61 @@ mod tests {
                         ]),
                     ),
                     ("backend", Json::str("portable")),
+                    ("kernel_ms", kernel_ms(0.8)),
+                    ("simd_speedup_vs_scalar", ms(1.25)),
+                ]),
+            ),
+            (
+                "zoo_geometry_sweep",
+                Json::Arr(vec![Json::obj(vec![
+                    ("model", Json::str("cnn_tiny")),
+                    ("d", ms(288.0)),
+                    ("m", ms(32.0)),
+                    ("kernel_ms", kernel_ms(0.1)),
+                ])]),
+            ),
+            (
+                "profile",
+                Json::obj(vec![
+                    ("model", Json::str("cnn_tiny")),
                     (
-                        "kernel_ms",
+                        "layers",
+                        Json::Arr(vec![Json::obj(vec![
+                            ("layer", Json::str("c1")),
+                            ("kernel", Json::str("lut")),
+                            ("wall_ms", ms(1.0)),
+                            ("encode_ms", ms(0.6)),
+                            ("lookup_ms", ms(0.3)),
+                        ])]),
+                    ),
+                    ("slowest_layer", Json::str("c1")),
+                ]),
+            ),
+            (
+                "perf_gate",
+                Json::obj(vec![
+                    ("enforce_env", Json::str("PERF_GATE")),
+                    ("reference", Json::str("lut")),
+                    (
+                        "max_ratio",
                         Json::obj(vec![
-                            ("dense", ms(1.0)),
-                            ("lut", ms(0.5)),
-                            ("lut-simd", ms(0.4)),
-                            ("lut-i8", ms(0.3)),
+                            ("dense", ms(7.5)),
+                            ("dense-i8", ms(13.0)),
+                            ("lut-simd", ms(4.5)),
+                            ("lut-i8", ms(4.6)),
+                            ("lut-dec", ms(14.0)),
                         ]),
                     ),
-                    ("simd_speedup_vs_scalar", ms(1.25)),
+                    (
+                        "measured_ratio",
+                        Json::obj(vec![
+                            ("dense", ms(2.4)),
+                            ("dense-i8", ms(4.2)),
+                            ("lut-simd", ms(1.5)),
+                            ("lut-i8", ms(1.5)),
+                            ("lut-dec", ms(4.6)),
+                        ]),
+                    ),
                 ]),
             ),
             (

@@ -138,6 +138,23 @@ fn golden_lut_dec_session_bitwise_stable() {
     check_golden("cnn_lut_dec", &sess.run_alloc(&x).unwrap());
 }
 
+#[test]
+fn golden_dense_i8_session_bitwise_stable() {
+    // Like lut-dec, dense-i8 is an approximation with its own output
+    // bytes (tolerance vs "dense" lives in kernel_parity); this pins
+    // those bytes — per-channel weight quantization, i32 accumulation
+    // order, and dequant scaling must not drift silently.
+    let (dense, _, x) = fixture();
+    let mut sess = SessionBuilder::new(&dense)
+        .kernel_override("c0", "dense-i8")
+        .kernel_override("c1", "dense-i8")
+        .kernel_override("fc", "dense-i8")
+        .max_batch(2)
+        .build()
+        .unwrap();
+    check_golden("cnn_dense_i8", &sess.run_alloc(&x).unwrap());
+}
+
 /// The committed python-exported fixture is a *version 1* bundle; the
 /// v2-capable loader must keep reading it forever, the lazy loader must
 /// page it in bitwise-identical to the eager path, and its session

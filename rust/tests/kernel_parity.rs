@@ -12,18 +12,30 @@
 //!   per element (4-bit residual quantization of the decomposed table
 //!   plus the reference's own common-scale re-rounding).
 //! * `"dense"`   — bitwise-equal to `nn::ops::linear`.
+//! * `"dense-i8"` — within `DenseI8Kernel::abs_tolerance(input_max_abs)`
+//!   absolute error per element (per-output-channel weight
+//!   requantization bound; scales with the input magnitude, so the
+//!   tolerance is computed from each case's actual max-abs input).
 //!
 //! Shapes are drawn from a seeded PRNG (`util::prop`) including the
-//! edge cases n=1, C=1, K=1, M=1, V=1, and K values that straddle the
-//! 8-wide vector lanes (remainder handling). Every future kernel added
-//! to the registry gets pre-verified by extending `LUT_FAMILY` /
-//! adding a tolerance arm here.
+//! edge cases n=1, C=1, K=1, M=1, V=1, and K values that straddle every
+//! vector-lane width the runtime arms use (4-lane NEON, 8-lane AVX2,
+//! 16-lane AVX-512) — 7/9/15/17 force remainder tails on each arm. The
+//! `lut-simd` bitwise tests run against whichever backend
+//! `lut::simd::active_backend()` selected on this host (CI logs it via
+//! `active_backend_is_a_known_enum_member`); the per-arm direct-call
+//! bitwise pinning for *every* executable arm lives in
+//! `lut::simd::tests::every_executable_arm_is_bitwise_the_oracle`.
+//! Every future kernel added to the registry gets pre-verified by
+//! extending `LUT_FAMILY` / adding a tolerance arm here.
 //!
 //! Seed: `KERNEL_PARITY_SEED` (decimal, env) — CI pins one so failures
 //! reproduce; locally each value explores a different shape stream.
 //! Replay one case with `util::prop::check_one(<case_seed>, ...)`.
 
-use lutnn::api::{DecLutKernel, KernelBuildCtx, KernelRegistry, LinearKernel, LutI8Kernel, Scratch};
+use lutnn::api::{
+    DecLutKernel, DenseI8Kernel, KernelBuildCtx, KernelRegistry, LinearKernel, LutI8Kernel, Scratch,
+};
 use lutnn::lut::{LutLinear, LutOpts};
 use lutnn::nn::graph::LayerParams;
 use lutnn::nn::ops;
@@ -51,12 +63,13 @@ struct LutCase {
 
 fn gen_lut_case(g: &mut Gen) -> LutCase {
     // Edge-heavy shape distribution: 1s are always in the pool, and K
-    // straddles the 8-lane boundary (1, 4 below; 8 exact; 12, 16 with
-    // and without remainders).
+    // straddles every vector-lane boundary the backends use (4-lane
+    // NEON, 8-lane AVX2, 16-lane AVX-512): 7/9 around 8, 15/17 around
+    // 16, plus exact multiples — so lane-remainder tails are always hit.
     let n = *g.pick(&[1usize, 2, 3, 5, 8, 13]);
     let c = *g.pick(&[1usize, 2, 3, 4, 5]);
     let v = *g.pick(&[1usize, 2, 3, 4, 9]);
-    let k = *g.pick(&[1usize, 4, 8, 12, 16]);
+    let k = *g.pick(&[1usize, 4, 7, 8, 9, 12, 15, 16, 17]);
     let m = *g.pick(&[1usize, 2, 5, 8, 17]);
     let d = c * v;
     let a = g.f32_vec(n * d, 1.0);
@@ -174,6 +187,47 @@ fn dense_kernel_bitwise_equals_ops_linear() {
 }
 
 #[test]
+fn dense_i8_within_documented_tolerance_of_ops_linear() {
+    prop::check_seeded(fuzz_seed() ^ 0x5EED_5, CASES, |g| {
+        let n = *g.pick(&[1usize, 2, 3, 7, 16]);
+        let d = g.usize(1..40);
+        let m = g.usize(1..24);
+        let x = Tensor::new(vec![n, d], g.f32_vec(n * d, 1.0));
+        let w = g.f32_vec(d * m, 1.0);
+        let bias = if g.bool() { Some(g.f32_vec(m, 0.5)) } else { None };
+        let want = ops::linear(&x, &w, bias.as_deref(), m);
+        let registry = KernelRegistry::with_defaults();
+        let ctx = KernelBuildCtx { opts: LutOpts::deployed() };
+        let params = LayerParams::Dense { w: w.clone(), b: bias.clone(), m };
+        let kernel = registry.build("dense-i8", &params, &ctx).unwrap();
+        assert_eq!(kernel.name(), "dense-i8");
+        let mut scratch = Scratch::default();
+        let mut out = vec![-5.0f32; n * m];
+        kernel.forward_into(&x.data, n, &mut scratch, &mut out);
+        let amax = x.data.iter().fold(0.0f32, |acc, v| acc.max(v.abs()));
+        let tol = DenseI8Kernel::new(w, bias, m).abs_tolerance(amax);
+        prop::assert_close(&out, &want.data, 0.0, tol)
+            .map_err(|e| format!("dense-i8 out of tolerance {tol} (n={n} d={d} m={m}): {e}"))
+    });
+}
+
+#[test]
+fn active_backend_is_a_known_enum_member() {
+    // Logged under `-- --nocapture` in CI so the parity run records which
+    // simd arm the fuzz actually exercised on that runner; the value must
+    // be one of the documented `BACKENDS` enum members (the committed
+    // bench baseline and the schema mirror both key off this set).
+    use lutnn::lut::simd;
+    let backend = simd::active_backend();
+    eprintln!("kernel_parity: active simd backend = {backend}");
+    assert!(
+        simd::BACKENDS.contains(&backend),
+        "active_backend() returned {backend:?}, not in the documented set {:?}",
+        simd::BACKENDS
+    );
+}
+
+#[test]
 fn all_lut_family_kernels_agree_on_explicit_edge_shapes() {
     // Deterministic sweep of the corners the fuzzer samples: every
     // (n, c, v, k, m) with a 1 somewhere, plus lane remainders.
@@ -184,6 +238,10 @@ fn all_lut_family_kernels_agree_on_explicit_edge_shapes() {
         (5, 3, 2, 1, 4),   // single centroid (argmin over K=1)
         (3, 2, 3, 12, 1),  // single output, K with lane remainder
         (2, 4, 9, 16, 31), // M not a lane multiple
+        (3, 2, 5, 7, 6),   // K=7: remainder on 4- and 8-lane arms
+        (2, 3, 4, 9, 11),  // K=9: one full 8-lane vector + 1 tail
+        (3, 2, 9, 15, 5),  // K=15: one short of the 16-lane width
+        (2, 3, 3, 17, 8),  // K=17: one past the 16-lane width
     ];
     for &(n, c, v, k, m) in shapes {
         let mut g = Gen::from_seed(0xED6E ^ ((n * 31 + c * 7 + v * 3 + k + m) as u64));

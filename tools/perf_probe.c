@@ -1,0 +1,678 @@
+/* perf_probe — measurement + cross-validation harness for the kernel
+ * matrix, in C.
+ *
+ * Why this exists: no authoring container for this repo has carried a
+ * rust toolchain (see CHANGES.md), but the perf gate needs *measured*
+ * baseline numbers and the new intrinsic arms (AVX-512 encode,
+ * dense-i8 AVX2 madd micro-kernel) need their lane bookkeeping
+ * validated on real hardware. This file transliterates the portable
+ * Rust kernels 1:1 (same loops, same blocking constants, same
+ * accumulation order) so that:
+ *
+ *   1. the committed BENCH_e2e_latency.json baseline carries honestly
+ *      measured portable-backend numbers (provenance recorded in the
+ *      document's `note` field), and
+ *   2. the intrinsic arms are proven bit-identical / exactly-equal to
+ *      their portable counterparts before the Rust versions ship.
+ *
+ * Build + run (from the repo root):
+ *
+ *   gcc -O3 -ffp-contract=off -o /tmp/perf_probe tools/perf_probe.c -lm
+ *   /tmp/perf_probe
+ *
+ * -ffp-contract=off forbids mul+add fusion in scalar tails — the same
+ * no-FMA guarantee rustc gives — so the bitwise cross-checks are
+ * meaningful. The timed kernels are the *portable* paths at default
+ * x86-64 codegen (SSE2 baseline, like a rustc build without
+ * `--features simd`); the intrinsic arms are compiled per-function via
+ * __attribute__((target(...))) and used only for validation, never in
+ * the timed loops.
+ *
+ * Transliterated from (keep in sync):
+ *   rust/src/nn/gemm.rs            gemm (MC=64 KC=256, 4-row micro-kernel)
+ *   rust/src/lut/engine.rs         encode_centroid_stationary,
+ *                                  accumulate_int_blocked (GROUP=256), argmin
+ *   rust/src/lut/simd.rs           distance_accumulate_portable/avx2/avx512
+ *   rust/src/api/kernel.rs         LutI8Kernel / DecLutKernel / DenseI8Kernel
+ *                                  accumulate loops
+ */
+#include <immintrin.h>
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* ------------------------------------------------------------------ */
+/* rng (distribution stand-in; kernel timing is data-independent)      */
+/* ------------------------------------------------------------------ */
+static uint64_t rng_state = 0x9E3779B97F4A7C15ull;
+static uint64_t splitmix(void) {
+    uint64_t z = (rng_state += 0x9E3779B97F4A7C15ull);
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ull;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBull;
+    return z ^ (z >> 31);
+}
+static float frand(void) { return (float)((splitmix() >> 11) * (1.0 / 9007199254740992.0)); }
+static float nrand(void) { /* Box-Muller */
+    float u1 = frand() + 1e-12f, u2 = frand();
+    return sqrtf(-2.0f * logf(u1)) * cosf(2.0f * (float)M_PI * u2);
+}
+static void fill_normal(float *p, size_t n) { for (size_t i = 0; i < n; i++) p[i] = nrand(); }
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+/* ------------------------------------------------------------------ */
+/* nn::gemm::gemm — blocked f32 GEMM (dense kernel core)               */
+/* ------------------------------------------------------------------ */
+#define MC 64
+#define KC 256
+static void gemm_block(const float *a, const float *b, float *out, size_t i0, size_t i1,
+                       size_t k0, size_t k1, size_t d, size_t m) {
+    size_t i = i0;
+    while (i + 4 <= i1) {
+        for (size_t k = k0; k < k1; k++) {
+            float a0 = a[i * d + k], a1 = a[(i + 1) * d + k];
+            float a2 = a[(i + 2) * d + k], a3 = a[(i + 3) * d + k];
+            const float *brow = b + k * m;
+            float *o0 = out + i * m, *o1 = o0 + m, *o2 = o1 + m, *o3 = o2 + m;
+            for (size_t j = 0; j < m; j++) {
+                float bv = brow[j];
+                o0[j] += a0 * bv;
+                o1[j] += a1 * bv;
+                o2[j] += a2 * bv;
+                o3[j] += a3 * bv;
+            }
+        }
+        i += 4;
+    }
+    while (i < i1) {
+        for (size_t k = k0; k < k1; k++) {
+            float av = a[i * d + k];
+            const float *brow = b + k * m;
+            float *orow = out + i * m;
+            for (size_t j = 0; j < m; j++) orow[j] += av * brow[j];
+        }
+        i += 1;
+    }
+}
+static void gemm(const float *a, const float *b, float *out, size_t n, size_t d, size_t m) {
+    for (size_t i0 = 0; i0 < n; i0 += MC) {
+        size_t i1 = i0 + MC < n ? i0 + MC : n;
+        for (size_t k0 = 0; k0 < d; k0 += KC) {
+            size_t k1 = k0 + KC < d ? k0 + KC : d;
+            gemm_block(a, b, out, i0, i1, k0, k1, d, m);
+        }
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* lut::engine::argmin (sequential + interleaved)                      */
+/* ------------------------------------------------------------------ */
+static size_t argmin_seq(const float *s, size_t k) {
+    size_t best = 0;
+    float bv = s[0];
+    for (size_t i = 1; i < k; i++)
+        if (s[i] < bv) { bv = s[i]; best = i; }
+    return best;
+}
+static size_t argmin_il(const float *s, size_t k) {
+    if (k < 8) return argmin_seq(s, k);
+    float lanes[4] = {INFINITY, INFINITY, INFINITY, INFINITY};
+    size_t full = k & ~(size_t)3;
+    for (size_t i = 0; i < full; i += 4)
+        for (size_t l = 0; l < 4; l++)
+            lanes[l] = s[i + l] < lanes[l] ? s[i + l] : lanes[l];
+    float mn0 = lanes[0] < lanes[1] ? lanes[0] : lanes[1];
+    float mn1 = lanes[2] < lanes[3] ? lanes[2] : lanes[3];
+    float mn = mn0 < mn1 ? mn0 : mn1;
+    for (size_t i = full; i < k; i++) mn = s[i] < mn ? s[i] : mn;
+    for (size_t i = 0; i < k; i++)
+        if (s[i] == mn) return i;
+    return 0;
+}
+
+/* ------------------------------------------------------------------ */
+/* LUT fixture: codebooks, sqn, cb_t2, common-scale i8 table           */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    size_t c, k, v, m, d;
+    float *cb;       /* [C, K, V] */
+    float *sqn;      /* [C, K]    */
+    float *cb_t2;    /* [C, V, K] = -2 * centroid, K-contiguous */
+    int8_t *qcommon; /* [C, K, M] common-scale table */
+    float common_scale;
+    float *table_f32; /* [C, K, M] dequantized */
+    float *bias;      /* [M] */
+} Lut;
+
+static Lut lut_build(size_t c, size_t k, size_t v, size_t m) {
+    Lut l = {c, k, v, m, c * v, 0, 0, 0, 0, 0, 0, 0};
+    l.cb = malloc(c * k * v * 4);
+    fill_normal(l.cb, c * k * v);
+    l.sqn = malloc(c * k * 4);
+    l.cb_t2 = malloc(c * v * k * 4);
+    for (size_t ci = 0; ci < c; ci++)
+        for (size_t kk = 0; kk < k; kk++) {
+            float s = 0;
+            for (size_t t = 0; t < v; t++) {
+                float x = l.cb[(ci * k + kk) * v + t];
+                s += x * x;
+                l.cb_t2[(ci * v + t) * k + kk] = -2.0f * x;
+            }
+            l.sqn[ci * k + kk] = s;
+        }
+    /* table: per-codebook scales then requantized to the common scale */
+    size_t tn = c * k * m;
+    l.table_f32 = malloc(tn * 4);
+    fill_normal(l.table_f32, tn);
+    float *scale = malloc(c * 4);
+    for (size_t ci = 0; ci < c; ci++) {
+        float mx = 0;
+        for (size_t i = 0; i < k * m; i++) {
+            float ab = fabsf(l.table_f32[ci * k * m + i]);
+            mx = ab > mx ? ab : mx;
+        }
+        scale[ci] = mx / 127.0f > 1e-30f ? mx / 127.0f : 1e-30f;
+    }
+    float cs = 0;
+    for (size_t ci = 0; ci < c; ci++) cs = scale[ci] > cs ? scale[ci] : cs;
+    l.common_scale = cs > 1e-30f ? cs : 1e-30f;
+    l.qcommon = malloc(tn);
+    for (size_t ci = 0; ci < c; ci++)
+        for (size_t i = 0; i < k * m; i++) {
+            float q = roundf(l.table_f32[ci * k * m + i] / l.common_scale);
+            q = q < -128 ? -128 : (q > 127 ? 127 : q);
+            l.qcommon[ci * k * m + i] = (int8_t)q;
+        }
+    free(scale);
+    l.bias = malloc(m * 4);
+    for (size_t j = 0; j < m; j++) l.bias[j] = 0.1f;
+    return l;
+}
+
+/* encode_centroid_stationary: slab copy + sqn seed + [n,v]x[v,k] gemm */
+static void lut_encode_scalar(const Lut *l, const float *a, size_t n, float *slab,
+                              float *scores, uint16_t *idx) {
+    size_t c = l->c, k = l->k, v = l->v, d = l->d;
+    for (size_t ci = 0; ci < c; ci++) {
+        const float *cbt2 = l->cb_t2 + ci * v * k;
+        const float *sqn = l->sqn + ci * k;
+        for (size_t i = 0; i < n; i++) {
+            memcpy(slab + i * v, a + i * d + ci * v, v * 4);
+            memcpy(scores + i * k, sqn, k * 4);
+        }
+        gemm(slab, cbt2, scores, n, v, k);
+        for (size_t i = 0; i < n; i++)
+            idx[i * c + ci] = (uint16_t)argmin_seq(scores + i * k, k); /* deployed: sequential */
+    }
+}
+
+/* lut::simd distance_accumulate_portable: 8 independent K-lanes */
+static void dist_acc_portable(const float *sub, size_t v, const float *w, float *scores,
+                              size_t k) {
+    size_t k8 = k & ~(size_t)7;
+    for (size_t t = 0; t < v; t++) {
+        float a = sub[t];
+        const float *wrow = w + t * k;
+        size_t kk = 0;
+        for (; kk < k8; kk += 8)
+            for (size_t j = 0; j < 8; j++) scores[kk + j] += a * wrow[kk + j];
+        for (; kk < k; kk++) scores[kk] += a * wrow[kk];
+    }
+}
+
+/* lut::simd encode_simd (portable arm): per-(c,row) scores + interleaved argmin */
+static void lut_encode_simd_portable(const Lut *l, const float *a, size_t n, float *scores,
+                                     uint16_t *idx) {
+    size_t c = l->c, k = l->k, v = l->v, d = l->d;
+    for (size_t ci = 0; ci < c; ci++) {
+        const float *cbt2 = l->cb_t2 + ci * v * k;
+        const float *sqn = l->sqn + ci * k;
+        for (size_t i = 0; i < n; i++) {
+            const float *sub = a + i * d + ci * v;
+            memcpy(scores, sqn, k * 4);
+            dist_acc_portable(sub, v, cbt2, scores, k);
+            idx[i * c + ci] = (uint16_t)argmin_il(scores, k);
+        }
+    }
+}
+
+/* accumulate_int_blocked: i16 lanes in GROUP=256 codebook groups -> i32 */
+#define GROUP 256
+static void lut_acc_int_blocked(const Lut *l, const uint16_t *idx, size_t n, int16_t *acc16,
+                                int32_t *acc32, float *out) {
+    size_t c = l->c, k = l->k, m = l->m;
+    for (size_t i = 0; i < n; i++) {
+        memset(acc32, 0, m * 4);
+        const uint16_t *row_idx = idx + i * c;
+        for (size_t g0 = 0; g0 < c; g0 += GROUP) {
+            size_t g1 = g0 + GROUP < c ? g0 + GROUP : c;
+            memset(acc16, 0, m * 2);
+            for (size_t ci = g0; ci < g1; ci++) {
+                const int8_t *row = l->qcommon + (ci * k + row_idx[ci]) * m;
+                for (size_t j = 0; j < m; j++) acc16[j] += row[j];
+            }
+            for (size_t j = 0; j < m; j++) acc32[j] += acc16[j];
+        }
+        float *dst = out + i * m;
+        for (size_t j = 0; j < m; j++) dst[j] = acc32[j] * l->common_scale + l->bias[j];
+    }
+}
+
+/* LutI8Kernel accumulate: one global scale, pure i32 lookup-adds */
+static void lut_i8_acc(const Lut *l, const int8_t *q, float gscale, const uint16_t *idx,
+                       size_t n, int32_t *acc32, float *out) {
+    size_t c = l->c, k = l->k, m = l->m;
+    for (size_t i = 0; i < n; i++) {
+        memset(acc32, 0, m * 4);
+        for (size_t ci = 0; ci < c; ci++) {
+            const int8_t *row = q + (ci * k + idx[i * c + ci]) * m;
+            for (size_t j = 0; j < m; j++) acc32[j] += row[j];
+        }
+        float *dst = out + i * m;
+        for (size_t j = 0; j < m; j++) dst[j] = acc32[j] * gscale + l->bias[j];
+    }
+}
+
+/* DecLutKernel accumulate: shared f32 base + per-codebook 4-bit nibbles */
+static void lut_dec_acc(const Lut *l, const float *base_total, const uint8_t *resid,
+                        const float *scales, const uint16_t *idx, size_t n, float *out) {
+    size_t c = l->c, k = l->k, m = l->m;
+    size_t row_bytes = (m + 1) / 2;
+    for (size_t i = 0; i < n; i++) {
+        float *dst = out + i * m;
+        memcpy(dst, base_total, m * 4);
+        for (size_t ci = 0; ci < c; ci++) {
+            const uint8_t *row = resid + (ci * k + idx[i * c + ci]) * row_bytes;
+            float s = scales[ci];
+            for (size_t j = 0; j < m; j++) {
+                uint8_t byte = row[j / 2];
+                uint8_t nib = (j & 1) == 0 ? (byte & 0x0F) : (byte >> 4);
+                dst[j] += ((int32_t)nib - 8) * s;
+            }
+        }
+        for (size_t j = 0; j < m; j++) dst[j] += l->bias[j];
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* dense-i8: per-row dynamic input quant, global weight scale, i32 acc */
+/* ------------------------------------------------------------------ */
+static void dense_i8_portable(const int8_t *qw, float sw, const float *a, size_t n, size_t d,
+                              size_t m, const float *bias, int8_t *qa, int32_t *acc,
+                              float *out) {
+    for (size_t i = 0; i < n; i++) {
+        const float *row = a + i * d;
+        float mx = 0;
+        for (size_t t = 0; t < d; t++) {
+            float ab = fabsf(row[t]);
+            mx = ab > mx ? ab : mx;
+        }
+        float sa = mx / 127.0f > 1e-30f ? mx / 127.0f : 1e-30f;
+        for (size_t t = 0; t < d; t++) {
+            float q = roundf(row[t] / sa);
+            qa[t] = (int8_t)(q < -127 ? -127 : (q > 127 ? 127 : q));
+        }
+        memset(acc, 0, m * 4);
+        /* depth-blocked (KC) like the f32 gemm; i32 adds are exact so
+         * blocking is free */
+        for (size_t t0 = 0; t0 < d; t0 += KC) {
+            size_t t1 = t0 + KC < d ? t0 + KC : d;
+            for (size_t t = t0; t < t1; t++) {
+                int32_t av = qa[t];
+                const int8_t *wrow = qw + t * m;
+                for (size_t j = 0; j < m; j++) acc[j] += av * (int32_t)wrow[j];
+            }
+        }
+        float deq = sa * sw;
+        float *dst = out + i * m;
+        for (size_t j = 0; j < m; j++) dst[j] = acc[j] * deq + bias[j];
+    }
+}
+
+/* AVX2 madd micro-kernel for one row's i32 accumulator: t processed in
+ * pairs, 16 outputs per step via unpacklo/hi + _mm256_madd_epi16.
+ * Lane bookkeeping: after unpack, acc_lo holds j {0..3, 8..11} and
+ * acc_hi holds j {4..7, 12..15} (within-128-bit-lane interleave). */
+__attribute__((target("avx2"))) static void dense_i8_row_avx2(const int8_t *qw,
+                                                              const int8_t *qa, size_t d,
+                                                              size_t m, int32_t *acc) {
+    memset(acc, 0, m * 4);
+    size_t m16 = m & ~(size_t)15;
+    size_t d2 = d & ~(size_t)1;
+    for (size_t j0 = 0; j0 < m16; j0 += 16) {
+        __m256i acc_lo = _mm256_setzero_si256();
+        __m256i acc_hi = _mm256_setzero_si256();
+        for (size_t t = 0; t < d2; t += 2) {
+            __m256i vt0 = _mm256_cvtepi8_epi16(
+                _mm_loadu_si128((const __m128i *)(qw + t * m + j0)));
+            __m256i vt1 = _mm256_cvtepi8_epi16(
+                _mm_loadu_si128((const __m128i *)(qw + (t + 1) * m + j0)));
+            __m256i lo = _mm256_unpacklo_epi16(vt0, vt1);
+            __m256i hi = _mm256_unpackhi_epi16(vt0, vt1);
+            uint32_t pair = (uint16_t)qa[t] | ((uint32_t)(uint16_t)qa[t + 1] << 16);
+            __m256i av = _mm256_set1_epi32((int32_t)pair);
+            acc_lo = _mm256_add_epi32(acc_lo, _mm256_madd_epi16(lo, av));
+            acc_hi = _mm256_add_epi32(acc_hi, _mm256_madd_epi16(hi, av));
+        }
+        int32_t tmp_lo[8], tmp_hi[8];
+        _mm256_storeu_si256((__m256i *)tmp_lo, acc_lo);
+        _mm256_storeu_si256((__m256i *)tmp_hi, acc_hi);
+        for (size_t j = 0; j < 4; j++) {
+            acc[j0 + j] = tmp_lo[j];
+            acc[j0 + 4 + j] = tmp_hi[j];
+            acc[j0 + 8 + j] = tmp_lo[4 + j];
+            acc[j0 + 12 + j] = tmp_hi[4 + j];
+        }
+        if (d2 < d) { /* odd depth: scalar last t */
+            int32_t av = qa[d - 1];
+            const int8_t *wrow = qw + (d - 1) * m;
+            for (size_t j = j0; j < j0 + 16; j++) acc[j] += av * (int32_t)wrow[j];
+        }
+    }
+    /* output-column remainder: plain scalar columns */
+    for (size_t j = m16; j < m; j++) {
+        int32_t s = 0;
+        for (size_t t = 0; t < d; t++) s += (int32_t)qa[t] * (int32_t)qw[t * m + j];
+        acc[j] = s;
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* AVX-512 16-lane distance accumulate (validation arm)                */
+/* ------------------------------------------------------------------ */
+__attribute__((target("avx512f"))) static void dist_acc_avx512(const float *sub, size_t v,
+                                                               const float *w, float *scores,
+                                                               size_t k) {
+    size_t k16 = k & ~(size_t)15;
+    for (size_t t = 0; t < v; t++) {
+        __m512 av = _mm512_set1_ps(sub[t]);
+        const float *wrow = w + t * k;
+        size_t kk = 0;
+        while (kk < k16) {
+            __m512 acc = _mm512_loadu_ps(scores + kk);
+            __m512 prod = _mm512_mul_ps(av, _mm512_loadu_ps(wrow + kk));
+            _mm512_storeu_ps(scores + kk, _mm512_add_ps(acc, prod));
+            kk += 16;
+        }
+        while (kk < k) {
+            scores[kk] += sub[t] * wrow[kk];
+            kk += 1;
+        }
+    }
+}
+
+__attribute__((target("avx2"))) static void dist_acc_avx2(const float *sub, size_t v,
+                                                          const float *w, float *scores,
+                                                          size_t k) {
+    size_t k8 = k & ~(size_t)7;
+    for (size_t t = 0; t < v; t++) {
+        __m256 av = _mm256_set1_ps(sub[t]);
+        const float *wrow = w + t * k;
+        size_t kk = 0;
+        while (kk < k8) {
+            __m256 acc = _mm256_loadu_ps(scores + kk);
+            __m256 prod = _mm256_mul_ps(av, _mm256_loadu_ps(wrow + kk));
+            _mm256_storeu_ps(scores + kk, _mm256_add_ps(acc, prod));
+            kk += 8;
+        }
+        while (kk < k) {
+            scores[kk] += sub[t] * wrow[kk];
+            kk += 1;
+        }
+    }
+}
+
+/* strict scalar oracle: one dependent chain per element, t ascending */
+static void dist_acc_oracle(const float *sub, size_t v, const float *w, float *scores,
+                            size_t k) {
+    for (size_t t = 0; t < v; t++)
+        for (size_t kk = 0; kk < k; kk++) scores[kk] += sub[t] * w[t * k + kk];
+}
+
+/* ------------------------------------------------------------------ */
+/* validation                                                          */
+/* ------------------------------------------------------------------ */
+static int validate(void) {
+    int fails = 0;
+    int have512 = __builtin_cpu_supports("avx512f");
+    int have2 = __builtin_cpu_supports("avx2");
+    printf("cpu: avx2=%d avx512f=%d\n", have2, have512);
+    /* distance accumulate: every arm bitwise vs the scalar oracle for
+     * k = 1..40 (crosses 8- and 16-lane boundaries + remainders) */
+    for (size_t k = 1; k <= 40; k++) {
+        for (size_t v = 1; v <= 12; v += 3) {
+            float sub[16], w[40 * 16], seed[40];
+            fill_normal(sub, v);
+            fill_normal(w, v * k);
+            fill_normal(seed, k);
+            float want[40], got[40];
+            memcpy(want, seed, k * 4);
+            dist_acc_oracle(sub, v, w, want, k);
+            memcpy(got, seed, k * 4);
+            dist_acc_portable(sub, v, w, got, k);
+            if (memcmp(got, want, k * 4)) { printf("FAIL portable k=%zu v=%zu\n", k, v); fails++; }
+            if (have2) {
+                memcpy(got, seed, k * 4);
+                dist_acc_avx2(sub, v, w, got, k);
+                if (memcmp(got, want, k * 4)) { printf("FAIL avx2 k=%zu v=%zu\n", k, v); fails++; }
+            }
+            if (have512) {
+                memcpy(got, seed, k * 4);
+                dist_acc_avx512(sub, v, w, got, k);
+                if (memcmp(got, want, k * 4)) { printf("FAIL avx512 k=%zu v=%zu\n", k, v); fails++; }
+            }
+        }
+    }
+    printf("distance accumulate: portable/avx2/avx512 bitwise vs oracle (k=1..40): %s\n",
+           fails ? "FAIL" : "ok");
+    /* dense-i8 avx2 madd micro-kernel: exact i32 equality vs portable,
+     * including odd depth and column remainders */
+    size_t shapes[][2] = {{576, 128}, {577, 128}, {64, 17}, {7, 16}, {1, 1}, {33, 31}};
+    for (size_t s = 0; s < sizeof(shapes) / sizeof(shapes[0]); s++) {
+        size_t d = shapes[s][0], m = shapes[s][1];
+        int8_t *qw = malloc(d * m), *qa = malloc(d);
+        for (size_t i = 0; i < d * m; i++) qw[i] = (int8_t)(splitmix() % 255 - 127);
+        for (size_t i = 0; i < d; i++) qa[i] = (int8_t)(splitmix() % 255 - 127);
+        int32_t *want = malloc(m * 4), *got = malloc(m * 4);
+        for (size_t j = 0; j < m; j++) {
+            int32_t acc = 0;
+            for (size_t t = 0; t < d; t++) acc += (int32_t)qa[t] * (int32_t)qw[t * m + j];
+            want[j] = acc;
+        }
+        if (have2) {
+            dense_i8_row_avx2(qw, qa, d, m, got);
+            if (memcmp(got, want, m * 4)) { printf("FAIL dense-i8 avx2 d=%zu m=%zu\n", d, m); fails++; }
+        }
+        free(qw); free(qa); free(want); free(got);
+    }
+    printf("dense-i8 avx2 madd micro-kernel: exact i32 vs reference: %s\n",
+           fails ? "FAIL" : "ok");
+    return fails;
+}
+
+/* ------------------------------------------------------------------ */
+/* timed shootout at the bench shape                                   */
+/* ------------------------------------------------------------------ */
+typedef void (*bench_fn)(void *);
+static double timeit(bench_fn f, void *ctx) {
+    for (int i = 0; i < 3; i++) f(ctx); /* warmup */
+    double t0 = now_s();
+    int iters = 0;
+    do {
+        f(ctx);
+        iters++;
+    } while (now_s() - t0 < 0.7 || iters < 10);
+    return (now_s() - t0) / iters;
+}
+
+typedef struct {
+    Lut *l;
+    const float *a;
+    size_t n;
+    float *slab, *scores, *out;
+    uint16_t *idx;
+    int16_t *acc16;
+    int32_t *acc32;
+    /* dense */
+    const float *w;
+    /* lut-i8 */
+    int8_t *qi8;
+    float gscale;
+    /* lut-dec */
+    float *base_total;
+    uint8_t *resid;
+    float *dscales;
+    /* dense-i8 */
+    int8_t *qw, *qa;
+    float sw;
+} Ctx;
+
+static void run_dense(void *p) {
+    Ctx *c = p;
+    memset(c->out, 0, c->n * c->l->m * 4);
+    gemm(c->a, c->w, c->out, c->n, c->l->d, c->l->m);
+    for (size_t i = 0; i < c->n; i++)
+        for (size_t j = 0; j < c->l->m; j++) c->out[i * c->l->m + j] += c->l->bias[j];
+}
+static void run_lut(void *p) {
+    Ctx *c = p;
+    lut_encode_scalar(c->l, c->a, c->n, c->slab, c->scores, c->idx);
+    lut_acc_int_blocked(c->l, c->idx, c->n, c->acc16, c->acc32, c->out);
+}
+static void run_lut_simd(void *p) {
+    Ctx *c = p;
+    lut_encode_simd_portable(c->l, c->a, c->n, c->scores, c->idx);
+    lut_acc_int_blocked(c->l, c->idx, c->n, c->acc16, c->acc32, c->out);
+}
+static void run_lut_i8(void *p) {
+    Ctx *c = p;
+    lut_encode_simd_portable(c->l, c->a, c->n, c->scores, c->idx);
+    lut_i8_acc(c->l, c->qi8, c->gscale, c->idx, c->n, c->acc32, c->out);
+}
+static void run_lut_dec(void *p) {
+    Ctx *c = p;
+    lut_encode_simd_portable(c->l, c->a, c->n, c->scores, c->idx);
+    lut_dec_acc(c->l, c->base_total, c->resid, c->dscales, c->idx, c->n, c->out);
+}
+static void run_dense_i8(void *p) {
+    Ctx *c = p;
+    dense_i8_portable(c->qw, c->sw, c->a, c->n, c->l->d, c->l->m, c->l->bias, c->qa, c->acc32,
+                      c->out);
+}
+static void run_encode_only(void *p) {
+    Ctx *c = p;
+    lut_encode_scalar(c->l, c->a, c->n, c->slab, c->scores, c->idx);
+}
+
+int main(void) {
+    int fails = validate();
+    if (fails) {
+        printf("VALIDATION FAILED (%d)\n", fails);
+        return 1;
+    }
+
+    /* the bench shape: rows=256, C=64, V=9, K=16, M=128 (D=576) */
+    size_t n = 256, cc = 64, v = 9, k = 16, m = 128;
+    Lut l = lut_build(cc, k, v, m);
+    Ctx c = {0};
+    c.l = &l;
+    c.n = n;
+    float *a = malloc(n * l.d * 4);
+    fill_normal(a, n * l.d);
+    c.a = a;
+    c.slab = malloc(n * v * 4);
+    c.scores = malloc((n * k > k ? n * k : k) * 4);
+    c.out = malloc(n * m * 4);
+    c.idx = malloc(n * cc * 2);
+    c.acc16 = malloc(m * 2);
+    c.acc32 = malloc(m * 4);
+    float *w = malloc(l.d * m * 4);
+    fill_normal(w, l.d * m);
+    c.w = w;
+    /* lut-i8 global-scale table */
+    float mx = 0;
+    for (size_t i = 0; i < cc * k * m; i++) {
+        float ab = fabsf(l.table_f32[i]);
+        mx = ab > mx ? ab : mx;
+    }
+    c.gscale = mx / 127.0f;
+    c.qi8 = malloc(cc * k * m);
+    for (size_t i = 0; i < cc * k * m; i++) {
+        float q = roundf(l.table_f32[i] / c.gscale);
+        c.qi8[i] = (int8_t)(q < -127 ? -127 : (q > 127 ? 127 : q));
+    }
+    /* lut-dec decomposition (timing-faithful: mean-row base + 4-bit resid) */
+    c.base_total = calloc(m, 4);
+    c.dscales = malloc(cc * 4);
+    size_t row_bytes = (m + 1) / 2;
+    c.resid = calloc(cc * k * row_bytes, 1);
+    for (size_t ci = 0; ci < cc; ci++) {
+        float *mean = calloc(m, 4);
+        for (size_t kk = 0; kk < k; kk++)
+            for (size_t j = 0; j < m; j++) mean[j] += l.table_f32[(ci * k + kk) * m + j];
+        for (size_t j = 0; j < m; j++) {
+            mean[j] /= (float)k;
+            c.base_total[j] += mean[j];
+        }
+        float rmax = 0;
+        for (size_t kk = 0; kk < k; kk++)
+            for (size_t j = 0; j < m; j++) {
+                float r = fabsf(l.table_f32[(ci * k + kk) * m + j] - mean[j]);
+                rmax = r > rmax ? r : rmax;
+            }
+        c.dscales[ci] = rmax / 7.0f > 1e-30f ? rmax / 7.0f : 1e-30f;
+        for (size_t kk = 0; kk < k; kk++)
+            for (size_t j = 0; j < m; j++) {
+                float r = (l.table_f32[(ci * k + kk) * m + j] - mean[j]) / c.dscales[ci];
+                int32_t q = (int32_t)roundf(r) + 8;
+                q = q < 0 ? 0 : (q > 15 ? 15 : q);
+                uint8_t *byte = &c.resid[(ci * k + kk) * row_bytes + j / 2];
+                if ((j & 1) == 0)
+                    *byte = (*byte & 0xF0) | (uint8_t)q;
+                else
+                    *byte = (*byte & 0x0F) | ((uint8_t)q << 4);
+            }
+        free(mean);
+    }
+    /* dense-i8 weights */
+    float wmx = 0;
+    for (size_t i = 0; i < l.d * m; i++) {
+        float ab = fabsf(w[i]);
+        wmx = ab > wmx ? ab : wmx;
+    }
+    c.sw = wmx / 127.0f;
+    c.qw = malloc(l.d * m);
+    for (size_t i = 0; i < l.d * m; i++) {
+        float q = roundf(w[i] / c.sw);
+        c.qw[i] = (int8_t)(q < -127 ? -127 : (q > 127 ? 127 : q));
+    }
+    c.qa = malloc(l.d);
+
+    struct { const char *name; bench_fn f; } benches[] = {
+        {"dense", run_dense},     {"lut", run_lut},         {"lut-simd", run_lut_simd},
+        {"lut-i8", run_lut_i8},   {"lut-dec", run_lut_dec}, {"dense-i8", run_dense_i8},
+        {"(encode only)", run_encode_only},
+    };
+    size_t nb = sizeof(benches) / sizeof(benches[0]);
+    double ms[16];
+    double lut_ms = 0;
+    printf("\n== kernel shootout (rows=%zu D=%zu M=%zu K=%zu V=%zu, portable/gcc -O3) ==\n",
+           n, l.d, m, k, v);
+    for (size_t b = 0; b < nb; b++) {
+        ms[b] = timeit(benches[b].f, &c) * 1e3;
+        if (strcmp(benches[b].name, "lut") == 0) lut_ms = ms[b];
+        fprintf(stderr, "  measured %s\n", benches[b].name);
+    }
+    for (size_t b = 0; b < nb; b++)
+        printf("%-14s %9.4f ms   ratio_vs_lut %.4f\n", benches[b].name, ms[b],
+               ms[b] / lut_ms);
+    printf("\n(ratios are what the perf gate pins; see docs/benching.md)\n");
+    return 0;
+}
